@@ -1,0 +1,67 @@
+//! Disaggregated prefill/decode serving (DistServe/Splitwise style):
+//! compare a unified 8-GPU pool against P/D-split clusters on the same
+//! workload, and show the KV-transfer traffic the communication model
+//! accounts for.
+//!
+//! ```sh
+//! cargo run --release --example disaggregated_serving
+//! ```
+
+use tokensim::prelude::*;
+
+fn simulate(name: &str, cfg: &SimulationConfig) {
+    let report = Simulation::from_config(cfg).run();
+    let m = report.metrics();
+    println!(
+        "{name:<28} {:>7.2} req/s  p99 {:>7.3}s  ttft-p99 {:>6.3}s  slo {:>5.1}%",
+        m.request_throughput(),
+        m.latency_percentile(0.99),
+        m.ttft_percentile(0.99),
+        100.0 * report.slo_attainment(),
+    );
+}
+
+fn main() {
+    let model = ModelSpec::llama2_7b();
+    let a100 = HardwareSpec::a100_80g();
+    let workload = WorkloadSpec::mean_lengths(3000, 24.0, 256, 128);
+
+    println!("LLaMA2-7B, 8 devices, 256/128-token workload @ 24 QPS\n");
+
+    // unified: every GPU does both phases
+    let mut unified = SimulationConfig::single_worker(model.clone(), a100.clone(), workload.clone());
+    unified.cluster.workers[0].quantity = 8;
+    unified.cost_model = CostModelKind::Table;
+    simulate("unified x8", &unified);
+
+    // disaggregated splits over NVLink
+    for (np, nd) in [(1u32, 7u32), (2, 6), (3, 5), (4, 4)] {
+        let mut cfg = SimulationConfig::disaggregated(
+            model.clone(),
+            a100.clone(),
+            np,
+            a100.clone(),
+            nd,
+            workload.clone(),
+        );
+        cfg.cost_model = CostModelKind::Table;
+        simulate(&format!("disaggregated P{np}-D{nd}"), &cfg);
+    }
+
+    // what the KV hand-off costs on a slower link
+    println!("\nKV-transfer sensitivity (P2-D6):");
+    for link in [LinkSpec::nvlink(), LinkSpec::pcie_gen4_x16(), LinkSpec::ethernet_100g()] {
+        let mut cfg = SimulationConfig::disaggregated(
+            model.clone(),
+            a100.clone(),
+            2,
+            a100.clone(),
+            6,
+            workload.clone(),
+        );
+        cfg.cost_model = CostModelKind::Table;
+        let name = link.name.clone();
+        cfg.cluster.scheduler.interconnect = link;
+        simulate(&format!("  over {name}"), &cfg);
+    }
+}

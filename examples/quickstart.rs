@@ -1,0 +1,54 @@
+//! Quickstart: simulate a vLLM-like single-A100 server on a
+//! ShareGPT-like workload and read off the QoS metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tokensim::prelude::*;
+
+fn main() {
+    // 1. Describe the system: model + hardware + workload.
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let workload = WorkloadSpec::sharegpt(2000, 16.0); // 2000 reqs @ 16 QPS
+
+    // 2. A single unified worker with continuous batching (vLLM-like).
+    let mut cfg = SimulationConfig::single_worker(model, hw, workload);
+    // Use the AOT-compiled JAX/Pallas cost artifact when built
+    // (`make artifacts`); it degrades to the bit-compatible analytic
+    // mirror automatically otherwise.
+    cfg.cost_model = CostModelKind::Table;
+    cfg.sample_period = 0.5;
+
+    // 3. Run to completion.
+    let report = Simulation::from_config(&cfg).run();
+
+    // 4. Read the QoS metrics the paper's Figs 4-5 report.
+    println!("{}", report.summary());
+    let m = report.metrics();
+    println!("\nthroughput : {:.2} req/s / {:.0} tok/s",
+        m.request_throughput(), m.token_throughput());
+    println!("latency    : p50 {:.3}s  p90 {:.3}s  p99 {:.3}s",
+        m.latency_percentile(0.50),
+        m.latency_percentile(0.90),
+        m.latency_percentile(0.99));
+    println!("ttft       : p50 {:.3}s  p99 {:.3}s",
+        m.ttft_percentile(0.50), m.ttft_percentile(0.99));
+    println!("normalized : {:.4} s/token", m.mean_normalized_latency());
+    println!("slo        : {:.1}% attainment (TTFT<=15s, mTPOT<=0.3s)",
+        100.0 * report.slo_attainment());
+
+    println!("\nlatency CDF:");
+    for (lat, frac) in m.latency_cdf().iter().step_by(m.len().max(10) / 10) {
+        println!("  {frac:>5.2} <= {lat:.3}s");
+    }
+
+    println!("\nper-worker:");
+    for w in &report.workers {
+        println!(
+            "  worker {} ({}): {} iterations, {:.1}% busy",
+            w.id, w.hardware, w.iterations, 100.0 * w.utilization
+        );
+    }
+}

@@ -1,0 +1,109 @@
+"""AOT pipeline: lower the L2/L1 cost model to HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  Lowering goes
+stablehlo -> XlaComputation (``return_tuple=True``) -> ``as_hlo_text()``;
+the rust loader unwraps the 1-tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+
+ARTIFACT_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XLA computation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_iter_cost(batch_slots: int) -> str:
+    spec_b = jax.ShapeDtypeStruct((batch_slots,), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((m.MODEL_DIM,), jnp.float32)
+    spec_h = jax.ShapeDtypeStruct((m.HW_DIM,), jnp.float32)
+    lowered = jax.jit(m.iter_cost_flat).lower(spec_b, spec_b, spec_m, spec_h)
+    return to_hlo_text(lowered)
+
+
+def lower_xfer_cost(batch_slots: int) -> str:
+    spec_s = jax.ShapeDtypeStruct((batch_slots,), jnp.float32)
+    spec_l = jax.ShapeDtypeStruct((3,), jnp.float32)
+    lowered = jax.jit(m.xfer_cost_flat).lower(spec_s, spec_l)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch-slots", type=int, default=m.BATCH_SLOTS)
+    ap.add_argument(
+        "--out", default=None,
+        help="legacy single-file mode: write only iter_cost HLO here",
+    )
+    args = ap.parse_args()
+
+    if args.out is not None:
+        text = lower_iter_cost(args.batch_slots)
+        pathlib.Path(args.out).write_text(text)
+        print(f"wrote {len(text)} chars to {args.out}")
+        return
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    artifacts = {}
+    for name, text in [
+        ("iter_cost", lower_iter_cost(args.batch_slots)),
+        ("xfer_cost", lower_xfer_cost(args.batch_slots)),
+    ]:
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        artifacts[name] = {
+            "file": path.name,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "chars": len(text),
+        }
+        print(f"wrote {len(text):>8} chars  {path}")
+
+    manifest = {
+        "version": ARTIFACT_VERSION,
+        "batch_slots": args.batch_slots,
+        "model_dim": m.MODEL_DIM,
+        "hw_dim": m.HW_DIM,
+        "num_ops": m.NUM_OPS,
+        "op_names": list(__import__(
+            "compile.kernels.ref", fromlist=["OP_NAMES"]
+        ).OP_NAMES),
+        "outputs": {
+            "iter_cost": "[iter_time, op_times[num_ops], per_req_attn[batch_slots]]",
+            "xfer_cost": "[t_seq, t_ovl, per_block[batch_slots]]",
+        },
+        "artifacts": artifacts,
+        "jax_version": jax.__version__,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote manifest ({out / 'manifest.json'})")
+
+
+if __name__ == "__main__":
+    main()

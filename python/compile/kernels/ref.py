@@ -1,0 +1,237 @@
+"""Pure-jnp reference oracle for the TokenSim cost-model kernels.
+
+These functions define the *semantics* that the Pallas kernels in
+``roofline.py`` / ``attn_cost.py`` must reproduce bit-for-bit (up to float
+associativity).  They are used by
+
+  * ``python/tests/`` — pytest + hypothesis compare every kernel against
+    the functions here;
+  * ``model.py`` — a ``use_ref=True`` escape hatch builds the full L2
+    iteration-cost model out of these instead of the Pallas kernels, which
+    lets the AOT pipeline emit a kernel-free artifact for debugging.
+
+Model parameter vector layout  (``MODEL_DIM`` entries, float32)::
+
+    0: hidden        — hidden size h
+    1: layers        — number of decoder layers
+    2: heads         — attention heads
+    3: kv_heads      — KV heads (GQA); == heads for MHA
+    4: ffn           — MLP intermediate size (LLaMA counts gate+up once here)
+    5: vocab         — vocabulary size
+    6: dtype_bytes   — bytes per parameter / activation element
+    7: tp            — tensor-parallel degree
+
+Hardware parameter vector layout (``HW_DIM`` entries, float32)::
+
+    0: peak_flops    — achievable FLOP/s (spec peak x efficiency)
+    1: mem_bw        — HBM bandwidth, bytes/s
+    2: op_overhead   — fixed per-operator launch overhead, seconds
+    3: iter_overhead — fixed per-iteration framework overhead, seconds
+    4: net_bw        — intra-node interconnect bandwidth, bytes/s (TP collectives)
+    5: mem_cap       — device memory capacity, bytes (not used in timing)
+
+Batch descriptor: two int-valued float32 vectors of length B
+(``ctx[i]``, ``new[i]``): request *i* enters the iteration with ``ctx[i]``
+tokens already in KV cache and computes ``new[i]`` new tokens this
+iteration (prompt length during prefill, 1 during decode).  Empty slots are
+all-zero.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MODEL_DIM = 8
+HW_DIM = 6
+
+# Paged-attention KV reads are gather-style (block tables) and reach only
+# a fraction of streaming bandwidth; the cost model charges attention
+# bytes at ``mem_bw * ATTN_GATHER_EFF``, expressed as a byte inflation so
+# the roofline keeps a single bandwidth term. This is the
+# block-granularity memory effect the paper credits for TokenSim's
+# accuracy ("we support block-granularity simulation").
+ATTN_GATHER_EFF = 0.7
+
+# Operator slots in the per-op outputs of the iteration cost model.  The
+# rust side mirrors this enum in `compute/ops.rs`.
+OP_NAMES = (
+    "embed",        # 0  token embedding gather (bandwidth)
+    "qkv_gemm",     # 1  fused QKV projection
+    "attention",    # 2  QK^T + AV over the KV cache (paged attention)
+    "softmax",      # 3  attention softmax (bandwidth)
+    "out_gemm",     # 4  attention output projection
+    "mlp_up",       # 5  gate+up projections
+    "mlp_down",     # 6  down projection
+    "layernorm",    # 7  2x RMS/LayerNorm per layer (bandwidth)
+    "allreduce",    # 8  2x tensor-parallel all-reduce per layer
+    "logits",       # 9  LM-head GEMM for sampled rows (once, not per layer)
+)
+NUM_OPS = len(OP_NAMES)
+
+
+def roofline_time_ref(flops, bytes_moved, peak_flops, mem_bw, op_overhead):
+    """Roofline execution-time estimate for a batch of operators.
+
+    ``time = max(flops / peak_flops, bytes / mem_bw) + overhead`` with the
+    convention that an all-zero operator (padding slot) costs exactly 0 —
+    including no launch overhead.
+    """
+    flops = jnp.asarray(flops, jnp.float32)
+    bytes_moved = jnp.asarray(bytes_moved, jnp.float32)
+    t = jnp.maximum(flops / peak_flops, bytes_moved / mem_bw)
+    nonzero = (flops > 0.0) | (bytes_moved > 0.0)
+    return jnp.where(nonzero, t + op_overhead, 0.0)
+
+
+def attn_cost_ref(ctx, new, model):
+    """Per-request attention FLOPs / KV-bytes / score-elements.
+
+    For request *i* with ``c = ctx[i]`` cached tokens and ``n = new[i]``
+    new tokens the attention operator this iteration does (per single
+    layer — the caller multiplies by ``layers``):
+
+      * score GEMM   QK^T : 2 * n * (c + n) * h          FLOPs
+      * value GEMM   AV   : 2 * n * (c + n) * h          FLOPs
+      * KV-cache traffic  : read 2*(c+n)*h_kv*dtype, write 2*n*h_kv*dtype
+      * Q read / out write: 2 * n * h * dtype
+      * score elements    : n * (c + n) * heads   (softmax traffic)
+
+    where ``h_kv = h * kv_heads / heads``.  Returns float32 arrays
+    ``(flops[B], kv_bytes[B], score_elems[B])``; padding slots yield zero.
+    """
+    ctx = jnp.asarray(ctx, jnp.float32)
+    new = jnp.asarray(new, jnp.float32)
+    h = model[0]
+    heads = model[2]
+    kv_heads = model[3]
+    dtype = model[6]
+    tp = model[7]
+
+    total = ctx + new
+    h_kv = h * (kv_heads / heads)
+    flops = 4.0 * new * total * h / tp
+    kv_bytes = (
+        (2.0 * total * h_kv / ATTN_GATHER_EFF + 2.0 * new * h_kv + 2.0 * new * h)
+        * dtype / tp
+    )
+    score_elems = new * total * heads / tp
+    return flops, kv_bytes, score_elems
+
+
+def iter_ops_ref(ctx, new, model):
+    """Assemble the per-iteration operator table (FLOPs, bytes) x NUM_OPS.
+
+    Per-layer operators are reported *per single layer*; the ``layers``
+    multiplication happens in :func:`iter_cost_ref` so that per-op outputs
+    stay interpretable.  Returns ``(flops[NUM_OPS], bytes[NUM_OPS])``.
+    """
+    ctx = jnp.asarray(ctx, jnp.float32)
+    new = jnp.asarray(new, jnp.float32)
+    h = model[0]
+    heads = model[2]
+    kv_heads = model[3]
+    ffn = model[4]
+    vocab = model[5]
+    dtype = model[6]
+    tp = model[7]
+
+    T = jnp.sum(new)                            # new tokens this iteration
+    R = jnp.sum((new > 0).astype(jnp.float32))  # active requests
+    g = kv_heads / heads
+    qkv_out = h * (1.0 + 2.0 * g)
+
+    attn_f, attn_b, scores = attn_cost_ref(ctx, new, model)
+    attn_flops = jnp.sum(attn_f)
+    attn_bytes = jnp.sum(attn_b)
+    score_elems = jnp.sum(scores)
+
+    zeros = jnp.zeros((), jnp.float32)
+
+    def gemm(m_rows, k_dim, n_cols):
+        f = 2.0 * m_rows * k_dim * n_cols / tp
+        b = (k_dim * n_cols / tp + m_rows * k_dim + m_rows * n_cols / tp) * dtype
+        return f, b
+
+    qkv_f, qkv_b = gemm(T, h, qkv_out)
+    out_f, out_b = gemm(T, h, h)
+    up_f, up_b = gemm(T, h, 2.0 * ffn)    # gate + up fused
+    down_f, down_b = gemm(T, ffn, h)
+    logits_f, logits_b = gemm(R, h, vocab)
+
+    embed_b = T * h * dtype
+    softmax_f = 5.0 * score_elems
+    softmax_b = 2.0 * score_elems * dtype
+    ln_f = 2.0 * 4.0 * T * h
+    ln_b = 2.0 * 2.0 * T * h * dtype
+    # ring all-reduce of the layer activation, twice per layer
+    ar_b = jnp.where(tp > 1.0, 2.0 * 2.0 * (tp - 1.0) / tp * T * h * dtype, zeros)
+
+    flops = jnp.stack([
+        zeros, qkv_f, attn_flops, softmax_f, out_f,
+        up_f, down_f, ln_f, zeros, logits_f,
+    ])
+    bytes_ = jnp.stack([
+        embed_b, qkv_b, attn_bytes, softmax_b, out_b,
+        up_b, down_b, ln_b, ar_b, logits_b,
+    ])
+    return flops, bytes_
+
+
+# Ops that run once per *iteration* rather than once per layer.
+PER_ITER_OPS = jnp.array([1.0, 0, 0, 0, 0, 0, 0, 0, 0, 1.0], jnp.float32)
+
+
+def iter_cost_ref(ctx, new, model, hw):
+    """End-to-end per-iteration latency model (the L2 semantics).
+
+    Returns ``(iter_time, op_times[NUM_OPS], per_req_attn[B])`` where
+    ``op_times`` are single-instance times (one layer / one call) and
+    ``iter_time = layers * sum(per_layer ops) + once ops + iter_overhead``.
+    The all-reduce op uses ``net_bw`` rather than ``mem_bw``.
+    """
+    model = jnp.asarray(model, jnp.float32)
+    hw = jnp.asarray(hw, jnp.float32)
+    layers = model[1]
+    peak, bw, op_oh, iter_oh, net_bw = hw[0], hw[1], hw[2], hw[3], hw[4]
+
+    flops, bytes_ = iter_ops_ref(ctx, new, model)
+    # allreduce goes over the interconnect; everything else over HBM
+    eff_bw = jnp.where(
+        jnp.arange(NUM_OPS) == OP_NAMES.index("allreduce"), net_bw, bw
+    )
+    op_times = roofline_time_ref(flops, bytes_, peak, eff_bw, op_oh)
+
+    per_layer = jnp.sum(op_times * (1.0 - PER_ITER_OPS))
+    per_iter = jnp.sum(op_times * PER_ITER_OPS)
+    T = jnp.sum(jnp.asarray(new, jnp.float32))
+    iter_time = jnp.where(
+        T > 0.0, layers * per_layer + per_iter + iter_oh, 0.0
+    )
+
+    attn_f, attn_b, _ = attn_cost_ref(ctx, new, model)
+    per_req = roofline_time_ref(attn_f, attn_b, peak, bw, op_oh)
+    return iter_time, op_times, per_req
+
+
+def xfer_cost_ref(sizes, link):
+    """Communication-model reference.
+
+    ``link = [bandwidth B/s, latency s, buffer_depth]``.  For a train of
+    block transfers of ``sizes[i]`` bytes (0 = padding):
+
+      * sequential: each transfer waits for the previous one,
+        ``t_seq = sum(latency + size/bw)``;
+      * overlapped: a preload buffer of depth ``d`` pipelines transfers, so
+        only ``ceil(n/d)`` latencies are exposed,
+        ``t_ovl = ceil(n / d) * latency + sum(size)/bw``.
+
+    Returns ``(t_seq, t_ovl, per_block[B])``.
+    """
+    sizes = jnp.asarray(sizes, jnp.float32)
+    bw, lat, depth = link[0], link[1], jnp.maximum(link[2], 1.0)
+    active = (sizes > 0.0).astype(jnp.float32)
+    per_block = active * lat + sizes / bw
+    n = jnp.sum(active)
+    t_seq = jnp.sum(per_block)
+    t_ovl = jnp.ceil(n / depth) * lat + jnp.sum(sizes) / bw
+    return t_seq, t_ovl, per_block

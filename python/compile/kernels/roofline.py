@@ -1,0 +1,185 @@
+"""Pallas kernels for the TokenSim compute-cost hot spot (L1).
+
+Three kernels, all elementwise-plus-reduction shaped, all written
+TPU-style even though this environment executes them through
+``interpret=True`` on the CPU PJRT plugin (real-TPU lowering would emit a
+Mosaic custom-call the CPU client cannot run):
+
+* :func:`roofline_times` — the core roofline evaluator
+  ``t = max(flops/peak, bytes/bw) + overhead`` over a padded
+  ``(rows, 128)`` tile grid.  Used for the operator table, the
+  per-request attention times, and cross-validated against
+  ``ref.roofline_time_ref``.
+* :func:`attn_descriptors` — per-request attention FLOPs / KV bytes /
+  score elements from ``(ctx, new)`` batch descriptors.
+* :func:`xfer_block_times` — per-block link transfer times for the
+  communication model.
+
+Layout notes (the §Hardware-Adaptation story): descriptors are padded to
+lane width 128 and sublane multiples of 8, so a block is a whole number of
+``(8, 128)`` float32 VMEM tiles.  All kernels are single-pass, fused
+elementwise chains on the VPU; reductions happen in the surrounding jnp
+(XLA fuses them into the same HLO module at AOT time).  VMEM footprint for
+the default ``B = 1024`` batch is ``8 x 128 x 4 B`` per operand — a few KiB,
+vastly below the ~16 MiB VMEM budget, so no double-buffering pipeline is
+needed and the grid is a single program instance per 8-row stripe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+TILE_ELEMS = LANES * SUBLANES
+
+# interpret=True is mandatory on this CPU-only image; see module docstring.
+INTERPRET = True
+
+
+def pad_to_tiles(x, fill=0.0):
+    """Pad a 1-D float32 array to a whole number of (8, 128) tiles.
+
+    Returns ``(x2d, orig_len)`` where ``x2d`` has shape ``(rows, 128)``
+    with ``rows % 8 == 0``.
+    """
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    n = x.shape[0]
+    padded = ((n + TILE_ELEMS - 1) // TILE_ELEMS) * TILE_ELEMS
+    x = jnp.pad(x, (0, padded - n), constant_values=fill)
+    return x.reshape(-1, LANES), n
+
+
+def unpad(x2d, n):
+    """Inverse of :func:`pad_to_tiles` (values only)."""
+    return x2d.reshape(-1)[:n]
+
+
+def _roofline_body(flops_ref, bytes_ref, effbw_ref, scal_ref, out_ref):
+    """t = max(f/peak, b/bw) + overhead, with all-zero slots costing 0."""
+    f = flops_ref[...]
+    b = bytes_ref[...]
+    bw = effbw_ref[...]
+    peak = scal_ref[0, 0]
+    overhead = scal_ref[0, 1]
+    t = jnp.maximum(f / peak, b / bw)
+    nonzero = (f > 0.0) | (b > 0.0)
+    out_ref[...] = jnp.where(nonzero, t + overhead, 0.0)
+
+
+@functools.partial(jax.named_call, name="roofline_times")
+def roofline_times(flops, bytes_moved, eff_bw, peak_flops, op_overhead):
+    """Roofline time for a batch of operators (Pallas kernel).
+
+    ``flops``, ``bytes_moved`` and ``eff_bw`` are 1-D arrays of the same
+    length; ``eff_bw`` carries a *per-operator* bandwidth so the caller can
+    route e.g. the all-reduce over the interconnect instead of HBM.
+    Semantics match :func:`..kernels.ref.roofline_time_ref`.
+    """
+    f2, n = pad_to_tiles(flops)
+    b2, _ = pad_to_tiles(bytes_moved)
+    # padding bandwidth with 1.0 avoids 0/0 in padded slots
+    w2, _ = pad_to_tiles(eff_bw, fill=1.0)
+    scal = jnp.zeros((1, LANES), jnp.float32)
+    scal = scal.at[0, 0].set(peak_flops).at[0, 1].set(op_overhead)
+    rows = f2.shape[0]
+    grid = (rows // SUBLANES,)
+    block = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    scal_block = pl.BlockSpec((1, LANES), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _roofline_body,
+        grid=grid,
+        in_specs=[block, block, block, scal_block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=INTERPRET,
+    )(f2, b2, w2, scal)
+    return unpad(out, n)
+
+
+def _attn_body(ctx_ref, new_ref, model_ref, f_ref, kv_ref, s_ref):
+    """Per-request attention descriptors; see ref.attn_cost_ref."""
+    from .ref import ATTN_GATHER_EFF
+
+    c = ctx_ref[...]
+    n = new_ref[...]
+    h = model_ref[0, 0]
+    heads = model_ref[0, 2]
+    kv_heads = model_ref[0, 3]
+    dtype = model_ref[0, 6]
+    tp = model_ref[0, 7]
+
+    total = c + n
+    h_kv = h * (kv_heads / heads)
+    f_ref[...] = 4.0 * n * total * h / tp
+    kv_ref[...] = (
+        (2.0 * total * h_kv / ATTN_GATHER_EFF + 2.0 * n * h_kv + 2.0 * n * h)
+        * dtype / tp
+    )
+    s_ref[...] = n * total * heads / tp
+
+
+@functools.partial(jax.named_call, name="attn_descriptors")
+def attn_descriptors(ctx, new, model):
+    """Per-request attention (flops, kv_bytes, score_elems) — Pallas kernel.
+
+    Semantics match :func:`..kernels.ref.attn_cost_ref`.
+    """
+    c2, n_req = pad_to_tiles(ctx)
+    n2, _ = pad_to_tiles(new)
+    model_row = jnp.zeros((1, LANES), jnp.float32)
+    model_row = model_row.at[0, : model.shape[0]].set(
+        jnp.asarray(model, jnp.float32)
+    )
+    rows = c2.shape[0]
+    grid = (rows // SUBLANES,)
+    block = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    scal_block = pl.BlockSpec((1, LANES), lambda i: (0, 0))
+    shape = jax.ShapeDtypeStruct((rows, LANES), jnp.float32)
+    f2, kv2, s2 = pl.pallas_call(
+        _attn_body,
+        grid=grid,
+        in_specs=[block, block, scal_block],
+        out_specs=[block, block, block],
+        out_shape=[shape, shape, shape],
+        interpret=INTERPRET,
+    )(c2, n2, model_row)
+    return unpad(f2, n_req), unpad(kv2, n_req), unpad(s2, n_req)
+
+
+def _xfer_body(sizes_ref, link_ref, out_ref):
+    """Per-block transfer time: latency + size/bw for non-empty blocks."""
+    s = sizes_ref[...]
+    bw = link_ref[0, 0]
+    lat = link_ref[0, 1]
+    active = (s > 0.0).astype(jnp.float32)
+    out_ref[...] = active * lat + s / bw
+
+
+@functools.partial(jax.named_call, name="xfer_block_times")
+def xfer_block_times(sizes, link):
+    """Per-block link transfer times — Pallas kernel.
+
+    ``link = [bandwidth, latency, buffer_depth]``; semantics match the
+    ``per_block`` output of :func:`..kernels.ref.xfer_cost_ref`.
+    """
+    s2, n = pad_to_tiles(sizes)
+    link_row = jnp.zeros((1, LANES), jnp.float32)
+    link_row = link_row.at[0, :3].set(jnp.asarray(link, jnp.float32)[:3])
+    rows = s2.shape[0]
+    grid = (rows // SUBLANES,)
+    block = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    scal_block = pl.BlockSpec((1, LANES), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _xfer_body,
+        grid=grid,
+        in_specs=[block, scal_block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=INTERPRET,
+    )(s2, link_row)
+    return unpad(out, n)

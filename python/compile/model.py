@@ -1,0 +1,161 @@
+"""L2: the TokenSim compute-cost model as a JAX computation.
+
+This is the "compute simulator, like GenZ" box of the paper's Fig. 1,
+re-expressed as a single jax function built on the Pallas kernels in
+``kernels/roofline.py``.  ``aot.py`` lowers it once to HLO text; the rust
+coordinator (L3) loads the artifact through PJRT and evaluates it on the
+simulation hot path — Python never runs at simulation time.
+
+Two public computations:
+
+* :func:`iter_cost` — per-iteration latency of a transformer worker given
+  the batch composition ``(ctx, new)``, model parameters and hardware
+  parameters.  Exact semantics documented in ``kernels/ref.py``.
+* :func:`xfer_cost` — communication-model times for a train of KV-cache
+  block transfers over a link (sequential vs. overlapped schedules).
+
+Both have a pure-jnp twin in ``kernels/ref.py``; pytest asserts
+equivalence, and the rust test-suite cross-validates its own analytic
+mirror against the loaded artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.roofline import attn_descriptors, roofline_times, xfer_block_times
+
+# Default number of batch-descriptor slots in the AOT artifact.  1024 slots
+# = 8 full (8, 128) float32 VMEM tiles per operand and comfortably exceeds
+# any realistic max-batched-requests setting.
+BATCH_SLOTS = 1024
+
+MODEL_DIM = ref.MODEL_DIM
+HW_DIM = ref.HW_DIM
+NUM_OPS = ref.NUM_OPS
+
+
+def iter_cost(ctx, new, model, hw, *, use_ref: bool = False):
+    """Per-iteration latency model.
+
+    Args:
+      ctx: float32[B] — tokens already in KV cache per slot (0 = empty).
+      new: float32[B] — new tokens computed this iteration per slot.
+      model: float32[MODEL_DIM] — see ``kernels/ref.py``.
+      hw: float32[HW_DIM] — see ``kernels/ref.py``.
+      use_ref: build from the pure-jnp oracle instead of Pallas kernels
+        (debugging / kernel-free artifact).
+
+    Returns:
+      ``(iter_time, op_times[NUM_OPS], per_req_attn[B])``.
+    """
+    if use_ref:
+        return ref.iter_cost_ref(ctx, new, model, hw)
+
+    ctx = jnp.asarray(ctx, jnp.float32)
+    new = jnp.asarray(new, jnp.float32)
+    model = jnp.asarray(model, jnp.float32)
+    hw = jnp.asarray(hw, jnp.float32)
+
+    h = model[0]
+    layers = model[1]
+    heads = model[2]
+    kv_heads = model[3]
+    ffn = model[4]
+    vocab = model[5]
+    dtype = model[6]
+    tp = model[7]
+    peak, bw, op_oh, iter_oh, net_bw = hw[0], hw[1], hw[2], hw[3], hw[4]
+
+    # ---- L1 kernel: per-request attention descriptors ------------------
+    attn_f, attn_b, attn_s = attn_descriptors(ctx, new, model)
+    attn_flops = jnp.sum(attn_f)
+    attn_bytes = jnp.sum(attn_b)
+    score_elems = jnp.sum(attn_s)
+
+    # ---- operator table (same formulas as ref.iter_ops_ref) ------------
+    T = jnp.sum(new)
+    R = jnp.sum((new > 0).astype(jnp.float32))
+    g = kv_heads / heads
+    qkv_out = h * (1.0 + 2.0 * g)
+    zeros = jnp.zeros((), jnp.float32)
+
+    def gemm(m_rows, k_dim, n_cols):
+        f = 2.0 * m_rows * k_dim * n_cols / tp
+        b = (k_dim * n_cols / tp + m_rows * k_dim + m_rows * n_cols / tp) * dtype
+        return f, b
+
+    qkv_f, qkv_b = gemm(T, h, qkv_out)
+    out_f, out_b = gemm(T, h, h)
+    up_f, up_b = gemm(T, h, 2.0 * ffn)
+    down_f, down_b = gemm(T, ffn, h)
+    logits_f, logits_b = gemm(R, h, vocab)
+
+    embed_b = T * h * dtype
+    softmax_f = 5.0 * score_elems
+    softmax_b = 2.0 * score_elems * dtype
+    ln_f = 2.0 * 4.0 * T * h
+    ln_b = 2.0 * 2.0 * T * h * dtype
+    ar_b = jnp.where(tp > 1.0, 2.0 * 2.0 * (tp - 1.0) / tp * T * h * dtype, zeros)
+
+    op_flops = jnp.stack([
+        zeros, qkv_f, attn_flops, softmax_f, out_f,
+        up_f, down_f, ln_f, zeros, logits_f,
+    ])
+    op_bytes = jnp.stack([
+        embed_b, qkv_b, attn_bytes, softmax_b, out_b,
+        up_b, down_b, ln_b, ar_b, logits_b,
+    ])
+    eff_bw = jnp.where(
+        jnp.arange(NUM_OPS) == ref.OP_NAMES.index("allreduce"), net_bw, bw
+    )
+
+    # ---- L1 kernel: roofline over the op table + per-request attention -
+    op_times = roofline_times(op_flops, op_bytes, eff_bw, peak, op_oh)
+    per_req = roofline_times(
+        attn_f, attn_b, jnp.full_like(attn_f, bw), peak, op_oh
+    )
+
+    per_layer = jnp.sum(op_times * (1.0 - ref.PER_ITER_OPS))
+    per_iter = jnp.sum(op_times * ref.PER_ITER_OPS)
+    iter_time = jnp.where(T > 0.0, layers * per_layer + per_iter + iter_oh, 0.0)
+    return iter_time, op_times, per_req
+
+
+def xfer_cost(sizes, link, *, use_ref: bool = False):
+    """Communication-model times for a train of block transfers.
+
+    Args:
+      sizes: float32[B] — bytes per block transfer (0 = padding).
+      link: float32[3] — ``[bandwidth B/s, latency s, buffer_depth]``.
+
+    Returns:
+      ``(t_seq, t_ovl, per_block[B])`` — see ``kernels/ref.xfer_cost_ref``.
+    """
+    if use_ref:
+        return ref.xfer_cost_ref(sizes, link)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    link = jnp.asarray(link, jnp.float32)
+    per_block = xfer_block_times(sizes, link)
+    depth = jnp.maximum(link[2], 1.0)
+    n = jnp.sum((sizes > 0.0).astype(jnp.float32))
+    t_seq = jnp.sum(per_block)
+    t_ovl = jnp.ceil(n / depth) * link[1] + jnp.sum(sizes) / link[0]
+    return t_seq, t_ovl, per_block
+
+
+def iter_cost_flat(ctx, new, model, hw):
+    """AOT entry point: flatten outputs into one float32 vector.
+
+    Layout: ``[iter_time, op_times[NUM_OPS], per_req_attn[B]]`` — a single
+    array keeps the rust unpacking trivial (``to_tuple1`` + ``to_vec``).
+    """
+    iter_time, op_times, per_req = iter_cost(ctx, new, model, hw)
+    return (jnp.concatenate([iter_time[None], op_times, per_req]),)
+
+
+def xfer_cost_flat(sizes, link):
+    """AOT entry point: ``[t_seq, t_ovl, per_block[B]]``."""
+    t_seq, t_ovl, per_block = xfer_cost(sizes, link)
+    return (jnp.concatenate([t_seq[None], t_ovl[None], per_block]),)

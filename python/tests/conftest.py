@@ -1,0 +1,35 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def llama2_7b_model():
+    """MODEL vector for LLaMA2-7B (tp=1, fp16)."""
+    return np.array([4096, 32, 32, 32, 11008, 32000, 2, 1], np.float32)
+
+
+def a100_hw():
+    """HW vector for an A100-80G: 312 TF peak x 0.55 eff, 2.039 TB/s."""
+    return np.array(
+        [312e12 * 0.55, 2.039e12, 4.5e-6, 2.2e-4, 300e9, 80e9], np.float32
+    )
+
+
+@pytest.fixture
+def model_vec():
+    return llama2_7b_model()
+
+
+@pytest.fixture
+def hw_vec():
+    return a100_hw()

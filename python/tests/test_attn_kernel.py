@@ -1,0 +1,99 @@
+"""L1 Pallas attention-descriptor kernel vs pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.roofline import attn_descriptors
+
+
+def _cmp(ctx, new, model):
+    got = attn_descriptors(ctx, new, model)
+    want = ref.attn_cost_ref(ctx, new, model)
+    for g, w, name in zip(got, want, ["flops", "kv_bytes", "scores"]):
+        assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-6, err_msg=name
+        )
+
+
+def test_single_decode_request(model_vec):
+    ctx = np.array([512.0], np.float32)
+    new = np.array([1.0], np.float32)
+    _cmp(ctx, new, model_vec)
+    f, kv, s = attn_descriptors(ctx, new, model_vec)
+    h = model_vec[0]
+    assert_allclose(np.asarray(f), [4.0 * 1 * 513 * h], rtol=1e-6)
+
+
+def test_prefill_request(model_vec):
+    ctx = np.array([0.0], np.float32)
+    new = np.array([256.0], np.float32)
+    f, kv, s = attn_descriptors(ctx, new, model_vec)
+    h, heads = model_vec[0], model_vec[2]
+    assert_allclose(np.asarray(f), [4.0 * 256 * 256 * h], rtol=1e-6)
+    assert_allclose(np.asarray(s), [256 * 256 * heads], rtol=1e-6)
+
+
+def test_empty_slots_zero(model_vec):
+    ctx = np.zeros(16, np.float32)
+    new = np.zeros(16, np.float32)
+    f, kv, s = attn_descriptors(ctx, new, model_vec)
+    assert (np.asarray(f) == 0).all()
+    assert (np.asarray(kv) == 0).all()
+    assert (np.asarray(s) == 0).all()
+
+
+def test_gqa_reduces_kv_bytes(model_vec):
+    """kv_heads < heads shrinks KV traffic but not score FLOPs."""
+    mha = model_vec.copy()
+    gqa = model_vec.copy()
+    gqa[3] = mha[2] / 4  # 4-way GQA
+    ctx = np.array([1000.0], np.float32)
+    new = np.array([1.0], np.float32)
+    f_m, kv_m, _ = attn_descriptors(ctx, new, mha)
+    f_g, kv_g, _ = attn_descriptors(ctx, new, gqa)
+    assert_allclose(np.asarray(f_m), np.asarray(f_g), rtol=1e-6)
+    assert np.asarray(kv_g)[0] < np.asarray(kv_m)[0]
+
+
+def test_tensor_parallel_scaling(model_vec):
+    tp1 = model_vec.copy()
+    tp4 = model_vec.copy()
+    tp4[7] = 4
+    ctx = np.array([128.0, 64.0], np.float32)
+    new = np.array([1.0, 32.0], np.float32)
+    f1, kv1, s1 = attn_descriptors(ctx, new, tp1)
+    f4, kv4, s4 = attn_descriptors(ctx, new, tp4)
+    assert_allclose(np.asarray(f1) / 4.0, np.asarray(f4), rtol=1e-6)
+    assert_allclose(np.asarray(kv1) / 4.0, np.asarray(kv4), rtol=1e-6)
+
+
+def test_mixed_batch(model_vec, rng):
+    n = 300
+    ctx = rng.integers(0, 4096, n).astype(np.float32)
+    new = rng.integers(0, 2, n).astype(np.float32)
+    _cmp(ctx, new, model_vec)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 1024),
+    h=st.sampled_from([512, 2048, 4096, 5120, 8192]),
+    heads=st.sampled_from([8, 32, 40, 64]),
+    gqa=st.sampled_from([1, 4, 8]),
+    dtype_bytes=st.sampled_from([1, 2, 4]),
+    tp=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n, h, heads, gqa, dtype_bytes, tp, seed):
+    if heads % gqa:
+        return
+    model = np.array(
+        [h, 32, heads, heads // gqa, 4 * h, 32000, dtype_bytes, tp],
+        np.float32,
+    )
+    rng = np.random.default_rng(seed)
+    ctx = rng.integers(0, 8192, n).astype(np.float32)
+    new = rng.integers(0, 512, n).astype(np.float32)
+    _cmp(ctx, new, model)

@@ -1,0 +1,131 @@
+"""L2 iteration-cost model: Pallas path vs ref oracle + physics sanity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model as m
+from compile.kernels import ref
+
+
+def _cmp(ctx, new, model, hw, rtol=2e-6):
+    got = m.iter_cost(ctx, new, model, hw)
+    want = ref.iter_cost_ref(ctx, new, model, hw)
+    for g, w, name in zip(got, want, ["iter_time", "op_times", "per_req"]):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=rtol, err_msg=name)
+
+
+def test_matches_ref_decode_batch(model_vec, hw_vec, rng):
+    ctx = rng.integers(16, 2048, 64).astype(np.float32)
+    new = np.ones(64, np.float32)
+    _cmp(ctx, new, model_vec, hw_vec)
+
+
+def test_matches_ref_prefill(model_vec, hw_vec):
+    ctx = np.zeros(4, np.float32)
+    new = np.array([512, 128, 1024, 32], np.float32)
+    _cmp(ctx, new, model_vec, hw_vec)
+
+
+def test_matches_ref_mixed(model_vec, hw_vec, rng):
+    n = 200
+    ctx = rng.integers(0, 4096, n).astype(np.float32)
+    new = np.where(rng.random(n) < 0.9, 1, rng.integers(16, 512, n)).astype(
+        np.float32
+    )
+    ctx[::7] = 0
+    new[::7] = 0  # empty slots
+    _cmp(ctx, new, model_vec, hw_vec)
+
+
+def test_empty_batch_costs_zero(model_vec, hw_vec):
+    t, ops, per = m.iter_cost(
+        np.zeros(8, np.float32), np.zeros(8, np.float32), model_vec, hw_vec
+    )
+    assert float(t) == 0.0
+    assert (np.asarray(per) == 0).all()
+
+
+def test_prefill_compute_bound(model_vec, hw_vec):
+    """A 2048-token prefill must be compute-dominated: doubling bandwidth
+    barely changes latency; doubling FLOPS nearly halves it."""
+    ctx = np.zeros(1, np.float32)
+    new = np.array([2048.0], np.float32)
+    t0, _, _ = m.iter_cost(ctx, new, model_vec, hw_vec)
+    hw_bw = hw_vec.copy()
+    hw_bw[1] *= 2
+    t_bw, _, _ = m.iter_cost(ctx, new, model_vec, hw_bw)
+    hw_fl = hw_vec.copy()
+    hw_fl[0] *= 2
+    t_fl, _, _ = m.iter_cost(ctx, new, model_vec, hw_fl)
+    assert float(t_bw) > 0.95 * float(t0)
+    assert float(t_fl) < 0.62 * float(t0)
+
+
+def test_decode_memory_bound(model_vec, hw_vec):
+    """Single-token decode must be bandwidth-dominated."""
+    ctx = np.full(8, 512.0, np.float32)
+    new = np.ones(8, np.float32)
+    t0, _, _ = m.iter_cost(ctx, new, model_vec, hw_vec)
+    hw_bw = hw_vec.copy()
+    hw_bw[1] *= 2
+    t_bw, _, _ = m.iter_cost(ctx, new, model_vec, hw_bw)
+    hw_fl = hw_vec.copy()
+    hw_fl[0] *= 2
+    t_fl, _, _ = m.iter_cost(ctx, new, model_vec, hw_fl)
+    assert float(t_bw) < 0.75 * float(t0)
+    assert float(t_fl) > 0.9 * float(t0)
+
+
+def test_batching_decode_is_cheaper_than_serial(model_vec, hw_vec):
+    """One batched decode iteration of 32 requests must be far cheaper
+    than 32 separate single-request iterations (weight reuse)."""
+    ctx = np.full(32, 256.0, np.float32)
+    new = np.ones(32, np.float32)
+    t_batch, _, _ = m.iter_cost(ctx, new, model_vec, hw_vec)
+    t_one, _, _ = m.iter_cost(
+        ctx[:1], new[:1], model_vec, hw_vec
+    )
+    assert float(t_batch) < 0.2 * (32 * float(t_one))
+
+
+def test_iter_time_monotone_in_context(model_vec, hw_vec):
+    times = []
+    for c in [128, 512, 2048, 8192]:
+        t, _, _ = m.iter_cost(
+            np.full(16, float(c), np.float32),
+            np.ones(16, np.float32),
+            model_vec,
+            hw_vec,
+        )
+        times.append(float(t))
+    assert all(a < b for a, b in zip(times, times[1:]))
+
+
+def test_flat_layout(model_vec, hw_vec, rng):
+    n = m.BATCH_SLOTS
+    ctx = rng.integers(0, 1024, n).astype(np.float32)
+    new = (rng.random(n) < 0.3).astype(np.float32)
+    (flat,) = m.iter_cost_flat(ctx, new, model_vec, hw_vec)
+    t, ops, per = m.iter_cost(ctx, new, model_vec, hw_vec)
+    assert flat.shape == (1 + m.NUM_OPS + n,)
+    assert_allclose(float(flat[0]), float(t), rtol=1e-6)
+    assert_allclose(np.asarray(flat[1 : 1 + m.NUM_OPS]), np.asarray(ops), rtol=1e-6)
+    assert_allclose(np.asarray(flat[1 + m.NUM_OPS :]), np.asarray(per), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 512),
+    tp=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matches_ref(n, tp, seed):
+    model = np.array([4096, 32, 32, 32, 11008, 32000, 2, tp], np.float32)
+    hw = np.array(
+        [312e12 * 0.55, 2.039e12, 4.5e-6, 2.2e-4, 300e9, 80e9], np.float32
+    )
+    rng = np.random.default_rng(seed)
+    ctx = rng.integers(0, 4096, n).astype(np.float32)
+    new = rng.integers(0, 64, n).astype(np.float32)
+    _cmp(ctx, new, model, hw)

@@ -1,0 +1,104 @@
+"""L1 Pallas roofline kernel vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.roofline import pad_to_tiles, roofline_times, unpad
+
+
+def _cmp(flops, bytes_, bw, peak, oh):
+    got = np.asarray(roofline_times(flops, bytes_, bw, peak, oh))
+    want = np.asarray(
+        ref.roofline_time_ref(flops, bytes_, peak, np.asarray(bw), oh)
+    )
+    assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+def test_basic_compute_bound():
+    flops = np.array([1e12, 2e12], np.float32)
+    bytes_ = np.array([1e6, 1e6], np.float32)
+    bw = np.full(2, 2e12, np.float32)
+    _cmp(flops, bytes_, bw, 1e12, 1e-6)
+
+
+def test_basic_memory_bound():
+    flops = np.array([1e6], np.float32)
+    bytes_ = np.array([4e12], np.float32)
+    _cmp(flops, bytes_, np.full(1, 2e12, np.float32), 1e15, 0.0)
+
+
+def test_zero_slot_costs_zero():
+    flops = np.array([0.0, 1e12, 0.0], np.float32)
+    bytes_ = np.array([0.0, 1e9, 0.0], np.float32)
+    bw = np.full(3, 1e12, np.float32)
+    got = np.asarray(roofline_times(flops, bytes_, bw, 1e12, 1e-3))
+    assert got[0] == 0.0 and got[2] == 0.0
+    assert got[1] > 0.0
+
+
+def test_overhead_added_once():
+    got = np.asarray(
+        roofline_times(
+            np.array([1e12], np.float32),
+            np.array([0.0], np.float32),
+            np.array([1e12], np.float32),
+            1e12,
+            0.5,
+        )
+    )
+    assert_allclose(got, [1.5], rtol=1e-6)
+
+
+def test_per_element_bandwidth():
+    """eff_bw is applied per element (allreduce routing)."""
+    flops = np.zeros(2, np.float32)
+    bytes_ = np.array([1e9, 1e9], np.float32)
+    bw = np.array([1e9, 2e9], np.float32)
+    got = np.asarray(roofline_times(flops, bytes_, bw, 1e12, 0.0))
+    assert_allclose(got, [1.0, 0.5], rtol=1e-6)
+
+
+def test_large_batch_multi_tile():
+    rng = np.random.default_rng(7)
+    n = 5000  # spans several (8,128) tiles with ragged padding
+    flops = rng.uniform(0, 1e13, n).astype(np.float32)
+    bytes_ = rng.uniform(0, 1e10, n).astype(np.float32)
+    bw = rng.uniform(1e11, 2e12, n).astype(np.float32)
+    _cmp(flops, bytes_, bw, 3e14, 5e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    peak=st.floats(1e9, 1e15),
+    oh=st.floats(0, 1e-3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes_and_values(n, peak, oh, seed):
+    rng = np.random.default_rng(seed)
+    flops = rng.uniform(0, 1e14, n).astype(np.float32)
+    bytes_ = rng.uniform(0, 1e11, n).astype(np.float32)
+    # sprinkle padding-style zeros
+    mask = rng.random(n) < 0.2
+    flops[mask] = 0.0
+    bytes_[mask] = 0.0
+    bw = rng.uniform(1e10, 3e12, n).astype(np.float32)
+    _cmp(flops, bytes_, bw, np.float32(peak), np.float32(oh))
+
+
+def test_pad_unpad_roundtrip():
+    for n in [1, 8, 127, 128, 129, 1024, 1025]:
+        x = np.arange(n, dtype=np.float32)
+        x2, m = pad_to_tiles(x)
+        assert x2.shape[0] % 8 == 0 and x2.shape[1] == 128
+        assert m == n
+        assert_allclose(np.asarray(unpad(jnp.asarray(x2), m)), x)
+
+
+def test_pad_fill_value():
+    x2, _ = pad_to_tiles(np.ones(3, np.float32), fill=7.0)
+    flat = np.asarray(x2).reshape(-1)
+    assert (flat[3:] == 7.0).all()

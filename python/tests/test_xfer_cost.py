@@ -1,0 +1,66 @@
+"""Communication-model kernel vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model as m
+from compile.kernels import ref
+
+NVLINK = np.array([600e9, 5e-6, 1.0], np.float32)
+PCIE = np.array([64e9, 10e-6, 1.0], np.float32)
+
+
+def _cmp(sizes, link):
+    got = m.xfer_cost(sizes, link)
+    want = ref.xfer_cost_ref(sizes, link)
+    for g, w, name in zip(got, want, ["t_seq", "t_ovl", "per_block"]):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6, err_msg=name)
+
+
+def test_single_block():
+    sizes = np.array([2 << 20], np.float32)
+    _cmp(sizes, NVLINK)
+    t_seq, t_ovl, per = m.xfer_cost(sizes, NVLINK)
+    assert_allclose(float(t_seq), 5e-6 + (2 << 20) / 600e9, rtol=1e-6)
+    assert_allclose(float(t_seq), float(t_ovl), rtol=1e-6)
+
+
+def test_overlap_beats_sequential():
+    sizes = np.full(64, 1 << 20, np.float32)
+    link = np.array([64e9, 50e-6, 8.0], np.float32)
+    t_seq, t_ovl, _ = m.xfer_cost(sizes, link)
+    assert float(t_ovl) < float(t_seq)
+    # 64 blocks, depth 8 -> 8 exposed latencies
+    assert_allclose(
+        float(t_ovl), 8 * 50e-6 + 64 * (1 << 20) / 64e9, rtol=1e-6
+    )
+
+
+def test_empty_blocks_free():
+    sizes = np.zeros(16, np.float32)
+    t_seq, t_ovl, per = m.xfer_cost(sizes, PCIE)
+    assert float(t_seq) == 0.0
+    assert float(t_ovl) == 0.0
+    assert (np.asarray(per) == 0).all()
+
+
+def test_padding_mixed():
+    sizes = np.array([1e6, 0, 2e6, 0, 0], np.float32)
+    _cmp(sizes, PCIE)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    bw=st.floats(1e9, 1e12),
+    lat=st.floats(1e-7, 1e-3),
+    depth=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n, bw, lat, depth, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.uniform(0, 64 << 20, n).astype(np.float32)
+    sizes[rng.random(n) < 0.3] = 0.0
+    link = np.array([bw, lat, depth], np.float32)
+    _cmp(sizes, link)

@@ -1,0 +1,75 @@
+//! Compute-cost-model benchmarks — the simulation hot path.
+//!
+//! Compares the three evaluation paths (PJRT-executed HLO artifact,
+//! extracted coefficient table, analytic mirror) plus the baselines'
+//! models; the §Perf story is the Hlo → Table gap.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, budget, sink};
+use tokensim::baselines::{LlmServingSimLike, VidurLike};
+use tokensim::compute::{AnalyticCost, BatchDesc, ComputeModel, HloCost, TableCost};
+use tokensim::hardware::HardwareSpec;
+use tokensim::model::ModelSpec;
+use tokensim::oracle::{OracleCost, OracleParams};
+
+fn mixed_batch() -> BatchDesc {
+    let mut b = BatchDesc::new();
+    b.push(0, 512);
+    for i in 0..63u32 {
+        b.push(100 + i * 37, 1);
+    }
+    b
+}
+
+fn main() {
+    println!("== cost_model_bench ==");
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let batch = mixed_batch();
+
+    let mut analytic = AnalyticCost::new(&model, &hw);
+    bench("cost/analytic_mirror", budget(), || {
+        sink(analytic.iter_time(&batch));
+    });
+
+    let mut probe = AnalyticCost::new(&model, &hw);
+    let mut table = TableCost::build(&mut probe, &model, &hw);
+    bench("cost/table_extracted", budget(), || {
+        sink(table.iter_time(&batch));
+    });
+
+    let dir = tokensim::runtime::default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let mut hlo = HloCost::load(&model, &hw, dir.to_str().unwrap()).unwrap();
+        bench("cost/hlo_pjrt_execute", budget(), || {
+            sink(hlo.iter_time(&batch));
+        });
+        let mut table_hlo = TableCost::build(&mut hlo, &model, &hw);
+        bench("cost/table_from_artifact", budget(), || {
+            sink(table_hlo.iter_time(&batch));
+        });
+    } else {
+        eprintln!("(artifacts not built; skipping HLO benches — run `make artifacts`)");
+    }
+
+    let oracle = OracleCost::new(&model, &hw, OracleParams::vllm().noiseless(), 0);
+    bench("cost/oracle_reference", budget(), || {
+        sink(oracle.evaluate_mean(&batch).iter_time);
+    });
+
+    let mut vidur = VidurLike::train(&model, &hw, 800, 42);
+    bench("cost/vidur_like_forest", budget(), || {
+        sink(vidur.iter_time(&batch));
+    });
+
+    let mut cosim = LlmServingSimLike::new(&model, &hw);
+    let mut short = BatchDesc::new();
+    for i in 0..64u32 {
+        short.push(100 + i * 7, 1);
+    }
+    bench("cost/llmservingsim_like_cosim", budget(), || {
+        sink(cosim.iter_time(&short));
+    });
+}

@@ -1,0 +1,76 @@
+//! End-to-end simulator throughput — the Fig-6-adjacent numbers: how
+//! fast TokenSim itself simulates serving workloads (requests and
+//! simulated tokens per wall-clock second), across cost models and
+//! cluster shapes.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use harness::{bench, budget, sink};
+use tokensim::cluster::Simulation;
+use tokensim::compute::CostModelKind;
+use tokensim::config::SimulationConfig;
+use tokensim::hardware::HardwareSpec;
+use tokensim::model::ModelSpec;
+use tokensim::workload::WorkloadSpec;
+
+fn cfg(n: usize, kind: CostModelKind) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        WorkloadSpec::sharegpt(n, 16.0),
+    );
+    cfg.cost_model = kind;
+    cfg
+}
+
+fn main() {
+    println!("== end_to_end_bench ==");
+
+    for kind in [CostModelKind::Analytic, CostModelKind::Table] {
+        let c = cfg(500, kind);
+        bench(&format!("e2e/500_sharegpt_requests_{kind:?}"), budget(), || {
+            sink(Simulation::from_config(&c).run().records.len());
+        });
+    }
+
+    if tokensim::runtime::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        let c = cfg(200, CostModelKind::Hlo);
+        bench("e2e/200_sharegpt_requests_Hlo", budget(), || {
+            sink(Simulation::from_config(&c).run().records.len());
+        });
+    }
+
+    // disaggregated 8-worker cluster
+    let mut disagg = SimulationConfig::disaggregated(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        2,
+        HardwareSpec::a100_80g(),
+        6,
+        WorkloadSpec::sharegpt(500, 40.0),
+    );
+    disagg.cost_model = CostModelKind::Table;
+    bench("e2e/500_requests_disaggregated_2p6d", budget(), || {
+        sink(Simulation::from_config(&disagg).run().records.len());
+    });
+
+    // the headline scale: Fig 9's 50k-request workload, one shot
+    let big = cfg(50_000, CostModelKind::Table);
+    let t0 = Instant::now();
+    let report = Simulation::from_config(&big).run();
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: u64 = report.records.iter().map(|r| r.output_len as u64).sum();
+    println!(
+        "one-shot: 50k ShareGPT requests in {:.2}s wall ({:.0} req/s, {:.2}M simulated tokens/s, {} events)",
+        wall,
+        50_000.0 / wall,
+        tokens as f64 / wall / 1e6,
+        report.events_processed,
+    );
+}

@@ -1,0 +1,56 @@
+//! L3 engine micro-benchmarks: event-queue throughput (the SimPy
+//! replacement this rust rewrite justifies) and RNG sampling.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, budget, sink};
+use tokensim::sim::{EventPayload, EventQueue, SimRng};
+
+fn main() {
+    println!("== engine_bench ==");
+
+    bench("event_queue/push_pop_10k", budget(), || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule_at((i % 97) as f64, EventPayload::Kick { worker: i as usize % 8 });
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        sink(n);
+    });
+
+    bench("event_queue/interleaved_steady_state", budget(), || {
+        let mut q = EventQueue::new();
+        let mut t = 0.0;
+        for i in 0..64u64 {
+            q.schedule_at(i as f64 * 0.1, EventPayload::SampleTick);
+        }
+        for _ in 0..10_000 {
+            let ev = q.pop().unwrap();
+            t = ev.time;
+            q.schedule_at(t + 1.0, EventPayload::SampleTick);
+        }
+        sink(t);
+    });
+
+    bench("rng/exp_gap_1M", budget(), || {
+        let mut rng = SimRng::new(7, "bench");
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += rng.exp_gap(10.0);
+        }
+        sink(acc);
+    });
+
+    bench("rng/lognormal_100k", budget(), || {
+        let mut rng = SimRng::new(7, "bench");
+        let mut acc = 0.0;
+        for _ in 0..100_000 {
+            acc += rng.lognormal(4.0, 1.0);
+        }
+        sink(acc);
+    });
+}

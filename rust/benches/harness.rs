@@ -1,0 +1,88 @@
+//! Minimal benchmarking harness (criterion is unavailable in this
+//! offline build): warms up, runs timed batches until a time budget or
+//! max iterations, reports mean / p50 / p99 per-op latency and
+//! throughput. Used by every `cargo bench` target via `#[path]` module
+//! inclusion.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Run `f` repeatedly for up to `budget` (after warm-up) and collect
+/// per-iteration timings.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warm-up: 3 iterations or 100 ms, whichever first
+    let warm_start = Instant::now();
+    for _ in 0..3 {
+        f();
+        if warm_start.elapsed() > Duration::from_millis(100) {
+            break;
+        }
+    }
+    let mut samples: Vec<u64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < 1_000_000 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<u64>() as f64 / n as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: samples.len() as u64,
+        mean_ns: mean,
+        p50_ns: samples[n / 2] as f64,
+        p99_ns: samples[(n * 99 / 100).min(n - 1)] as f64,
+    };
+    println!(
+        "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  ({:.1}/s)",
+        result.name,
+        result.iters,
+        fmt_ns(result.mean_ns),
+        fmt_ns(result.p50_ns),
+        fmt_ns(result.p99_ns),
+        result.per_sec(),
+    );
+    result
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Default per-case budget; override with TOKENSIM_BENCH_SECS.
+pub fn budget() -> Duration {
+    let secs = std::env::var("TOKENSIM_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(2.0);
+    Duration::from_secs_f64(secs)
+}
+
+/// `black_box` stand-in.
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,46 @@
+//! Memory-manager micro-benchmarks: block reserve/grow/release churn
+//! and pool-cache operations.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, budget, sink};
+use tokensim::memory::{PagedBlockManager, PoolCache};
+
+fn main() {
+    println!("== memory_bench ==");
+
+    bench("paged/reserve_release_1k_requests", budget(), || {
+        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
+        for i in 0..1000 {
+            mem.reserve(i, 64 + (i as u32 * 31) % 2048);
+        }
+        for i in 0..1000 {
+            mem.release(i);
+        }
+        sink(mem.free_blocks());
+    });
+
+    bench("paged/decode_growth_10k_steps", budget(), || {
+        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
+        for i in 0..100 {
+            mem.reserve(i, 512);
+        }
+        let mut tokens = [512u32; 100];
+        for step in 0..10_000 {
+            let i = step % 100;
+            tokens[i] += 1;
+            let _ = mem.grow_one_token(i, tokens[i]);
+        }
+        sink(mem.used_blocks());
+    });
+
+    bench("pool/store_lookup_churn", budget(), || {
+        let mut pool = PoolCache::new(10_000, 16);
+        for i in 0..2000usize {
+            pool.store(i % 128, 64 + (i as u32 * 17) % 4096);
+            sink(pool.lookup(i % 128, 512));
+        }
+        sink(pool.used_blocks());
+    });
+}

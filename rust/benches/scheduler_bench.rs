@@ -1,0 +1,107 @@
+//! Scheduler micro-benchmarks: batch formation under load (the
+//! per-iteration L3 control-path cost) and global dispatch.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::collections::VecDeque;
+
+use harness::{bench, budget, sink};
+use tokensim::memory::PagedBlockManager;
+use tokensim::model::ModelSpec;
+use tokensim::request::Request;
+use tokensim::scheduler::{GlobalPolicy, GlobalSchedulerState, LocalPolicy, LocalSchedCtx, WorkerView};
+use tokensim::sim::SimRng;
+
+fn make_requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::new(i, i, 0, 64 + (i as u32 * 37) % 1024, 64, 0.0))
+        .collect()
+}
+
+fn main() {
+    println!("== scheduler_bench ==");
+    let model = ModelSpec::llama2_7b();
+    let _ = &model;
+
+    // continuous batch formation with 256 running decodes
+    bench("local/continuous_form_batch_256_running", budget(), || {
+        let mut requests = make_requests(256);
+        let mut waiting: VecDeque<usize> = VecDeque::new();
+        let mut running: Vec<usize> = (0..256).collect();
+        for r in requests.iter_mut() {
+            r.phase = tokensim::request::Phase::Decode;
+            r.prompt_done = r.prompt_len;
+            r.ctx_in_cache = r.prompt_len;
+        }
+        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
+        for (i, r) in requests.iter().enumerate() {
+            mem.reserve(i, r.ctx_in_cache + 1);
+        }
+        let policy = LocalPolicy::continuous_default();
+        let mut ctx = LocalSchedCtx {
+            requests: &mut requests,
+            waiting: &mut waiting,
+            running: &mut running,
+            mem: &mut mem,
+            now: 0.0,
+            draining: false,
+            oldest_wait: None,
+        };
+        sink(policy.form_batch(&mut ctx).members.len());
+    });
+
+    // admission of 64 fresh prefills
+    bench("local/continuous_admit_64_prefills", budget(), || {
+        let mut requests = make_requests(64);
+        let mut waiting: VecDeque<usize> = (0..64).collect();
+        let mut running: Vec<usize> = Vec::new();
+        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
+        let policy = LocalPolicy::Continuous {
+            max_batched_tokens: 1 << 20,
+            max_batch_size: None,
+            mixed_batching: false,
+        };
+        let mut ctx = LocalSchedCtx {
+            requests: &mut requests,
+            waiting: &mut waiting,
+            running: &mut running,
+            mem: &mut mem,
+            now: 0.0,
+            draining: false,
+            oldest_wait: Some(0.0),
+        };
+        sink(policy.form_batch(&mut ctx).members.len());
+    });
+
+    // global dispatch across an 8-worker cluster
+    let views: Vec<WorkerView> = (0..8)
+        .map(|id| WorkerView {
+            id,
+            hardware: "A100".into(),
+            run_prefill: id < 2,
+            run_decode: id >= 2,
+            waiting_requests: id,
+            running_requests: 2 * id,
+            outstanding_tokens: 1000 * id as u64,
+            free_blocks: 1000,
+            total_blocks: 2000,
+        })
+        .collect();
+    let requests = make_requests(64);
+    let new_ids: Vec<usize> = (0..64).collect();
+    for (name, policy) in [
+        ("global/round_robin_dispatch_64", GlobalPolicy::RoundRobin),
+        ("global/load_aware_dispatch_64", GlobalPolicy::LoadAware),
+    ] {
+        let mut state = GlobalSchedulerState::new(8);
+        let mut rng = SimRng::new(1, "bench");
+        bench(name, budget(), || {
+            sink(
+                policy
+                    .dispatch(&mut state, &new_ids, &[], &views, &requests, &mut rng)
+                    .len(),
+            );
+        });
+    }
+}

@@ -1,0 +1,246 @@
+//! LLMServingSim-like baseline: cycle-ish HW/SW co-simulation.
+//!
+//! LLMServingSim [IISWC'24] walks an accelerator-simulator model of
+//! every layer/operator per iteration, which makes it accurate but very
+//! slow ("impressively slow, even slower than the real-time behavior" —
+//! Fig 6), and its open-source version "can only handle very short
+//! requests" (the paper caps it at 10 tokens). This reproduction keeps
+//! both properties honestly:
+//!
+//! * iteration cost is computed by walking every layer × operator ×
+//!   128-row tile in an explicit loop over a small systolic-array step
+//!   model (no caching, no vectorized shortcut) — the slowness is
+//!   structural, not an artificial sleep;
+//! * prompts longer than `MAX_PROMPT` tokens are truncated (with a
+//!   one-time warning), reproducing the short-request limitation.
+
+use crate::compute::{BatchDesc, ComputeModel};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+
+/// The open-source tool's short-prompt limitation (tokens).
+pub const MAX_PROMPT: u32 = 10;
+
+/// Systolic-array tile geometry of the co-simulated accelerator.
+const TILE_ROWS: u64 = 128;
+const TILE_COLS: u64 = 128;
+
+/// LLMServingSim-like co-simulating cost model.
+pub struct LlmServingSimLike {
+    model: ModelSpec,
+    hw: HardwareSpec,
+    name: String,
+    warned: bool,
+    /// Tiles walked (exposed so tests can assert the work is real).
+    pub tiles_simulated: u64,
+}
+
+impl LlmServingSimLike {
+    pub fn new(model: &ModelSpec, hw: &HardwareSpec) -> Self {
+        Self {
+            model: model.clone(),
+            hw: hw.clone(),
+            name: format!("llmservingsim-like[{}/{}]", model.name, hw.name),
+            warned: false,
+            tiles_simulated: 0,
+        }
+    }
+
+    /// Co-simulate one GEMM of `m x k x n` on the tiled systolic model:
+    /// walk every (row-tile, col-tile) pair, accumulating compute and
+    /// weight-traffic cycles tile by tile.
+    fn gemm_time(&mut self, m: u64, k: u64, n: u64) -> f64 {
+        if m == 0 || k == 0 || n == 0 {
+            return 0.0;
+        }
+        let peak = self.hw.achievable_flops();
+        let bw = self.hw.mem_bw;
+        let dtype = self.model.dtype_bytes as f64;
+        let row_tiles = m.div_ceil(TILE_ROWS);
+        let col_tiles = n.div_ceil(TILE_COLS);
+        let mut time = 0.0f64;
+        for rt in 0..row_tiles {
+            let rows = (m - rt * TILE_ROWS).min(TILE_ROWS);
+            for ct in 0..col_tiles {
+                let cols = (n - ct * TILE_COLS).min(TILE_COLS);
+                self.tiles_simulated += 1;
+                let flops = 2.0 * rows as f64 * k as f64 * cols as f64;
+                // per-tile weight + activation traffic (no inter-tile
+                // reuse modelling — the co-sim's coarseness)
+                let bytes = (k as f64 * cols as f64 + rows as f64 * k as f64 / col_tiles as f64)
+                    * dtype;
+                time += (flops / peak).max(bytes / bw);
+            }
+        }
+        time + self.hw.op_overhead
+    }
+
+    /// Attention for one request, walked per KV tile.
+    fn attention_time(&mut self, ctx: u64, new: u64) -> f64 {
+        if new == 0 {
+            return 0.0;
+        }
+        let h = self.model.hidden as f64;
+        let h_kv = (self.model.hidden * self.model.kv_heads / self.model.heads) as f64;
+        let dtype = self.model.dtype_bytes as f64;
+        let peak = self.hw.achievable_flops();
+        let bw = self.hw.mem_bw;
+        let total = ctx + new;
+        let kv_tiles = total.div_ceil(TILE_ROWS);
+        let mut time = 0.0f64;
+        for kt in 0..kv_tiles {
+            let span = (total - kt * TILE_ROWS).min(TILE_ROWS) as f64;
+            self.tiles_simulated += 1;
+            let flops = 4.0 * new as f64 * span * h;
+            let bytes = 2.0 * span * h_kv * dtype;
+            time += (flops / peak).max(bytes / bw);
+        }
+        time + self.hw.op_overhead
+    }
+
+    fn truncate(&mut self, new: u32, ctx: u32) -> (u64, u64) {
+        if new > MAX_PROMPT {
+            if !self.warned {
+                eprintln!(
+                    "llmservingsim-like: prompt of {new} tokens truncated to {MAX_PROMPT} \
+                     (short-request limitation)"
+                );
+                self.warned = true;
+            }
+            (MAX_PROMPT as u64, ctx as u64)
+        } else {
+            (new as u64, ctx as u64)
+        }
+    }
+}
+
+impl ComputeModel for LlmServingSimLike {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let h = self.model.hidden as u64;
+        let g = (self.model.hidden * self.model.kv_heads / self.model.heads) as u64;
+        let ffn = self.model.ffn as u64;
+        let vocab = self.model.vocab as u64;
+
+        // total new tokens after the short-prompt truncation
+        let mut t_total = 0u64;
+        let mut r_active = 0u64;
+        let mut attn = 0.0f64;
+        for i in 0..batch.len() {
+            let (new, ctx) = self.truncate(batch.new[i], batch.ctx[i]);
+            if new == 0 {
+                continue;
+            }
+            t_total += new;
+            r_active += 1;
+            attn += self.attention_time(ctx, new);
+        }
+        if t_total == 0 {
+            return 0.0;
+        }
+
+        // walk every layer explicitly (no per-layer reuse)
+        let mut per_all_layers = 0.0f64;
+        for _layer in 0..self.model.layers {
+            let mut layer_time = 0.0;
+            layer_time += self.gemm_time(t_total, h, h + 2 * g); // qkv
+            layer_time += attn; // per-request attention walked above
+            layer_time += self.gemm_time(t_total, h, h); // out proj
+            layer_time += self.gemm_time(t_total, h, 2 * ffn); // gate+up
+            layer_time += self.gemm_time(t_total, ffn, h); // down
+            // layernorm + softmax modelled as bandwidth sweeps
+            let dtype = self.model.dtype_bytes as f64;
+            layer_time += 4.0 * t_total as f64 * h as f64 * dtype / self.hw.mem_bw;
+            per_all_layers += layer_time;
+        }
+        let logits = self.gemm_time(r_active, h, vocab);
+        per_all_layers + logits + self.hw.iter_overhead
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::AnalyticCost;
+
+    fn setup() -> LlmServingSimLike {
+        LlmServingSimLike::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g())
+    }
+
+    fn decode(n: usize, ctx: u32) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        for _ in 0..n {
+            b.push(ctx, 1);
+        }
+        b
+    }
+
+    #[test]
+    fn close_to_analytic_for_short_requests() {
+        let mut co = setup();
+        let mut flat = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        let b = decode(16, 256);
+        let t_co = co.iter_time(&b);
+        let t_an = flat.iter_time(&b);
+        let rel = ((t_co - t_an) / t_an).abs();
+        assert!(rel < 0.5, "co-sim {t_co} vs analytic {t_an}");
+    }
+
+    #[test]
+    fn walks_many_tiles() {
+        let mut co = setup();
+        let _ = co.iter_time(&decode(64, 1024));
+        // 32 layers x 5 gemms x many tiles: structural slowness
+        assert!(co.tiles_simulated > 10_000, "{}", co.tiles_simulated);
+    }
+
+    #[test]
+    fn truncates_long_prompts() {
+        let mut co = setup();
+        let mut long = BatchDesc::new();
+        long.push(0, 2048);
+        let mut short = BatchDesc::new();
+        short.push(0, MAX_PROMPT);
+        let t_long = co.iter_time(&long);
+        let t_short = co.iter_time(&short);
+        assert!(
+            (t_long - t_short).abs() / t_short < 1e-9,
+            "2048-token prompt must be clamped to {MAX_PROMPT}"
+        );
+    }
+
+    #[test]
+    fn empty_batch_free() {
+        let mut co = setup();
+        assert_eq!(co.iter_time(&BatchDesc::new()), 0.0);
+    }
+
+    #[test]
+    fn slower_than_table_per_eval() {
+        // structural slowness: one co-sim eval walks >10^4 tiles while
+        // the table model does ~50 flops. Compare wall time loosely.
+        let mut co = setup();
+        let b = decode(128, 2048);
+        let start = std::time::Instant::now();
+        for _ in 0..5 {
+            let _ = co.iter_time(&b);
+        }
+        let co_time = start.elapsed();
+        let model = ModelSpec::llama2_7b();
+        let hw = HardwareSpec::a100_80g();
+        let mut probe = AnalyticCost::new(&model, &hw);
+        let mut table = crate::compute::TableCost::build(&mut probe, &model, &hw);
+        let start = std::time::Instant::now();
+        for _ in 0..5 {
+            let _ = table.iter_time(&b);
+        }
+        let table_time = start.elapsed();
+        assert!(co_time > 10 * table_time, "{co_time:?} vs {table_time:?}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Baseline simulators for the comparative experiments (Table II,
+//! Fig 6): a Vidur-like learned-regression simulator and an
+//! LLMServingSim-like HW/SW co-simulator, both behind the standard
+//! [`crate::compute::ComputeModel`] trait so they run on the same
+//! discrete-event driver.
+
+mod llmservingsim_like;
+mod vidur_like;
+
+pub use llmservingsim_like::LlmServingSimLike;
+pub use vidur_like::VidurLike;

@@ -1,0 +1,676 @@
+//! The cluster driver: workers + two-stage scheduling + memory + comms
+//! wired onto the discrete-event engine. This is the inference loop of
+//! the paper's Fig 1.
+
+mod report;
+mod worker;
+
+pub use report::{SimulationReport, WorkerStats};
+pub use worker::{Worker, WorkerRole};
+
+use crate::compute::{build_cost_model, ComputeModel};
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::memory::{AllocOutcome, PagedBlockManager, PoolCache};
+use crate::metrics::{MemorySample, MemoryTimeline, RequestRecord, SloSpec};
+use crate::model::ModelSpec;
+use crate::network::{CommModel, Schedule};
+use crate::request::{Phase, Request, RequestId};
+use crate::scheduler::{GlobalPolicy, GlobalSchedulerState, LocalSchedCtx, WorkerView};
+use crate::sim::{EventPayload, EventQueue, SimRng, SimTime};
+use crate::workload::ConversationWorkload;
+
+/// Factory producing a per-worker cost model (lets the oracle and the
+/// baseline simulators reuse the driver with their own compute models).
+pub type CostFactory<'a> = dyn Fn(&ModelSpec, &HardwareSpec, usize) -> Box<dyn ComputeModel> + 'a;
+
+/// A running simulation: construct from a config (or conversations),
+/// then [`Simulation::run`] to completion.
+pub struct Simulation {
+    queue: EventQueue,
+    requests: Vec<Request>,
+    workers: Vec<Worker>,
+    model: ModelSpec,
+    global: GlobalPolicy,
+    gstate: GlobalSchedulerState,
+    comm: CommModel,
+    pool: PoolCache,
+    pool_comm: CommModel,
+    slo: SloSpec,
+    rng: SimRng,
+    records: Vec<RequestRecord>,
+    timeline: MemoryTimeline,
+    sample_period: f64,
+    arrivals_remaining: usize,
+    /// conversation id -> (request ids per round, next round index)
+    conversations: Vec<(Vec<RequestId>, usize)>,
+    /// think time before each round (parallel to conversations rounds)
+    think_times: Vec<Vec<f64>>,
+    finished: usize,
+}
+
+impl Simulation {
+    /// Build from a declarative config (single-round workload).
+    pub fn from_config(cfg: &SimulationConfig) -> Self {
+        let model = cfg.model.clone();
+        let requests = cfg.workload.generate();
+        Self::build(cfg, model, requests, Vec::new(), Vec::new(), None)
+    }
+
+    /// Build from pre-generated requests (trace replay).
+    pub fn from_requests(cfg: &SimulationConfig, requests: Vec<Request>) -> Self {
+        let model = cfg.model.clone();
+        Self::build(cfg, model, requests, Vec::new(), Vec::new(), None)
+    }
+
+    /// Build with a custom per-worker cost-model factory (oracle /
+    /// baseline simulators run the same driver with their own models).
+    pub fn with_cost_factory(cfg: &SimulationConfig, factory: &CostFactory) -> Self {
+        let model = cfg.model.clone();
+        let requests = cfg.workload.generate();
+        Self::build(cfg, model, requests, Vec::new(), Vec::new(), Some(factory))
+    }
+
+    /// Custom cost factory over pre-generated requests.
+    pub fn from_requests_with_cost_factory(
+        cfg: &SimulationConfig,
+        requests: Vec<Request>,
+        factory: &CostFactory,
+    ) -> Self {
+        let model = cfg.model.clone();
+        Self::build(cfg, model, requests, Vec::new(), Vec::new(), Some(factory))
+    }
+
+    /// Custom cost factory over conversations.
+    pub fn from_conversations_with_cost_factory(
+        cfg: &SimulationConfig,
+        convs: &[ConversationWorkload],
+        factory: &CostFactory,
+    ) -> Self {
+        Self::conversations_inner(cfg, convs, Some(factory))
+    }
+
+    /// Build a multi-round conversation simulation (Fig 14).
+    pub fn from_conversations(cfg: &SimulationConfig, convs: &[ConversationWorkload]) -> Self {
+        Self::conversations_inner(cfg, convs, None)
+    }
+
+    fn conversations_inner(
+        cfg: &SimulationConfig,
+        convs: &[ConversationWorkload],
+        factory: Option<&CostFactory>,
+    ) -> Self {
+        let model = cfg.model.clone();
+        let mut requests = Vec::new();
+        let mut conversations = Vec::with_capacity(convs.len());
+        let mut think_times = Vec::with_capacity(convs.len());
+        for conv in convs {
+            let mut ids = Vec::with_capacity(conv.rounds.len());
+            for (round, plan) in conv.rounds.iter().enumerate() {
+                let id = requests.len();
+                let prompt = conv.prompt_len_of_round(round);
+                // later rounds get their arrival stamped when scheduled
+                let arrival = if round == 0 { conv.first_arrival } else { f64::MAX };
+                requests.push(Request::new(
+                    id,
+                    conv.id,
+                    round,
+                    prompt,
+                    plan.output_tokens,
+                    arrival,
+                ));
+                ids.push(id);
+            }
+            think_times.push(conv.rounds.iter().map(|r| r.think_time).collect());
+            conversations.push((ids, 0));
+        }
+        Self::build(cfg, model, requests, conversations, think_times, factory)
+    }
+
+    fn build(
+        cfg: &SimulationConfig,
+        model: ModelSpec,
+        requests: Vec<Request>,
+        conversations: Vec<(Vec<RequestId>, usize)>,
+        think_times: Vec<Vec<f64>>,
+        factory: Option<&CostFactory>,
+    ) -> Self {
+        let mut workers = Vec::new();
+        for wc in &cfg.cluster.workers {
+            let hw = wc.hardware.clone();
+            for _ in 0..wc.quantity {
+                let id = workers.len();
+                let mem = PagedBlockManager::new(&model, hw.mem_cap, wc.memory.clone());
+                let cost = match factory {
+                    Some(f) => f(&model, &hw, id),
+                    None => build_cost_model(cfg.cost_model, &model, &hw, &cfg.artifacts_dir),
+                };
+                workers.push(Worker::new(
+                    id,
+                    hw.clone(),
+                    wc.run_prefill,
+                    wc.run_decode,
+                    wc.local_scheduler.clone(),
+                    mem,
+                    cost,
+                ));
+            }
+        }
+        assert!(!workers.is_empty(), "cluster has no workers");
+        assert!(
+            workers.iter().any(|w| w.run_prefill) && workers.iter().any(|w| w.run_decode),
+            "cluster must be able to run both phases"
+        );
+
+        let link = cfg.cluster.scheduler.interconnect.clone();
+        let comm = CommModel::analytic(link, Schedule::Overlapped);
+        let (pool, pool_comm) = match &cfg.pool_cache {
+            Some(pc) => (
+                PoolCache::new(pc.capacity_blocks, cfg.cluster.workers[0].memory.block_size),
+                CommModel::analytic(pc.link.clone(), Schedule::Sequential),
+            ),
+            None => (
+                PoolCache::disabled(),
+                CommModel::analytic(crate::hardware::LinkSpec::pool_fabric(), Schedule::Sequential),
+            ),
+        };
+
+        let mut queue = EventQueue::new();
+        if conversations.is_empty() {
+            for r in &requests {
+                queue.schedule_at(r.arrival, EventPayload::Arrival(r.id));
+            }
+        } else {
+            for (ids, _) in &conversations {
+                let first = ids[0];
+                queue.schedule_at(requests[first].arrival, EventPayload::Arrival(first));
+            }
+        }
+        // every request (every conversation round) eventually arrives
+        let arrivals = requests.len();
+        if cfg.sample_period > 0.0 {
+            queue.schedule_at(0.0, EventPayload::SampleTick);
+        }
+
+        let n_workers = workers.len();
+        Self {
+            queue,
+            requests,
+            workers,
+            model,
+            global: cfg.cluster.scheduler.global.clone(),
+            gstate: GlobalSchedulerState::new(n_workers),
+            comm,
+            pool,
+            pool_comm,
+            slo: cfg.slo,
+            rng: SimRng::new(cfg.workload.seed, "driver"),
+            records: Vec::new(),
+            timeline: MemoryTimeline::default(),
+            sample_period: cfg.sample_period,
+            arrivals_remaining: arrivals,
+            conversations,
+            think_times,
+            finished: 0,
+        }
+    }
+
+    /// Run to completion and produce the report.
+    pub fn run(mut self) -> SimulationReport {
+        let wall_start = std::time::Instant::now();
+        while let Some(ev) = self.queue.pop() {
+            match ev.payload {
+                EventPayload::Arrival(rid) => self.on_arrival(rid),
+                EventPayload::IterDone { worker } => self.on_iter_done(worker),
+                EventPayload::TransferDone { worker, req } => self.on_transfer_done(worker, req),
+                EventPayload::Kick { worker } => self.try_start(worker),
+                EventPayload::SampleTick => self.on_sample_tick(),
+            }
+        }
+        if self.finished != self.requests.len() {
+            let mut diag = String::new();
+            for w in &self.workers {
+                diag.push_str(&format!(
+                    "\n  worker {}: busy={} waiting={:?} running={:?} pending_kv={:?} free={}/{}",
+                    w.id, w.busy, w.waiting, w.running, w.pending_kv,
+                    w.mem.free_blocks(), w.mem.total_blocks()
+                ));
+            }
+            let stuck: Vec<_> = self
+                .requests
+                .iter()
+                .filter(|r| r.phase != Phase::Finished)
+                .take(5)
+                .map(|r| format!("req {} phase {:?} prompt {} done {} gen {}/{}",
+                    r.id, r.phase, r.prompt_len, r.prompt_done, r.generated, r.output_len))
+                .collect();
+            panic!(
+                "simulation drained with {}/{} finished;{}\n  stuck: {:?}",
+                self.finished,
+                self.requests.len(),
+                diag,
+                stuck
+            );
+        }
+        let now = self.queue.now();
+        SimulationReport::assemble(
+            self.records,
+            self.timeline,
+            &self.workers,
+            &self.pool,
+            self.slo,
+            now,
+            self.queue.processed(),
+            wall_start.elapsed().as_secs_f64(),
+        )
+    }
+
+    // ---- event handlers ------------------------------------------------
+
+    fn on_arrival(&mut self, rid: RequestId) {
+        let now = self.queue.now();
+        self.arrivals_remaining -= 1;
+        {
+            let r = &mut self.requests[rid];
+            if r.arrival == f64::MAX {
+                r.arrival = now;
+            }
+            r.phase = Phase::Queued;
+        }
+        // memory-pool lookup for conversation rounds
+        if self.pool.enabled() {
+            let (conv, prompt) = {
+                let r = &self.requests[rid];
+                (r.conversation, r.prompt_len)
+            };
+            if let Some(hit) = self.pool.lookup(conv, prompt) {
+                let r = &mut self.requests[rid];
+                r.cached_prefix = hit.cached_tokens;
+                // the cached prefix counts as already-processed prompt;
+                // its KV is fetched when the prefill iteration starts
+                r.prompt_done = hit.cached_tokens;
+            }
+        }
+        self.dispatch(&[rid], &[]);
+    }
+
+    /// Global-scheduler dispatch of new / resubmitted requests.
+    fn dispatch(&mut self, new: &[RequestId], resubmitted: &[RequestId]) {
+        let views: Vec<WorkerView> = self.workers.iter().map(|w| w.view(&self.requests)).collect();
+        let decisions = self.global.dispatch(
+            &mut self.gstate,
+            new,
+            resubmitted,
+            &views,
+            &self.requests,
+            &mut self.rng,
+        );
+        let now = self.queue.now();
+        for (rid, wid) in decisions {
+            let is_resubmit = resubmitted.contains(&rid);
+            if is_resubmit {
+                // disaggregation hand-off: KV migrates over the link
+                let src = self.requests[rid].worker.expect("resubmit without owner");
+                let blocks = self.workers[src].mem.blocks_held(rid);
+                let t = self.comm.kv_transfer_time(blocks, self.workers[src].mem.block_bytes());
+                self.requests[rid].phase = Phase::Transferring;
+                self.queue
+                    .schedule_in(t, EventPayload::TransferDone { worker: wid, req: rid });
+            } else {
+                self.requests[rid].worker = Some(wid);
+                let w = &mut self.workers[wid];
+                if w.waiting.is_empty() {
+                    w.oldest_wait = Some(now);
+                }
+                w.waiting.push_back(rid);
+                if !w.busy {
+                    self.try_start(wid);
+                }
+            }
+        }
+    }
+
+    fn on_transfer_done(&mut self, wid: usize, rid: RequestId) {
+        // KV arrives at the decode worker; free it on the source
+        let src = self.requests[rid].worker.expect("transfer without owner");
+        self.workers[src].mem.release(rid);
+        // freed blocks may unblock admission on the (possibly idle)
+        // source worker
+        if !self.workers[src].busy {
+            self.try_start(src);
+        }
+        self.requests[rid].worker = Some(wid);
+        let need = self.requests[rid].ctx_in_cache + 1;
+        let w = &mut self.workers[wid];
+        match w.mem.reserve(rid, need) {
+            AllocOutcome::Ok => {
+                self.requests[rid].phase = Phase::Decode;
+                w.running.push(rid);
+                if !w.busy {
+                    self.try_start(wid);
+                }
+            }
+            AllocOutcome::OutOfMemory => {
+                // park until the decode worker frees blocks
+                w.pending_kv.push_back(rid);
+            }
+        }
+    }
+
+    /// Admit parked transferred-in requests as memory frees up.
+    fn drain_pending_kv(&mut self, wid: usize) {
+        loop {
+            let Some(&rid) = self.workers[wid].pending_kv.front() else {
+                return;
+            };
+            let need = self.requests[rid].ctx_in_cache + 1;
+            let w = &mut self.workers[wid];
+            if w.mem.reserve(rid, need) == AllocOutcome::Ok {
+                w.pending_kv.pop_front();
+                self.requests[rid].phase = Phase::Decode;
+                w.running.push(rid);
+            } else {
+                return;
+            }
+        }
+    }
+
+    /// Try to start the next iteration on worker `wid`.
+    fn try_start(&mut self, wid: usize) {
+        let now = self.queue.now();
+        let draining = self.arrivals_remaining == 0;
+        let w = &mut self.workers[wid];
+        if w.busy {
+            return;
+        }
+        let mut ctx = LocalSchedCtx {
+            requests: &mut self.requests,
+            waiting: &mut w.waiting,
+            running: &mut w.running,
+            mem: &mut w.mem,
+            now,
+            draining,
+            oldest_wait: w.oldest_wait,
+        };
+        let plan = w.local.form_batch(&mut ctx);
+        if std::env::var("TOKENSIM_TRACE").is_ok() {
+            eprintln!(
+                "try_start w{wid} t={now:.4}: plan={} members, waiting={}, running={}, free={}",
+                plan.members.len(), w.waiting.len(), w.running.len(), w.mem.free_blocks()
+            );
+        }
+        w.oldest_wait = if w.waiting.is_empty() { None } else { w.oldest_wait };
+        if plan.is_empty() {
+            // static batching may be lingering for a fuller batch: poll
+            // again when the linger deadline passes
+            if let crate::scheduler::LocalPolicy::Static { max_linger, .. } = &w.local {
+                if let Some(t0) = w.oldest_wait {
+                    let deadline = t0 + *max_linger;
+                    if deadline > now && !w.linger_armed {
+                        w.linger_armed = true;
+                        self.queue
+                            .schedule_at(deadline, EventPayload::Kick { worker: wid });
+                    }
+                }
+            }
+            return;
+        }
+        w.linger_armed = false;
+
+        // memory-pool fetch for members whose cached prefix is not yet
+        // resident (first prefill iteration after a pool hit)
+        let mut fetch_blocks = 0u64;
+        if plan.has_prefill && self.pool.enabled() {
+            for &rid in &plan.members {
+                let r = &self.requests[rid];
+                if r.cached_prefix > 0 && r.prompt_done == 0 && r.ctx_in_cache == 0 {
+                    fetch_blocks += w.mem.blocks_for_tokens(r.cached_prefix);
+                }
+            }
+        }
+
+        let mut dt = w.cost.iter_time(&plan.batch);
+        if fetch_blocks > 0 {
+            dt += self.pool_comm.kv_transfer_time(fetch_blocks, w.mem.block_bytes());
+        }
+        assert!(dt > 0.0, "iteration with work must take time");
+        w.busy = true;
+        w.iterations += 1;
+        w.busy_time += dt;
+        w.current = Some(plan);
+        self.queue
+            .schedule_in(dt, EventPayload::IterDone { worker: wid });
+    }
+
+    fn on_iter_done(&mut self, wid: usize) {
+        let now = self.queue.now();
+        let plan = self.workers[wid]
+            .current
+            .take()
+            .expect("IterDone without a batch");
+        self.workers[wid].busy = false;
+
+        let mut finished_here: Vec<RequestId> = Vec::new();
+        let mut resubmit: Vec<RequestId> = Vec::new();
+        for (slot, &rid) in plan.members.iter().enumerate() {
+            let new_tokens = plan.batch.new[slot];
+            let r = &mut self.requests[rid];
+            match r.phase {
+                Phase::Prefill => {
+                    r.prompt_done += new_tokens;
+                    // KV now holds every processed token (computed +
+                    // pool-fetched prefix)
+                    r.ctx_in_cache = r.prompt_done;
+                    if r.prefill_done() {
+                        // prefill emits the first (or next, after a
+                        // recompute) output token
+                        r.stamp_token(now);
+                        r.generated += 1;
+                        if r.done() {
+                            finished_here.push(rid);
+                        } else if !self.workers[wid].run_decode {
+                            // breakpoint: put_kv + submit to global
+                            resubmit.push(rid);
+                        } else {
+                            r.phase = Phase::Decode;
+                        }
+                    }
+                }
+                Phase::Decode => {
+                    r.generated += 1;
+                    r.ctx_in_cache += 1;
+                    r.stamp_token(now);
+                    if r.done() {
+                        finished_here.push(rid);
+                    }
+                }
+                Phase::Preempted => {
+                    // was preempted while this batch was in flight; its
+                    // work is discarded (conservative: no partial credit)
+                }
+                other => panic!("request {rid} in batch with phase {other:?}"),
+            }
+        }
+
+        for rid in finished_here {
+            self.finish_request(rid, wid, now);
+        }
+        for &rid in &resubmit {
+            self.workers[wid].running.retain(|&x| x != rid);
+        }
+        if !resubmit.is_empty() {
+            self.dispatch(&[], &resubmit);
+        }
+        self.drain_pending_kv(wid);
+        self.try_start(wid);
+    }
+
+    fn finish_request(&mut self, rid: RequestId, wid: usize, now: SimTime) {
+        {
+            let w = &mut self.workers[wid];
+            w.running.retain(|&x| x != rid);
+            w.mem.release(rid);
+        }
+        let r = &mut self.requests[rid];
+        r.phase = Phase::Finished;
+        r.finished_at = Some(now);
+        self.finished += 1;
+        self.gstate.complete(wid, r.final_kv_tokens() as u64);
+        self.records.push(RequestRecord::from_request(r));
+
+        // conversation bookkeeping: store KV in the pool, schedule the
+        // next round after think time
+        let conv = r.conversation;
+        let round = r.round;
+        let total_ctx = r.ctx_in_cache;
+        if !self.conversations.is_empty() {
+            if self.pool.enabled() {
+                self.pool.store(conv, total_ctx);
+            }
+            let (ids, next) = &mut self.conversations[conv];
+            debug_assert_eq!(ids[round], rid);
+            *next = round + 1;
+            if *next < ids.len() {
+                let next_rid = ids[*next];
+                let think = self.think_times[conv][*next];
+                self.queue
+                    .schedule_in(think, EventPayload::Arrival(next_rid));
+            } else if self.pool.enabled() {
+                self.pool.invalidate(conv);
+            }
+        }
+    }
+
+    fn on_sample_tick(&mut self) {
+        let now = self.queue.now();
+        for w in &self.workers {
+            self.timeline.record(MemorySample {
+                time: now,
+                worker: w.id,
+                used_blocks: w.mem.used_blocks(),
+                total_blocks: w.mem.total_blocks(),
+            });
+        }
+        if self.finished < self.requests.len() {
+            self.queue
+                .schedule_in(self.sample_period, EventPayload::SampleTick);
+        }
+    }
+
+    /// The model being served (for reports / sizing).
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::CostModelKind;
+    use crate::hardware::HardwareSpec;
+    use crate::workload::WorkloadSpec;
+
+    fn quick_cfg(n: usize, qps: f64) -> SimulationConfig {
+        let mut cfg = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            WorkloadSpec::fixed(n, qps, 128, 16),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        cfg
+    }
+
+    #[test]
+    fn runs_to_completion() {
+        let report = Simulation::from_config(&quick_cfg(50, 20.0)).run();
+        assert_eq!(report.records.len(), 50);
+        assert!(report.makespan > 0.0);
+        for r in &report.records {
+            assert!(r.finished >= r.first_token);
+            assert!(r.first_token >= r.arrival);
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = Simulation::from_config(&quick_cfg(30, 10.0)).run();
+        let b = Simulation::from_config(&quick_cfg(30, 10.0)).run();
+        assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn ttft_increases_under_overload() {
+        let light = Simulation::from_config(&quick_cfg(100, 2.0)).run();
+        let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).run();
+        let l = crate::metrics::MetricSet::new(&light.records);
+        let h = crate::metrics::MetricSet::new(&heavy.records);
+        assert!(
+            h.ttft_percentile(0.99) > 2.0 * l.ttft_percentile(0.99),
+            "queueing must hurt tail TTFT: {} vs {}",
+            h.ttft_percentile(0.99),
+            l.ttft_percentile(0.99)
+        );
+    }
+
+    #[test]
+    fn disaggregated_two_workers() {
+        let mut cfg = SimulationConfig::disaggregated(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            1,
+            HardwareSpec::a100_80g(),
+            1,
+            WorkloadSpec::fixed(40, 8.0, 64, 64),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        let report = Simulation::from_config(&cfg).run();
+        assert_eq!(report.records.len(), 40);
+        // prefill worker must have run prefill iterations, decode worker
+        // decode iterations
+        assert!(report.workers[0].iterations > 0);
+        assert!(report.workers[1].iterations > 0);
+    }
+
+    #[test]
+    fn conversations_with_pool_cache() {
+        use crate::config::PoolCacheConfig;
+        use crate::workload::ConversationSpec;
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.pool_cache = Some(PoolCacheConfig::with_capacity(100_000));
+        let convs = ConversationSpec::chatbot(40, 4.0, 64, 32).generate();
+        let total = ConversationWorkload::total_rounds(&convs);
+        let report = Simulation::from_conversations(&cfg, &convs).run();
+        assert_eq!(report.records.len(), total);
+        // multi-round conversations must have produced pool hits
+        assert!(report.pool_hits > 0, "expected pool hits");
+        // cached rounds carry a cached prefix
+        assert!(report.records.iter().any(|r| r.cached_prefix > 0));
+    }
+
+    #[test]
+    fn memory_sampling_produces_timeline() {
+        let mut cfg = quick_cfg(30, 10.0);
+        cfg.sample_period = 0.1;
+        let report = Simulation::from_config(&cfg).run();
+        assert!(!report.timeline.samples.is_empty());
+    }
+
+    #[test]
+    fn preemptions_occur_under_memory_pressure() {
+        // tiny memory: large prompts + long outputs force preemption
+        let mut cfg = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            {
+                let mut hw = HardwareSpec::a100_80g();
+                hw.mem_cap = 16e9; // weights 13.5 GB -> tiny KV pool
+                hw
+            },
+            WorkloadSpec::fixed(20, 50.0, 256, 128),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        let report = Simulation::from_config(&cfg).run();
+        assert_eq!(report.records.len(), 20, "all must finish eventually");
+        let m = crate::metrics::MetricSet::new(&report.records);
+        assert!(m.total_preemptions() > 0, "expected preemptions");
+    }
+}

@@ -1,0 +1,169 @@
+//! Simulation output: request records + timelines + worker statistics.
+
+use crate::memory::PoolCache;
+use crate::metrics::{MemoryTimeline, MetricSet, RequestRecord, SloSpec};
+
+use super::worker::Worker;
+
+/// Per-worker summary statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStats {
+    pub id: usize,
+    pub hardware: String,
+    pub iterations: u64,
+    pub busy_time: f64,
+    pub utilization: f64,
+    pub preemption_frees: u64,
+    pub total_blocks: u64,
+}
+
+/// Everything a run produces.
+#[derive(Debug, Clone)]
+pub struct SimulationReport {
+    pub records: Vec<RequestRecord>,
+    pub timeline: MemoryTimeline,
+    pub workers: Vec<WorkerStats>,
+    pub slo: SloSpec,
+    /// Simulated seconds from t=0 to the last event.
+    pub sim_end: f64,
+    /// First arrival → last completion.
+    pub makespan: f64,
+    pub events_processed: u64,
+    /// Simulator wall-clock seconds.
+    pub wall_time: f64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_evictions: u64,
+}
+
+impl SimulationReport {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        mut records: Vec<RequestRecord>,
+        timeline: MemoryTimeline,
+        workers: &[Worker],
+        pool: &PoolCache,
+        slo: SloSpec,
+        sim_end: f64,
+        events_processed: u64,
+        wall_time: f64,
+    ) -> Self {
+        records.sort_by_key(|r| r.id);
+        let makespan = MetricSet::new(&records).makespan();
+        let worker_stats = workers
+            .iter()
+            .map(|w| WorkerStats {
+                id: w.id,
+                hardware: w.hw.name.clone(),
+                iterations: w.iterations,
+                busy_time: w.busy_time,
+                utilization: if makespan > 0.0 {
+                    (w.busy_time / makespan).min(1.0)
+                } else {
+                    0.0
+                },
+                preemption_frees: w.mem.preemption_frees,
+                total_blocks: w.mem.total_blocks(),
+            })
+            .collect();
+        Self {
+            records,
+            timeline,
+            workers: worker_stats,
+            slo,
+            sim_end,
+            makespan,
+            events_processed,
+            wall_time,
+            pool_hits: pool.hits,
+            pool_misses: pool.misses,
+            pool_evictions: pool.evictions,
+        }
+    }
+
+    pub fn metrics(&self) -> MetricSet<'_> {
+        MetricSet::new(&self.records)
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        self.metrics().latency_percentile(q)
+    }
+
+    pub fn request_throughput(&self) -> f64 {
+        self.metrics().request_throughput()
+    }
+
+    pub fn token_throughput(&self) -> f64 {
+        self.metrics().token_throughput()
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        self.metrics().slo_attainment(&self.slo)
+    }
+
+    pub fn slo_throughput(&self) -> f64 {
+        self.metrics().slo_throughput(&self.slo)
+    }
+
+    /// Pretty one-paragraph summary for CLI output.
+    pub fn summary(&self) -> String {
+        let m = self.metrics();
+        format!(
+            "{} requests in {:.2}s (sim) / {:.3}s (wall) | {:.2} req/s, {:.1} tok/s | \
+             latency p50 {:.3}s p99 {:.3}s max {:.3}s | ttft p99 {:.3}s | \
+             slo attainment {:.1}% | {} events | {} preemptions",
+            self.records.len(),
+            self.makespan,
+            self.wall_time,
+            m.request_throughput(),
+            m.token_throughput(),
+            m.latency_percentile(0.50),
+            m.latency_percentile(0.99),
+            m.latency_percentile(1.0),
+            m.ttft_percentile(0.99),
+            100.0 * self.slo_attainment(),
+            self.events_processed,
+            m.total_preemptions(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arrival: f64, fin: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            conversation: id,
+            round: 0,
+            prompt_len: 10,
+            output_len: 10,
+            cached_prefix: 0,
+            arrival,
+            first_token: arrival + 0.1,
+            finished: fin,
+            max_token_gap: 0.05,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn assemble_sorts_and_summarizes() {
+        let records = vec![rec(1, 1.0, 3.0), rec(0, 0.0, 2.0)];
+        let report = SimulationReport::assemble(
+            records,
+            MemoryTimeline::default(),
+            &[],
+            &PoolCache::disabled(),
+            SloSpec::paper_default(),
+            3.0,
+            100,
+            0.01,
+        );
+        assert_eq!(report.records[0].id, 0);
+        assert_eq!(report.makespan, 3.0);
+        assert!(report.summary().contains("2 requests"));
+        assert!((report.slo_attainment() - 1.0).abs() < 1e-12);
+    }
+}

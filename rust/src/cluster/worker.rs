@@ -1,0 +1,160 @@
+//! Per-worker state: hardware, queues, memory, cost model.
+
+use std::collections::VecDeque;
+
+use crate::compute::ComputeModel;
+use crate::hardware::HardwareSpec;
+use crate::memory::PagedBlockManager;
+use crate::request::{Request, RequestId};
+use crate::scheduler::{BatchPlan, LocalPolicy, WorkerView};
+use crate::sim::SimTime;
+
+/// Worker role in a (possibly disaggregated) cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerRole {
+    Unified,
+    PrefillOnly,
+    DecodeOnly,
+}
+
+/// One accelerator running an inference engine instance.
+pub struct Worker {
+    pub id: usize,
+    pub hw: HardwareSpec,
+    pub run_prefill: bool,
+    pub run_decode: bool,
+    pub local: LocalPolicy,
+    pub mem: PagedBlockManager,
+    pub cost: Box<dyn ComputeModel>,
+
+    pub waiting: VecDeque<RequestId>,
+    pub running: Vec<RequestId>,
+    /// Transferred-in requests parked until KV blocks free up.
+    pub pending_kv: VecDeque<RequestId>,
+    pub busy: bool,
+    pub current: Option<BatchPlan>,
+    /// Enqueue time of the oldest waiting request (static linger).
+    pub oldest_wait: Option<SimTime>,
+    /// A linger-deadline kick is already scheduled.
+    pub linger_armed: bool,
+
+    // ---- statistics ----
+    pub iterations: u64,
+    pub busy_time: f64,
+}
+
+impl Worker {
+    pub fn new(
+        id: usize,
+        hw: HardwareSpec,
+        run_prefill: bool,
+        run_decode: bool,
+        local: LocalPolicy,
+        mem: PagedBlockManager,
+        cost: Box<dyn ComputeModel>,
+    ) -> Self {
+        assert!(run_prefill || run_decode, "worker with no role");
+        Self {
+            id,
+            hw,
+            run_prefill,
+            run_decode,
+            local,
+            mem,
+            cost,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            pending_kv: VecDeque::new(),
+            busy: false,
+            current: None,
+            oldest_wait: None,
+            linger_armed: false,
+            iterations: 0,
+            busy_time: 0.0,
+        }
+    }
+
+    pub fn role(&self) -> WorkerRole {
+        match (self.run_prefill, self.run_decode) {
+            (true, true) => WorkerRole::Unified,
+            (true, false) => WorkerRole::PrefillOnly,
+            (false, true) => WorkerRole::DecodeOnly,
+            (false, false) => unreachable!("checked at construction"),
+        }
+    }
+
+    /// Read-only view for the global scheduler.
+    pub fn view(&self, requests: &[Request]) -> WorkerView {
+        let queued_tokens: u64 = self
+            .waiting
+            .iter()
+            .map(|&rid| requests[rid].effective_prompt_len() as u64)
+            .sum();
+        let live_tokens: u64 = self
+            .running
+            .iter()
+            .map(|&rid| requests[rid].live_kv_tokens() as u64)
+            .sum();
+        WorkerView {
+            id: self.id,
+            hardware: self.hw.name.clone(),
+            run_prefill: self.run_prefill,
+            run_decode: self.run_decode,
+            waiting_requests: self.waiting.len(),
+            running_requests: self.running.len(),
+            outstanding_tokens: queued_tokens + live_tokens,
+            free_blocks: self.mem.free_blocks(),
+            total_blocks: self.mem.total_blocks(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::AnalyticCost;
+    use crate::model::ModelSpec;
+
+    fn worker(prefill: bool, decode: bool) -> Worker {
+        let hw = HardwareSpec::a100_80g();
+        let model = ModelSpec::tiny_test();
+        Worker::new(
+            0,
+            hw.clone(),
+            prefill,
+            decode,
+            LocalPolicy::continuous_default(),
+            PagedBlockManager::with_blocks(100, 16, 1024),
+            Box::new(AnalyticCost::new(&model, &hw)),
+        )
+    }
+
+    #[test]
+    fn roles() {
+        assert_eq!(worker(true, true).role(), WorkerRole::Unified);
+        assert_eq!(worker(true, false).role(), WorkerRole::PrefillOnly);
+        assert_eq!(worker(false, true).role(), WorkerRole::DecodeOnly);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker with no role")]
+    fn no_role_rejected() {
+        worker(false, false);
+    }
+
+    #[test]
+    fn view_aggregates_tokens() {
+        let mut w = worker(true, true);
+        let mut requests = vec![
+            Request::new(0, 0, 0, 100, 10, 0.0),
+            Request::new(1, 1, 0, 50, 10, 0.0),
+        ];
+        requests[1].ctx_in_cache = 30;
+        w.waiting.push_back(0);
+        w.running.push(1);
+        let v = w.view(&requests);
+        assert_eq!(v.waiting_requests, 1);
+        assert_eq!(v.running_requests, 1);
+        assert_eq!(v.outstanding_tokens, 100 + 30);
+    }
+}

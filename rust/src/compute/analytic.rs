@@ -1,0 +1,305 @@
+//! Pure-rust mirror of the L2/L1 cost artifact semantics.
+//!
+//! Formula-for-formula (and, where it matters, f32-for-f32) identical to
+//! `python/compile/kernels/ref.py`. The integration test-suite
+//! cross-validates this mirror against the loaded HLO artifact; keeping
+//! both lets unit tests and artifact-less builds run the full simulator.
+
+use super::{BatchDesc, ComputeModel, IterCost, NUM_OPS};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+
+const ALLREDUCE_IDX: usize = 8;
+/// Paged-attention gather efficiency — mirrors `ref.ATTN_GATHER_EFF`.
+pub const ATTN_GATHER_EFF: f32 = 0.7;
+/// Ops that run once per iteration rather than once per layer
+/// (`embed` = 0, `logits` = 9).
+const PER_ITER: [bool; NUM_OPS] = [
+    true, false, false, false, false, false, false, false, false, true,
+];
+
+/// Analytic roofline cost model (the `ref.py` mirror).
+#[derive(Debug, Clone)]
+pub struct AnalyticCost {
+    name: String,
+    model: [f32; 8],
+    hw: [f32; 6],
+}
+
+impl AnalyticCost {
+    pub fn new(model: &ModelSpec, hw: &HardwareSpec) -> Self {
+        Self {
+            name: format!("analytic[{}/{}]", model.name, hw.name),
+            model: model.to_vec(),
+            hw: hw.to_vec(),
+        }
+    }
+
+    /// Per-request attention descriptors — mirror of `attn_cost_ref`.
+    fn attn_descriptors(&self, ctx: f32, new: f32) -> (f32, f32, f32) {
+        let h = self.model[0];
+        let heads = self.model[2];
+        let kv_heads = self.model[3];
+        let dtype = self.model[6];
+        let tp = self.model[7];
+        let total = ctx + new;
+        let h_kv = h * (kv_heads / heads);
+        let flops = 4.0 * new * total * h / tp;
+        let kv_bytes = (2.0 * total * h_kv / ATTN_GATHER_EFF + 2.0 * new * h_kv
+            + 2.0 * new * h)
+            * dtype
+            / tp;
+        let scores = new * total * heads / tp;
+        (flops, kv_bytes, scores)
+    }
+
+    /// Roofline time — mirror of `roofline_time_ref`.
+    #[inline]
+    fn roofline(&self, flops: f32, bytes: f32, bw: f32) -> f32 {
+        let peak = self.hw[0];
+        let oh = self.hw[2];
+        if flops > 0.0 || bytes > 0.0 {
+            (flops / peak).max(bytes / bw) + oh
+        } else {
+            0.0
+        }
+    }
+
+    /// Evaluate under an arbitrary hardware vector (probe support for
+    /// [`super::TableCost`] extraction and the oracle's component
+    /// decomposition); does not disturb the configured hardware.
+    pub fn evaluate_with_hw(&self, batch: &BatchDesc, hw_vec: [f32; 6]) -> IterCost {
+        let mut probe = self.clone();
+        probe.hw = hw_vec;
+        probe.evaluate(batch)
+    }
+
+    /// Full evaluation — mirror of `iter_cost_ref`.
+    pub fn evaluate(&self, batch: &BatchDesc) -> IterCost {
+        let m = &self.model;
+        let (h, layers, heads, kv_heads, ffn, vocab, dtype, tp) =
+            (m[0], m[1], m[2], m[3], m[4], m[5], m[6], m[7]);
+        let bw = self.hw[1];
+        let iter_oh = self.hw[3];
+        let net_bw = self.hw[4];
+
+        let mut t_sum = 0.0f32; // total new tokens
+        let mut r_sum = 0.0f32; // active requests
+        let mut attn_flops = 0.0f32;
+        let mut attn_bytes = 0.0f32;
+        let mut score_elems = 0.0f32;
+        let mut per_req = Vec::with_capacity(batch.len());
+        for i in 0..batch.len() {
+            let c = batch.ctx[i] as f32;
+            let n = batch.new[i] as f32;
+            let (f, b, s) = self.attn_descriptors(c, n);
+            attn_flops += f;
+            attn_bytes += b;
+            score_elems += s;
+            t_sum += n;
+            if n > 0.0 {
+                r_sum += 1.0;
+            }
+            per_req.push(self.roofline(f, b, bw) as f64);
+        }
+
+        let g = kv_heads / heads;
+        let qkv_out = h * (1.0 + 2.0 * g);
+        let gemm = |m_rows: f32, k: f32, n: f32| -> (f32, f32) {
+            let f = 2.0 * m_rows * k * n / tp;
+            let b = (k * n / tp + m_rows * k + m_rows * n / tp) * dtype;
+            (f, b)
+        };
+
+        let (qkv_f, qkv_b) = gemm(t_sum, h, qkv_out);
+        let (out_f, out_b) = gemm(t_sum, h, h);
+        let (up_f, up_b) = gemm(t_sum, h, 2.0 * ffn);
+        let (down_f, down_b) = gemm(t_sum, ffn, h);
+        let (logits_f, logits_b) = gemm(r_sum, h, vocab);
+
+        let embed_b = t_sum * h * dtype;
+        let softmax_f = 5.0 * score_elems;
+        let softmax_b = 2.0 * score_elems * dtype;
+        let ln_f = 2.0 * 4.0 * t_sum * h;
+        let ln_b = 2.0 * 2.0 * t_sum * h * dtype;
+        let ar_b = if tp > 1.0 {
+            2.0 * 2.0 * (tp - 1.0) / tp * t_sum * h * dtype
+        } else {
+            0.0
+        };
+
+        let op_flops: [f32; NUM_OPS] = [
+            0.0, qkv_f, attn_flops, softmax_f, out_f, up_f, down_f, ln_f, 0.0, logits_f,
+        ];
+        let op_bytes: [f32; NUM_OPS] = [
+            embed_b, qkv_b, attn_bytes, softmax_b, out_b, up_b, down_b, ln_b, ar_b, logits_b,
+        ];
+
+        let mut op_times = [0.0f64; NUM_OPS];
+        let mut per_layer = 0.0f32;
+        let mut per_iter = 0.0f32;
+        for i in 0..NUM_OPS {
+            let eff_bw = if i == ALLREDUCE_IDX { net_bw } else { bw };
+            let t = self.roofline(op_flops[i], op_bytes[i], eff_bw);
+            op_times[i] = t as f64;
+            if PER_ITER[i] {
+                per_iter += t;
+            } else {
+                per_layer += t;
+            }
+        }
+
+        let iter_time = if t_sum > 0.0 {
+            (layers * per_layer + per_iter + iter_oh) as f64
+        } else {
+            0.0
+        };
+        IterCost {
+            iter_time,
+            op_times,
+            per_req_attn: per_req,
+        }
+    }
+}
+
+impl ComputeModel for AnalyticCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        self.evaluate(batch).iter_time
+    }
+
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        self.evaluate(batch)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> AnalyticCost {
+        AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g())
+    }
+
+    fn decode_batch(n: usize, ctx: u32) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        for _ in 0..n {
+            b.push(ctx, 1);
+        }
+        b
+    }
+
+    fn prefill_batch(prompt: u32) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        b.push(0, prompt);
+        b
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let mut m = setup();
+        assert_eq!(m.iter_time(&BatchDesc::new()), 0.0);
+    }
+
+    #[test]
+    fn decode_iteration_in_plausible_range() {
+        let mut m = setup();
+        let t = m.iter_time(&decode_batch(32, 512));
+        // llama2-7b decode on A100 at batch 32: ~5-20 ms < t < 60 ms
+        assert!((0.005..0.06).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn prefill_2048_in_plausible_range() {
+        let mut m = setup();
+        let t = m.iter_time(&prefill_batch(2048));
+        // 2*7e9*2048 flops / 171 TF ~ 0.17 s
+        assert!((0.05..0.8).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound() {
+        let model = ModelSpec::llama2_7b();
+        let a100 = HardwareSpec::a100_80g();
+        let mut base = AnalyticCost::new(&model, &a100);
+        let mut fast_bw = AnalyticCost::new(&model, &a100.scale_bandwidth(2.0));
+        let mut fast_fl = AnalyticCost::new(&model, &a100.scale_compute(2.0));
+        let b = decode_batch(8, 512);
+        let t0 = base.iter_time(&b);
+        assert!(fast_bw.iter_time(&b) < 0.75 * t0);
+        assert!(fast_fl.iter_time(&b) > 0.90 * t0);
+    }
+
+    #[test]
+    fn prefill_is_compute_bound() {
+        let model = ModelSpec::llama2_7b();
+        let a100 = HardwareSpec::a100_80g();
+        let mut base = AnalyticCost::new(&model, &a100);
+        let mut fast_bw = AnalyticCost::new(&model, &a100.scale_bandwidth(2.0));
+        let mut fast_fl = AnalyticCost::new(&model, &a100.scale_compute(2.0));
+        let b = prefill_batch(2048);
+        let t0 = base.iter_time(&b);
+        assert!(fast_bw.iter_time(&b) > 0.95 * t0);
+        assert!(fast_fl.iter_time(&b) < 0.62 * t0);
+    }
+
+    #[test]
+    fn batched_decode_cheaper_than_serial() {
+        let mut m = setup();
+        let t32 = m.iter_time(&decode_batch(32, 256));
+        let t1 = m.iter_time(&decode_batch(1, 256));
+        assert!(t32 < 0.2 * 32.0 * t1, "t32={t32} t1={t1}");
+    }
+
+    #[test]
+    fn iter_time_monotone_in_context() {
+        let mut m = setup();
+        let mut prev = 0.0;
+        for ctx in [128, 512, 2048, 8192] {
+            let t = m.iter_time(&decode_batch(16, ctx));
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn per_req_attn_len_matches_batch() {
+        let mut m = setup();
+        let mut b = decode_batch(5, 100);
+        b.push(0, 0);
+        let cost = m.iter_cost(&b);
+        assert_eq!(cost.per_req_attn.len(), 6);
+        assert_eq!(cost.per_req_attn[5], 0.0, "empty slot free");
+    }
+
+    #[test]
+    fn op_times_attention_grows_with_ctx_only() {
+        let mut m = setup();
+        let c1 = m.iter_cost(&decode_batch(16, 128));
+        let c2 = m.iter_cost(&decode_batch(16, 4096));
+        // attention (idx 2) grows strongly with context
+        assert!(c2.op_times[2] > 4.0 * c1.op_times[2]);
+        // qkv gemm (idx 1) depends only on new tokens
+        assert!((c2.op_times[1] - c1.op_times[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tp_reduces_iter_time_and_adds_allreduce() {
+        let mut m1 = ModelSpec::llama2_7b();
+        let mut m4 = ModelSpec::llama2_7b();
+        m1.tp = 1;
+        m4.tp = 4;
+        let hw = HardwareSpec::a100_80g();
+        let mut c1 = AnalyticCost::new(&m1, &hw);
+        let mut c4 = AnalyticCost::new(&m4, &hw);
+        let b = decode_batch(16, 1024);
+        let cost1 = c1.iter_cost(&b);
+        let cost4 = c4.iter_cost(&b);
+        assert!(cost4.iter_time < cost1.iter_time);
+        assert_eq!(cost1.op_times[ALLREDUCE_IDX], 0.0);
+        assert!(cost4.op_times[ALLREDUCE_IDX] > 0.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! The three-layer hot path: iteration costs from the AOT JAX/Pallas
+//! artifact, executed through PJRT.
+
+use anyhow::{ensure, Result};
+
+use super::{BatchDesc, ComputeModel, IterCost, NUM_OPS};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::runtime::{CompiledArtifact, Manifest};
+
+/// Cost model backed by `artifacts/iter_cost.hlo.txt`.
+///
+/// The artifact has a fixed number of batch-descriptor slots
+/// (`manifest.batch_slots`, default 1024). Batches beyond that are
+/// folded: overflow requests are merged into synthetic slots preserving
+/// the aggregate `(Σnew, Σ new*(ctx+new))` terms, which the iteration
+/// time depends on (per-request detail is lost only for the overflow).
+pub struct HloCost {
+    name: String,
+    artifact: std::rc::Rc<CompiledArtifact>,
+    slots: usize,
+    model_vec: [f32; 8],
+    hw_vec: [f32; 6],
+    // reusable input buffers (hot path: avoid per-call allocation)
+    ctx_buf: Vec<f32>,
+    new_buf: Vec<f32>,
+    /// Number of artifact executions (exposed for perf accounting).
+    pub evaluations: u64,
+}
+
+impl HloCost {
+    /// Load the iter-cost artifact for a (model, hardware) pair.
+    pub fn load(model: &ModelSpec, hw: &HardwareSpec, artifacts_dir: &str) -> Result<Self> {
+        let dir = if artifacts_dir.is_empty() {
+            crate::runtime::default_artifacts_dir()
+        } else {
+            artifacts_dir.into()
+        };
+        let manifest = Manifest::load(&dir)?;
+        let entry = manifest
+            .artifacts
+            .get("iter_cost")
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks iter_cost"))?;
+        let artifact = CompiledArtifact::load_cached(dir.join(&entry.file))?;
+        ensure!(manifest.batch_slots >= 2, "need at least 2 batch slots");
+        Ok(Self {
+            name: format!("hlo[{}/{}]", model.name, hw.name),
+            artifact,
+            slots: manifest.batch_slots,
+            model_vec: model.to_vec(),
+            hw_vec: hw.to_vec(),
+            ctx_buf: vec![0.0; manifest.batch_slots],
+            new_buf: vec![0.0; manifest.batch_slots],
+            evaluations: 0,
+        })
+    }
+
+    /// Fill the slot buffers from a batch, folding overflow (see struct
+    /// docs). Returns the number of live slots.
+    ///
+    /// Folding uses the last two slots: slot `S-2` carries
+    /// `(ctx*, new*)` with `new* = Σnew` and `ctx* = ΣA/Σnew - new*`,
+    /// preserving the total new tokens and the attention work term
+    /// `Σ new·(ctx+new)`; slot `S-1` carries `(rest, 0)` — a zero-new
+    /// context-only slot that restores the KV-read traffic `Σ (ctx+new)`
+    /// (the artifact charges KV bytes for context-only slots but no
+    /// FLOPs). Only the active-row count of the small logits GEMM is
+    /// approximated.
+    fn fill_slots(&mut self, batch: &BatchDesc) -> usize {
+        self.ctx_buf.fill(0.0);
+        self.new_buf.fill(0.0);
+        let direct = batch.len().min(self.slots - 2);
+        for i in 0..direct {
+            self.ctx_buf[i] = batch.ctx[i] as f32;
+            self.new_buf[i] = batch.new[i] as f32;
+        }
+        if batch.len() > direct {
+            let mut sum_new = 0.0f64;
+            let mut work = 0.0f64;
+            let mut sum_total = 0.0f64;
+            for i in direct..batch.len() {
+                let c = batch.ctx[i] as f64;
+                let n = batch.new[i] as f64;
+                sum_new += n;
+                work += n * (c + n);
+                sum_total += c + n;
+            }
+            if sum_new > 0.0 {
+                let ctx_star = (work / sum_new - sum_new).max(0.0);
+                self.ctx_buf[self.slots - 2] = ctx_star as f32;
+                self.new_buf[self.slots - 2] = sum_new as f32;
+                let rest = (sum_total - (ctx_star + sum_new)).max(0.0);
+                self.ctx_buf[self.slots - 1] = rest as f32;
+                self.new_buf[self.slots - 1] = 0.0;
+            }
+            self.slots
+        } else {
+            direct
+        }
+    }
+
+    /// Evaluate under an arbitrary hardware vector (probe support for
+    /// [`super::TableCost`] coefficient extraction).
+    pub fn evaluate_with_hw(&mut self, batch: &BatchDesc, hw_vec: [f32; 6]) -> Result<IterCost> {
+        let saved = self.hw_vec;
+        self.hw_vec = hw_vec;
+        let out = self.evaluate(batch);
+        self.hw_vec = saved;
+        out
+    }
+
+    /// Raw artifact evaluation.
+    pub fn evaluate(&mut self, batch: &BatchDesc) -> Result<IterCost> {
+        let live = self.fill_slots(batch);
+        self.evaluations += 1;
+        let ctx = std::mem::take(&mut self.ctx_buf);
+        let new = std::mem::take(&mut self.new_buf);
+        let out = self
+            .artifact
+            .run_f32(&[&ctx, &new, &self.model_vec, &self.hw_vec]);
+        self.ctx_buf = ctx;
+        self.new_buf = new;
+        let out = out?;
+        ensure!(
+            out.len() == 1 + NUM_OPS + self.slots,
+            "artifact output length {} != {}",
+            out.len(),
+            1 + NUM_OPS + self.slots
+        );
+        let mut op_times = [0.0f64; NUM_OPS];
+        for (i, t) in out[1..1 + NUM_OPS].iter().enumerate() {
+            op_times[i] = *t as f64;
+        }
+        let per_req_attn = out[1 + NUM_OPS..1 + NUM_OPS + live.min(batch.len())]
+            .iter()
+            .map(|&t| t as f64)
+            .collect();
+        Ok(IterCost {
+            iter_time: out[0] as f64,
+            op_times,
+            per_req_attn,
+        })
+    }
+}
+
+impl ComputeModel for HloCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        self.evaluate(batch)
+            .expect("artifact execution failed")
+            .iter_time
+    }
+
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        self.evaluate(batch).expect("artifact execution failed")
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::AnalyticCost;
+
+    fn try_load() -> Option<HloCost> {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(
+            HloCost::load(
+                &ModelSpec::llama2_7b(),
+                &HardwareSpec::a100_80g(),
+                dir.to_str().unwrap(),
+            )
+            .unwrap(),
+        )
+    }
+
+    fn mixed_batch() -> BatchDesc {
+        let mut b = BatchDesc::new();
+        b.push(0, 512); // prefill
+        for i in 0..31 {
+            b.push(100 + i * 37, 1); // decodes
+        }
+        b
+    }
+
+    #[test]
+    fn hlo_matches_analytic_mirror() {
+        let Some(mut hlo) = try_load() else { return };
+        let analytic = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        for batch in [mixed_batch(), {
+            let mut b = BatchDesc::new();
+            b.push(2048, 1);
+            b
+        }] {
+            let h = hlo.evaluate(&batch).unwrap();
+            let a = analytic.evaluate(&batch);
+            let rel = (h.iter_time - a.iter_time).abs() / a.iter_time;
+            assert!(rel < 1e-4, "iter_time rel err {rel}: {h:?} vs {a:?}");
+            for i in 0..NUM_OPS {
+                let (ht, at) = (h.op_times[i], a.op_times[i]);
+                if at > 0.0 {
+                    assert!(((ht - at) / at).abs() < 1e-3, "op {i}: {ht} vs {at}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_folding_preserves_aggregates() {
+        let Some(mut hlo) = try_load() else { return };
+        // batch larger than slot count
+        let mut big = BatchDesc::new();
+        for i in 0..(hlo.slots + 500) {
+            big.push((i % 1024) as u32, 1);
+        }
+        let t_big = hlo.iter_time(&big);
+        assert!(t_big > 0.0);
+        // folding preserves T and the attention work term exactly but
+        // under-counts active rows for the (small) logits GEMM, so the
+        // folded estimate sits within a few percent of the exact value
+        let analytic = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        let a = analytic.evaluate(&big).iter_time;
+        assert!(((t_big - a) / a).abs() < 0.02, "{t_big} vs {a}");
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let Some(mut hlo) = try_load() else { return };
+        assert_eq!(hlo.iter_time(&BatchDesc::new()), 0.0);
+        assert_eq!(hlo.evaluations, 0, "no artifact call for empty batch");
+    }
+}

@@ -1,0 +1,226 @@
+//! Compute cost models: per-iteration latency of a worker.
+//!
+//! The trait boundary mirrors the paper's Fig 1: "once a batch is formed
+//! by the scheduler for an iteration, relevant information is sent to a
+//! compute simulator … to determine iteration time. The architecture
+//! supports diverse compute simulators." Implementations:
+//!
+//! * [`HloCost`] — the three-layer hot path: executes the AOT-compiled
+//!   JAX/Pallas cost artifact through PJRT ([`crate::runtime`]).
+//! * [`AnalyticCost`] — bit-compatible pure-rust mirror of the artifact
+//!   semantics (`python/compile/kernels/ref.py`); the fallback when
+//!   artifacts are absent and the cross-validation comparator.
+//! * [`TableCost`] — interpolated lookup table built by sampling another
+//!   model at startup; the §Perf optimization of the hot path.
+//! * Oracle / baseline models live in [`crate::oracle`] and
+//!   [`crate::baselines`].
+
+pub(crate) mod analytic;
+mod hlo;
+mod table;
+
+pub use analytic::{AnalyticCost, ATTN_GATHER_EFF};
+pub use hlo::HloCost;
+pub use table::{CostProbe, TableCost};
+
+
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+
+/// Number of operator slots in the cost artifact (mirrors `ref.NUM_OPS`).
+pub const NUM_OPS: usize = 10;
+
+/// Composition of one iteration's batch: per-request `(ctx, new)` pairs.
+///
+/// `ctx[i]` tokens are already in KV cache; `new[i]` tokens are computed
+/// this iteration (prompt length during prefill, 1 during decode).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchDesc {
+    pub ctx: Vec<u32>,
+    pub new: Vec<u32>,
+}
+
+impl BatchDesc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ctx: u32, new: u32) {
+        self.ctx.push(ctx);
+        self.new.push(new);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ctx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ctx.is_empty() || self.total_new() == 0
+    }
+
+    /// Total new tokens computed this iteration.
+    pub fn total_new(&self) -> u64 {
+        self.new.iter().map(|&n| n as u64).sum()
+    }
+
+    /// Total context tokens attended over.
+    pub fn total_ctx(&self) -> u64 {
+        self.ctx.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Active (non-empty) request slots.
+    pub fn active_requests(&self) -> usize {
+        self.new.iter().filter(|&&n| n > 0).count()
+    }
+
+    /// Sum of `new * (ctx + new)` — the attention work term.
+    pub fn attn_work(&self) -> u64 {
+        self.ctx
+            .iter()
+            .zip(&self.new)
+            .map(|(&c, &n)| n as u64 * (c as u64 + n as u64))
+            .sum()
+    }
+}
+
+/// Full result of a cost-model evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterCost {
+    /// End-to-end iteration latency, seconds.
+    pub iter_time: f64,
+    /// Single-instance operator times (one layer / one call), seconds.
+    pub op_times: [f64; NUM_OPS],
+    /// Per-request attention time (diagnostics), seconds.
+    pub per_req_attn: Vec<f64>,
+}
+
+/// A per-(model, hardware) iteration cost model.
+pub trait ComputeModel {
+    /// Latency of one iteration with the given batch composition.
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64;
+
+    /// Detailed evaluation; default adapters may skip per-request detail.
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        IterCost {
+            iter_time: self.iter_time(batch),
+            op_times: [0.0; NUM_OPS],
+            per_req_attn: Vec::new(),
+        }
+    }
+
+    /// Human-readable name for logs and reports.
+    fn name(&self) -> &str;
+
+    /// One-time setup cost in *simulator wall-clock* seconds this model
+    /// incurred before the run (Vidur's ~400 s pre-training in Fig 6).
+    fn setup_cost(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Which cost model a simulation config selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostModelKind {
+    /// PJRT-executed AOT artifact (fall back to analytic if missing).
+    #[default]
+    Hlo,
+    /// Pure-rust mirror of the artifact semantics.
+    Analytic,
+    /// Interpolated table sampled from the HLO artifact (perf path).
+    Table,
+}
+
+thread_local! {
+    /// Extracted-table cache keyed by (model, hardware) parameter
+    /// vectors: probing the artifact costs ~10 PJRT executions, and SLO
+    /// sweeps construct hundreds of simulations per (model, hw) pair.
+    #[allow(clippy::type_complexity)]
+    static TABLES: std::cell::RefCell<
+        std::collections::HashMap<([u32; 8], [u64; 6]), TableCost>,
+    > = std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+fn table_cache_key(model: &ModelSpec, hw: &HardwareSpec) -> ([u32; 8], [u64; 6]) {
+    let m = model.to_vec().map(|v| v.to_bits());
+    let h = hw.to_vec().map(|v| (v as f64).to_bits());
+    (m, h)
+}
+
+/// Construct the configured cost model for a (model, hardware) pair.
+///
+/// `Hlo` and `Table` gracefully degrade to [`AnalyticCost`] when the
+/// artifacts directory is missing (e.g. in unit tests), with a warning —
+/// the two paths are cross-validated to agree to ~1e-4 relative.
+pub fn build_cost_model(
+    kind: CostModelKind,
+    model: &ModelSpec,
+    hw: &HardwareSpec,
+    artifacts_dir: &str,
+) -> Box<dyn ComputeModel> {
+    match kind {
+        CostModelKind::Analytic => Box::new(AnalyticCost::new(model, hw)),
+        CostModelKind::Hlo => match HloCost::load(model, hw, artifacts_dir) {
+            Ok(m) => Box::new(m),
+            Err(e) => {
+                warn_once(&format!(
+                    "HLO cost artifact unavailable ({e}); using analytic mirror"
+                ));
+                Box::new(AnalyticCost::new(model, hw))
+            }
+        },
+        CostModelKind::Table => {
+            let key = table_cache_key(model, hw);
+            let cached = TABLES.with(|c| c.borrow().get(&key).cloned());
+            if let Some(t) = cached {
+                return Box::new(t);
+            }
+            let table = match HloCost::load(model, hw, artifacts_dir) {
+                Ok(mut m) => TableCost::build(&mut m, model, hw),
+                Err(e) => {
+                    warn_once(&format!(
+                        "HLO cost artifact unavailable ({e}); table over analytic"
+                    ));
+                    let mut probe = AnalyticCost::new(model, hw);
+                    TableCost::build(&mut probe, model, hw)
+                }
+            };
+            TABLES.with(|c| c.borrow_mut().insert(key, table.clone()));
+            Box::new(table)
+        }
+    }
+}
+
+fn warn_once(msg: &str) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!("warning: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_desc_aggregates() {
+        let mut b = BatchDesc::new();
+        b.push(100, 1);
+        b.push(0, 50);
+        b.push(0, 0); // empty slot
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_new(), 51);
+        assert_eq!(b.total_ctx(), 100);
+        assert_eq!(b.active_requests(), 2);
+        assert_eq!(b.attn_work(), 101 + 2500);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn empty_batch_detection() {
+        assert!(BatchDesc::new().is_empty());
+        let mut b = BatchDesc::new();
+        b.push(10, 0);
+        assert!(b.is_empty(), "no new tokens means nothing to run");
+    }
+}

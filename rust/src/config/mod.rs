@@ -1,0 +1,549 @@
+//! Configuration system mirroring the paper's Fig 2: hardware config,
+//! scheduler config, and model config compose into a cluster/simulation
+//! config, loadable from YAML (in-tree subset parser — this build is
+//! offline) and constructible programmatically.
+
+pub mod yaml;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compute::CostModelKind;
+use crate::hardware::{HardwareSpec, LinkSpec};
+use crate::memory::MemoryConfig;
+use crate::metrics::SloSpec;
+use crate::model::ModelSpec;
+use crate::scheduler::{GlobalPolicy, LocalPolicy, PriorityKey};
+use crate::workload::{ArrivalProcess, LengthDistribution, WorkloadSpec};
+
+use yaml::Yaml;
+
+/// One worker: hardware + role + local scheduler + memory manager.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerConfig {
+    pub hardware: HardwareSpec,
+    /// Identical replicas of this worker (Fig 2's `quantity`).
+    pub quantity: u32,
+    pub run_prefill: bool,
+    pub run_decode: bool,
+    pub local_scheduler: LocalPolicy,
+    pub memory: MemoryConfig,
+}
+
+impl WorkerConfig {
+    pub fn unified(hw: HardwareSpec, quantity: u32) -> Self {
+        Self {
+            hardware: hw,
+            quantity,
+            run_prefill: true,
+            run_decode: true,
+            local_scheduler: LocalPolicy::continuous_default(),
+            memory: MemoryConfig::default(),
+        }
+    }
+
+    fn from_yaml(y: &Yaml) -> Result<Self> {
+        let hardware = match y.req("hardware")? {
+            Yaml::Str(name) => HardwareSpec::by_name(name)
+                .with_context(|| format!("unknown hardware preset '{name}'"))?,
+            inline @ Yaml::Map(_) => hardware_from_yaml(inline)?,
+            other => bail!("'hardware' must be a preset name or map, got {other:?}"),
+        };
+        Ok(Self {
+            hardware,
+            quantity: y.opt_u32("quantity", 1),
+            run_prefill: y.opt_bool("run_prefill", true),
+            run_decode: y.opt_bool("run_decode", true),
+            local_scheduler: match y.get("local_scheduler") {
+                Some(ls) => local_policy_from_yaml(ls)?,
+                None => LocalPolicy::continuous_default(),
+            },
+            memory: match y.get("memory") {
+                Some(m) => memory_from_yaml(m)?,
+                None => MemoryConfig::default(),
+            },
+        })
+    }
+}
+
+fn hardware_from_yaml(y: &Yaml) -> Result<HardwareSpec> {
+    Ok(HardwareSpec {
+        name: y.req_str("name")?.to_string(),
+        peak_flops: y.req_f64("peak_flops")?,
+        efficiency: y.opt_f64("efficiency", 0.55),
+        mem_bw: y.req_f64("mem_bw")?,
+        mem_cap: y.req_f64("mem_cap")?,
+        op_overhead: y.opt_f64("op_overhead", 4.5e-6),
+        iter_overhead: y.opt_f64("iter_overhead", 2.0e-3),
+        net_bw: y.opt_f64("net_bw", 300e9),
+        price: y.opt_f64("price", 1.0),
+    })
+}
+
+fn memory_from_yaml(y: &Yaml) -> Result<MemoryConfig> {
+    Ok(MemoryConfig {
+        block_size: y.opt_u32("block_size", 16),
+        gpu_utilization: y.opt_f64("gpu_utilization", 0.9),
+        max_mem_ratio: y.opt_f64("max_mem_ratio", 1.0),
+        watermark: y.opt_f64("watermark", 0.01),
+    })
+}
+
+fn local_policy_from_yaml(y: &Yaml) -> Result<LocalPolicy> {
+    let max_batch_size = |y: &Yaml| -> Option<u32> {
+        match y.get("max_batch_size") {
+            None | Some(Yaml::Null) => None,
+            Some(v) => v.as_u32(),
+        }
+    };
+    match y.req_str("policy")? {
+        "continuous" | "Continuous" => Ok(LocalPolicy::Continuous {
+            max_batched_tokens: y.opt_u32("max_batched_tokens", 8192),
+            max_batch_size: max_batch_size(y),
+            mixed_batching: y.opt_bool("mixed_batching", false),
+        }),
+        "static" | "Static" => Ok(LocalPolicy::Static {
+            batch_size: y.req_u32("batch_size")?,
+            max_linger: y.opt_f64("max_linger", 1.0),
+        }),
+        "priority" | "Priority" => Ok(LocalPolicy::Priority {
+            max_batched_tokens: y.opt_u32("max_batched_tokens", 8192),
+            max_batch_size: max_batch_size(y),
+            by: match y.req_str("by")? {
+                "arrival" => PriorityKey::Arrival,
+                "shortest_prompt" => PriorityKey::ShortestPrompt,
+                "shortest_output" => PriorityKey::ShortestOutput,
+                other => bail!("unknown priority key '{other}'"),
+            },
+        }),
+        other => bail!("unknown local scheduler policy '{other}'"),
+    }
+}
+
+fn global_policy_from_yaml(y: &Yaml) -> Result<GlobalPolicy> {
+    match y.req_str("policy")? {
+        "round_robin" | "RoundRobin" => Ok(GlobalPolicy::RoundRobin),
+        "load_aware" | "LoadAware" => Ok(GlobalPolicy::LoadAware),
+        "random" | "Random" => Ok(GlobalPolicy::Random),
+        other => bail!("unknown global scheduler policy '{other}'"),
+    }
+}
+
+fn link_from_yaml(y: &Yaml) -> Result<LinkSpec> {
+    match y {
+        Yaml::Str(name) => {
+            LinkSpec::by_name(name).with_context(|| format!("unknown link preset '{name}'"))
+        }
+        Yaml::Map(_) => Ok(LinkSpec {
+            name: y.req_str("name")?.to_string(),
+            bandwidth: y.req_f64("bandwidth")?,
+            latency: y.req_f64("latency")?,
+            buffer_depth: y.opt_u32("buffer_depth", 1),
+        }),
+        other => bail!("link must be a preset name or map, got {other:?}"),
+    }
+}
+
+fn length_dist_from_yaml(y: &Yaml) -> Result<LengthDistribution> {
+    if let Some(v) = y.get("fixed") {
+        return Ok(LengthDistribution::Fixed(
+            v.as_u32().context("'fixed' must be an integer")?,
+        ));
+    }
+    if let Some(u) = y.get("uniform") {
+        return Ok(LengthDistribution::Uniform {
+            min: u.req_u32("min")?,
+            max: u.req_u32("max")?,
+        });
+    }
+    if let Some(l) = y.get("log_normal") {
+        return Ok(LengthDistribution::LogNormal {
+            median: l.req_f64("median")?,
+            sigma: l.req_f64("sigma")?,
+            min: l.opt_u32("min", 1),
+            max: l.opt_u32("max", 1 << 20),
+        });
+    }
+    bail!("length distribution needs 'fixed', 'uniform' or 'log_normal'")
+}
+
+fn arrival_from_yaml(y: &Yaml) -> Result<ArrivalProcess> {
+    match y {
+        Yaml::Str(s) => match s.as_str() {
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            "uniform" => Ok(ArrivalProcess::Uniform),
+            "burst" => Ok(ArrivalProcess::Burst),
+            other => bail!("unknown arrival process '{other}'"),
+        },
+        Yaml::Map(_) => {
+            if let Some(g) = y.get("gamma") {
+                Ok(ArrivalProcess::Gamma {
+                    cv: g.req_f64("cv")?,
+                })
+            } else {
+                bail!("arrival map must contain 'gamma'")
+            }
+        }
+        other => bail!("bad arrival process {other:?}"),
+    }
+}
+
+fn workload_from_yaml(y: &Yaml) -> Result<WorkloadSpec> {
+    Ok(WorkloadSpec {
+        num_requests: y.req_u32("num_requests")? as usize,
+        qps: y.req_f64("qps")?,
+        arrival: match y.get("arrival") {
+            Some(a) => arrival_from_yaml(a)?,
+            None => ArrivalProcess::Poisson,
+        },
+        prompt_len: length_dist_from_yaml(y.req("prompt_len")?)?,
+        output_len: length_dist_from_yaml(y.req("output_len")?)?,
+        seed: y.opt_u32("seed", 0) as u64,
+    })
+}
+
+/// Scheduler section (Fig 2b).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    pub global: GlobalPolicy,
+    /// Interconnect between workers (KV transfers).
+    pub interconnect: LinkSpec,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            global: GlobalPolicy::LoadAware,
+            interconnect: LinkSpec::nvlink(),
+        }
+    }
+}
+
+/// Cluster: the workers plus inter-worker scheduling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub workers: Vec<WorkerConfig>,
+    pub scheduler: SchedulerConfig,
+}
+
+/// Memory-pool cache section (Fig 14; disabled when absent).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolCacheConfig {
+    /// Capacity in KV blocks.
+    pub capacity_blocks: u64,
+    /// Retrieval link (default: 800 ns/block pool fabric).
+    pub link: LinkSpec,
+}
+
+impl PoolCacheConfig {
+    pub fn with_capacity(capacity_blocks: u64) -> Self {
+        Self {
+            capacity_blocks,
+            link: LinkSpec::pool_fabric(),
+        }
+    }
+}
+
+/// The top-level simulation description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulationConfig {
+    pub model: ModelSpec,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadSpec,
+    pub cost_model: CostModelKind,
+    /// Artifacts directory ("" = auto-discover).
+    pub artifacts_dir: String,
+    pub slo: SloSpec,
+    pub pool_cache: Option<PoolCacheConfig>,
+    /// Memory-timeline sampling period (0 disables sampling).
+    pub sample_period: f64,
+}
+
+impl SimulationConfig {
+    /// One worker, continuous batching — the vLLM-like baseline setup.
+    pub fn single_worker(model: ModelSpec, hw: HardwareSpec, workload: WorkloadSpec) -> Self {
+        Self {
+            model,
+            cluster: ClusterConfig {
+                workers: vec![WorkerConfig::unified(hw, 1)],
+                scheduler: SchedulerConfig::default(),
+            },
+            workload,
+            cost_model: CostModelKind::default(),
+            artifacts_dir: String::new(),
+            slo: SloSpec::paper_default(),
+            pool_cache: None,
+            sample_period: 0.0,
+        }
+    }
+
+    /// A prefill/decode-disaggregated cluster.
+    pub fn disaggregated(
+        model: ModelSpec,
+        prefill_hw: HardwareSpec,
+        n_prefill: u32,
+        decode_hw: HardwareSpec,
+        n_decode: u32,
+        workload: WorkloadSpec,
+    ) -> Self {
+        let mut prefill = WorkerConfig::unified(prefill_hw, n_prefill);
+        prefill.run_decode = false;
+        let mut decode = WorkerConfig::unified(decode_hw, n_decode);
+        decode.run_prefill = false;
+        Self {
+            model,
+            cluster: ClusterConfig {
+                workers: vec![prefill, decode],
+                scheduler: SchedulerConfig::default(),
+            },
+            workload,
+            cost_model: CostModelKind::default(),
+            artifacts_dir: String::new(),
+            slo: SloSpec::paper_default(),
+            pool_cache: None,
+            sample_period: 0.0,
+        }
+    }
+
+    pub fn from_yaml_str(text: &str) -> Result<Self> {
+        let y = Yaml::parse(text).context("parsing simulation config")?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_yaml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_yaml_str(&text)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let model = match y.req("model")? {
+            Yaml::Str(name) => ModelSpec::by_name(name)
+                .with_context(|| format!("unknown model preset '{name}'"))?,
+            inline @ Yaml::Map(_) => ModelSpec {
+                name: inline.req_str("name")?.to_string(),
+                hidden: inline.req_u32("hidden")?,
+                layers: inline.req_u32("layers")?,
+                heads: inline.req_u32("heads")?,
+                kv_heads: inline.opt_u32("kv_heads", inline.req_u32("heads")?),
+                ffn: inline.req_u32("ffn")?,
+                vocab: inline.req_u32("vocab")?,
+                dtype_bytes: inline.opt_u32("dtype_bytes", 2),
+                tp: inline.opt_u32("tp", 1),
+            },
+            other => bail!("'model' must be a preset name or map, got {other:?}"),
+        };
+
+        let cluster_y = y.req("cluster")?;
+        let workers = cluster_y
+            .req("workers")?
+            .as_list()
+            .context("'workers' must be a list")?
+            .iter()
+            .map(WorkerConfig::from_yaml)
+            .collect::<Result<Vec<_>>>()?;
+        let scheduler = match cluster_y.get("scheduler") {
+            Some(s) => SchedulerConfig {
+                global: match s.get("global") {
+                    Some(g) => global_policy_from_yaml(g)?,
+                    None => GlobalPolicy::LoadAware,
+                },
+                interconnect: match s.get("interconnect") {
+                    Some(l) => link_from_yaml(l)?,
+                    None => LinkSpec::nvlink(),
+                },
+            },
+            None => SchedulerConfig::default(),
+        };
+
+        let slo = match y.get("slo") {
+            Some(s) => SloSpec {
+                ttft: s.get("ttft").and_then(Yaml::as_f64),
+                mtpot: s.get("mtpot").and_then(Yaml::as_f64),
+            },
+            None => SloSpec::paper_default(),
+        };
+
+        let pool_cache = match y.get("pool_cache") {
+            Some(pc) => Some(PoolCacheConfig {
+                capacity_blocks: pc
+                    .req("capacity_blocks")?
+                    .as_u64()
+                    .context("'capacity_blocks' must be an integer")?,
+                link: match pc.get("link") {
+                    Some(l) => link_from_yaml(l)?,
+                    None => LinkSpec::pool_fabric(),
+                },
+            }),
+            None => None,
+        };
+
+        Ok(Self {
+            model,
+            cluster: ClusterConfig { workers, scheduler },
+            workload: workload_from_yaml(y.req("workload")?)?,
+            cost_model: match y.get("cost_model").and_then(Yaml::as_str) {
+                None | Some("hlo") => CostModelKind::Hlo,
+                Some("analytic") => CostModelKind::Analytic,
+                Some("table") => CostModelKind::Table,
+                Some(other) => bail!("unknown cost model '{other}'"),
+            },
+            artifacts_dir: y
+                .get("artifacts_dir")
+                .and_then(Yaml::as_str)
+                .unwrap_or("")
+                .to_string(),
+            slo,
+            pool_cache,
+            sample_period: y.opt_f64("sample_period", 0.0),
+        })
+    }
+
+    /// Total worker count after expanding `quantity`.
+    pub fn total_workers(&self) -> u32 {
+        self.cluster.workers.iter().map(|w| w.quantity).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig2_style_config() {
+        let yaml = r#"
+model: llama2-7b
+cluster:
+  workers:
+    - hardware: A100
+      quantity: 2
+      run_prefill: true
+      run_decode: false
+      local_scheduler:
+        policy: continuous
+        max_batched_tokens: 1000
+        max_batch_size: 256
+      memory:
+        block_size: 16
+        gpu_utilization: 0.8
+        max_mem_ratio: 1.0
+        watermark: 0.01
+    - hardware: G6-AiM
+      quantity: 6
+      run_prefill: false
+      run_decode: true
+  scheduler:
+    global:
+      policy: round_robin
+    interconnect: NVLink
+workload:
+  num_requests: 1000
+  qps: 8.0
+  arrival: poisson
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 64
+  seed: 7
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.total_workers(), 8);
+        assert_eq!(cfg.model.hidden, 4096);
+        assert_eq!(cfg.cluster.workers[0].hardware.name, "A100");
+        assert!(!cfg.cluster.workers[1].run_prefill);
+        assert_eq!(cfg.cluster.scheduler.global, GlobalPolicy::RoundRobin);
+        assert_eq!(
+            cfg.cluster.workers[0].local_scheduler,
+            LocalPolicy::Continuous {
+                max_batched_tokens: 1000,
+                max_batch_size: Some(256),
+                mixed_batching: false
+            }
+        );
+        assert!((cfg.cluster.workers[0].memory.gpu_utilization - 0.8).abs() < 1e-12);
+        assert_eq!(cfg.workload.prompt_len, LengthDistribution::Fixed(64));
+    }
+
+    #[test]
+    fn inline_model_and_hardware() {
+        let yaml = r#"
+model:
+  name: custom
+  hidden: 1024
+  layers: 8
+  heads: 16
+  ffn: 4096
+  vocab: 5000
+cluster:
+  workers:
+    - hardware:
+        name: widget
+        peak_flops: 1e14
+        mem_bw: 1e12
+        mem_cap: 4e10
+workload:
+  num_requests: 10
+  qps: 1.0
+  prompt_len:
+    fixed: 8
+  output_len:
+    uniform:
+      min: 4
+      max: 12
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.model.name, "custom");
+        assert_eq!(cfg.model.kv_heads, 16, "kv_heads defaults to heads");
+        assert_eq!(cfg.cluster.workers[0].hardware.name, "widget");
+        assert_eq!(
+            cfg.workload.output_len,
+            LengthDistribution::Uniform { min: 4, max: 12 }
+        );
+    }
+
+    #[test]
+    fn unknown_presets_are_errors() {
+        let bad = "model: gpt-9\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        assert!(SimulationConfig::from_yaml_str(bad).is_err());
+        let bad_hw = bad.replace("gpt-9", "llama2-7b").replace("A100", "tpu-v9");
+        assert!(SimulationConfig::from_yaml_str(&bad_hw).is_err());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 10\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.cluster.workers[0].quantity, 1);
+        assert!(cfg.cluster.workers[0].run_prefill);
+        assert_eq!(cfg.slo, SloSpec::paper_default());
+        assert!(cfg.pool_cache.is_none());
+        assert_eq!(cfg.cost_model, CostModelKind::Hlo);
+    }
+
+    #[test]
+    fn disaggregated_constructor_roles() {
+        let cfg = SimulationConfig::disaggregated(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            2,
+            HardwareSpec::gddr6_aim(),
+            6,
+            WorkloadSpec::fixed(10, 1.0, 64, 64),
+        );
+        assert_eq!(cfg.total_workers(), 8);
+        assert!(cfg.cluster.workers[0].run_prefill && !cfg.cluster.workers[0].run_decode);
+        assert!(!cfg.cluster.workers[1].run_prefill && cfg.cluster.workers[1].run_decode);
+    }
+
+    #[test]
+    fn slo_and_pool_sections() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 10\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\nslo:\n  ttft: 10.0\n  mtpot: 0.25\npool_cache:\n  capacity_blocks: 5000\nsample_period: 0.5\ncost_model: table\n";
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.slo.ttft, Some(10.0));
+        assert_eq!(cfg.slo.mtpot, Some(0.25));
+        assert_eq!(cfg.pool_cache.unwrap().capacity_blocks, 5000);
+        assert_eq!(cfg.sample_period, 0.5);
+        assert_eq!(cfg.cost_model, CostModelKind::Table);
+    }
+}

@@ -1,0 +1,403 @@
+//! Minimal YAML-subset parser (serde_yaml is unavailable offline).
+//!
+//! Supports the subset the paper's Fig-2-style configs need:
+//! indentation-nested mappings, block lists (`- item` including inline
+//! nested maps), scalars (string / f64 / bool / null), quoted strings,
+//! and `#` comments. No anchors, no flow collections, no multi-line
+//! scalars.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    Map(BTreeMap<String, Yaml>),
+}
+
+impl Yaml {
+    pub fn parse(text: &str) -> Result<Yaml> {
+        let lines: Vec<Line> = text
+            .lines()
+            .enumerate()
+            .filter_map(|(no, raw)| Line::new(no + 1, raw))
+            .collect();
+        if lines.is_empty() {
+            return Ok(Yaml::Null);
+        }
+        let (v, used) = parse_block(&lines, 0, lines[0].indent)?;
+        if used != lines.len() {
+            bail!("line {}: unexpected dedent/content", lines[used].no);
+        }
+        Ok(v)
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Yaml> {
+        self.get(key)
+            .with_context(|| format!("missing config key '{key}'"))
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Yaml::Num(n) if *n >= 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_u64().map(|v| v as u32)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Yaml>> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    // typed required accessors for config loading
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .with_context(|| format!("'{key}' must be a string"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number"))
+    }
+
+    pub fn req_u32(&self, key: &str) -> Result<u32> {
+        self.req(key)?
+            .as_u32()
+            .with_context(|| format!("'{key}' must be a non-negative integer"))
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Yaml::as_f64).unwrap_or(default)
+    }
+
+    pub fn opt_u32(&self, key: &str, default: u32) -> u32 {
+        self.get(key).and_then(Yaml::as_u32).unwrap_or(default)
+    }
+
+    pub fn opt_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Yaml::as_bool).unwrap_or(default)
+    }
+}
+
+#[derive(Debug)]
+struct Line {
+    no: usize,
+    indent: usize,
+    /// Content with indentation stripped.
+    text: String,
+}
+
+impl Line {
+    fn new(no: usize, raw: &str) -> Option<Line> {
+        let without_comment = strip_comment(raw);
+        let trimmed = without_comment.trim_end();
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        let text = trimmed.trim_start().to_string();
+        if text.is_empty() {
+            None
+        } else {
+            Some(Line { no, indent, text })
+        }
+    }
+}
+
+fn strip_comment(s: &str) -> String {
+    let mut out = String::new();
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for c in s.chars() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            '#' if !in_sq && !in_dq => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Parse a block starting at `start` whose items are indented `indent`.
+/// Returns (value, next-line index).
+fn parse_block(lines: &[Line], start: usize, indent: usize) -> Result<(Yaml, usize)> {
+    if lines[start].text.starts_with("- ") || lines[start].text == "-" {
+        parse_list(lines, start, indent)
+    } else {
+        parse_map(lines, start, indent)
+    }
+}
+
+fn parse_list(lines: &[Line], start: usize, indent: usize) -> Result<(Yaml, usize)> {
+    let mut items = Vec::new();
+    let mut i = start;
+    while i < lines.len() && lines[i].indent == indent {
+        let line = &lines[i];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start();
+        if rest.is_empty() {
+            // nested block under the dash
+            let (v, next) = if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                parse_block(lines, i + 1, lines[i + 1].indent)?
+            } else {
+                (Yaml::Null, i + 1)
+            };
+            items.push(v);
+            i = next;
+        } else if let Some((k, v)) = split_key(rest) {
+            // "- key: value" starts an inline map item; subsequent deeper
+            // lines belong to the same map
+            let mut m = BTreeMap::new();
+            let item_indent = indent + (line.text.len() - rest.len());
+            if v.is_empty() {
+                let (nested, next) = if i + 1 < lines.len() && lines[i + 1].indent > item_indent {
+                    parse_block(lines, i + 1, lines[i + 1].indent)?
+                } else {
+                    (Yaml::Null, i + 1)
+                };
+                m.insert(k.to_string(), nested);
+                i = next;
+            } else {
+                m.insert(k.to_string(), scalar(v));
+                i += 1;
+            }
+            while i < lines.len() && lines[i].indent == item_indent {
+                let Some((k2, v2)) = split_key(&lines[i].text) else {
+                    bail!("line {}: expected 'key:' in list item", lines[i].no);
+                };
+                if v2.is_empty() {
+                    let (nested, next) =
+                        if i + 1 < lines.len() && lines[i + 1].indent > item_indent {
+                            parse_block(lines, i + 1, lines[i + 1].indent)?
+                        } else {
+                            (Yaml::Null, i + 1)
+                        };
+                    m.insert(k2.to_string(), nested);
+                    i = next;
+                } else {
+                    m.insert(k2.to_string(), scalar(v2));
+                    i += 1;
+                }
+            }
+            items.push(Yaml::Map(m));
+        } else {
+            items.push(scalar(rest));
+            i += 1;
+        }
+    }
+    Ok((Yaml::List(items), i))
+}
+
+fn parse_map(lines: &[Line], start: usize, indent: usize) -> Result<(Yaml, usize)> {
+    let mut m = BTreeMap::new();
+    let mut i = start;
+    while i < lines.len() && lines[i].indent == indent {
+        let line = &lines[i];
+        let Some((k, v)) = split_key(&line.text) else {
+            bail!("line {}: expected 'key: value'", line.no);
+        };
+        if v.is_empty() {
+            // nested block (or empty value)
+            if i + 1 < lines.len() && lines[i + 1].indent > indent {
+                let (nested, next) = parse_block(lines, i + 1, lines[i + 1].indent)?;
+                m.insert(k.to_string(), nested);
+                i = next;
+            } else {
+                m.insert(k.to_string(), Yaml::Null);
+                i += 1;
+            }
+        } else {
+            m.insert(k.to_string(), scalar(v));
+            i += 1;
+        }
+        if i < lines.len() && lines[i].indent > indent {
+            bail!("line {}: unexpected indent", lines[i].no);
+        }
+    }
+    Ok((Yaml::Map(m), i))
+}
+
+/// Split `key: value` (value may be empty). Returns None when the line
+/// has no unquoted ':'.
+fn split_key(text: &str) -> Option<(&str, &str)> {
+    let mut in_sq = false;
+    let mut in_dq = false;
+    for (idx, c) in text.char_indices() {
+        match c {
+            '\'' if !in_dq => in_sq = !in_sq,
+            '"' if !in_sq => in_dq = !in_dq,
+            ':' if !in_sq && !in_dq => {
+                let after = &text[idx + 1..];
+                if after.is_empty() || after.starts_with(' ') {
+                    return Some((text[..idx].trim(), after.trim()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn scalar(text: &str) -> Yaml {
+    let t = text.trim();
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Yaml::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "null" | "~" | "" => return Yaml::Null,
+        "true" => return Yaml::Bool(true),
+        "false" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        if t.chars()
+            .next()
+            .map(|c| c.is_ascii_digit() || c == '-' || c == '+' || c == '.')
+            .unwrap_or(false)
+        {
+            return Yaml::Num(n);
+        }
+    }
+    Yaml::Str(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let y = Yaml::parse("a: 1\nb: 2.5\nc: hello\nd: \"quoted: x\"\ne: true\nf: null\n").unwrap();
+        assert_eq!(y.req_f64("a").unwrap(), 1.0);
+        assert_eq!(y.req_f64("b").unwrap(), 2.5);
+        assert_eq!(y.req_str("c").unwrap(), "hello");
+        assert_eq!(y.req_str("d").unwrap(), "quoted: x");
+        assert_eq!(y.get("e").unwrap().as_bool(), Some(true));
+        assert_eq!(y.get("f"), Some(&Yaml::Null));
+    }
+
+    #[test]
+    fn nested_maps() {
+        let y = Yaml::parse("outer:\n  inner:\n    x: 3\n  y: 4\nz: 5\n").unwrap();
+        assert_eq!(
+            y.get("outer").unwrap().get("inner").unwrap().req_f64("x").unwrap(),
+            3.0
+        );
+        assert_eq!(y.get("outer").unwrap().req_f64("y").unwrap(), 4.0);
+        assert_eq!(y.req_f64("z").unwrap(), 5.0);
+    }
+
+    #[test]
+    fn list_of_maps_fig2_style() {
+        let y = Yaml::parse(
+            "workers:\n  - hardware: A100\n    quantity: 2\n    memory:\n      block_size: 16\n  - hardware: V100\n",
+        )
+        .unwrap();
+        let ws = y.get("workers").unwrap().as_list().unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].req_str("hardware").unwrap(), "A100");
+        assert_eq!(ws[0].req_u32("quantity").unwrap(), 2);
+        assert_eq!(
+            ws[0].get("memory").unwrap().req_u32("block_size").unwrap(),
+            16
+        );
+        assert_eq!(ws[1].req_str("hardware").unwrap(), "V100");
+    }
+
+    #[test]
+    fn list_of_scalars() {
+        let y = Yaml::parse("xs:\n  - 1\n  - 2\n  - three\n").unwrap();
+        let xs = y.get("xs").unwrap().as_list().unwrap();
+        assert_eq!(xs[0], Yaml::Num(1.0));
+        assert_eq!(xs[2], Yaml::Str("three".into()));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let y = Yaml::parse("a: 1 # comment\n# full line\nb: 'x # not comment'\n").unwrap();
+        assert_eq!(y.req_f64("a").unwrap(), 1.0);
+        assert_eq!(y.req_str("b").unwrap(), "x # not comment");
+    }
+
+    #[test]
+    fn empty_is_null() {
+        assert_eq!(Yaml::parse("").unwrap(), Yaml::Null);
+        assert_eq!(Yaml::parse("# only comments\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn typed_accessors_error_messages() {
+        let y = Yaml::parse("a: x\n").unwrap();
+        assert!(y.req_f64("a").is_err());
+        assert!(y.req_str("missing").is_err());
+        assert_eq!(y.opt_f64("missing", 7.0), 7.0);
+        assert_eq!(y.opt_bool("missing", true), true);
+    }
+
+    #[test]
+    fn bad_indent_rejected() {
+        assert!(Yaml::parse("a: 1\n   b: 2\n").is_err());
+    }
+
+    #[test]
+    fn numbers_vs_strings() {
+        let y = Yaml::parse("a: 1e9\nb: v100\nc: -3\n").unwrap();
+        assert_eq!(y.req_f64("a").unwrap(), 1e9);
+        assert_eq!(y.req_str("b").unwrap(), "v100");
+        assert_eq!(y.req_f64("c").unwrap(), -3.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Shared experiment machinery: run options, oracle/simulator run
+//! helpers, SLO-throughput search, table formatting.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use crate::cluster::{Simulation, SimulationReport};
+use crate::compute::CostModelKind;
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::oracle::{calibrated_hardware, OracleCost, OracleParams};
+
+/// Options every experiment takes.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Shrink workloads/grids for smoke tests and quick CI runs.
+    pub quick: bool,
+    /// Where to also write the report text.
+    pub out_dir: Option<PathBuf>,
+    /// Cost model for the TokenSim side of comparisons.
+    pub cost_model: CostModelKind,
+}
+
+impl ExpOpts {
+    pub fn full() -> Self {
+        Self {
+            quick: false,
+            out_dir: None,
+            cost_model: CostModelKind::Table,
+        }
+    }
+
+    pub fn quick() -> Self {
+        Self {
+            quick: true,
+            out_dir: None,
+            // quick paths avoid artifact loading so unit tests run
+            // without `make artifacts`
+            cost_model: CostModelKind::Analytic,
+        }
+    }
+
+    /// Pick a size by mode.
+    pub fn size(&self, full: usize, quick: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+}
+
+/// Run TokenSim proper on a config (the simulator under evaluation).
+pub fn run_tokensim(cfg: &SimulationConfig) -> SimulationReport {
+    Simulation::from_config(cfg).run()
+}
+
+/// Run the oracle ("real system") on the same workload/cluster: same
+/// driver, oracle cost model, per-worker noise streams.
+pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> SimulationReport {
+    let params = params.clone();
+    let factory = move |model: &ModelSpec, hw: &HardwareSpec, worker: usize| {
+        Box::new(OracleCost::new(
+            model,
+            hw,
+            params.clone(),
+            seed ^ (worker as u64).wrapping_mul(0x9E37_79B9),
+        )) as Box<dyn crate::compute::ComputeModel>
+    };
+    Simulation::with_cost_factory(cfg, &factory).run()
+}
+
+/// The validation setup of Figs 4/5/7: TokenSim is configured with
+/// hardware parameters *measured from the target system* (the oracle),
+/// exactly like the paper configures TokenSim from real measurements.
+pub fn calibrated_config(cfg: &SimulationConfig, params: &OracleParams) -> SimulationConfig {
+    let mut out = cfg.clone();
+    for w in &mut out.cluster.workers {
+        w.hardware = calibrated_hardware(&cfg.model, &w.hardware, params);
+    }
+    out
+}
+
+/// Binary-search the maximum request rate whose SLO attainment stays
+/// >= `target` (the paper's "maximum throughput without violating the
+/// SLO"). `build` maps a qps to a full simulation config. Returns
+/// (qps, goodput req/s) at the found operating point.
+pub fn max_slo_throughput(
+    build: &dyn Fn(f64) -> SimulationConfig,
+    target_attainment: f64,
+    qps_hi_start: f64,
+) -> (f64, f64) {
+    let attainment = |qps: f64| -> (f64, f64) {
+        let cfg = build(qps);
+        let report = Simulation::from_config(&cfg).run();
+        (report.slo_attainment(), report.slo_throughput())
+    };
+    // grow the bracket until attainment falls below target
+    let mut lo = 0.0;
+    let mut lo_good = 0.0;
+    let mut hi = qps_hi_start.max(0.5);
+    let mut hi_res = attainment(hi);
+    let mut grow = 0;
+    while hi_res.0 >= target_attainment && grow < 8 {
+        lo = hi;
+        lo_good = hi_res.1;
+        hi *= 2.0;
+        hi_res = attainment(hi);
+        grow += 1;
+    }
+    if hi_res.0 >= target_attainment {
+        return (hi, hi_res.1);
+    }
+    // bisect
+    for _ in 0..5 {
+        let mid = 0.5 * (lo + hi);
+        let (att, good) = attainment(mid);
+        if att >= target_attainment {
+            lo = mid;
+            lo_good = good;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, lo_good)
+}
+
+/// Geometric mean of |a/b - 1| error terms (the paper's error metric).
+pub fn geomean_rel_err(pairs: &[(f64, f64)]) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0;
+    for &(a, b) in pairs {
+        if b == 0.0 {
+            continue;
+        }
+        let e = ((a - b) / b).abs().max(1e-9);
+        log_sum += e.ln();
+        n += 1;
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    (log_sum / n as f64).exp()
+}
+
+/// Simple fixed-width table writer.
+pub struct Table {
+    out: String,
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        let widths: Vec<usize> = headers.iter().map(|h| h.len().max(10)).collect();
+        let mut t = Table {
+            out: String::new(),
+            widths,
+        };
+        t.row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let rule: Vec<String> = t.widths.iter().map(|w| "-".repeat(*w)).collect();
+        t.row(&rule);
+        t
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        for (i, c) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(10);
+            let _ = write!(self.out, "{c:>w$}  ");
+        }
+        let _ = writeln!(self.out);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Format a float with 3 significant decimals.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.3}%", v * 100.0)
+}
+
+/// Total simulated runtime (first arrival to last completion) helper.
+pub fn total_runtime(report: &SimulationReport) -> f64 {
+    report.makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn geomean_of_known_errors() {
+        // errors 1% and 4% -> geomean 2%
+        let g = geomean_rel_err(&[(1.01, 1.0), (1.04, 1.0)]);
+        assert!((g - 0.02).abs() < 1e-9, "{g}");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.finish();
+        assert!(s.contains('a') && s.contains('2'));
+    }
+
+    #[test]
+    fn slo_search_finds_knee() {
+        // tiny model: the search must return a finite, positive rate
+        let build = |qps: f64| {
+            let mut cfg = SimulationConfig::single_worker(
+                ModelSpec::llama2_7b(),
+                HardwareSpec::a100_80g(),
+                WorkloadSpec::fixed(60, qps, 64, 16),
+            );
+            cfg.cost_model = CostModelKind::Analytic;
+            cfg
+        };
+        let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+        assert!(qps > 0.0 && qps.is_finite());
+        assert!(goodput > 0.0);
+        // at the found point attainment holds; well beyond it, it fails
+        let report = Simulation::from_config(&build(qps * 8.0)).run();
+        assert!(report.slo_attainment() < 0.9 || qps * 8.0 > 1000.0);
+    }
+}

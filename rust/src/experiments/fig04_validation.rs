@@ -1,0 +1,105 @@
+//! Fig 4: vLLM throughput and latency validation.
+//!
+//! LLaMA2-7B on one A100, 2000 ShareGPT requests, sweeping request
+//! rate; compare TokenSim's throughput and P50/P99/max request latency
+//! against the reference system (oracle = vLLM stand-in), reporting the
+//! geometric-mean errors the paper quotes (0.109 % throughput; 0.6 %,
+//! 0.254 %, 0.337 % for P50/P99/max).
+
+use anyhow::Result;
+
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::metrics::MetricSet;
+use crate::model::ModelSpec;
+use crate::oracle::OracleParams;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let n = opts.size(2000, 150);
+    let qps_list: &[f64] = if opts.quick {
+        &[4.0, 16.0]
+    } else {
+        &[2.0, 4.0, 8.0, 16.0, 24.0, 32.0]
+    };
+    let params = OracleParams::vllm();
+
+    let mut table = Table::new(&[
+        "qps", "V-Thr", "T-Thr", "V-p50", "T-p50", "V-p99", "T-p99", "V-max", "T-max",
+    ]);
+    let mut thr_pairs = Vec::new();
+    let mut p50_pairs = Vec::new();
+    let mut p99_pairs = Vec::new();
+    let mut max_pairs = Vec::new();
+
+    for &qps in qps_list {
+        let workload = WorkloadSpec::sharegpt(n, qps);
+        let mut base = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            workload,
+        );
+        base.cost_model = opts.cost_model;
+
+        // "real system": oracle at full fidelity
+        let real = run_oracle(&base, &params, 0xF16_4);
+        // TokenSim configured with measured (calibrated) hardware
+        let sim_cfg = calibrated_config(&base, &params);
+        let sim = run_tokensim(&sim_cfg);
+
+        let (rm, sm) = (MetricSet::new(&real.records), MetricSet::new(&sim.records));
+        let cells = [
+            f1(qps),
+            f3(rm.request_throughput()),
+            f3(sm.request_throughput()),
+            f3(rm.latency_percentile(0.50)),
+            f3(sm.latency_percentile(0.50)),
+            f3(rm.latency_percentile(0.99)),
+            f3(sm.latency_percentile(0.99)),
+            f3(rm.latency_percentile(1.0)),
+            f3(sm.latency_percentile(1.0)),
+        ];
+        table.row(&cells);
+        thr_pairs.push((sm.request_throughput(), rm.request_throughput()));
+        p50_pairs.push((sm.latency_percentile(0.50), rm.latency_percentile(0.50)));
+        p99_pairs.push((sm.latency_percentile(0.99), rm.latency_percentile(0.99)));
+        max_pairs.push((sm.latency_percentile(1.0), rm.latency_percentile(1.0)));
+    }
+
+    let mut out = String::from(
+        "Fig 4 — vLLM throughput/latency validation (V- = reference system, T- = TokenSim)\n",
+    );
+    out.push_str(&table.finish());
+    out.push_str(&format!(
+        "\ngeomean errors: throughput {}, p50 {}, p99 {}, max {}\n\
+         paper reports:  throughput 0.109%, p50 0.600%, p99 0.254%, max 0.337%\n",
+        pct(geomean_rel_err(&thr_pairs)),
+        pct(geomean_rel_err(&p50_pairs)),
+        pct(geomean_rel_err(&p99_pairs)),
+        pct(geomean_rel_err(&max_pairs)),
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_errors_below_threshold() {
+        let out = run(&ExpOpts::quick()).unwrap();
+        assert!(out.contains("geomean errors"));
+        // parse the throughput geomean error and require it small
+        let line = out.lines().find(|l| l.starts_with("geomean")).unwrap();
+        let thr: f64 = line
+            .split_whitespace()
+            .nth(3)
+            .unwrap()
+            .trim_end_matches("%,")
+            .parse()
+            .unwrap();
+        assert!(thr < 2.0, "throughput geomean err {thr}% too large");
+    }
+}

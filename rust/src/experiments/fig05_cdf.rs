@@ -1,0 +1,112 @@
+//! Fig 5: request-latency CDF alignment at different QPS.
+//!
+//! Same setup as Fig 4; plot (print) the latency CDF of the reference
+//! system and TokenSim at several request rates and report the maximum
+//! CDF gap (Kolmogorov-Smirnov distance) per rate.
+
+use anyhow::Result;
+
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::metrics::MetricSet;
+use crate::model::ModelSpec;
+use crate::oracle::OracleParams;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+/// KS distance between two empirical CDFs given as sorted samples.
+fn ks_distance(mut a: Vec<f64>, mut b: Vec<f64>) -> f64 {
+    a.sort_by(|x, y| x.total_cmp(y));
+    b.sort_by(|x, y| x.total_cmp(y));
+    let mut i = 0;
+    let mut j = 0;
+    let mut d: f64 = 0.0;
+    while i < a.len() && j < b.len() {
+        match a[i].total_cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                let v = a[i];
+                while i < a.len() && a[i] == v {
+                    i += 1;
+                }
+                while j < b.len() && b[j] == v {
+                    j += 1;
+                }
+            }
+        }
+        let fa = i as f64 / a.len() as f64;
+        let fb = j as f64 / b.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let n = opts.size(2000, 150);
+    let qps_list: &[f64] = if opts.quick {
+        &[8.0]
+    } else {
+        &[4.0, 8.0, 16.0, 24.0]
+    };
+    let params = OracleParams::vllm();
+    let quantiles = [0.05, 0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99];
+
+    let mut out = String::from("Fig 5 — latency CDF alignment (dashed=vLLM ref, solid=TokenSim)\n");
+    for &qps in qps_list {
+        let workload = WorkloadSpec::sharegpt(n, qps);
+        let mut base = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            workload,
+        );
+        base.cost_model = opts.cost_model;
+        let real = run_oracle(&base, &params, 0xF16_5);
+        let sim = run_tokensim(&calibrated_config(&base, &params));
+
+        let rm = MetricSet::new(&real.records);
+        let sm = MetricSet::new(&sim.records);
+        let mut table = Table::new(&["quantile", "ref-lat", "sim-lat"]);
+        for &q in &quantiles {
+            table.row(&[
+                format!("p{:02.0}", q * 100.0),
+                f3(rm.latency_percentile(q)),
+                f3(sm.latency_percentile(q)),
+            ]);
+        }
+        let ks = ks_distance(
+            real.records.iter().map(|r| r.latency()).collect(),
+            sim.records.iter().map(|r| r.latency()).collect(),
+        );
+        out.push_str(&format!("\nQPS = {qps}\n"));
+        out.push_str(&table.finish());
+        out.push_str(&format!("KS distance = {:.4}\n", ks));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ks_of_identical_samples_is_zero() {
+        let a = vec![1.0, 2.0, 3.0];
+        assert_eq!(ks_distance(a.clone(), a), 0.0);
+    }
+
+    #[test]
+    fn ks_of_disjoint_samples_is_one() {
+        let d = ks_distance(vec![1.0, 2.0], vec![10.0, 20.0]);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quick_run_cdf_aligns() {
+        let out = run(&ExpOpts::quick()).unwrap();
+        let ks_line = out.lines().find(|l| l.starts_with("KS distance")).unwrap();
+        let ks: f64 = ks_line.split('=').nth(1).unwrap().trim().parse().unwrap();
+        assert!(ks < 0.35, "CDFs diverged: KS={ks}");
+    }
+}

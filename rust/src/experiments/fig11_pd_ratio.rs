@@ -1,0 +1,111 @@
+//! Fig 11: best prefill/decode device ratio on an 8×A100 node across
+//! average input/output length combinations, for LLaMA2-7B and OPT-13B.
+//!
+//! Cell value = the P/D split maximizing SLO-constrained throughput,
+//! annotated with that throughput.
+
+use anyhow::Result;
+
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+pub(super) fn disagg_cfg(
+    model: &ModelSpec,
+    n_prefill: u32,
+    n_decode: u32,
+    n_req: usize,
+    qps: f64,
+    input_mean: u32,
+    output_mean: u32,
+    cost: crate::compute::CostModelKind,
+) -> SimulationConfig {
+    let mut cfg = SimulationConfig::disaggregated(
+        model.clone(),
+        HardwareSpec::a100_80g(),
+        n_prefill,
+        HardwareSpec::a100_80g(),
+        n_decode,
+        WorkloadSpec::mean_lengths(n_req, qps, input_mean, output_mean),
+    );
+    cfg.cost_model = cost;
+    cfg
+}
+
+/// Find the best split and its max SLO throughput for one workload cell.
+pub(super) fn best_split(
+    model: &ModelSpec,
+    n_req: usize,
+    input_mean: u32,
+    output_mean: u32,
+    splits: &[(u32, u32)],
+    cost: crate::compute::CostModelKind,
+) -> ((u32, u32), f64) {
+    let mut best = ((0, 0), -1.0f64);
+    for &(p, d) in splits {
+        let build = |qps: f64| disagg_cfg(model, p, d, n_req, qps, input_mean, output_mean, cost);
+        let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+        if goodput > best.1 {
+            best = ((p, d), goodput);
+        }
+    }
+    best
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let n_req = opts.size(1500, 120);
+    let inputs: &[u32] = if opts.quick { &[64, 512] } else { &[64, 128, 512, 1024] };
+    let outputs: &[u32] = if opts.quick { &[32, 256] } else { &[32, 64, 128, 512] };
+    let splits: &[(u32, u32)] = if opts.quick {
+        &[(1, 7), (2, 6), (4, 4)]
+    } else {
+        &[(1, 7), (2, 6), (3, 5), (4, 4), (5, 3), (6, 2)]
+    };
+
+    let mut out = String::from(
+        "Fig 11 — best P/D split (8xA100), cell = split @ max SLO throughput (req/s)\n",
+    );
+    for model in [ModelSpec::llama2_7b(), ModelSpec::opt_13b()] {
+        out.push_str(&format!("\n{}:\n", model.name));
+        let mut headers = vec!["in\\out".to_string()];
+        headers.extend(outputs.iter().map(|o| o.to_string()));
+        let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&hdr);
+        for &input in inputs {
+            let mut cells = vec![input.to_string()];
+            for &output in outputs {
+                let ((p, d), thr) =
+                    best_split(&model, n_req, input, output, splits, opts.cost_model);
+                cells.push(format!("P{p}D{d}@{thr:.1}"));
+            }
+            table.row(&cells);
+        }
+        out.push_str(&table.finish());
+    }
+    out.push_str(
+        "\nshape target: longer outputs shift the optimum toward fewer prefill devices\n\
+         (more decode capacity); at long outputs short inputs free further prefill\n\
+         devices for decoding.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_outputs_prefer_fewer_prefill_devices() {
+        let cost = ExpOpts::quick().cost_model;
+        let model = ModelSpec::llama2_7b();
+        let splits = [(1u32, 7u32), (4, 4)];
+        // decode-heavy workload: long outputs, short inputs
+        let ((p_long, _), _) = best_split(&model, 100, 64, 256, &splits, cost);
+        // prefill-heavy workload: long inputs, tiny outputs
+        let ((p_short, _), _) = best_split(&model, 100, 1024, 8, &splits, cost);
+        assert!(p_long <= p_short, "long outputs got {p_long} prefill, short got {p_short}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Fig 13: GPU memory-footprint heatmaps over time for prefill vs
+//! decode workers in a disaggregated node — and the effect of halving
+//! the prefill workers' memory.
+//!
+//! Input 128 / output 1024 tokens, 10k requests, observation window
+//! [5, 65] s, memory sampled throughout.
+
+use anyhow::Result;
+
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+const WINDOW: (f64, f64) = (5.0, 65.0);
+const BINS: usize = 12;
+
+fn cfg(
+    n_req: usize,
+    qps: f64,
+    prefill_mem_cap: f64,
+    cost: crate::compute::CostModelKind,
+) -> SimulationConfig {
+    let mut prefill_hw = HardwareSpec::a100_80g();
+    prefill_hw.mem_cap = prefill_mem_cap;
+    let mut cfg = SimulationConfig::disaggregated(
+        ModelSpec::llama2_7b(),
+        prefill_hw,
+        1,
+        HardwareSpec::a100_80g(),
+        7,
+        WorkloadSpec::fixed(n_req, qps, 128, 1024),
+    );
+    cfg.cost_model = cost;
+    cfg.sample_period = 0.25;
+    cfg
+}
+
+fn shade(u: Option<f64>) -> char {
+    match u {
+        None => ' ',
+        Some(v) if v < 0.125 => '.',
+        Some(v) if v < 0.375 => '-',
+        Some(v) if v < 0.625 => '=',
+        Some(v) if v < 0.875 => '#',
+        Some(_) => '@',
+    }
+}
+
+fn heatmap(report: &crate::cluster::SimulationReport, title: &str) -> String {
+    let mut out = format!("{title}\n");
+    for w in &report.workers {
+        let row = report.timeline.heatmap_row(w.id, WINDOW.0, WINDOW.1, BINS);
+        let cells: String = row.iter().map(|&u| shade(u)).collect();
+        let mean = report.timeline.mean_utilization(w.id, WINDOW.0, WINDOW.1);
+        out.push_str(&format!(
+            "  worker {} ({:>6}) [{cells}]  mean {:.2}\n",
+            w.id, w.hardware, mean
+        ));
+    }
+    out
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    // the paper launches 10,000 requests *within* the [5,65]s window —
+    // a flood that keeps the decode side under sustained memory load
+    let n_req = opts.size(10_000, 400);
+    let qps = n_req as f64 / 60.0;
+
+    let full = run_tokensim(&cfg(n_req, qps, 80e9, opts.cost_model));
+    let half = run_tokensim(&cfg(n_req, qps, 40e9, opts.cost_model));
+
+    let mut out = String::from(
+        "Fig 13 — memory-footprint heatmaps, window [5,65]s (.=idle @=full)\n\n",
+    );
+    out.push_str(&heatmap(&full, "(a) original memory allocation"));
+    out.push_str(&format!(
+        "    throughput: {:.2} req/s\n\n",
+        full.request_throughput()
+    ));
+    out.push_str(&heatmap(&half, "(b) prefill GPU memory halved"));
+    out.push_str(&format!(
+        "    throughput: {:.2} req/s\n",
+        half.request_throughput()
+    ));
+    out.push_str(
+        "\nshape target: prefill worker (worker 0) runs at far lower utilization than\n\
+         the decode workers; halving its memory leaves throughput essentially\n\
+         unchanged while raising its utilization.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_uses_less_memory_and_halving_is_free() {
+        let opts = ExpOpts::quick();
+        let full = run_tokensim(&cfg(240, 4.0, 80e9, opts.cost_model));
+        let (t0, t1) = WINDOW;
+        let prefill_mean = full.timeline.mean_utilization(0, t0, t1);
+        let decode_mean: f64 = (1..8)
+            .map(|w| full.timeline.mean_utilization(w, t0, t1))
+            .sum::<f64>()
+            / 7.0;
+        assert!(
+            prefill_mean < decode_mean,
+            "prefill {prefill_mean} !< decode {decode_mean}"
+        );
+
+        let half = run_tokensim(&cfg(240, 4.0, 40e9, opts.cost_model));
+        let rel = (half.request_throughput() - full.request_throughput()).abs()
+            / full.request_throughput();
+        assert!(rel < 0.05, "halving prefill memory changed throughput by {rel}");
+    }
+}

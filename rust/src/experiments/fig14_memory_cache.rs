@@ -1,0 +1,98 @@
+//! Fig 14: P99 request latency with/without the cross-round KV memory
+//! cache (CachedAttention/MemServe style), across input/output length
+//! mixes and request rates.
+//!
+//! Chatbot workload: half the conversations single-round, half 2–7
+//! rounds; pool retrieval at 800 ns/block.
+
+use anyhow::Result;
+
+use crate::cluster::Simulation;
+use crate::config::{PoolCacheConfig, SimulationConfig};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::workload::{ConversationSpec, WorkloadSpec};
+
+use super::common::*;
+
+fn cfg(cache: bool, cost: crate::compute::CostModelKind) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        // workload field unused for conversation runs; keep a stub
+        WorkloadSpec::fixed(1, 1.0, 8, 8),
+    );
+    if cache {
+        cfg.pool_cache = Some(PoolCacheConfig::with_capacity(2_000_000));
+    }
+    cfg.cost_model = cost;
+    cfg
+}
+
+pub(super) fn p99_latency(
+    input_mean: u32,
+    output_mean: u32,
+    n_conv: usize,
+    qps: f64,
+    cache: bool,
+    cost: crate::compute::CostModelKind,
+) -> f64 {
+    let convs = ConversationSpec::chatbot(n_conv, qps, input_mean, output_mean).generate();
+    let report = Simulation::from_conversations(&cfg(cache, cost), &convs).run();
+    report.latency_percentile(0.99)
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let n_conv = opts.size(3000, 150);
+    let rates: &[f64] = if opts.quick {
+        &[4.0, 10.0]
+    } else {
+        &[2.0, 4.0, 8.0, 12.0, 16.0, 20.0]
+    };
+    let mixes: &[(u32, u32)] = if opts.quick {
+        &[(128, 64)]
+    } else {
+        &[(128, 32), (128, 64), (256, 64), (256, 32)]
+    };
+
+    let mut headers = vec!["qps".to_string()];
+    for (i, o) in mixes {
+        headers.push(format!("{i}-{o} off"));
+        headers.push(format!("{i}-{o} on"));
+    }
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr);
+
+    for &qps in rates {
+        let mut cells = vec![f1(qps)];
+        for &(input, output) in mixes {
+            cells.push(f3(p99_latency(input, output, n_conv, qps, false, opts.cost_model)));
+            cells.push(f3(p99_latency(input, output, n_conv, qps, true, opts.cost_model)));
+        }
+        table.row(&cells);
+    }
+
+    let mut out = String::from(
+        "Fig 14 — P99 latency, memory cache off/on ('i-o' = input/output lengths)\n",
+    );
+    out.push_str(&table.finish());
+    out.push_str(
+        "\nshape target: the cache lowers P99 at every point, with the largest relative\n\
+         gain around 64-token outputs at high request rates (~2x rate at equal P99);\n\
+         gains shrink for very short outputs (<=32).\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_reduces_p99_under_load() {
+        let cost = ExpOpts::quick().cost_model;
+        let off = p99_latency(128, 64, 200, 10.0, false, cost);
+        let on = p99_latency(128, 64, 200, 10.0, true, cost);
+        assert!(on < off, "cache must reduce P99: on={on} off={off}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Table II: percentage difference in total latency between the real
+//! system and each simulator, for 10-output-token requests at request
+//! counts 100–500.
+//!
+//! Rows: Local (a second measurement of the real system — run-to-run
+//! variance), Vidur-like, TokenSim, LLMServingSim-like. Prompts are
+//! kept short (10 tokens) so the LLMServingSim-like baseline's
+//! short-request limitation does not distort its row, mirroring the
+//! paper's setup.
+
+use anyhow::Result;
+
+use crate::baselines::{LlmServingSimLike, VidurLike};
+use crate::cluster::Simulation;
+use crate::compute::ComputeModel;
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::oracle::OracleParams;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+fn cfg(n: usize, qps: f64, cost: crate::compute::CostModelKind) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        WorkloadSpec::fixed(n, qps, 10, 10),
+    );
+    cfg.cost_model = cost;
+    cfg
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    // the paper finds the 40-QPS operating point first; short requests
+    // on an A100 sustain well beyond that, so 40 is the paper's value
+    let qps = 40.0;
+    let counts: &[usize] = if opts.quick {
+        &[100, 200]
+    } else {
+        &[100, 200, 300, 400, 500]
+    };
+    let params = OracleParams::vllm();
+
+    let mut table = Table::new(&["Request num", "Local", "Vidur", "TokenSim", "LLMServingSim"]);
+    let mut out = String::from(
+        "Table II — % latency difference vs the reference system, 10 output tokens\n",
+    );
+
+    for &n in counts {
+        let base = cfg(n, qps, opts.cost_model);
+        // ground truth ("real hardware"): oracle, seed A
+        let real = run_oracle(&base, &params, 0x7AB1E_A);
+        let t_real = total_runtime(&real);
+
+        // Local: the real system measured again (different noise seed)
+        let local = run_oracle(&base, &params, 0x7AB1E_B);
+        let t_local = total_runtime(&local);
+
+        // TokenSim (calibrated, as in Figs 4/5)
+        let sim = run_tokensim(&calibrated_config(&base, &params));
+        let t_tokensim = total_runtime(&sim);
+
+        // Vidur-like: learned regression over oracle profiles
+        let vidur_factory = |model: &ModelSpec, hw: &HardwareSpec, _w: usize| {
+            Box::new(VidurLike::train(model, hw, 1200, 42)) as Box<dyn ComputeModel>
+        };
+        let vidur = Simulation::with_cost_factory(&base, &vidur_factory).run();
+        let t_vidur = total_runtime(&vidur);
+
+        // LLMServingSim-like: co-simulation (short prompts, so exact)
+        let co_factory = |model: &ModelSpec, hw: &HardwareSpec, _w: usize| {
+            Box::new(LlmServingSimLike::new(model, hw)) as Box<dyn ComputeModel>
+        };
+        let co = Simulation::with_cost_factory(&base, &co_factory).run();
+        let t_co = total_runtime(&co);
+
+        let diff = |t: f64| format!("{:.3}", 100.0 * ((t - t_real) / t_real).abs());
+        table.row(&[
+            n.to_string(),
+            diff(t_local),
+            diff(t_vidur),
+            diff(t_tokensim),
+            diff(t_co),
+        ]);
+    }
+    out.push_str(&table.finish());
+    out.push_str(
+        "\npaper (500 reqs): Local 12.98, Vidur 12.12, TokenSim 12.59, LLMServingSim 12.56\n\
+         shape target: all simulators land within the run-to-run (Local) variance band.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table_has_all_rows() {
+        let out = run(&ExpOpts::quick()).unwrap();
+        assert!(out.contains("100"));
+        assert!(out.contains("TokenSim"));
+        // every simulator's error must be bounded (within 30% — the
+        // paper's worst case is ~13%)
+        for line in out.lines().skip(3).take(2) {
+            for cell in line.split_whitespace().skip(1) {
+                let v: f64 = cell.parse().unwrap();
+                assert!(v < 30.0, "error {v}% out of band: {line}");
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Accelerator parameter sets.
+
+
+/// An accelerator described by the parameters the cost model consumes.
+///
+/// `peak_flops` is the *spec-sheet* dense fp16 peak; the cost artifact
+/// receives `peak_flops * efficiency` (sustained GEMM efficiency), which
+/// is how the paper's "compute simulator" configs encode achievable
+/// throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareSpec {
+    pub name: String,
+    /// Spec-sheet peak fp16 FLOP/s.
+    pub peak_flops: f64,
+    /// Sustained fraction of peak achieved on large GEMMs.
+    pub efficiency: f64,
+    /// HBM/DRAM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Device memory capacity, bytes.
+    pub mem_cap: f64,
+    /// Fixed per-operator launch overhead, seconds.
+    pub op_overhead: f64,
+    /// Fixed per-iteration framework overhead, seconds.
+    pub iter_overhead: f64,
+    /// Intra-node interconnect bandwidth for TP collectives, bytes/s.
+    pub net_bw: f64,
+    /// Relative price (A100 = 1.0) for the cost-efficiency studies.
+    pub price: f64,
+}
+
+impl HardwareSpec {
+    /// NVIDIA A100-80G (SXM): 312 TF fp16, 2.039 TB/s, 80 GB.
+    pub fn a100_80g() -> Self {
+        Self {
+            name: "A100".into(),
+            peak_flops: 312e12,
+            efficiency: 0.55,
+            mem_bw: 2.039e12,
+            mem_cap: 80e9,
+            op_overhead: 4.5e-6,
+            iter_overhead: 2.0e-3,
+            net_bw: 300e9,
+            price: 1.0,
+        }
+    }
+
+    /// NVIDIA V100-32G: 125 TF fp16, 0.9 TB/s, 32 GB — the "cheaper GPU
+    /// from a previous generation" of Fig 12 (~1/4 A100 price).
+    pub fn v100_32g() -> Self {
+        Self {
+            name: "V100".into(),
+            peak_flops: 125e12,
+            efficiency: 0.50,
+            mem_bw: 0.9e12,
+            mem_cap: 32e9,
+            op_overhead: 5.5e-6,
+            iter_overhead: 2.0e-3,
+            net_bw: 150e9,
+            price: 0.25,
+        }
+    }
+
+    /// SK Hynix GDDR6-AiM processing-in-memory device (~1/2 A100 price):
+    /// the per-bank MAC arrays give high *aggregate* throughput on
+    /// bandwidth-resident operands (GEMV/flat GEMM) with near-bank
+    /// bandwidth above HBM, but a small per-device capacity — favourable
+    /// for the memory-bound decode stage, KV-capacity-limited at scale
+    /// (the paper's Finding 4).
+    pub fn gddr6_aim() -> Self {
+        Self {
+            name: "G6-AiM".into(),
+            peak_flops: 120e12,
+            efficiency: 0.70,
+            mem_bw: 2.6e12,
+            mem_cap: 32e9,
+            op_overhead: 6.0e-6,
+            iter_overhead: 2.0e-3,
+            net_bw: 64e9,
+            price: 0.5,
+        }
+    }
+
+    /// "AL" of Fig 12: an A100 with 1/4 peak FLOPS (same memory system).
+    pub fn a100_quarter_flops() -> Self {
+        let mut hw = Self::a100_80g();
+        hw.name = "A100-1/4T".into();
+        hw.peak_flops /= 4.0;
+        hw
+    }
+
+    /// Look a preset up by name (config files / CLI).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "A100" | "a100" | "a100-80g" => Some(Self::a100_80g()),
+            "V100" | "v100" | "v100-32g" => Some(Self::v100_32g()),
+            "G6-AiM" | "g6-aim" | "gddr6-aim" => Some(Self::gddr6_aim()),
+            "A100-1/4T" | "a100-quarter" => Some(Self::a100_quarter_flops()),
+            _ => None,
+        }
+    }
+
+    /// Achievable FLOP/s fed to the cost model.
+    #[inline]
+    pub fn achievable_flops(&self) -> f64 {
+        self.peak_flops * self.efficiency
+    }
+
+    /// Scale compute performance by `f` (the `T` knob of Fig 15).
+    pub fn scale_compute(&self, f: f64) -> Self {
+        let mut hw = self.clone();
+        hw.name = format!("{}-T{f}", self.name);
+        hw.peak_flops *= f;
+        hw
+    }
+
+    /// Scale memory bandwidth by `f` (the `B` knob of Fig 15).
+    pub fn scale_bandwidth(&self, f: f64) -> Self {
+        let mut hw = self.clone();
+        hw.name = format!("{}-B{f}", self.name);
+        hw.mem_bw *= f;
+        hw
+    }
+
+    /// Scale memory capacity by `f` (the `C` knob of Fig 15).
+    pub fn scale_capacity(&self, f: f64) -> Self {
+        let mut hw = self.clone();
+        hw.name = format!("{}-C{f}", self.name);
+        hw.mem_cap *= f;
+        hw
+    }
+
+    /// The float32 parameter vector consumed by the HLO cost artifact.
+    pub fn to_vec(&self) -> [f32; 6] {
+        [
+            self.achievable_flops() as f32,
+            self.mem_bw as f32,
+            self.op_overhead as f32,
+            self.iter_overhead as f32,
+            self.net_bw as f32,
+            self.mem_cap as f32,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_roofline_ridge_point() {
+        // ridge = achievable flops / bandwidth: A100 sits near 84 FLOP/B
+        let hw = HardwareSpec::a100_80g();
+        let ridge = hw.achievable_flops() / hw.mem_bw;
+        assert!((60.0..120.0).contains(&ridge), "ridge={ridge}");
+    }
+
+    #[test]
+    fn price_ordering_matches_paper() {
+        let a = HardwareSpec::a100_80g();
+        let v = HardwareSpec::v100_32g();
+        let g = HardwareSpec::gddr6_aim();
+        assert!((v.price - 0.25).abs() < 1e-9);
+        assert!((g.price - 0.5).abs() < 1e-9);
+        assert!(a.price > g.price && g.price > v.price);
+    }
+
+    #[test]
+    fn aim_bandwidth_exceeds_a100() {
+        assert!(HardwareSpec::gddr6_aim().mem_bw > HardwareSpec::a100_80g().mem_bw);
+    }
+
+    #[test]
+    fn scaling_knobs() {
+        let hw = HardwareSpec::a100_80g();
+        assert_eq!(hw.scale_compute(0.25).peak_flops, 312e12 * 0.25);
+        assert_eq!(hw.scale_bandwidth(4.0).mem_bw, 2.039e12 * 4.0);
+        assert_eq!(hw.scale_capacity(0.5).mem_cap, 40e9);
+        // scaling one knob leaves others untouched
+        assert_eq!(hw.scale_compute(2.0).mem_bw, hw.mem_bw);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        for n in ["A100", "v100", "g6-aim", "a100-quarter"] {
+            assert!(HardwareSpec::by_name(n).is_some(), "{n}");
+        }
+        assert!(HardwareSpec::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn quarter_flops_only_touches_compute() {
+        let a = HardwareSpec::a100_80g();
+        let q = HardwareSpec::a100_quarter_flops();
+        assert_eq!(q.peak_flops, a.peak_flops / 4.0);
+        assert_eq!(q.mem_bw, a.mem_bw);
+        assert_eq!(q.mem_cap, a.mem_cap);
+    }
+}

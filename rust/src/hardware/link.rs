@@ -1,0 +1,152 @@
+//! Interconnect link specifications for the communication model.
+
+
+/// Named link presets matching the paper's hardware config (Fig 2a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    Nvlink,
+    Pcie,
+    Ethernet100G,
+    /// Host DRAM <-> device (swap path).
+    HostBus,
+    /// Memory-pool fabric of MemServe-style KV caches.
+    PoolFabric,
+}
+
+/// A point-to-point link: bandwidth, latency, and the preload-buffer
+/// depth the overlapped transfer schedule may use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub name: String,
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// Per-transfer latency, seconds.
+    pub latency: f64,
+    /// Preload-buffer depth for overlapped schedules (1 = sequential).
+    pub buffer_depth: u32,
+}
+
+impl LinkSpec {
+    pub fn nvlink() -> Self {
+        Self {
+            name: "NVLink".into(),
+            bandwidth: 600e9,
+            latency: 5e-6,
+            buffer_depth: 8,
+        }
+    }
+
+    pub fn pcie_gen4_x16() -> Self {
+        Self {
+            name: "PCIe".into(),
+            bandwidth: 32e9,
+            latency: 10e-6,
+            buffer_depth: 4,
+        }
+    }
+
+    pub fn ethernet_100g() -> Self {
+        Self {
+            name: "Ethernet-100G".into(),
+            bandwidth: 12.5e9,
+            latency: 50e-6,
+            buffer_depth: 4,
+        }
+    }
+
+    pub fn host_bus() -> Self {
+        Self {
+            name: "HostBus".into(),
+            bandwidth: 24e9,
+            latency: 8e-6,
+            buffer_depth: 2,
+        }
+    }
+
+    /// MemServe-style memory-pool retrieval: the paper's Fig 14 uses
+    /// 800 ns per block, which we encode as pure latency on a fat pipe.
+    pub fn pool_fabric() -> Self {
+        Self {
+            name: "PoolFabric".into(),
+            bandwidth: 1e12,
+            latency: 800e-9,
+            buffer_depth: 1,
+        }
+    }
+
+    pub fn of_kind(kind: LinkKind) -> Self {
+        match kind {
+            LinkKind::Nvlink => Self::nvlink(),
+            LinkKind::Pcie => Self::pcie_gen4_x16(),
+            LinkKind::Ethernet100G => Self::ethernet_100g(),
+            LinkKind::HostBus => Self::host_bus(),
+            LinkKind::PoolFabric => Self::pool_fabric(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "NVLink" | "nvlink" => Some(Self::nvlink()),
+            "PCIe" | "pcie" => Some(Self::pcie_gen4_x16()),
+            "Ethernet-100G" | "ethernet-100g" => Some(Self::ethernet_100g()),
+            "HostBus" | "host-bus" => Some(Self::host_bus()),
+            "PoolFabric" | "pool-fabric" => Some(Self::pool_fabric()),
+            _ => None,
+        }
+    }
+
+    /// The float32 vector consumed by the xfer-cost artifact.
+    pub fn to_vec(&self) -> [f32; 3] {
+        [
+            self.bandwidth as f32,
+            self.latency as f32,
+            self.buffer_depth as f32,
+        ]
+    }
+
+    /// Set the measured bandwidth (the paper's Fig 7 methodology: "we
+    /// measure the actual communication bandwidth ... and use this data
+    /// to configure TokenSim").
+    pub fn with_measured_bandwidth(mut self, bw: f64) -> Self {
+        self.bandwidth = bw;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_ordering() {
+        assert!(LinkSpec::nvlink().bandwidth > LinkSpec::pcie_gen4_x16().bandwidth);
+        assert!(LinkSpec::pcie_gen4_x16().bandwidth > LinkSpec::ethernet_100g().bandwidth);
+    }
+
+    #[test]
+    fn pool_fabric_is_pure_latency() {
+        let l = LinkSpec::pool_fabric();
+        assert!((l.latency - 800e-9).abs() < 1e-15);
+        // a 16-token llama2-7b block (8 MiB) transfers in ~8.4 us
+        let t = l.latency + 8.4e6 / l.bandwidth;
+        assert!(t < 1e-5);
+    }
+
+    #[test]
+    fn kind_and_name_lookup_agree() {
+        for (kind, name) in [
+            (LinkKind::Nvlink, "NVLink"),
+            (LinkKind::Pcie, "PCIe"),
+            (LinkKind::Ethernet100G, "Ethernet-100G"),
+        ] {
+            assert_eq!(LinkSpec::of_kind(kind), LinkSpec::by_name(name).unwrap());
+        }
+    }
+
+    #[test]
+    fn measured_bandwidth_override() {
+        let l = LinkSpec::nvlink().with_measured_bandwidth(432e9);
+        assert_eq!(l.bandwidth, 432e9);
+        assert_eq!(l.latency, LinkSpec::nvlink().latency);
+    }
+}

@@ -1,0 +1,12 @@
+//! Hardware catalog: accelerator specs and interconnect links.
+//!
+//! The simulator only consumes *parameters* (peak FLOPS, memory
+//! bandwidth/capacity, overheads, price) — exactly like the paper, which
+//! models the A100/V100/GDDR6-AiM as parameter sets fed to the compute
+//! simulator. Scaling helpers implement the `T`/`B`/`C` knobs of Fig 15.
+
+mod catalog;
+mod link;
+
+pub use catalog::HardwareSpec;
+pub use link::{LinkKind, LinkSpec};

@@ -1,0 +1,73 @@
+//! # TokenSim
+//!
+//! A hardware/software exploration simulator for large-language-model
+//! inference systems — a rust + JAX + Pallas reproduction of
+//! *TokenSim: Enabling Hardware and Software Exploration for Large
+//! Language Model Inference Systems* (CS.DC 2025).
+//!
+//! TokenSim simulates a *serving system*, not a single batch: dynamic
+//! request arrivals sampled from dataset-fitted distributions, two-stage
+//! (global + per-worker local) scheduling, operator-granularity compute
+//! cost modelling, paged KV-cache memory management, a communication
+//! model for KV movement, and QoS metrics (latency percentiles / CDFs,
+//! TTFT / mTPOT SLO attainment, memory timelines).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the discrete-event coordinator: engine,
+//!   schedulers, memory managers, workload generation, metrics, CLI.
+//! * **L2 (JAX, build-time)** — the per-iteration compute cost model,
+//!   AOT-lowered to `artifacts/*.hlo.txt` by `python/compile/aot.py`.
+//! * **L1 (Pallas, build-time)** — the vectorized roofline / attention
+//!   descriptor kernels inside the L2 computation.
+//!
+//! The rust binary loads the HLO artifacts through the PJRT C API
+//! ([`runtime`]) and evaluates them on the simulation hot path; Python
+//! never runs at simulation time. A bit-compatible analytic mirror
+//! ([`compute::AnalyticCost`]) is cross-validated against the artifacts
+//! and serves as a fallback when artifacts are absent.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use tokensim::prelude::*;
+//!
+//! let model = ModelSpec::llama2_7b();
+//! let hw = HardwareSpec::a100_80g();
+//! let workload = WorkloadSpec::sharegpt(2000, 30.0);
+//! let cfg = SimulationConfig::single_worker(model, hw, workload);
+//! let report = Simulation::from_config(&cfg).run();
+//! println!("p99 latency = {:.3}s", report.latency_percentile(0.99));
+//! ```
+
+pub mod baselines;
+pub mod cluster;
+pub mod compute;
+pub mod config;
+pub mod experiments;
+pub mod hardware;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod oracle;
+pub mod request;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::cluster::{Simulation, SimulationReport, WorkerRole};
+    pub use crate::compute::{AnalyticCost, BatchDesc, ComputeModel, CostModelKind};
+    pub use crate::config::{ClusterConfig, PoolCacheConfig, SchedulerConfig, SimulationConfig, WorkerConfig};
+    pub use crate::hardware::{HardwareSpec, LinkSpec};
+    pub use crate::memory::{MemoryConfig, PagedBlockManager};
+    pub use crate::metrics::{RequestRecord, SloSpec};
+    pub use crate::model::ModelSpec;
+    pub use crate::scheduler::{GlobalPolicy, LocalPolicy};
+    pub use crate::sim::SimTime;
+    pub use crate::workload::{LengthDistribution, WorkloadSpec};
+}

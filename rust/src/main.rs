@@ -1,0 +1,165 @@
+//! TokenSim CLI — the L3 launcher.
+//!
+//! ```text
+//! tokensim run --config cfg.yaml [--trace out.jsonl]
+//! tokensim exp <id>|all [--quick] [--out-dir results/]
+//! tokensim list
+//! tokensim validate-artifacts
+//! ```
+//!
+//! (Hand-rolled argument parsing: this build environment is offline and
+//! clap is unavailable — see Cargo.toml.)
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use tokensim::compute::CostModelKind;
+use tokensim::config::SimulationConfig;
+use tokensim::experiments::{self, ExpOpts};
+use tokensim::prelude::*;
+
+fn usage() -> &'static str {
+    "TokenSim — LLM inference system simulator (paper reproduction)\n\
+     \n\
+     USAGE:\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--cdf]\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|all> [--quick] [--out-dir <dir>]\n\
+       tokensim list                 list experiments and presets\n\
+       tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
+       tokensim help\n"
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(args),
+        Some("exp") => cmd_exp(args),
+        Some("list") => cmd_list(),
+        Some("validate-artifacts") => cmd_validate_artifacts(),
+        Some("help") | None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n\n{}", usage()),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let config_path = flag_value(args, "--config").context("run requires --config <file>")?;
+    let cfg = SimulationConfig::from_yaml_file(config_path)?;
+    println!(
+        "model={} workers={} requests={} qps={}",
+        cfg.model.name,
+        cfg.total_workers(),
+        cfg.workload.num_requests,
+        cfg.workload.qps
+    );
+    if let Some(path) = flag_value(args, "--save-trace") {
+        let requests = cfg.workload.generate();
+        tokensim::workload::save_trace(path, &requests)?;
+        println!("workload trace saved to {path}");
+    }
+    let report = Simulation::from_config(&cfg).run();
+    println!("{}", report.summary());
+    for w in &report.workers {
+        println!(
+            "  worker {} ({}): {} iterations, {:.1}% busy, {} KV blocks",
+            w.id,
+            w.hardware,
+            w.iterations,
+            100.0 * w.utilization,
+            w.total_blocks
+        );
+    }
+    if args.iter().any(|a| a == "--cdf") {
+        println!("\nlatency CDF:");
+        let m = report.metrics();
+        for q in [0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            println!("  p{:<4} {:.3}s", q * 100.0, m.latency_percentile(q));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let id = args.get(1).context("exp requires an experiment id")?;
+    let mut opts = if args.iter().any(|a| a == "--quick") {
+        ExpOpts::quick()
+    } else {
+        ExpOpts::full()
+    };
+    if let Some(dir) = flag_value(args, "--out-dir") {
+        opts.out_dir = Some(dir.into());
+    }
+    if let Some(kind) = flag_value(args, "--cost-model") {
+        opts.cost_model = match kind {
+            "hlo" => CostModelKind::Hlo,
+            "analytic" => CostModelKind::Analytic,
+            "table" => CostModelKind::Table,
+            other => bail!("unknown cost model '{other}'"),
+        };
+    }
+    if id == "all" {
+        for id in experiments::ALL {
+            eprintln!("=== running {id} ===");
+            let out = experiments::run(id, &opts)?;
+            println!("{out}");
+        }
+        return Ok(());
+    }
+    let out = experiments::run(id, &opts)?;
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments: {}", experiments::ALL.join(", "));
+    println!("model presets: llama2-7b, llama2-13b, opt-13b, tiny");
+    println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");
+    println!("link presets: NVLink, PCIe, Ethernet-100G, HostBus, PoolFabric");
+    Ok(())
+}
+
+fn cmd_validate_artifacts() -> Result<()> {
+    let dir = tokensim::runtime::default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    let manifest = tokensim::runtime::Manifest::load(&dir)?;
+    println!(
+        "manifest v{} (jax {}), {} slots, {} ops",
+        manifest.version, manifest.jax_version, manifest.batch_slots, manifest.num_ops
+    );
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let mut hlo = tokensim::compute::HloCost::load(&model, &hw, dir.to_str().unwrap())?;
+    let analytic = tokensim::compute::AnalyticCost::new(&model, &hw);
+    let mut batch = BatchDesc::new();
+    batch.push(0, 512);
+    for i in 0..31 {
+        batch.push(100 + i * 64, 1);
+    }
+    let t_hlo = hlo.evaluate(&batch)?.iter_time;
+    let t_ana = analytic.evaluate(&batch).iter_time;
+    let rel = ((t_hlo - t_ana) / t_ana).abs();
+    println!("iter_cost: hlo={t_hlo:.6}s analytic={t_ana:.6}s rel-err={rel:.2e}");
+    anyhow::ensure!(rel < 1e-3, "artifact/mirror divergence");
+    println!("artifacts OK");
+    Ok(())
+}

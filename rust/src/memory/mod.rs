@@ -1,0 +1,69 @@
+//! Memory management: paged KV-cache block manager (PagedAttention
+//! semantics), host swap space, and the MemServe/CachedAttention-style
+//! cross-request memory-pool cache.
+//!
+//! Mirrors the paper's §III-B: "TokenSim implements memory managers for
+//! various worker types … to monitor memory utilization at any
+//! granularity — by block, token, or byte — supporting user-defined
+//! scheduler behaviors."
+
+mod paged;
+mod pool_cache;
+
+pub use paged::{AllocOutcome, PagedBlockManager};
+pub use pool_cache::{PoolCache, PoolHit};
+
+
+/// Accounting granularity for utilization reports (the paper exposes
+/// block / token / byte granularity to user-defined schedulers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Granularity {
+    #[default]
+    Block,
+    Token,
+    Byte,
+}
+
+/// Configuration of a worker's KV memory manager.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// Tokens per KV block (vLLM default: 16).
+    pub block_size: u32,
+    /// Fraction of post-weights device memory given to the KV pool
+    /// (vLLM's `gpu_memory_utilization`).
+    pub gpu_utilization: f64,
+    /// Admission cap: new requests are only scheduled while
+    /// `used/total <= max_mem_ratio` (Fig 10's "Max Mem Ratio").
+    pub max_mem_ratio: f64,
+    /// Low-watermark fraction reserved for decode growth.
+    pub watermark: f64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 16,
+            gpu_utilization: 0.9,
+            max_mem_ratio: 1.0,
+            watermark: 0.01,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_vllm_conventions() {
+        let c = MemoryConfig::default();
+        assert_eq!(c.block_size, 16);
+        assert!((c.gpu_utilization - 0.9).abs() < 1e-9);
+        assert_eq!(c.max_mem_ratio, 1.0);
+    }
+
+    #[test]
+    fn granularity_default_is_block() {
+        assert_eq!(Granularity::default(), Granularity::Block);
+    }
+}

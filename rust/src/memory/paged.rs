@@ -1,0 +1,298 @@
+//! Paged KV-cache block manager (PagedAttention semantics).
+//!
+//! GPU memory after weights is split into fixed-size blocks of
+//! `block_size` tokens; each live request owns `ceil(kv_tokens /
+//! block_size)` blocks. The manager tracks allocation at block
+//! granularity (and exposes token/byte views), enforces the
+//! `gpu_utilization` pool sizing and the Fig-10 `max_mem_ratio`
+//! admission cap, and supports preemption accounting.
+
+use std::collections::HashMap;
+
+use crate::model::ModelSpec;
+use crate::request::RequestId;
+
+use super::MemoryConfig;
+
+/// Result of an allocation attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocOutcome {
+    Ok,
+    /// Not enough free blocks.
+    OutOfMemory,
+}
+
+/// Block-granularity KV cache manager for one worker.
+#[derive(Debug, Clone)]
+pub struct PagedBlockManager {
+    cfg: MemoryConfig,
+    /// Total KV pool size in blocks.
+    total_blocks: u64,
+    free_blocks: u64,
+    /// Blocks held per live request.
+    held: HashMap<RequestId, u64>,
+    /// Bytes of KV per block.
+    block_bytes: u64,
+    /// Tokens per block.
+    block_size: u32,
+    /// Cumulative preemption-driven frees (diagnostics).
+    pub preemption_frees: u64,
+}
+
+impl PagedBlockManager {
+    /// Size the pool for `model` on a device with `mem_cap` bytes.
+    ///
+    /// Pool blocks = (mem_cap * gpu_utilization - weights) / block_bytes,
+    /// matching vLLM's profiling-based sizing.
+    pub fn new(model: &ModelSpec, mem_cap_bytes: f64, cfg: MemoryConfig) -> Self {
+        let block_bytes = model.kv_bytes_per_token() * cfg.block_size as u64;
+        let weights = model.weight_bytes_per_shard() as f64;
+        let budget = (mem_cap_bytes * cfg.gpu_utilization - weights).max(0.0);
+        let total_blocks = (budget / block_bytes as f64).floor() as u64;
+        Self {
+            block_size: cfg.block_size,
+            cfg,
+            total_blocks,
+            free_blocks: total_blocks,
+            held: HashMap::new(),
+            block_bytes,
+            preemption_frees: 0,
+        }
+    }
+
+    /// Construct with an explicit block count (tests / custom sizing).
+    /// No watermark is applied — the caller sized the pool explicitly.
+    pub fn with_blocks(total_blocks: u64, block_size: u32, block_bytes: u64) -> Self {
+        Self {
+            cfg: MemoryConfig {
+                block_size,
+                watermark: 0.0,
+                ..Default::default()
+            },
+            total_blocks,
+            free_blocks: total_blocks,
+            held: HashMap::new(),
+            block_bytes,
+            block_size,
+            preemption_frees: 0,
+        }
+    }
+
+    #[inline]
+    pub fn blocks_for_tokens(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_size as u64)
+    }
+
+    #[inline]
+    pub fn total_blocks(&self) -> u64 {
+        self.total_blocks
+    }
+
+    #[inline]
+    pub fn free_blocks(&self) -> u64 {
+        self.free_blocks
+    }
+
+    #[inline]
+    pub fn used_blocks(&self) -> u64 {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Utilization in [0, 1] at block granularity.
+    #[inline]
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    /// Token-granularity view: tokens representable in used blocks.
+    pub fn used_tokens(&self) -> u64 {
+        self.used_blocks() * self.block_size as u64
+    }
+
+    /// Byte-granularity view.
+    pub fn used_bytes(&self) -> u64 {
+        self.used_blocks() * self.block_bytes
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    pub fn blocks_held(&self, req: RequestId) -> u64 {
+        self.held.get(&req).copied().unwrap_or(0)
+    }
+
+    /// Can a *new* request with `tokens` KV be admitted under the
+    /// admission cap (`max_mem_ratio`) and watermark?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        self.can_admit_with_pending(tokens, 0)
+    }
+
+    /// [`Self::can_admit`] with `pending` blocks already promised to
+    /// other admissions in the same batch-formation pass (the scheduler
+    /// defers the actual reservations).
+    pub fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool {
+        let need = self.blocks_for_tokens(tokens);
+        let free = self.free_blocks.saturating_sub(pending);
+        if need > free {
+            return false;
+        }
+        let watermark_blocks = (self.total_blocks as f64 * self.cfg.watermark).ceil() as u64;
+        if free - need < watermark_blocks {
+            return false;
+        }
+        let used_after = self.used_blocks() + pending + need;
+        used_after as f64 / self.total_blocks.max(1) as f64 <= self.cfg.max_mem_ratio
+    }
+
+    /// Reserve blocks so `req` can hold `tokens` total KV tokens.
+    /// Growing an existing reservation only allocates the delta.
+    pub fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        let need = self.blocks_for_tokens(tokens);
+        let have = self.blocks_held(req);
+        if need <= have {
+            return AllocOutcome::Ok;
+        }
+        let delta = need - have;
+        if delta > self.free_blocks {
+            return AllocOutcome::OutOfMemory;
+        }
+        self.free_blocks -= delta;
+        *self.held.entry(req).or_insert(0) = need;
+        AllocOutcome::Ok
+    }
+
+    /// Grow a decode request by one token; allocates a block only at
+    /// block boundaries. `current_tokens` is the KV size *after* the
+    /// new token.
+    pub fn grow_one_token(&mut self, req: RequestId, current_tokens: u32) -> AllocOutcome {
+        self.reserve(req, current_tokens)
+    }
+
+    /// Release all blocks of `req` (finish or preemption).
+    pub fn release(&mut self, req: RequestId) -> u64 {
+        let blocks = self.held.remove(&req).unwrap_or(0);
+        self.free_blocks += blocks;
+        debug_assert!(self.free_blocks <= self.total_blocks);
+        blocks
+    }
+
+    /// Release due to preemption (tracked separately for diagnostics).
+    pub fn release_preempted(&mut self, req: RequestId) -> u64 {
+        let blocks = self.release(req);
+        self.preemption_frees += blocks;
+        blocks
+    }
+
+    /// Live request count.
+    pub fn live_requests(&self) -> usize {
+        self.held.len()
+    }
+
+    /// Invariant check used by property tests.
+    pub fn check_invariants(&self) -> bool {
+        let held_sum: u64 = self.held.values().sum();
+        held_sum + self.free_blocks == self.total_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(blocks: u64) -> PagedBlockManager {
+        PagedBlockManager::with_blocks(blocks, 16, 16 * 1024)
+    }
+
+    #[test]
+    fn sizing_from_model_and_capacity() {
+        let model = ModelSpec::llama2_7b();
+        let cfg = MemoryConfig {
+            gpu_utilization: 0.9,
+            ..Default::default()
+        };
+        let m = PagedBlockManager::new(&model, 80e9, cfg);
+        // (80e9*0.9 - 13.5e9) / (16 * 512KiB) ~ 6.9k blocks
+        assert!((5000..9000).contains(&(m.total_blocks() as i64)), "{}", m.total_blocks());
+    }
+
+    #[test]
+    fn weights_larger_than_memory_gives_empty_pool() {
+        let model = ModelSpec::llama2_7b();
+        let m = PagedBlockManager::new(&model, 10e9, MemoryConfig::default());
+        assert_eq!(m.total_blocks(), 0);
+        assert!(!m.can_admit(1));
+    }
+
+    #[test]
+    fn reserve_and_release_roundtrip() {
+        let mut m = mgr(100);
+        assert_eq!(m.reserve(1, 100), AllocOutcome::Ok); // 7 blocks
+        assert_eq!(m.blocks_held(1), 7);
+        assert_eq!(m.free_blocks(), 93);
+        assert_eq!(m.release(1), 7);
+        assert_eq!(m.free_blocks(), 100);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn growth_allocates_only_at_boundaries() {
+        let mut m = mgr(100);
+        m.reserve(1, 16);
+        assert_eq!(m.blocks_held(1), 1);
+        assert_eq!(m.grow_one_token(1, 17), AllocOutcome::Ok);
+        assert_eq!(m.blocks_held(1), 2);
+        assert_eq!(m.grow_one_token(1, 18), AllocOutcome::Ok);
+        assert_eq!(m.blocks_held(1), 2, "within-block growth is free");
+    }
+
+    #[test]
+    fn oom_on_exhaustion() {
+        let mut m = mgr(4);
+        assert_eq!(m.reserve(1, 64), AllocOutcome::Ok); // all 4 blocks
+        assert_eq!(m.reserve(2, 1), AllocOutcome::OutOfMemory);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn admission_cap_enforced() {
+        let model = ModelSpec::tiny_test();
+        let mut m = PagedBlockManager::with_blocks(100, 16, 1024);
+        m.cfg.max_mem_ratio = 0.5;
+        m.cfg.watermark = 0.0;
+        assert!(m.can_admit(16 * 50)); // exactly 50 blocks = 0.5
+        assert!(!m.can_admit(16 * 51));
+        m.reserve(1, 16 * 40);
+        assert!(m.can_admit(16 * 10));
+        assert!(!m.can_admit(16 * 11));
+        let _ = model;
+    }
+
+    #[test]
+    fn watermark_reserves_headroom() {
+        let mut m = mgr(100);
+        m.cfg.watermark = 0.10;
+        assert!(m.can_admit(16 * 90));
+        assert!(!m.can_admit(16 * 91), "would dip under the watermark");
+    }
+
+    #[test]
+    fn preemption_accounting() {
+        let mut m = mgr(10);
+        m.reserve(1, 160);
+        assert_eq!(m.release_preempted(1), 10);
+        assert_eq!(m.preemption_frees, 10);
+    }
+
+    #[test]
+    fn utilization_views_consistent() {
+        let mut m = mgr(10);
+        m.reserve(1, 32); // 2 blocks
+        assert!((m.utilization() - 0.2).abs() < 1e-12);
+        assert_eq!(m.used_tokens(), 32);
+        assert_eq!(m.used_bytes(), 2 * 16 * 1024);
+    }
+}

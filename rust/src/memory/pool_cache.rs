@@ -1,0 +1,238 @@
+//! Cross-request KV memory pool (CachedAttention / MemServe style).
+//!
+//! Stores the KV cache of finished conversation rounds in a shared pool
+//! (host memory / fabric-attached) so that the next round's prompt
+//! prefix can be *fetched* (at `LinkSpec::pool_fabric()`'s 800 ns/block,
+//! the paper's Fig 14 setting) instead of recomputed. Eviction is LRU at
+//! conversation granularity.
+
+use std::collections::HashMap;
+
+use crate::request::ConversationId;
+
+/// Result of a pool lookup at a new round's arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolHit {
+    /// Tokens of prompt prefix whose KV is in the pool.
+    pub cached_tokens: u32,
+    /// Blocks to transfer from the pool.
+    pub blocks: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    tokens: u32,
+    last_use: u64,
+}
+
+/// Shared KV pool keyed by conversation.
+#[derive(Debug, Clone)]
+pub struct PoolCache {
+    /// Capacity in blocks (0 disables the pool entirely).
+    capacity_blocks: u64,
+    block_size: u32,
+    used_blocks: u64,
+    entries: HashMap<ConversationId, Entry>,
+    clock: u64,
+    // diagnostics
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl PoolCache {
+    pub fn new(capacity_blocks: u64, block_size: u32) -> Self {
+        Self {
+            capacity_blocks,
+            block_size,
+            used_blocks: 0,
+            entries: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// A disabled pool (memory cache off).
+    pub fn disabled() -> Self {
+        Self::new(0, 16)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_blocks > 0
+    }
+
+    fn blocks_for(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_size as u64)
+    }
+
+    /// Look up the cached context of `conv` for a round whose prompt is
+    /// `prompt_len` tokens (history + new text). Returns the usable
+    /// cached prefix (clamped to `prompt_len - 1` so at least one prompt
+    /// token is always computed, which keeps prefill non-degenerate).
+    pub fn lookup(&mut self, conv: ConversationId, prompt_len: u32) -> Option<PoolHit> {
+        if !self.enabled() {
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(&conv) {
+            Some(e) => {
+                e.last_use = clock;
+                let cached = e.tokens.min(prompt_len.saturating_sub(1));
+                if cached == 0 {
+                    self.misses += 1;
+                    return None;
+                }
+                self.hits += 1;
+                Some(PoolHit {
+                    cached_tokens: cached,
+                    blocks: self.blocks_for(cached),
+                })
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store (replace) the KV of `conv` after a round finishes with
+    /// `tokens` total context. Evicts LRU conversations as needed;
+    /// contexts larger than the pool are not stored.
+    pub fn store(&mut self, conv: ConversationId, tokens: u32) {
+        if !self.enabled() {
+            return;
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.capacity_blocks {
+            return;
+        }
+        self.clock += 1;
+        if let Some(old) = self.entries.remove(&conv) {
+            self.used_blocks -= self.blocks_for(old.tokens);
+        }
+        while self.used_blocks + need > self.capacity_blocks {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&c, _)| c)
+                .expect("pool over capacity but empty");
+            let e = self.entries.remove(&lru).unwrap();
+            self.used_blocks -= self.blocks_for(e.tokens);
+            self.evictions += 1;
+        }
+        self.used_blocks += need;
+        self.entries.insert(
+            conv,
+            Entry {
+                tokens,
+                last_use: self.clock,
+            },
+        );
+    }
+
+    /// Drop a conversation (e.g. it ended).
+    pub fn invalidate(&mut self, conv: ConversationId) {
+        if let Some(e) = self.entries.remove(&conv) {
+            self.used_blocks -= self.blocks_for(e.tokens);
+        }
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.used_blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Invariant for property tests: used == Σ per-entry blocks ≤ cap.
+    pub fn check_invariants(&self) -> bool {
+        let sum: u64 = self
+            .entries
+            .values()
+            .map(|e| self.blocks_for(e.tokens))
+            .sum();
+        sum == self.used_blocks && self.used_blocks <= self.capacity_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut p = PoolCache::new(1000, 16);
+        assert!(p.lookup(7, 100).is_none());
+        p.store(7, 96);
+        let hit = p.lookup(7, 200).unwrap();
+        assert_eq!(hit.cached_tokens, 96);
+        assert_eq!(hit.blocks, 6);
+        assert_eq!((p.hits, p.misses), (1, 1));
+    }
+
+    #[test]
+    fn cached_prefix_clamped_below_prompt() {
+        let mut p = PoolCache::new(1000, 16);
+        p.store(1, 500);
+        // next round's prompt shorter than stored context (edge case)
+        let hit = p.lookup(1, 100).unwrap();
+        assert_eq!(hit.cached_tokens, 99, "must leave >=1 token to compute");
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut p = PoolCache::new(10, 16); // 10 blocks
+        p.store(1, 64); // 4 blocks
+        p.store(2, 64); // 4 blocks
+        p.lookup(1, 65); // touch 1 -> 2 becomes LRU
+        p.store(3, 64); // needs 4, evicts 2
+        assert!(p.lookup(2, 65).is_none());
+        assert!(p.lookup(1, 65).is_some());
+        assert_eq!(p.evictions, 1);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn replace_same_conversation() {
+        let mut p = PoolCache::new(100, 16);
+        p.store(1, 160);
+        p.store(1, 320);
+        assert_eq!(p.used_blocks(), 20);
+        assert_eq!(p.len(), 1);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn oversized_context_not_stored() {
+        let mut p = PoolCache::new(4, 16);
+        p.store(1, 16 * 100);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn disabled_pool_is_inert() {
+        let mut p = PoolCache::disabled();
+        p.store(1, 64);
+        assert!(p.lookup(1, 100).is_none());
+        assert!(!p.enabled());
+    }
+
+    #[test]
+    fn invalidate_frees_space() {
+        let mut p = PoolCache::new(10, 16);
+        p.store(1, 160);
+        assert_eq!(p.used_blocks(), 10);
+        p.invalidate(1);
+        assert_eq!(p.used_blocks(), 0);
+        assert!(p.check_invariants());
+    }
+}

@@ -1,0 +1,291 @@
+//! QoS metrics: request records, latency percentiles and CDFs,
+//! normalized latency, SLO attainment, goodput, memory timelines.
+//!
+//! These are exactly the "detailed performance results, including the
+//! latency distribution and memory usage over time" that distinguish
+//! TokenSim from single-batch simulators.
+
+mod percentile;
+mod timeline;
+
+pub use percentile::{cdf_points, percentile, Summary};
+pub use timeline::{MemorySample, MemoryTimeline};
+
+
+use crate::request::Request;
+use crate::sim::SimTime;
+
+/// Immutable record of a finished (or failed) request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub conversation: usize,
+    pub round: usize,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    pub cached_prefix: u32,
+    pub arrival: SimTime,
+    pub first_token: SimTime,
+    pub finished: SimTime,
+    pub max_token_gap: SimTime,
+    pub preemptions: u32,
+}
+
+impl RequestRecord {
+    /// Build from a finished request (panics if not finished).
+    pub fn from_request(r: &Request) -> Self {
+        Self {
+            id: r.id,
+            conversation: r.conversation,
+            round: r.round,
+            prompt_len: r.prompt_len,
+            output_len: r.output_len,
+            cached_prefix: r.cached_prefix,
+            arrival: r.arrival,
+            first_token: r.first_token.expect("request produced no token"),
+            finished: r.finished_at.expect("request not finished"),
+            max_token_gap: r.max_token_gap,
+            preemptions: r.preemptions,
+        }
+    }
+
+    #[inline]
+    pub fn latency(&self) -> f64 {
+        self.finished - self.arrival
+    }
+
+    #[inline]
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Mean time-per-output-token after the first token.
+    #[inline]
+    pub fn tpot(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        (self.finished - self.first_token) / (self.output_len - 1) as f64
+    }
+
+    /// vLLM's normalized latency: end-to-end latency / output tokens.
+    #[inline]
+    pub fn normalized_latency(&self) -> f64 {
+        self.latency() / self.output_len as f64
+    }
+}
+
+/// Service-level objectives (the paper's Fig 10: TTFT 15 s, mTPOT 0.3 s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token bound, seconds (None = unconstrained).
+    pub ttft: Option<f64>,
+    /// Max token-processing-over-time: no inter-token gap may exceed
+    /// this (None = unconstrained).
+    pub mtpot: Option<f64>,
+}
+
+impl SloSpec {
+    pub const fn paper_default() -> Self {
+        Self {
+            ttft: Some(15.0),
+            mtpot: Some(0.3),
+        }
+    }
+
+    pub const fn decode_only() -> Self {
+        Self {
+            ttft: None,
+            mtpot: Some(0.3),
+        }
+    }
+
+    pub const fn none() -> Self {
+        Self {
+            ttft: None,
+            mtpot: None,
+        }
+    }
+
+    /// Does `rec` satisfy every configured objective?
+    pub fn satisfied(&self, rec: &RequestRecord) -> bool {
+        if let Some(bound) = self.ttft {
+            if rec.ttft() > bound {
+                return false;
+            }
+        }
+        if let Some(bound) = self.mtpot {
+            if rec.max_token_gap > bound {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Aggregated metrics over a set of request records.
+pub struct MetricSet<'a> {
+    records: &'a [RequestRecord],
+}
+
+impl<'a> MetricSet<'a> {
+    pub fn new(records: &'a [RequestRecord]) -> Self {
+        Self { records }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Makespan: first arrival to last completion.
+    pub fn makespan(&self) -> f64 {
+        let start = self
+            .records
+            .iter()
+            .map(|r| r.arrival)
+            .fold(f64::INFINITY, f64::min);
+        let end = self
+            .records
+            .iter()
+            .map(|r| r.finished)
+            .fold(0.0f64, f64::max);
+        (end - start).max(0.0)
+    }
+
+    /// Requests per second over the makespan.
+    pub fn request_throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / span
+    }
+
+    /// Output tokens per second over the makespan.
+    pub fn token_throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.output_len as f64).sum::<f64>() / span
+    }
+
+    /// Latency percentile (q in [0, 1]).
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        percentile(self.records.iter().map(|r| r.latency()), q)
+    }
+
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        percentile(self.records.iter().map(|r| r.ttft()), q)
+    }
+
+    /// Mean normalized latency (s/token) — vLLM's serving metric.
+    pub fn mean_normalized_latency(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records
+            .iter()
+            .map(|r| r.normalized_latency())
+            .sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// Latency CDF points (sorted (latency, cumulative fraction)).
+    pub fn latency_cdf(&self) -> Vec<(f64, f64)> {
+        cdf_points(self.records.iter().map(|r| r.latency()))
+    }
+
+    /// Fraction of requests meeting `slo`.
+    pub fn slo_attainment(&self, slo: &SloSpec) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let ok = self.records.iter().filter(|r| slo.satisfied(r)).count();
+        ok as f64 / self.records.len() as f64
+    }
+
+    /// Goodput: requests/s counting only SLO-satisfying requests (the
+    /// paper's "throughput considering SLOs").
+    pub fn slo_throughput(&self, slo: &SloSpec) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| slo.satisfied(r)).count() as f64 / span
+    }
+
+    pub fn total_preemptions(&self) -> u64 {
+        self.records.iter().map(|r| r.preemptions as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arrival: f64, first: f64, fin: f64, out: u32, gap: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            conversation: id,
+            round: 0,
+            prompt_len: 32,
+            output_len: out,
+            cached_prefix: 0,
+            arrival,
+            first_token: first,
+            finished: fin,
+            max_token_gap: gap,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let r = rec(0, 1.0, 2.0, 11.0, 11, 0.1);
+        assert_eq!(r.ttft(), 1.0);
+        assert_eq!(r.latency(), 10.0);
+        assert!((r.tpot() - 0.9).abs() < 1e-12);
+        assert!((r.normalized_latency() - 10.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_checks() {
+        let slo = SloSpec {
+            ttft: Some(2.0),
+            mtpot: Some(0.2),
+        };
+        assert!(slo.satisfied(&rec(0, 0.0, 1.0, 5.0, 10, 0.1)));
+        assert!(!slo.satisfied(&rec(0, 0.0, 3.0, 5.0, 10, 0.1)), "ttft");
+        assert!(!slo.satisfied(&rec(0, 0.0, 1.0, 5.0, 10, 0.5)), "mtpot");
+        assert!(SloSpec::none().satisfied(&rec(0, 0.0, 9.0, 99.0, 10, 9.0)));
+    }
+
+    #[test]
+    fn throughput_over_makespan() {
+        let recs = vec![
+            rec(0, 0.0, 1.0, 2.0, 10, 0.0),
+            rec(1, 1.0, 2.0, 10.0, 30, 0.0),
+        ];
+        let m = MetricSet::new(&recs);
+        assert_eq!(m.makespan(), 10.0);
+        assert!((m.request_throughput() - 0.2).abs() < 1e-12);
+        assert!((m.token_throughput() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn goodput_counts_only_satisfying() {
+        let recs = vec![
+            rec(0, 0.0, 1.0, 2.0, 10, 0.0),
+            rec(1, 0.0, 20.0, 30.0, 10, 0.0), // ttft violation
+        ];
+        let m = MetricSet::new(&recs);
+        let slo = SloSpec::paper_default();
+        assert!((m.slo_attainment(&slo) - 0.5).abs() < 1e-12);
+        assert!((m.slo_throughput(&slo) - 1.0 / 30.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,114 @@
+//! Percentile / CDF extraction helpers.
+
+/// Percentile with linear interpolation; `q` in `[0, 1]`.
+/// Returns 0.0 for an empty iterator.
+pub fn percentile(values: impl IntoIterator<Item = f64>, q: f64) -> f64 {
+    let mut v: Vec<f64> = values.into_iter().collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    v.sort_by(|a, b| a.total_cmp(b));
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Empirical CDF points: sorted `(value, fraction ≤ value)`.
+pub fn cdf_points(values: impl IntoIterator<Item = f64>) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = values.into_iter().collect();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len() as f64;
+    v.into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Five-number summary plus mean, reused by experiment reports.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Self {
+        if values.is_empty() {
+            return Self {
+                mean: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+                min: 0.0,
+            };
+        }
+        Self {
+            mean: values.iter().sum::<f64>() / values.len() as f64,
+            p50: percentile(values.iter().copied(), 0.50),
+            p90: percentile(values.iter().copied(), 0.90),
+            p99: percentile(values.iter().copied(), 0.99),
+            max: values.iter().copied().fold(f64::MIN, f64::max),
+            min: values.iter().copied().fold(f64::MAX, f64::min),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile(v.clone(), 0.5), 5.0);
+        assert_eq!(percentile(v.clone(), 0.0), 0.0);
+        assert_eq!(percentile(v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_of_empty_is_zero() {
+        assert_eq!(percentile(std::iter::empty(), 0.9), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_order_invariant() {
+        let a = percentile(vec![3.0, 1.0, 2.0], 0.5);
+        let b = percentile(vec![1.0, 2.0, 3.0], 0.5);
+        assert_eq!(a, b);
+        assert_eq!(a, 2.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_normalized() {
+        let pts = cdf_points(vec![5.0, 1.0, 3.0, 3.0]);
+        assert_eq!(pts.len(), 4);
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn summary_of_known_values() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::of(&v);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.min, 1.0);
+        assert!((s.p99 - 99.01).abs() < 0.1);
+    }
+}

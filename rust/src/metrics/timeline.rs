@@ -1,0 +1,143 @@
+//! Memory-usage-over-time sampling (the Fig 13 heatmaps).
+
+
+/// One sample of a worker's KV-pool occupancy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemorySample {
+    pub time: f64,
+    pub worker: usize,
+    pub used_blocks: u64,
+    pub total_blocks: u64,
+}
+
+impl MemorySample {
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks as f64 / self.total_blocks as f64
+    }
+}
+
+/// A per-worker memory timeline collected during a run.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTimeline {
+    pub samples: Vec<MemorySample>,
+}
+
+impl MemoryTimeline {
+    pub fn record(&mut self, sample: MemorySample) {
+        self.samples.push(sample);
+    }
+
+    /// Samples of one worker, time-ordered.
+    pub fn worker(&self, worker: usize) -> Vec<&MemorySample> {
+        self.samples.iter().filter(|s| s.worker == worker).collect()
+    }
+
+    /// Mean utilization of a worker within `[t0, t1]`.
+    pub fn mean_utilization(&self, worker: usize, t0: f64, t1: f64) -> f64 {
+        let samples: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|s| s.worker == worker && s.time >= t0 && s.time <= t1)
+            .map(|s| s.utilization())
+            .collect();
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+
+    /// Peak utilization of a worker within `[t0, t1]`.
+    pub fn peak_utilization(&self, worker: usize, t0: f64, t1: f64) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.worker == worker && s.time >= t0 && s.time <= t1)
+            .map(|s| s.utilization())
+            .fold(0.0, f64::max)
+    }
+
+    /// Bucketed heatmap row for one worker: mean utilization in each of
+    /// `bins` equal time buckets spanning `[t0, t1]` (None = no sample).
+    pub fn heatmap_row(&self, worker: usize, t0: f64, t1: f64, bins: usize) -> Vec<Option<f64>> {
+        let mut acc = vec![(0.0f64, 0usize); bins];
+        let width = (t1 - t0) / bins as f64;
+        for s in self.samples.iter().filter(|s| s.worker == worker) {
+            if s.time < t0 || s.time >= t1 {
+                continue;
+            }
+            let b = (((s.time - t0) / width) as usize).min(bins - 1);
+            acc[b].0 += s.utilization();
+            acc[b].1 += 1;
+        }
+        acc.into_iter()
+            .map(|(sum, n)| if n > 0 { Some(sum / n as f64) } else { None })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> MemoryTimeline {
+        let mut t = MemoryTimeline::default();
+        for i in 0..10 {
+            t.record(MemorySample {
+                time: i as f64,
+                worker: 0,
+                used_blocks: i * 10,
+                total_blocks: 100,
+            });
+            t.record(MemorySample {
+                time: i as f64,
+                worker: 1,
+                used_blocks: 50,
+                total_blocks: 100,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn per_worker_filtering() {
+        let t = tl();
+        assert_eq!(t.worker(0).len(), 10);
+        assert_eq!(t.worker(1).len(), 10);
+        assert_eq!(t.worker(2).len(), 0);
+    }
+
+    #[test]
+    fn mean_and_peak() {
+        let t = tl();
+        assert!((t.mean_utilization(1, 0.0, 10.0) - 0.5).abs() < 1e-12);
+        assert!((t.peak_utilization(0, 0.0, 10.0) - 0.9).abs() < 1e-12);
+        assert_eq!(t.mean_utilization(0, 100.0, 200.0), 0.0);
+    }
+
+    #[test]
+    fn heatmap_buckets() {
+        let t = tl();
+        let row = t.heatmap_row(0, 0.0, 10.0, 5);
+        assert_eq!(row.len(), 5);
+        // bucket 0 covers t=0,1 -> mean of 0.0 and 0.1
+        assert!((row[0].unwrap() - 0.05).abs() < 1e-12);
+        // increasing utilization over buckets
+        let vals: Vec<f64> = row.iter().map(|v| v.unwrap()).collect();
+        for w in vals.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn zero_capacity_reads_full() {
+        let s = MemorySample {
+            time: 0.0,
+            worker: 0,
+            used_blocks: 0,
+            total_blocks: 0,
+        };
+        assert_eq!(s.utilization(), 1.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Operator-graph view of a model with operator-level breakpoints.
+//!
+//! The paper's model config (Fig 2c) describes the decoder block as a
+//! list of operators, each of which may carry *breakpoint* hooks
+//! (`on_first_fin: put_kv()`, `on_st: get_kv()`, …) that invoke the
+//! scheduler at operator granularity. The iteration *timing* comes from
+//! the L2 cost artifact; this graph drives the hook/bookkeeping side:
+//! which ops exist, where KV movement attaches, and where the default
+//! end-of-iteration breakpoint sits.
+
+
+use super::ModelSpec;
+
+/// Operator kinds, mirroring `OP_NAMES` in the L1/L2 python layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Embed,
+    QkvGemm,
+    Attention,
+    Softmax,
+    OutGemm,
+    MlpUp,
+    MlpDown,
+    LayerNorm,
+    AllReduce,
+    Logits,
+}
+
+impl OpKind {
+    /// Index in the `op_times` output of the cost artifact.
+    pub fn artifact_index(self) -> usize {
+        match self {
+            OpKind::Embed => 0,
+            OpKind::QkvGemm => 1,
+            OpKind::Attention => 2,
+            OpKind::Softmax => 3,
+            OpKind::OutGemm => 4,
+            OpKind::MlpUp => 5,
+            OpKind::MlpDown => 6,
+            OpKind::LayerNorm => 7,
+            OpKind::AllReduce => 8,
+            OpKind::Logits => 9,
+        }
+    }
+
+    pub const ALL: [OpKind; 10] = [
+        OpKind::Embed,
+        OpKind::QkvGemm,
+        OpKind::Attention,
+        OpKind::Softmax,
+        OpKind::OutGemm,
+        OpKind::MlpUp,
+        OpKind::MlpDown,
+        OpKind::LayerNorm,
+        OpKind::AllReduce,
+        OpKind::Logits,
+    ];
+
+    /// Does this op run once per iteration (vs once per layer)?
+    pub fn per_iteration(self) -> bool {
+        matches!(self, OpKind::Embed | OpKind::Logits)
+    }
+}
+
+/// Actions a breakpoint can trigger, the two-line disaggregation idiom of
+/// the paper's §III-A being `PutKv` on the prefill side and `GetKv` on
+/// the decode side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakpointAction {
+    /// Return the request to the global scheduler.
+    SubmitGlobal,
+    /// Export the request's KV cache (prefill side of disaggregation).
+    PutKv,
+    /// Import the request's KV cache before running (decode side).
+    GetKv,
+    /// Invoke the local scheduler (default end-of-iteration hook).
+    InvokeLocal,
+}
+
+/// A breakpoint attached to an operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breakpoint {
+    pub op: OpKind,
+    /// Fire only when the op instance completes the *first* token/prefill
+    /// (`on_first_fin` in the config) rather than on every iteration.
+    pub first_finish_only: bool,
+    pub action: BreakpointAction,
+}
+
+/// One operator node in the per-layer graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpNode {
+    pub name: String,
+    pub kind: OpKind,
+    /// GEMM-style dims for documentation/validation (rows unknown at
+    /// config time are encoded as 0).
+    pub dims: Vec<u64>,
+}
+
+/// The operator graph of a model plus its breakpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelGraph {
+    pub ops: Vec<OpNode>,
+    pub breakpoints: Vec<Breakpoint>,
+}
+
+impl ModelGraph {
+    /// Standard decoder-block graph with the default end-of-iteration
+    /// breakpoint (scheduler invoked after each token generation).
+    pub fn standard(spec: &ModelSpec) -> Self {
+        let h = spec.hidden as u64;
+        let g = (spec.hidden * spec.kv_heads / spec.heads) as u64;
+        let ffn = spec.ffn as u64;
+        let ops = vec![
+            OpNode { name: "embed".into(), kind: OpKind::Embed, dims: vec![spec.vocab as u64, h] },
+            OpNode { name: "layer_norm".into(), kind: OpKind::LayerNorm, dims: vec![h] },
+            OpNode { name: "qkv_gemm".into(), kind: OpKind::QkvGemm, dims: vec![h, h + 2 * g] },
+            OpNode { name: "self_attn".into(), kind: OpKind::Attention, dims: vec![h] },
+            OpNode { name: "softmax".into(), kind: OpKind::Softmax, dims: vec![spec.heads as u64] },
+            OpNode { name: "out_gemm".into(), kind: OpKind::OutGemm, dims: vec![h, h] },
+            OpNode { name: "mlp_up".into(), kind: OpKind::MlpUp, dims: vec![h, 2 * ffn] },
+            OpNode { name: "mlp_down".into(), kind: OpKind::MlpDown, dims: vec![ffn, h] },
+            OpNode { name: "all_reduce".into(), kind: OpKind::AllReduce, dims: vec![h] },
+            OpNode { name: "logits".into(), kind: OpKind::Logits, dims: vec![h, spec.vocab as u64] },
+        ];
+        let breakpoints = vec![Breakpoint {
+            op: OpKind::Logits,
+            first_finish_only: false,
+            action: BreakpointAction::InvokeLocal,
+        }];
+        Self { ops, breakpoints }
+    }
+
+    /// The disaggregation idiom: prefill workers export KV when the
+    /// first token finishes; decode workers import KV before attention.
+    pub fn with_disaggregation(spec: &ModelSpec) -> Self {
+        let mut g = Self::standard(spec);
+        g.breakpoints.push(Breakpoint {
+            op: OpKind::Logits,
+            first_finish_only: true,
+            action: BreakpointAction::PutKv,
+        });
+        g.breakpoints.push(Breakpoint {
+            op: OpKind::Attention,
+            first_finish_only: true,
+            action: BreakpointAction::GetKv,
+        });
+        g
+    }
+
+    /// Does any breakpoint request KV export (prefill→decode hand-off)?
+    pub fn exports_kv(&self) -> bool {
+        self.breakpoints
+            .iter()
+            .any(|b| b.action == BreakpointAction::PutKv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_graph_covers_all_op_kinds() {
+        let g = ModelGraph::standard(&ModelSpec::llama2_7b());
+        for kind in OpKind::ALL {
+            assert!(
+                g.ops.iter().any(|o| o.kind == kind),
+                "missing op kind {kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn artifact_indices_are_dense_and_unique() {
+        let mut seen = [false; 10];
+        for k in OpKind::ALL {
+            let i = k.artifact_index();
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn disaggregation_adds_two_breakpoints() {
+        let spec = ModelSpec::llama2_7b();
+        let std = ModelGraph::standard(&spec);
+        let dis = ModelGraph::with_disaggregation(&spec);
+        assert_eq!(dis.breakpoints.len(), std.breakpoints.len() + 2);
+        assert!(dis.exports_kv());
+        assert!(!std.exports_kv());
+    }
+
+    #[test]
+    fn per_iteration_flags() {
+        assert!(OpKind::Embed.per_iteration());
+        assert!(OpKind::Logits.per_iteration());
+        assert!(!OpKind::Attention.per_iteration());
+        assert!(!OpKind::MlpUp.per_iteration());
+    }
+}

@@ -1,0 +1,213 @@
+//! Communication model: KV-cache movement between workers, hosts and
+//! the memory pool.
+//!
+//! Mirrors the paper's §III-B communication component: "takes cache
+//! location, data size and memory bandwidth as arguments and returns
+//! the time to transfer the data", with sequential and overlapped
+//! (preload-buffer) schedules. The semantics are defined by the
+//! `xfer_cost` artifact (L2/L1); [`CommModel`] evaluates either through
+//! the artifact (validation path) or the bit-compatible rust mirror
+//! (default on the hot path — transfers are far rarer than iterations).
+
+use anyhow::Result;
+
+use crate::hardware::LinkSpec;
+use crate::runtime::{CompiledArtifact, Manifest};
+
+/// Transfer schedule selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// Each block transfer waits for the previous (default method).
+    Sequential,
+    /// Preload-buffer pipelining (depth from the link spec).
+    #[default]
+    Overlapped,
+}
+
+/// Result of a transfer-time evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct XferTime {
+    pub sequential: f64,
+    pub overlapped: f64,
+}
+
+impl XferTime {
+    pub fn of(&self, schedule: Schedule) -> f64 {
+        match schedule {
+            Schedule::Sequential => self.sequential,
+            Schedule::Overlapped => self.overlapped,
+        }
+    }
+}
+
+/// Analytic mirror of `xfer_cost_ref` (see `python/compile/kernels/ref.py`).
+pub fn xfer_time_analytic(block_bytes: &[f64], link: &LinkSpec) -> XferTime {
+    let bw = link.bandwidth;
+    let lat = link.latency;
+    let depth = (link.buffer_depth as f64).max(1.0);
+    let mut n = 0.0f64;
+    let mut t_seq = 0.0f64;
+    let mut total = 0.0f64;
+    for &s in block_bytes {
+        if s > 0.0 {
+            n += 1.0;
+            t_seq += lat + s / bw;
+            total += s;
+        }
+    }
+    XferTime {
+        sequential: t_seq,
+        overlapped: (n / depth).ceil() * lat + total / bw,
+    }
+}
+
+/// Uniform-blocks convenience: `n_blocks` transfers of `block_bytes` each.
+pub fn xfer_time_uniform(n_blocks: u64, block_bytes: u64, link: &LinkSpec) -> XferTime {
+    let bw = link.bandwidth;
+    let lat = link.latency;
+    let depth = (link.buffer_depth as f64).max(1.0);
+    let n = n_blocks as f64;
+    let total = n * block_bytes as f64;
+    XferTime {
+        sequential: n * lat + total / bw,
+        overlapped: (n / depth).ceil() * lat + total / bw,
+    }
+}
+
+/// Communication model over a link, optionally artifact-backed.
+pub struct CommModel {
+    link: LinkSpec,
+    schedule: Schedule,
+    artifact: Option<(CompiledArtifact, usize)>,
+}
+
+impl CommModel {
+    /// Pure-rust mirror (default).
+    pub fn analytic(link: LinkSpec, schedule: Schedule) -> Self {
+        Self {
+            link,
+            schedule,
+            artifact: None,
+        }
+    }
+
+    /// Artifact-backed evaluation through PJRT (validation path).
+    pub fn with_artifact(link: LinkSpec, schedule: Schedule, artifacts_dir: &str) -> Result<Self> {
+        let dir = if artifacts_dir.is_empty() {
+            crate::runtime::default_artifacts_dir()
+        } else {
+            artifacts_dir.into()
+        };
+        let manifest = Manifest::load(&dir)?;
+        let entry = manifest
+            .artifacts
+            .get("xfer_cost")
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks xfer_cost"))?;
+        let artifact = CompiledArtifact::load(dir.join(&entry.file))?;
+        Ok(Self {
+            link,
+            schedule,
+            artifact: Some((artifact, manifest.batch_slots)),
+        })
+    }
+
+    pub fn link(&self) -> &LinkSpec {
+        &self.link
+    }
+
+    /// Time to move `n_blocks` KV blocks of `block_bytes` each.
+    pub fn kv_transfer_time(&self, n_blocks: u64, block_bytes: u64) -> f64 {
+        if n_blocks == 0 {
+            return 0.0;
+        }
+        if let Some((artifact, slots)) = &self.artifact {
+            let mut sizes = vec![0.0f32; *slots];
+            // Fold transfers beyond the slot count together (latency
+            // exposure for the folded tail is approximated by one block).
+            let direct = (n_blocks as usize).min(*slots - 1);
+            for s in sizes.iter_mut().take(direct) {
+                *s = block_bytes as f32;
+            }
+            if n_blocks as usize > direct {
+                sizes[*slots - 1] = ((n_blocks as usize - direct) as u64 * block_bytes) as f32;
+            }
+            let out = artifact
+                .run_f32(&[&sizes, &self.link.to_vec()])
+                .expect("xfer artifact failed");
+            let t = XferTime {
+                sequential: out[0] as f64,
+                overlapped: out[1] as f64,
+            };
+            t.of(self.schedule)
+        } else {
+            xfer_time_uniform(n_blocks, block_bytes, &self.link).of(self.schedule)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkSpec {
+        LinkSpec {
+            name: "test".into(),
+            bandwidth: 100e9,
+            latency: 10e-6,
+            buffer_depth: 4,
+        }
+    }
+
+    #[test]
+    fn uniform_matches_general() {
+        let l = link();
+        let per_block = vec![1e6; 32];
+        let a = xfer_time_analytic(&per_block, &l);
+        let b = xfer_time_uniform(32, 1_000_000, &l);
+        assert!((a.sequential - b.sequential).abs() < 1e-12);
+        assert!((a.overlapped - b.overlapped).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_reduces_latency_exposure() {
+        let l = link();
+        let t = xfer_time_uniform(64, 1 << 20, &l);
+        assert!(t.overlapped < t.sequential);
+        // 64 blocks / depth 4 = 16 exposed latencies
+        let expect = 16.0 * 10e-6 + 64.0 * (1u64 << 20) as f64 / 100e9;
+        assert!((t.overlapped - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn empty_transfer_free() {
+        let c = CommModel::analytic(link(), Schedule::Overlapped);
+        assert_eq!(c.kv_transfer_time(0, 4096), 0.0);
+    }
+
+    #[test]
+    fn pool_fabric_800ns_per_block() {
+        // Fig 14's setting: retrieval cost is dominated by 800ns/block.
+        let c = CommModel::analytic(LinkSpec::pool_fabric(), Schedule::Sequential);
+        let t = c.kv_transfer_time(100, 0);
+        assert!((t - 100.0 * 800e-9).abs() < 1e-12, "t={t}");
+    }
+
+    #[test]
+    fn artifact_matches_analytic_when_available() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let l = link();
+        let art = CommModel::with_artifact(l.clone(), Schedule::Overlapped, dir.to_str().unwrap())
+            .unwrap();
+        let ana = CommModel::analytic(l, Schedule::Overlapped);
+        for n in [1u64, 7, 64, 500] {
+            let ta = art.kv_transfer_time(n, 512 * 1024);
+            let tb = ana.kv_transfer_time(n, 512 * 1024);
+            let rel = ((ta - tb) / tb).abs();
+            assert!(rel < 1e-4, "n={n}: artifact {ta} vs analytic {tb}");
+        }
+    }
+}

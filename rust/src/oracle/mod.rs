@@ -1,0 +1,397 @@
+//! Oracle: the fine-grained reference executor standing in for the
+//! paper's real-hardware measurements (vLLM v0.6.2 on A100s, DistServe
+//! on 2×A100).
+//!
+//! The paper validates TokenSim against real systems; this environment
+//! has no GPUs, so validation runs against a *higher-fidelity* executor
+//! instead (DESIGN.md §Substitutions): the oracle models effects the
+//! TokenSim cost model deliberately coarsens —
+//!
+//! * **sequence-dependent GEMM efficiency**: small GEMMs achieve a
+//!   fraction `m/(m + m_half)` of sustained peak (kernel ramp-up), where
+//!   TokenSim assumes a flat sustained efficiency;
+//! * **paged-attention bandwidth efficiency**: gather-style KV reads
+//!   reach only ~70 % of streaming bandwidth;
+//! * **request-count-dependent framework overhead**: the engine's
+//!   per-iteration bookkeeping grows with batch size;
+//! * **measurement noise**: multiplicative per-iteration jitter, plus
+//!   bus fluctuation on KV transfers (the paper's Fig-7 discussion).
+//!
+//! Like the paper's methodology ("we measure the actual communication
+//! bandwidth and use this data to configure TokenSim"),
+//! [`calibrated_hardware`] profiles the oracle on microbenchmarks and
+//! returns the hardware vector TokenSim should be configured with.
+
+use crate::compute::{AnalyticCost, BatchDesc, ComputeModel, IterCost, NUM_OPS};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::sim::SimRng;
+
+/// Fidelity knobs of the oracle executor.
+#[derive(Debug, Clone)]
+pub struct OracleParams {
+    /// GEMM ramp half-point in rows: eff(m) = m / (m + m_half).
+    pub gemm_half_rows: f64,
+    /// Residual attention-bandwidth deviation from the cost model's
+    /// shared `ATTN_GATHER_EFF` (1.0 = the gather model is exact).
+    pub attn_bw_efficiency: f64,
+    /// Per-iteration framework overhead: `base + per_request * R`.
+    pub framework_base: f64,
+    pub framework_per_request: f64,
+    /// Multiplicative lognormal jitter sigma per iteration (0 = off).
+    pub noise_sigma: f64,
+    /// Runtime-framework multiplier (SwiftTransformer vs vLLM — the
+    /// Fig-7 "inevitable source of error").
+    pub runtime_factor: f64,
+}
+
+impl OracleParams {
+    /// vLLM-v0.6.2-like fidelity (Figs 4, 5, 9, 10, Table II).
+    pub fn vllm() -> Self {
+        Self {
+            gemm_half_rows: 16.0,
+            attn_bw_efficiency: 0.97,
+            framework_base: 1.6e-3,
+            framework_per_request: 3.0e-6,
+            noise_sigma: 0.012,
+            runtime_factor: 1.0,
+        }
+    }
+
+    /// DistServe/SwiftTransformer-like fidelity (Fig 7).
+    pub fn distserve() -> Self {
+        Self {
+            runtime_factor: 0.94,
+            framework_base: 1.1e-3,
+            ..Self::vllm()
+        }
+    }
+
+    /// Noise-free variant (deterministic ground truth for baselines'
+    /// pre-training samples).
+    pub fn noiseless(mut self) -> Self {
+        self.noise_sigma = 0.0;
+        self
+    }
+}
+
+/// Which GEMM row count drives each op's ramp (T = new tokens,
+/// R = active requests); attention and bandwidth ops are exempt.
+const GEMM_ROWS_T: [bool; NUM_OPS] = [
+    false, true, false, false, true, true, true, false, false, false,
+];
+const GEMM_ROWS_R: [bool; NUM_OPS] = [
+    false, false, false, false, false, false, false, false, false, true,
+];
+const ATTN_IDX: usize = 2;
+
+/// The oracle's per-iteration cost model.
+pub struct OracleCost {
+    inner: AnalyticCost,
+    model: ModelSpec,
+    hw: HardwareSpec,
+    params: OracleParams,
+    rng: SimRng,
+    pub iterations: u64,
+}
+
+impl OracleCost {
+    pub fn new(model: &ModelSpec, hw: &HardwareSpec, params: OracleParams, seed: u64) -> Self {
+        Self {
+            inner: AnalyticCost::new(model, hw),
+            model: model.clone(),
+            hw: hw.clone(),
+            params,
+            rng: SimRng::new(seed, "oracle-noise"),
+            iterations: 0,
+        }
+    }
+
+    /// Deterministic (noise-free) evaluation of one iteration.
+    ///
+    /// Decomposes every operator into its FLOP and byte components (via
+    /// degenerate-hardware probes of the analytic mirror) so the GEMM
+    /// ramp applies only to the *compute* term — a weight-read-bound
+    /// decode GEMM is not slowed by pipeline ramp-up.
+    pub fn evaluate_mean(&self, batch: &BatchDesc) -> IterCost {
+        let base = self.inner.evaluate(batch);
+        if batch.is_empty() {
+            return base;
+        }
+        let t: f64 = batch.total_new() as f64;
+        let r = batch.active_requests() as f64;
+        let p = &self.params;
+
+        const FLOPS_PROBE: [f32; 6] = [1.0, 1e30, 0.0, 0.0, 1e30, 0.0];
+        const BYTES_PROBE: [f32; 6] = [1e30, 1.0, 0.0, 0.0, 1.0, 0.0];
+        let f_ops = self.inner.evaluate_with_hw(batch, FLOPS_PROBE).op_times;
+        let b_ops = self.inner.evaluate_with_hw(batch, BYTES_PROBE).op_times;
+        let peak = self.hw.achievable_flops();
+        let bw = self.hw.mem_bw;
+        let net_bw = self.hw.net_bw;
+        const ALLREDUCE_IDX: usize = 8;
+
+        let mut op_times = [0.0f64; NUM_OPS];
+        for i in 0..NUM_OPS {
+            let (f, b) = (f_ops[i], b_ops[i]);
+            if f <= 0.0 && b <= 0.0 {
+                continue;
+            }
+            let eff = if GEMM_ROWS_T[i] || GEMM_ROWS_R[i] {
+                let m = if GEMM_ROWS_T[i] { t } else { r };
+                (m / (m + p.gemm_half_rows)).clamp(0.05, 1.0)
+            } else {
+                1.0
+            };
+            let eff_bw = if i == ALLREDUCE_IDX {
+                net_bw
+            } else if i == ATTN_IDX {
+                bw * p.attn_bw_efficiency
+            } else {
+                bw
+            };
+            op_times[i] = (f / (peak * eff)).max(b / eff_bw) + self.hw.op_overhead;
+        }
+
+        let layers = self.model.layers as f64;
+        const PER_ITER: [bool; NUM_OPS] = [
+            true, false, false, false, false, false, false, false, false, true,
+        ];
+        let mut per_layer = 0.0;
+        let mut per_iter = 0.0;
+        for i in 0..NUM_OPS {
+            if PER_ITER[i] {
+                per_iter += op_times[i];
+            } else {
+                per_layer += op_times[i];
+            }
+        }
+        let framework = p.framework_base + p.framework_per_request * r;
+        let iter_time = (layers * per_layer + per_iter + framework) * p.runtime_factor;
+        IterCost {
+            iter_time,
+            op_times,
+            per_req_attn: base.per_req_attn,
+        }
+    }
+
+    /// The hardware this oracle models (for calibration probes).
+    pub fn hardware(&self) -> &HardwareSpec {
+        &self.hw
+    }
+}
+
+impl ComputeModel for OracleCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        let mean = self.evaluate_mean(batch).iter_time;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        self.iterations += 1;
+        if self.params.noise_sigma > 0.0 {
+            mean * self.rng.lognormal(0.0, self.params.noise_sigma)
+        } else {
+            mean
+        }
+    }
+
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        let mut cost = self.evaluate_mean(batch);
+        if cost.iter_time > 0.0 {
+            self.iterations += 1;
+            if self.params.noise_sigma > 0.0 {
+                cost.iter_time *= self.rng.lognormal(0.0, self.params.noise_sigma);
+            }
+        }
+        cost
+    }
+
+    fn name(&self) -> &str {
+        "oracle"
+    }
+}
+
+/// Calibrate TokenSim's hardware description against the oracle — the
+/// paper's "measure the real system, configure the simulator" step.
+///
+/// Runs noise-free oracle microbenchmarks and fits `efficiency` (from a
+/// compute-bound prefill), `mem_bw` (least-squares over bandwidth-bound
+/// decode batches) and `iter_overhead` (mean residual) by coordinate
+/// descent; four rounds suffice — each update is a near-exact solve at
+/// its own operating regime.
+pub fn calibrated_hardware(
+    model: &ModelSpec,
+    hw: &HardwareSpec,
+    params: &OracleParams,
+) -> HardwareSpec {
+    let oracle = OracleCost::new(model, hw, params.clone().noiseless(), 0);
+
+    // prefill iterations batch multiple prompts up to the token budget,
+    // so the representative GEMM row count sits in the hundreds
+    let prefill = {
+        let mut b = BatchDesc::new();
+        b.push(0, 512);
+        b
+    };
+    let decode_probes: Vec<BatchDesc> = [(16usize, 256u32), (64, 512), (192, 1024)]
+        .iter()
+        .map(|&(n, ctx)| {
+            let mut b = BatchDesc::new();
+            for _ in 0..n {
+                b.push(ctx, 1);
+            }
+            b
+        })
+        .collect();
+
+    let t_prefill_o = oracle.evaluate_mean(&prefill).iter_time;
+    let t_decode_o: Vec<f64> = decode_probes
+        .iter()
+        .map(|b| oracle.evaluate_mean(b).iter_time)
+        .collect();
+
+    let mut fitted = hw.clone();
+    for _ in 0..3 {
+        // (1) efficiency from the compute-bound point
+        let analytic = AnalyticCost::new(model, &fitted);
+        let t_prefill_s = analytic.evaluate(&prefill).iter_time;
+        fitted.efficiency =
+            (fitted.efficiency * t_prefill_s / t_prefill_o).clamp(0.05, 1.0);
+
+        // (2)+(3) joint (1/bw, overhead) least squares on the decode
+        // probes: decompose each probe's analytic time into a
+        // bandwidth-proportional slope and a bandwidth-independent
+        // constant (op overheads + compute-bound residues), then solve
+        // the 2x2 normal equations for the bandwidth scale and the
+        // per-iteration overhead.
+        let analytic = AnalyticCost::new(model, &fitted);
+        let mut hw_vec = fitted.to_vec();
+        hw_vec[3] = 0.0; // strip iter_overhead: it is a fit unknown
+        let base_bw = fitted.mem_bw;
+        let mut inf_bw_vec = hw_vec;
+        inf_bw_vec[1] = 1e30;
+        inf_bw_vec[4] = 1e30;
+        // normal equations for min Σ (slope_i * y + const_i + oh - t_o_i)^2
+        // over (y = base_bw / bw', oh)
+        let (mut syy, mut sy1, mut s11) = (0.0f64, 0.0f64, 0.0f64);
+        let (mut sty, mut st1) = (0.0f64, 0.0f64);
+        for (b, &t_o) in decode_probes.iter().zip(&t_decode_o) {
+            let t_full = analytic.evaluate_with_hw(b, hw_vec).iter_time;
+            let t_const = analytic.evaluate_with_hw(b, inf_bw_vec).iter_time;
+            let slope = t_full - t_const; // time spent moving bytes at base_bw
+            let target = t_o - t_const;
+            syy += slope * slope;
+            sy1 += slope;
+            s11 += 1.0;
+            sty += slope * target;
+            st1 += target;
+        }
+        let det = syy * s11 - sy1 * sy1;
+        if det.abs() > 1e-18 {
+            let y = (sty * s11 - st1 * sy1) / det;
+            let oh = (syy * st1 - sy1 * sty) / det;
+            fitted.mem_bw = (base_bw / y.clamp(0.2, 5.0)).min(base_bw * 5.0);
+            fitted.iter_overhead = oh.clamp(1e-5, 0.05);
+        }
+    }
+    fitted.name = format!("{}-calibrated", hw.name);
+    fitted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(noise: f64) -> OracleCost {
+        let mut p = OracleParams::vllm();
+        p.noise_sigma = noise;
+        OracleCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g(), p, 7)
+    }
+
+    fn decode(n: usize, ctx: u32) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        for _ in 0..n {
+            b.push(ctx, 1);
+        }
+        b
+    }
+
+    #[test]
+    fn oracle_deviates_from_flat_model_at_small_gemm_sizes() {
+        // the GEMM ramp makes mid-size prefills slower than the flat
+        // sustained-efficiency model predicts
+        let mut oracle = setup(0.0);
+        let mut flat = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        let mut b = BatchDesc::new();
+        b.push(0, 128);
+        let ratio = oracle.iter_time(&b) / flat.iter_time(&b);
+        assert!(ratio > 1.02, "ratio={ratio}");
+    }
+
+    #[test]
+    fn ramp_vanishes_for_large_prefill() {
+        let oracle = setup(0.0);
+        let mut flat = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        let mut b = BatchDesc::new();
+        b.push(0, 4096);
+        let ratio = oracle.evaluate_mean(&b).iter_time / flat.iter_time(&b);
+        // attention is tiny here; GEMM ramp at 4096 rows ~ 0.6% effect
+        assert!((1.0..1.15).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn noise_is_reproducible_and_bounded() {
+        let mut a = setup(0.02);
+        let mut b = setup(0.02);
+        let batch = decode(8, 256);
+        let mean = setup(0.0).evaluate_mean(&batch).iter_time;
+        for _ in 0..50 {
+            let ta = a.iter_time(&batch);
+            assert_eq!(ta, b.iter_time(&batch), "same seed, same draw");
+            assert!((ta / mean - 1.0).abs() < 0.15);
+        }
+    }
+
+    #[test]
+    fn empty_batch_free() {
+        let mut oracle = setup(0.01);
+        assert_eq!(oracle.iter_time(&BatchDesc::new()), 0.0);
+        assert_eq!(oracle.iterations, 0);
+    }
+
+    #[test]
+    fn framework_overhead_grows_with_batch() {
+        let oracle = setup(0.0);
+        let t8 = oracle.evaluate_mean(&decode(8, 128)).iter_time;
+        let t256 = oracle.evaluate_mean(&decode(256, 128)).iter_time;
+        assert!(t256 > t8);
+    }
+
+    #[test]
+    fn calibration_brings_flat_model_close() {
+        let model = ModelSpec::llama2_7b();
+        let hw = HardwareSpec::a100_80g();
+        let params = OracleParams::vllm();
+        let fitted = calibrated_hardware(&model, &hw, &params);
+        let oracle = OracleCost::new(&model, &hw, params.noiseless(), 0);
+        let mut sim = AnalyticCost::new(&model, &fitted);
+        // check on batches *away from* the calibration points
+        for batch in [decode(32, 1024), decode(128, 300), {
+            let mut b = BatchDesc::new();
+            b.push(0, 512);
+            b
+        }] {
+            let t_o = oracle.evaluate_mean(&batch).iter_time;
+            let t_s = sim.iter_time(&batch);
+            let rel = ((t_s - t_o) / t_o).abs();
+            assert!(rel < 0.15, "calibrated model off by {rel} on {batch:?}");
+        }
+    }
+
+    #[test]
+    fn distserve_params_differ() {
+        let v = OracleParams::vllm();
+        let d = OracleParams::distserve();
+        assert!(d.runtime_factor != v.runtime_factor);
+    }
+}

@@ -1,0 +1,226 @@
+//! Request state: the unit of work flowing through the simulated system.
+
+use crate::sim::SimTime;
+
+/// Request identifier (index into the simulation's request table).
+pub type RequestId = usize;
+
+/// Conversation identifier for multi-round workloads.
+pub type ConversationId = usize;
+
+/// Lifecycle phase of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Not yet arrived (future rounds of a conversation).
+    Pending,
+    /// In a scheduler queue (global or local), no KV allocated.
+    Queued,
+    /// Prompt tokens being processed (KV cache being built).
+    Prefill,
+    /// KV cache migrating between workers (disaggregation).
+    Transferring,
+    /// Autoregressive token generation.
+    Decode,
+    /// Preempted: KV released, waiting to be restarted (recompute).
+    Preempted,
+    /// All output tokens generated.
+    Finished,
+}
+
+/// A single inference request (one round of a conversation).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub conversation: ConversationId,
+    /// Round number within the conversation (0-based).
+    pub round: usize,
+    /// Prompt tokens for this round (including conversation history).
+    pub prompt_len: u32,
+    /// Prefix of `prompt_len` whose KV can come from the memory-pool
+    /// cache (0 without caching; prior-round context when it hits).
+    pub cached_prefix: u32,
+    /// Number of output tokens this request will generate.
+    pub output_len: u32,
+    pub arrival: SimTime,
+
+    // ---- mutable execution state ----
+    pub phase: Phase,
+    /// Tokens currently resident in this worker's KV cache.
+    pub ctx_in_cache: u32,
+    /// Prompt tokens already processed (chunked prefill / restart).
+    pub prompt_done: u32,
+    /// Output tokens generated so far.
+    pub generated: u32,
+    /// Worker currently owning the request, if any.
+    pub worker: Option<usize>,
+    /// Times the request was preempted.
+    pub preemptions: u32,
+
+    // ---- metric stamps ----
+    pub first_scheduled: Option<SimTime>,
+    pub first_token: Option<SimTime>,
+    pub last_token: Option<SimTime>,
+    /// Largest observed inter-token gap (drives the mTPOT SLO).
+    pub max_token_gap: SimTime,
+    pub finished_at: Option<SimTime>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        conversation: ConversationId,
+        round: usize,
+        prompt_len: u32,
+        output_len: u32,
+        arrival: SimTime,
+    ) -> Self {
+        assert!(prompt_len > 0, "prompt_len must be >= 1");
+        assert!(output_len > 0, "output_len must be >= 1");
+        Self {
+            id,
+            conversation,
+            round,
+            prompt_len,
+            cached_prefix: 0,
+            output_len,
+            arrival,
+            phase: Phase::Pending,
+            ctx_in_cache: 0,
+            prompt_done: 0,
+            generated: 0,
+            worker: None,
+            preemptions: 0,
+            first_scheduled: None,
+            first_token: None,
+            last_token: None,
+            max_token_gap: 0.0,
+            finished_at: None,
+        }
+    }
+
+    /// Prompt tokens still to be computed (prefill work left).
+    #[inline]
+    pub fn prompt_remaining(&self) -> u32 {
+        self.prompt_len - self.prompt_done
+    }
+
+    /// Has the (re)prefill completed? After a recompute preemption the
+    /// effective prompt includes already-generated tokens.
+    #[inline]
+    pub fn prefill_done(&self) -> bool {
+        self.prompt_done >= self.effective_prompt_len()
+    }
+
+    /// Tokens the KV cache must hold when the request completes.
+    #[inline]
+    pub fn final_kv_tokens(&self) -> u32 {
+        self.prompt_len + self.output_len
+    }
+
+    /// Total tokens currently needing KV residency.
+    #[inline]
+    pub fn live_kv_tokens(&self) -> u32 {
+        self.ctx_in_cache
+    }
+
+    /// Is generation complete?
+    #[inline]
+    pub fn done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+
+    /// Record a token emission at `now`, updating gap statistics.
+    pub fn stamp_token(&mut self, now: SimTime) {
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        } else if let Some(prev) = self.last_token {
+            let gap = now - prev;
+            if gap > self.max_token_gap {
+                self.max_token_gap = gap;
+            }
+        }
+        self.last_token = Some(now);
+    }
+
+    /// Reset execution state for a preemption-by-recompute: KV is
+    /// dropped and the prompt (plus already-generated tokens) must be
+    /// re-processed from scratch.
+    pub fn reset_for_recompute(&mut self) {
+        self.phase = Phase::Preempted;
+        self.ctx_in_cache = 0;
+        // Already generated tokens become part of the "prompt" to
+        // recompute; they are not re-emitted to the user. A pool-cached
+        // prefix no longer helps (accounting restarts from zero).
+        self.prompt_done = 0;
+        self.cached_prefix = 0;
+        self.preemptions += 1;
+        self.worker = None;
+    }
+
+    /// Effective prompt length for (re)computation, counting generated
+    /// tokens that must be re-prefilled after a recompute preemption.
+    #[inline]
+    pub fn effective_prompt_len(&self) -> u32 {
+        self.prompt_len + self.generated
+    }
+
+    /// TTFT (time to first token), if the first token was produced.
+    pub fn ttft(&self) -> Option<SimTime> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+
+    /// End-to-end latency, if finished.
+    pub fn latency(&self) -> Option<SimTime> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request::new(0, 0, 0, 100, 10, 1.0)
+    }
+
+    #[test]
+    fn fresh_request_state() {
+        let r = req();
+        assert_eq!(r.phase, Phase::Pending);
+        assert_eq!(r.prompt_remaining(), 100);
+        assert!(!r.prefill_done());
+        assert!(!r.done());
+        assert_eq!(r.final_kv_tokens(), 110);
+    }
+
+    #[test]
+    fn token_gap_tracking() {
+        let mut r = req();
+        r.stamp_token(2.0); // first token: no gap yet
+        assert_eq!(r.max_token_gap, 0.0);
+        r.stamp_token(2.1);
+        r.stamp_token(2.9);
+        assert!((r.max_token_gap - 0.8).abs() < 1e-12);
+        assert_eq!(r.ttft(), Some(1.0));
+    }
+
+    #[test]
+    fn recompute_preemption_resets_kv() {
+        let mut r = req();
+        r.prompt_done = 100;
+        r.ctx_in_cache = 104;
+        r.generated = 4;
+        r.reset_for_recompute();
+        assert_eq!(r.ctx_in_cache, 0);
+        assert_eq!(r.prompt_done, 0);
+        assert_eq!(r.generated, 4, "generated tokens are kept");
+        assert_eq!(r.effective_prompt_len(), 104);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_prompt_rejected() {
+        Request::new(0, 0, 0, 0, 10, 0.0);
+    }
+}

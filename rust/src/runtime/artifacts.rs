@@ -1,0 +1,147 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Version this runtime understands; bumped together with `aot.py`.
+pub const SUPPORTED_VERSION: u64 = 3;
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub sha256: String,
+    pub chars: u64,
+}
+
+/// `manifest.json` written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub batch_slots: usize,
+    pub model_dim: usize,
+    pub hw_dim: usize,
+    pub num_ops: usize,
+    pub op_names: Vec<String>,
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load and validate the manifest from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let req_u = |k: &str| -> Result<u64> {
+            j.req(k)?.as_u64().with_context(|| format!("'{k}' must be a number"))
+        };
+        let mut artifacts = HashMap::new();
+        for (name, entry) in j
+            .req("artifacts")?
+            .as_obj()
+            .context("'artifacts' must be an object")?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    file: entry.req("file")?.as_str().context("file")?.to_string(),
+                    sha256: entry
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    chars: entry.get("chars").and_then(Json::as_u64).unwrap_or(0),
+                },
+            );
+        }
+        let m = Manifest {
+            version: req_u("version")?,
+            batch_slots: req_u("batch_slots")? as usize,
+            model_dim: req_u("model_dim")? as usize,
+            hw_dim: req_u("hw_dim")? as usize,
+            num_ops: req_u("num_ops")? as usize,
+            op_names: j
+                .req("op_names")?
+                .as_arr()
+                .context("'op_names' must be a list")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            artifacts,
+            jax_version: j
+                .get("jax_version")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        };
+
+        ensure!(
+            m.version == SUPPORTED_VERSION,
+            "artifact version {} != supported {} — re-run `make artifacts`",
+            m.version,
+            SUPPORTED_VERSION
+        );
+        ensure!(m.num_ops == crate::compute::NUM_OPS, "op-table width mismatch");
+        ensure!(m.model_dim == 8 && m.hw_dim == 6, "parameter vector mismatch");
+        for (name, entry) in &m.artifacts {
+            ensure!(
+                dir.as_ref().join(&entry.file).exists(),
+                "artifact {name} file {} missing",
+                entry.file
+            );
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, version: u64) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        write!(
+            f,
+            r#"{{"version": {version}, "batch_slots": 64, "model_dim": 8,
+                "hw_dim": 6, "num_ops": 10,
+                "op_names": ["a","b","c","d","e","f","g","h","i","j"],
+                "artifacts": {{"iter_cost": {{"file": "iter_cost.hlo.txt",
+                 "sha256": "x", "chars": 1}}}}}}"#
+        )
+        .unwrap();
+        std::fs::write(dir.join("iter_cost.hlo.txt"), "HloModule x").unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SUPPORTED_VERSION);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.batch_slots, 64);
+        assert!(m.artifacts.contains_key("iter_cost"));
+        assert_eq!(m.op_names.len(), 10);
+    }
+
+    #[test]
+    fn rejects_version_mismatch() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SUPPORTED_VERSION + 1);
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SUPPORTED_VERSION);
+        std::fs::remove_file(dir.path().join("iter_cost.hlo.txt")).unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! PJRT runtime: load and execute the AOT-compiled cost artifacts.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this XLA
+//! rejects; the text parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! The client is process-wide and created lazily; artifacts compile once
+//! and are reusable for the whole simulation (Python never runs on the
+//! request path).
+
+mod artifacts;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+    /// Compiled-artifact cache: HLO parsing + PJRT compilation cost
+    /// hundreds of ms, and simulations (SLO sweeps!) are constructed
+    /// far more often than artifacts change.
+    static ARTIFACTS: RefCell<std::collections::HashMap<PathBuf, Rc<CompiledArtifact>>> =
+        RefCell::new(std::collections::HashMap::new());
+}
+
+/// Get (or lazily create) the thread's PJRT CPU client.
+pub fn cpu_client() -> Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            *slot = Some(Rc::new(client));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+/// A compiled HLO artifact ready for repeated execution.
+pub struct CompiledArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl CompiledArtifact {
+    /// Load (or fetch from the process-wide cache) a compiled artifact.
+    pub fn load_cached(path: impl AsRef<Path>) -> Result<Rc<Self>> {
+        let key = path.as_ref().to_path_buf();
+        ARTIFACTS.with(|cache| {
+            if let Some(hit) = cache.borrow().get(&key) {
+                return Ok(hit.clone());
+            }
+            let compiled = Rc::new(Self::load(&key)?);
+            cache.borrow_mut().insert(key, compiled.clone());
+            Ok(compiled)
+        })
+    }
+
+    /// Load HLO text from `path` and compile it on the CPU client.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let client = cpu_client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self { exe, path })
+    }
+
+    /// Execute with f32 vector inputs; returns the flat f32 output.
+    ///
+    /// Artifacts are lowered with `return_tuple=True` and a single flat
+    /// output vector, so the result is a 1-tuple we unwrap here.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| xla::Literal::vec1(v))
+            .collect();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Locate the artifacts directory: explicit argument, `$TOKENSIM_ARTIFACTS`,
+/// or `artifacts/` relative to the crate root / current directory.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("TOKENSIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_dir.join("manifest.json").exists() {
+        return manifest_dir;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> Option<PathBuf> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_run_xfer_artifact() {
+        let Some(dir) = artifacts_ready() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = CompiledArtifact::load(dir.join("xfer_cost.hlo.txt")).unwrap();
+        let slots = manifest.batch_slots;
+        let mut sizes = vec![0.0f32; slots];
+        sizes[0] = 1e9; // 1 GB over a 1 GB/s link with zero latency
+        let link = [1e9f32, 0.0, 1.0];
+        let out = art.run_f32(&[&sizes, &link]).unwrap();
+        assert_eq!(out.len(), 2 + slots);
+        assert!((out[0] - 1.0).abs() < 1e-5, "t_seq={}", out[0]);
+        assert!((out[1] - 1.0).abs() < 1e-5, "t_ovl={}", out[1]);
+        assert!((out[2] - 1.0).abs() < 1e-5, "per_block[0]={}", out[2]);
+    }
+
+    #[test]
+    fn artifact_reuse_many_executions() {
+        let Some(dir) = artifacts_ready() else {
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let art = CompiledArtifact::load(dir.join("xfer_cost.hlo.txt")).unwrap();
+        let sizes = vec![1024.0f32; manifest.batch_slots];
+        let link = [64e9f32, 1e-5, 4.0];
+        let first = art.run_f32(&[&sizes, &link]).unwrap();
+        for _ in 0..10 {
+            let again = art.run_f32(&[&sizes, &link]).unwrap();
+            assert_eq!(first, again, "execution must be deterministic");
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Global (inter-worker) scheduling policies.
+
+
+use crate::request::{Request, RequestId};
+use crate::sim::SimRng;
+
+/// Read-only view of one worker the global scheduler dispatches against
+/// (the paper: "the global scheduler can access the number of current
+/// workers, their hardware type, and concurrent requests").
+#[derive(Debug, Clone)]
+pub struct WorkerView {
+    pub id: usize,
+    pub hardware: String,
+    pub run_prefill: bool,
+    pub run_decode: bool,
+    pub waiting_requests: usize,
+    pub running_requests: usize,
+    /// Sum of queued prompt tokens + live KV tokens (load proxy).
+    pub outstanding_tokens: u64,
+    pub free_blocks: u64,
+    pub total_blocks: u64,
+}
+
+/// Global scheduling policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GlobalPolicy {
+    /// Cycle new requests over eligible workers.
+    RoundRobin,
+    /// Send each request to the least-loaded eligible worker
+    /// (outstanding tokens; the "record book" idiom of §III-A).
+    LoadAware,
+    /// Uniform random choice (the paper's Fig 3 example).
+    Random,
+}
+
+impl GlobalPolicy {
+    /// Dispatch decisions. `new` are fresh arrivals (need prefill);
+    /// `resubmitted` finished prefill on some worker and need a decode
+    /// worker (disaggregation). Returns `(request, target worker)`.
+    pub fn dispatch(
+        &self,
+        state: &mut GlobalSchedulerState,
+        new: &[RequestId],
+        resubmitted: &[RequestId],
+        workers: &[WorkerView],
+        requests: &[Request],
+        rng: &mut SimRng,
+    ) -> Vec<(RequestId, usize)> {
+        let mut out = Vec::with_capacity(new.len() + resubmitted.len());
+        for &rid in new {
+            let eligible: Vec<&WorkerView> =
+                workers.iter().filter(|w| w.run_prefill).collect();
+            assert!(!eligible.is_empty(), "no prefill-capable worker");
+            let target = self.choose(state, &eligible, requests[rid].prompt_len as u64, rng);
+            out.push((rid, target));
+        }
+        for &rid in resubmitted {
+            let eligible: Vec<&WorkerView> =
+                workers.iter().filter(|w| w.run_decode).collect();
+            assert!(!eligible.is_empty(), "no decode-capable worker");
+            let kv = requests[rid].final_kv_tokens() as u64;
+            let target = self.choose(state, &eligible, kv, rng);
+            out.push((rid, target));
+        }
+        out
+    }
+
+    fn choose(
+        &self,
+        state: &mut GlobalSchedulerState,
+        eligible: &[&WorkerView],
+        load_tokens: u64,
+        rng: &mut SimRng,
+    ) -> usize {
+        let id = match self {
+            GlobalPolicy::RoundRobin => {
+                let pick = eligible[state.rr_cursor % eligible.len()].id;
+                state.rr_cursor += 1;
+                pick
+            }
+            GlobalPolicy::Random => eligible[rng.pick(eligible.len())].id,
+            GlobalPolicy::LoadAware => {
+                // live view + the record book of in-flight dispatches
+                eligible
+                    .iter()
+                    .min_by_key(|w| {
+                        w.outstanding_tokens + state.recorded_load(w.id)
+                    })
+                    .unwrap()
+                    .id
+            }
+        };
+        state.record_dispatch(id, load_tokens);
+        id
+    }
+}
+
+/// Stateful side of the global scheduler (the paper: "It can also be
+/// stateful, so that users can actively store the number of requests
+/// already dispatched to a worker … and use the record book for future
+/// load-aware scheduling").
+#[derive(Debug, Clone, Default)]
+pub struct GlobalSchedulerState {
+    rr_cursor: usize,
+    /// Tokens dispatched per worker that the worker view may not yet
+    /// reflect (decays as work completes).
+    record_book: Vec<(usize, u64)>,
+}
+
+impl GlobalSchedulerState {
+    pub fn new(num_workers: usize) -> Self {
+        Self {
+            rr_cursor: 0,
+            record_book: (0..num_workers).map(|id| (id, 0)).collect(),
+        }
+    }
+
+    fn record_dispatch(&mut self, worker: usize, tokens: u64) {
+        if let Some(e) = self.record_book.iter_mut().find(|(id, _)| *id == worker) {
+            e.1 += tokens;
+        }
+    }
+
+    fn recorded_load(&self, worker: usize) -> u64 {
+        self.record_book
+            .iter()
+            .find(|(id, _)| *id == worker)
+            .map(|(_, t)| *t)
+            .unwrap_or(0)
+    }
+
+    /// Acknowledge completed work (the driver calls this as requests
+    /// finish so the record book tracks only in-flight dispatches).
+    pub fn complete(&mut self, worker: usize, tokens: u64) {
+        if let Some(e) = self.record_book.iter_mut().find(|(id, _)| *id == worker) {
+            e.1 = e.1.saturating_sub(tokens);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, prefill: bool, decode: bool, load: u64) -> WorkerView {
+        WorkerView {
+            id,
+            hardware: "A100".into(),
+            run_prefill: prefill,
+            run_decode: decode,
+            waiting_requests: 0,
+            running_requests: 0,
+            outstanding_tokens: load,
+            free_blocks: 100,
+            total_blocks: 100,
+        }
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i, i, 0, 100, 10, 0.0))
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let workers = vec![view(0, true, true, 0), view(1, true, true, 0)];
+        let requests = reqs(4);
+        let mut st = GlobalSchedulerState::new(2);
+        let mut rng = SimRng::new(0, "g");
+        let out = GlobalPolicy::RoundRobin.dispatch(
+            &mut st,
+            &[0, 1, 2, 3],
+            &[],
+            &workers,
+            &requests,
+            &mut rng,
+        );
+        let targets: Vec<usize> = out.iter().map(|&(_, w)| w).collect();
+        assert_eq!(targets, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn load_aware_picks_least_loaded() {
+        let workers = vec![view(0, true, true, 5000), view(1, true, true, 100)];
+        let requests = reqs(1);
+        let mut st = GlobalSchedulerState::new(2);
+        let mut rng = SimRng::new(0, "g");
+        let out = GlobalPolicy::LoadAware.dispatch(
+            &mut st,
+            &[0],
+            &[],
+            &workers,
+            &requests,
+            &mut rng,
+        );
+        assert_eq!(out[0].1, 1);
+    }
+
+    #[test]
+    fn load_aware_record_book_spreads_burst() {
+        // both workers look idle; the record book must spread a burst
+        let workers = vec![view(0, true, true, 0), view(1, true, true, 0)];
+        let requests = reqs(10);
+        let mut st = GlobalSchedulerState::new(2);
+        let mut rng = SimRng::new(0, "g");
+        let ids: Vec<RequestId> = (0..10).collect();
+        let out = GlobalPolicy::LoadAware.dispatch(
+            &mut st,
+            &ids,
+            &[],
+            &workers,
+            &requests,
+            &mut rng,
+        );
+        let w0 = out.iter().filter(|&&(_, w)| w == 0).count();
+        assert_eq!(w0, 5, "burst must split evenly via the record book");
+    }
+
+    #[test]
+    fn disaggregated_routing_respects_roles() {
+        // worker 0: prefill only; worker 1: decode only
+        let workers = vec![view(0, true, false, 0), view(1, false, true, 0)];
+        let requests = reqs(2);
+        let mut st = GlobalSchedulerState::new(2);
+        let mut rng = SimRng::new(0, "g");
+        let out = GlobalPolicy::RoundRobin.dispatch(
+            &mut st,
+            &[0],
+            &[1],
+            &workers,
+            &requests,
+            &mut rng,
+        );
+        assert_eq!(out, vec![(0, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn record_book_complete_decays() {
+        let mut st = GlobalSchedulerState::new(1);
+        st.record_dispatch(0, 100);
+        st.complete(0, 60);
+        assert_eq!(st.recorded_load(0), 40);
+        st.complete(0, 100);
+        assert_eq!(st.recorded_load(0), 0, "saturating");
+    }
+
+    #[test]
+    #[should_panic(expected = "no decode-capable worker")]
+    fn panics_without_decode_worker() {
+        let workers = vec![view(0, true, false, 0)];
+        let requests = reqs(1);
+        let mut st = GlobalSchedulerState::new(1);
+        let mut rng = SimRng::new(0, "g");
+        GlobalPolicy::RoundRobin.dispatch(&mut st, &[], &[0], &workers, &requests, &mut rng);
+    }
+}

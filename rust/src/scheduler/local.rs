@@ -1,0 +1,607 @@
+//! Local (per-worker, intra-iteration) scheduling policies.
+
+use std::collections::VecDeque;
+
+
+use crate::compute::BatchDesc;
+use crate::memory::{AllocOutcome, PagedBlockManager};
+use crate::request::{Phase, Request, RequestId};
+
+/// Local scheduling policy selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LocalPolicy {
+    /// Continuous batching (vLLM/Orca style): requests join and leave
+    /// the batch between iterations; prefill iterations take priority;
+    /// decode requests that cannot grow are preempted by recompute.
+    Continuous {
+        /// Token budget per iteration (vLLM `max_num_batched_tokens`).
+        max_batched_tokens: u32,
+        /// Max concurrent requests in the batch (None = unbounded,
+        /// the "inf" setting of Fig 9).
+        max_batch_size: Option<u32>,
+        /// Allow mixing prefill chunks and decodes in one iteration
+        /// (Orca-style) instead of prefill-only iterations.
+        mixed_batching: bool,
+    },
+    /// Static batching: a batch is formed from waiting requests and runs
+    /// to completion; finished requests leave bubbles; no admission
+    /// until the whole batch drains (Fig 8 / Fig 9 baseline).
+    Static {
+        batch_size: u32,
+        /// Form a partial batch after this long rather than waiting
+        /// indefinitely for `batch_size` arrivals.
+        max_linger: f64,
+    },
+    /// Continuous batching with priority-ordered admission.
+    Priority {
+        max_batched_tokens: u32,
+        max_batch_size: Option<u32>,
+        by: PriorityKey,
+    },
+}
+
+/// Admission ordering for [`LocalPolicy::Priority`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorityKey {
+    /// FIFO (equivalent to Continuous).
+    Arrival,
+    /// Shortest prompt first (cheap prefills jump the queue).
+    ShortestPrompt,
+    /// Shortest expected output first.
+    ShortestOutput,
+}
+
+impl LocalPolicy {
+    /// vLLM-flavoured defaults.
+    pub fn continuous_default() -> Self {
+        LocalPolicy::Continuous {
+            max_batched_tokens: 8192,
+            max_batch_size: Some(256),
+            mixed_batching: false,
+        }
+    }
+}
+
+/// Mutable view of a worker the local scheduler operates on.
+pub struct LocalSchedCtx<'a> {
+    pub requests: &'a mut [Request],
+    pub waiting: &'a mut VecDeque<RequestId>,
+    pub running: &'a mut Vec<RequestId>,
+    pub mem: &'a mut PagedBlockManager,
+    pub now: f64,
+    /// No more arrivals will ever come (lets Static form partial batches).
+    pub draining: bool,
+    /// Time of the earliest waiting request's enqueue (Static linger).
+    pub oldest_wait: Option<f64>,
+}
+
+/// The iteration plan a local scheduler produces.
+#[derive(Debug, Clone, Default)]
+pub struct BatchPlan {
+    /// Requests in the batch, parallel to `batch` slots.
+    pub members: Vec<RequestId>,
+    /// Per-slot (ctx, new) descriptors.
+    pub batch: BatchDesc,
+    /// Requests preempted (recompute) while forming this batch.
+    pub preempted: Vec<RequestId>,
+    /// True if this iteration runs prefill work.
+    pub has_prefill: bool,
+}
+
+impl BatchPlan {
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+impl LocalPolicy {
+    /// Form the next iteration's batch. Mutates queues, request phases
+    /// and the memory manager (reservations + preemptions).
+    pub fn form_batch(&self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        match self {
+            LocalPolicy::Continuous {
+                max_batched_tokens,
+                max_batch_size,
+                mixed_batching,
+            } => form_continuous(
+                ctx,
+                *max_batched_tokens,
+                *max_batch_size,
+                *mixed_batching,
+                PriorityKey::Arrival,
+            ),
+            LocalPolicy::Priority {
+                max_batched_tokens,
+                max_batch_size,
+                by,
+            } => form_continuous(ctx, *max_batched_tokens, *max_batch_size, false, *by),
+            LocalPolicy::Static {
+                batch_size,
+                max_linger,
+            } => form_static(ctx, *batch_size, *max_linger),
+        }
+    }
+}
+
+/// Ensure every running decode request can grow one token, preempting
+/// the most-recently-admitted requests (vLLM's recompute policy) when
+/// blocks run out. Returns preempted ids.
+fn ensure_decode_growth(ctx: &mut LocalSchedCtx) -> Vec<RequestId> {
+    let mut preempted = Vec::new();
+    let mut i = 0;
+    while i < ctx.running.len() {
+        let rid = ctx.running[i];
+        let need = {
+            let r = &ctx.requests[rid];
+            // after this iteration the request holds ctx + 1 tokens
+            r.ctx_in_cache + 1
+        };
+        loop {
+            match ctx.mem.reserve(rid, need) {
+                AllocOutcome::Ok => break,
+                AllocOutcome::OutOfMemory => {
+                    // evict the last-admitted running request (not rid
+                    // itself unless it is the only one left)
+                    let victim_pos = ctx.running.len() - 1;
+                    let victim = ctx.running[victim_pos];
+                    if victim == rid {
+                        // rid itself is the newest: preempt it
+                        ctx.running.remove(victim_pos);
+                        ctx.mem.release_preempted(victim);
+                        ctx.requests[victim].reset_for_recompute();
+                        ctx.waiting.push_front(victim);
+                        preempted.push(victim);
+                        break;
+                    }
+                    ctx.running.remove(victim_pos);
+                    ctx.mem.release_preempted(victim);
+                    ctx.requests[victim].reset_for_recompute();
+                    ctx.waiting.push_front(victim);
+                    preempted.push(victim);
+                }
+            }
+        }
+        // if rid survived, move on; if rid was preempted it was removed
+        if i < ctx.running.len() && ctx.running[i] == rid {
+            i += 1;
+        }
+    }
+    preempted
+}
+
+/// Admission candidates in policy order.
+///
+/// FIFO admission must NOT materialize the queue: under saturation the
+/// waiting queue holds tens of thousands of requests while admission
+/// stops after a handful, and batch formation runs once per iteration —
+/// an O(queue) copy here dominated whole-simulation wall time before it
+/// was made lazy (see EXPERIMENTS.md §Perf).
+fn admission_order<'a>(
+    ctx: &'a LocalSchedCtx,
+    by: PriorityKey,
+) -> Box<dyn Iterator<Item = RequestId> + 'a> {
+    match by {
+        PriorityKey::Arrival => Box::new(ctx.waiting.iter().copied()),
+        PriorityKey::ShortestPrompt => {
+            let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
+            ids.sort_by_key(|&id| ctx.requests[id].effective_prompt_len());
+            Box::new(ids.into_iter())
+        }
+        PriorityKey::ShortestOutput => {
+            let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
+            ids.sort_by_key(|&id| ctx.requests[id].output_len);
+            Box::new(ids.into_iter())
+        }
+    }
+}
+
+fn form_continuous(
+    ctx: &mut LocalSchedCtx,
+    max_batched_tokens: u32,
+    max_batch_size: Option<u32>,
+    mixed_batching: bool,
+    by: PriorityKey,
+) -> BatchPlan {
+    let preempted = ensure_decode_growth(ctx);
+    let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
+
+    // --- try to admit prefills -----------------------------------------
+    let mut admitted: Vec<RequestId> = Vec::new();
+    let mut prefill_tokens: u32 = 0;
+    let decode_tokens = ctx.running.len() as u32; // 1 new token each
+    let budget_base = if mixed_batching { decode_tokens } else { 0 };
+    if ctx.running.len() < cap {
+        let running_len = ctx.running.len();
+        let mut reservations: Vec<(RequestId, u32)> = Vec::new();
+        let mut pending_blocks: u64 = 0;
+        for rid in admission_order(ctx, by) {
+            if running_len + admitted.len() >= cap {
+                break;
+            }
+            let r = &ctx.requests[rid];
+            let prompt = r.effective_prompt_len();
+            // prompt_done counts tokens already accounted for (a pool-
+            // cached prefix, or progress before a chunk boundary)
+            let compute_tokens = prompt - r.prompt_done;
+            if budget_base + prefill_tokens + compute_tokens > max_batched_tokens {
+                // budget exhausted; FIFO stops at first miss, priority
+                // orders may skip (try next)
+                if by == PriorityKey::Arrival {
+                    break;
+                }
+                continue;
+            }
+            // memory admission: the whole prompt's KV must fit, net of
+            // blocks promised to earlier admissions in this pass
+            if !ctx.mem.can_admit_with_pending(prompt, pending_blocks) {
+                if by == PriorityKey::Arrival {
+                    break;
+                }
+                continue;
+            }
+            pending_blocks += ctx.mem.blocks_for_tokens(prompt);
+            reservations.push((rid, prompt));
+            prefill_tokens += compute_tokens;
+            admitted.push(rid);
+        }
+        for (rid, prompt) in reservations {
+            let ok = ctx.mem.reserve(rid, prompt);
+            debug_assert_eq!(ok, AllocOutcome::Ok, "can_admit guaranteed space");
+        }
+    }
+
+    let mut plan = BatchPlan::default();
+    if !admitted.is_empty() {
+        // dequeue the admitted requests. FIFO admission stops at the
+        // first failure, so the admitted set is exactly the queue's
+        // prefix — pop instead of an O(queue) retain per admission
+        // (a measured hot spot; see EXPERIMENTS.md §Perf).
+        if by == PriorityKey::Arrival {
+            debug_assert!(admitted.iter().zip(ctx.waiting.iter()).all(|(a, w)| a == w));
+            for _ in 0..admitted.len() {
+                ctx.waiting.pop_front();
+            }
+        } else {
+            let set: std::collections::HashSet<RequestId> =
+                admitted.iter().copied().collect();
+            ctx.waiting.retain(|w| !set.contains(w));
+        }
+        // prefill iteration (plus running decodes when mixed)
+        plan.has_prefill = true;
+        for rid in admitted {
+            let r = &mut ctx.requests[rid];
+            r.phase = Phase::Prefill;
+            if r.first_scheduled.is_none() {
+                r.first_scheduled = Some(ctx.now);
+            }
+            let compute = r.effective_prompt_len() - r.prompt_done;
+            plan.batch.push(r.prompt_done, compute);
+            plan.members.push(rid);
+            ctx.running.push(rid);
+        }
+        if mixed_batching {
+            for &rid in ctx.running.iter() {
+                if plan.members.contains(&rid) {
+                    continue;
+                }
+                let r = &ctx.requests[rid];
+                if r.phase == Phase::Decode {
+                    plan.batch.push(r.ctx_in_cache, 1);
+                    plan.members.push(rid);
+                }
+            }
+        }
+    } else {
+        // decode iteration over current running set
+        for &rid in ctx.running.iter() {
+            let r = &ctx.requests[rid];
+            debug_assert!(r.phase == Phase::Decode || r.phase == Phase::Prefill);
+            plan.batch.push(r.ctx_in_cache, 1);
+            plan.members.push(rid);
+        }
+    }
+    plan.preempted = preempted;
+    plan
+}
+
+fn form_static(ctx: &mut LocalSchedCtx, batch_size: u32, max_linger: f64) -> BatchPlan {
+    let mut plan = BatchPlan::default();
+    if ctx.running.is_empty() {
+        // form a new batch only when full, lingered-out, or draining
+        let lingered = ctx
+            .oldest_wait
+            .map(|t| ctx.now - t >= max_linger)
+            .unwrap_or(false);
+        if (ctx.waiting.len() as u32) < batch_size && !ctx.draining && !lingered {
+            return plan;
+        }
+        let n = (batch_size as usize).min(ctx.waiting.len());
+        for _ in 0..n {
+            let rid = *ctx.waiting.front().unwrap();
+            let r = &ctx.requests[rid];
+            let prompt = r.effective_prompt_len();
+            // static batching reserves the *final* KV footprint up front
+            let final_tokens = prompt + (r.output_len - r.generated);
+            if ctx.mem.reserve(rid, final_tokens) != AllocOutcome::Ok {
+                break;
+            }
+            ctx.waiting.pop_front();
+            let r = &mut ctx.requests[rid];
+            r.phase = Phase::Prefill;
+            if r.first_scheduled.is_none() {
+                r.first_scheduled = Some(ctx.now);
+            }
+            ctx.running.push(rid);
+        }
+        if ctx.running.is_empty() {
+            return plan;
+        }
+        plan.has_prefill = true;
+        for &rid in ctx.running.iter() {
+            let r = &ctx.requests[rid];
+            plan.batch.push(r.prompt_done, r.effective_prompt_len() - r.prompt_done);
+            plan.members.push(rid);
+        }
+    } else {
+        // continue the in-flight batch: decode only the unfinished
+        for &rid in ctx.running.iter() {
+            let r = &ctx.requests[rid];
+            plan.batch.push(r.ctx_in_cache, 1);
+            plan.members.push(rid);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_requests(specs: &[(u32, u32)]) -> Vec<Request> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, o))| Request::new(i, i, 0, p, o, 0.0))
+            .collect()
+    }
+
+    struct Fix {
+        requests: Vec<Request>,
+        waiting: VecDeque<RequestId>,
+        running: Vec<RequestId>,
+        mem: PagedBlockManager,
+    }
+
+    impl Fix {
+        fn new(specs: &[(u32, u32)], blocks: u64) -> Self {
+            let requests = make_requests(specs);
+            let waiting = (0..requests.len()).collect();
+            Self {
+                requests,
+                waiting,
+                running: Vec::new(),
+                mem: PagedBlockManager::with_blocks(blocks, 16, 1024),
+            }
+        }
+
+        fn ctx(&mut self) -> LocalSchedCtx<'_> {
+            LocalSchedCtx {
+                requests: &mut self.requests,
+                waiting: &mut self.waiting,
+                running: &mut self.running,
+                mem: &mut self.mem,
+                now: 0.0,
+                draining: false,
+                oldest_wait: Some(0.0),
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_admits_prefills_first() {
+        let mut f = Fix::new(&[(100, 10), (50, 10)], 1000);
+        let policy = LocalPolicy::continuous_default();
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(plan.has_prefill);
+        assert_eq!(plan.members, vec![0, 1]);
+        assert_eq!(plan.batch.new, vec![100, 50]);
+        assert_eq!(f.running.len(), 2);
+        assert!(f.waiting.is_empty());
+    }
+
+    #[test]
+    fn token_budget_limits_admission() {
+        let mut f = Fix::new(&[(600, 10), (600, 10), (600, 10)], 10_000);
+        let policy = LocalPolicy::Continuous {
+            max_batched_tokens: 1000,
+            max_batch_size: None,
+            mixed_batching: false,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![0], "second 600-token prompt busts budget");
+        assert_eq!(f.waiting.len(), 2);
+    }
+
+    #[test]
+    fn batch_size_cap() {
+        let mut f = Fix::new(&[(10, 5); 8], 1000);
+        let policy = LocalPolicy::Continuous {
+            max_batched_tokens: 10_000,
+            max_batch_size: Some(4),
+            mixed_batching: false,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members.len(), 4);
+    }
+
+    #[test]
+    fn decode_iteration_when_no_admittable_prefill() {
+        let mut f = Fix::new(&[(100, 10)], 1000);
+        let policy = LocalPolicy::continuous_default();
+        // first: prefill
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(plan.has_prefill);
+        // simulate prefill completion
+        f.requests[0].prompt_done = 100;
+        f.requests[0].ctx_in_cache = 100;
+        f.requests[0].phase = Phase::Decode;
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(!plan.has_prefill);
+        assert_eq!(plan.batch.ctx, vec![100]);
+        assert_eq!(plan.batch.new, vec![1]);
+    }
+
+    #[test]
+    fn memory_pressure_blocks_admission() {
+        // 10 blocks of 16 tokens = 160 tokens KV capacity
+        let mut f = Fix::new(&[(150, 10), (150, 10)], 10);
+        let policy = LocalPolicy::continuous_default();
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![0], "second request cannot fit");
+    }
+
+    #[test]
+    fn preemption_frees_newest_request() {
+        let mut f = Fix::new(&[(64, 100), (64, 100)], 9);
+        let policy = LocalPolicy::continuous_default();
+        // admit both: 64 tokens = 4 blocks each, 8 of 9 used
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members.len(), 2);
+        // fake both decoding at a block boundary: each needs a new block
+        for rid in 0..2 {
+            let r = &mut f.requests[rid];
+            r.prompt_done = 64;
+            r.ctx_in_cache = 64;
+            r.phase = Phase::Decode;
+            r.generated = 1;
+        }
+        let plan = policy.form_batch(&mut f.ctx());
+        // only one new block available: request 1 (newest) is preempted
+        assert_eq!(plan.preempted, vec![1]);
+        assert_eq!(f.requests[1].phase, Phase::Preempted);
+        assert_eq!(f.requests[1].preemptions, 1);
+        assert_eq!(f.waiting.front(), Some(&1), "victim back at queue head");
+        assert!(f.mem.check_invariants());
+    }
+
+    #[test]
+    fn cached_prefix_reduces_compute_tokens() {
+        let mut f = Fix::new(&[(100, 10)], 1000);
+        f.requests[0].cached_prefix = 80;
+        f.requests[0].prompt_done = 80; // driver sets this on pool hit
+        let policy = LocalPolicy::continuous_default();
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.batch.ctx, vec![80]);
+        assert_eq!(plan.batch.new, vec![20]);
+        // but memory reserved for the full prompt
+        assert_eq!(f.mem.blocks_held(0), (100u64).div_ceil(16));
+    }
+
+    #[test]
+    fn static_waits_for_full_batch() {
+        let mut f = Fix::new(&[(50, 5), (50, 5)], 1000);
+        let policy = LocalPolicy::Static {
+            batch_size: 4,
+            max_linger: 10.0,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(plan.is_empty(), "only 2 of 4 arrived, no linger yet");
+    }
+
+    #[test]
+    fn static_forms_batch_when_draining() {
+        let mut f = Fix::new(&[(50, 5), (50, 5)], 1000);
+        let policy = LocalPolicy::Static {
+            batch_size: 4,
+            max_linger: 10.0,
+        };
+        let mut ctx = f.ctx();
+        ctx.draining = true;
+        let plan = policy.form_batch(&mut ctx);
+        assert_eq!(plan.members.len(), 2);
+        assert!(plan.has_prefill);
+    }
+
+    #[test]
+    fn static_linger_timeout_forms_partial_batch() {
+        let mut f = Fix::new(&[(50, 5)], 1000);
+        let policy = LocalPolicy::Static {
+            batch_size: 8,
+            max_linger: 1.0,
+        };
+        let mut ctx = f.ctx();
+        ctx.now = 2.0;
+        ctx.oldest_wait = Some(0.5);
+        let plan = policy.form_batch(&mut ctx);
+        assert_eq!(plan.members.len(), 1);
+    }
+
+    #[test]
+    fn static_no_admission_mid_batch() {
+        let mut f = Fix::new(&[(50, 5), (50, 5), (50, 5)], 1000);
+        let policy = LocalPolicy::Static {
+            batch_size: 2,
+            max_linger: 0.0,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members.len(), 2);
+        // batch running; third request must wait even though memory is free
+        f.requests[0].phase = Phase::Decode;
+        f.requests[0].ctx_in_cache = 50;
+        f.requests[0].prompt_done = 50;
+        f.requests[1].phase = Phase::Decode;
+        f.requests[1].ctx_in_cache = 50;
+        f.requests[1].prompt_done = 50;
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members.len(), 2, "no new admission mid-batch");
+        assert!(!plan.has_prefill);
+    }
+
+    #[test]
+    fn static_reserves_final_footprint() {
+        let mut f = Fix::new(&[(16, 16)], 1000);
+        let policy = LocalPolicy::Static {
+            batch_size: 1,
+            max_linger: 0.0,
+        };
+        let mut ctx = f.ctx();
+        ctx.draining = true;
+        let _ = policy.form_batch(&mut ctx);
+        // 16 prompt + 16 output = 32 tokens = 2 blocks
+        assert_eq!(f.mem.blocks_held(0), 2);
+    }
+
+    #[test]
+    fn priority_shortest_prompt_first() {
+        let mut f = Fix::new(&[(500, 5), (20, 5), (100, 5)], 1000);
+        let policy = LocalPolicy::Priority {
+            max_batched_tokens: 10_000,
+            max_batch_size: None,
+            by: PriorityKey::ShortestPrompt,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn mixed_batching_includes_decodes() {
+        let mut f = Fix::new(&[(100, 10), (50, 10)], 1000);
+        let policy = LocalPolicy::Continuous {
+            max_batched_tokens: 8192,
+            max_batch_size: None,
+            mixed_batching: true,
+        };
+        // admit request 0, complete its prefill
+        f.waiting = VecDeque::from(vec![0]);
+        let _ = policy.form_batch(&mut f.ctx());
+        f.requests[0].prompt_done = 100;
+        f.requests[0].ctx_in_cache = 100;
+        f.requests[0].phase = Phase::Decode;
+        // now request 1 arrives; mixed batch = prefill(1) + decode(0)
+        f.waiting.push_back(1);
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(plan.has_prefill);
+        assert_eq!(plan.members.len(), 2);
+        assert_eq!(plan.batch.new, vec![50, 1]);
+    }
+}

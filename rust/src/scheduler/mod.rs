@@ -1,0 +1,16 @@
+//! Two-stage scheduling (the paper's §III-A).
+//!
+//! A **global scheduler** assigns incoming (and resubmitted) requests to
+//! workers; **local schedulers** decide, between iterations, which
+//! requests run in the next batch, which wait, and which are preempted —
+//! coordinating with the worker's memory manager. Operator-level
+//! breakpoints ([`crate::model::Breakpoint`]) let configurations hook
+//! scheduling at sub-iteration granularity; the disaggregation idiom
+//! (prefill-finish → submit to global → dispatch to a decode worker with
+//! a KV transfer) is exactly the two-line example of the paper's Fig 3.
+
+mod global;
+mod local;
+
+pub use global::{GlobalPolicy, GlobalSchedulerState, WorkerView};
+pub use local::{BatchPlan, LocalPolicy, LocalSchedCtx, PriorityKey};

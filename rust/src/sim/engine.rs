@@ -1,0 +1,200 @@
+//! Binary-heap event queue with deterministic tie-breaking.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::request::RequestId;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+/// Typed event payloads for the serving-system state machines.
+///
+/// The engine itself is payload-agnostic; this enum enumerates every
+/// event kind the cluster driver ([`crate::cluster::Simulation`]) and the
+/// oracle executor use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventPayload {
+    /// A new request (or conversation round) enters the system.
+    Arrival(RequestId),
+    /// Worker `worker` finishes the iteration it started earlier.
+    IterDone { worker: usize },
+    /// A KV-cache transfer for `req` into `worker` completed.
+    TransferDone { worker: usize, req: RequestId },
+    /// Periodic metrics sampling tick.
+    SampleTick,
+    /// Generic wake-up for a worker (e.g. after a dispatch).
+    Kick { worker: usize },
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: SimTime,
+    /// Monotone sequence number: FIFO order among same-time events, which
+    /// keeps runs bit-reproducible regardless of heap internals.
+    pub seq: u64,
+    pub payload: EventPayload,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The discrete-event queue: `push` schedules, `pop` advances time.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    now: SimTime,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time (the timestamp of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total number of events processed so far.
+    #[inline]
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Number of pending events.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at`.
+    ///
+    /// Panics if `at` is in the past or not finite — scheduling into the
+    /// past is always a logic error in the caller.
+    pub fn schedule_at(&mut self, at: SimTime, payload: EventPayload) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        assert!(
+            at >= self.now,
+            "scheduling into the past: at={at} now={}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event {
+            time: at,
+            seq,
+            payload,
+        });
+    }
+
+    /// Schedule `payload` after a relative delay.
+    pub fn schedule_in(&mut self, delay: SimTime, payload: EventPayload) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now);
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, EventPayload::SampleTick);
+        q.schedule_at(1.0, EventPayload::IterDone { worker: 0 });
+        q.schedule_at(2.0, EventPayload::Kick { worker: 1 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        for w in 0..100 {
+            q.schedule_at(5.0, EventPayload::Kick { worker: w });
+        }
+        for expect in 0..100 {
+            match q.pop().unwrap().payload {
+                EventPayload::Kick { worker } => assert_eq!(worker, expect),
+                other => panic!("unexpected payload {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.5, EventPayload::SampleTick);
+        q.pop();
+        q.schedule_in(0.5, EventPayload::SampleTick);
+        q.schedule_in(0.0, EventPayload::SampleTick);
+        assert_eq!(q.pop().unwrap().time, 1.5);
+        assert_eq!(q.pop().unwrap().time, 2.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, EventPayload::SampleTick);
+        q.pop();
+        q.schedule_at(1.0, EventPayload::SampleTick);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut q = EventQueue::new();
+        q.schedule_at(4.0, EventPayload::SampleTick);
+        assert_eq!(q.peek_time(), Some(4.0));
+        assert_eq!(q.now(), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event simulation core (the SimPy replacement).
+//!
+//! TokenSim's original implementation rode on SimPy's generator-based
+//! processes; here the engine is a plain binary-heap event queue with a
+//! typed event payload, which is both faster (no coroutine switching)
+//! and simpler to reason about for the worker/scheduler state machines
+//! that make up an inference cluster.
+
+mod engine;
+mod rng;
+
+pub use engine::{Event, EventPayload, EventQueue, SimTime};
+pub use rng::SimRng;

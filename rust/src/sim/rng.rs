@@ -1,0 +1,259 @@
+//! Deterministic RNG used throughout the simulator (hand-rolled —
+//! rand/rand_distr are unavailable in this offline build).
+//!
+//! Core generator is xoshiro256++ seeded via splitmix64. Every
+//! stochastic component (arrival process, length sampling, random
+//! routing, oracle noise) derives its stream from a `SimRng` seeded from
+//! the experiment seed plus a component label, so experiments are
+//! bit-reproducible and components are independent of evaluation order.
+
+/// Deterministic simulator RNG (xoshiro256++).
+#[derive(Debug, Clone)]
+pub struct SimRng {
+    s: [u64; 4],
+    /// Cached second normal from Box-Muller.
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl SimRng {
+    /// Seed from an experiment seed and a component label.
+    pub fn new(seed: u64, label: &str) -> Self {
+        // FNV-1a over the label, mixed with the seed.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let mut sm = seed ^ h;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // avoid the all-zero state
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Fork an independent stream (e.g. one per worker).
+    pub fn fork(&mut self, label: &str) -> Self {
+        let seed = self.next_u64();
+        Self::new(seed, label)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(hi >= lo);
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive), unbiased via rejection.
+    pub fn uniform_int(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        assert!(hi_inclusive >= lo, "empty integer range");
+        let span = hi_inclusive - lo + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64();
+        }
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    /// Exponential inter-arrival gap for a Poisson process of `rate`/s.
+    #[inline]
+    pub fn exp_gap(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0, "rate must be > 0");
+        // 1 - U in (0,1] avoids ln(0)
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn standard_normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.standard_normal()).exp()
+    }
+
+    /// Poisson sample: Knuth for small lambda, normal approximation for
+    /// large (accurate enough for workload round counts).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        let lambda = lambda.max(0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = lambda + lambda.sqrt() * self.standard_normal();
+            v.round().max(0.0) as u64
+        }
+    }
+
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p.clamp(0.0, 1.0)
+    }
+
+    /// Pick an index in `0..n` uniformly.
+    #[inline]
+    pub fn pick(&mut self, n: usize) -> usize {
+        assert!(n > 0, "pick from empty range");
+        self.uniform_int(0, (n - 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_label() {
+        let mut a = SimRng::new(42, "arrivals");
+        let mut b = SimRng::new(42, "arrivals");
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn labels_give_independent_streams() {
+        let mut a = SimRng::new(42, "arrivals");
+        let mut b = SimRng::new(42, "lengths");
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_range_and_covers() {
+        let mut r = SimRng::new(7, "u");
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            let v = r.uniform_int(3, 7);
+            assert!((3..=7).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 7;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn exp_gap_mean_close_to_inverse_rate() {
+        let mut r = SimRng::new(7, "exp");
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exp_gap(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SimRng::new(9, "n");
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.standard_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = SimRng::new(7, "poisson");
+        for lambda in [3.5, 80.0] {
+            let n = 30_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!((mean - lambda).abs() / lambda < 0.05, "lambda={lambda} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = SimRng::new(11, "ln");
+        let n = 50_000;
+        let mut v: Vec<f64> = (0..n).map(|_| r.lognormal(100f64.ln(), 1.0)).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let med = v[n / 2];
+        assert!((med - 100.0).abs() < 5.0, "median={med}");
+    }
+
+    #[test]
+    fn fork_is_deterministic_and_distinct() {
+        let mut a = SimRng::new(1, "root");
+        let mut b = SimRng::new(1, "root");
+        let mut fa = a.fork("w0");
+        let mut fb = b.fork("w0");
+        assert_eq!(fa.next_u64(), fb.next_u64());
+        let mut fc = a.fork("w1");
+        assert_ne!(fa.next_u64(), fc.next_u64());
+    }
+
+    #[test]
+    fn gen_bool_probability() {
+        let mut r = SimRng::new(5, "b");
+        let n = 50_000;
+        let hits = (0..n).filter(|_| r.gen_bool(0.3)).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.3).abs() < 0.01, "frac={frac}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Small in-tree utilities replacing unavailable third-party crates
+//! (this build environment is offline; see Cargo.toml).
+
+pub mod json;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Relative-tolerance float comparison for tests.
+pub fn close(a: f64, b: f64, rtol: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    let scale = a.abs().max(b.abs()).max(1e-300);
+    (a - b).abs() / scale <= rtol
+}
+
+/// Assert two floats agree to a relative tolerance.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $rtol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        assert!(
+            $crate::util::close(a, b, $rtol),
+            "assert_close failed: {a} vs {b} (rtol {})",
+            $rtol
+        );
+    }};
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-9)
+    };
+}
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique scratch directory removed on drop (tempfile replacement).
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> std::io::Result<Self> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "tokensim-{}-{}-{n}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_handles_zero_and_scale() {
+        assert!(close(0.0, 0.0, 1e-9));
+        assert!(close(1e12, 1e12 * (1.0 + 1e-10), 1e-9));
+        assert!(!close(1.0, 1.1, 1e-3));
+    }
+
+    #[test]
+    fn tempdir_lifecycle() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(p.join("x"), "y").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists(), "removed on drop");
+    }
+}

@@ -1,0 +1,194 @@
+//! Multi-round conversation workloads (the Fig 14 memory-cache study).
+//!
+//! "The conversation lengths are generated with a mean length following
+//! a Poisson distribution. To mimic a realistic chatbot scenario, half
+//! of the requests are single-round, while the other half involves two
+//! to seven rounds." Rounds after the first arrive a think-time after
+//! the previous round finishes; each round's prompt is the full history
+//! (previous prompt + previous output + new user text).
+
+
+use super::{ArrivalProcess, LengthDistribution};
+use crate::sim::SimRng;
+
+/// Declarative multi-round workload description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConversationSpec {
+    /// Number of conversations to generate.
+    pub num_conversations: usize,
+    /// Conversation arrival rate (first rounds), per second.
+    pub qps: f64,
+    pub arrival: ArrivalProcess,
+    /// Fresh user-text length per round.
+    pub prompt_len: LengthDistribution,
+    pub output_len: LengthDistribution,
+    /// Fraction of single-round conversations (paper: 0.5).
+    pub single_round_fraction: f64,
+    /// Multi-round conversations draw rounds uniformly from this range
+    /// (paper: 2..=7).
+    pub rounds_min: u32,
+    pub rounds_max: u32,
+    /// Mean think time between a round finishing and the next arriving.
+    pub think_time_mean: f64,
+    pub seed: u64,
+}
+
+impl ConversationSpec {
+    /// The Fig-14 chatbot scenario with mean input/output lengths.
+    pub fn chatbot(num_conversations: usize, qps: f64, input_mean: u32, output_mean: u32) -> Self {
+        Self {
+            num_conversations,
+            qps,
+            arrival: ArrivalProcess::Poisson,
+            prompt_len: LengthDistribution::Uniform {
+                min: (input_mean / 2).max(1),
+                max: input_mean + input_mean / 2,
+            },
+            output_len: LengthDistribution::Uniform {
+                min: (output_mean / 2).max(1),
+                max: output_mean + output_mean / 2,
+            },
+            single_round_fraction: 0.5,
+            rounds_min: 2,
+            rounds_max: 7,
+            think_time_mean: 5.0,
+            seed: 0xBEEF,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Materialize the conversation plans.
+    pub fn generate(&self) -> Vec<ConversationWorkload> {
+        let mut arrival_rng = SimRng::new(self.seed, "conv-arrivals");
+        let mut len_rng = SimRng::new(self.seed, "conv-lengths");
+        let mut t = 0.0;
+        (0..self.num_conversations)
+            .map(|id| {
+                t += self.arrival.next_gap(self.qps, &mut arrival_rng);
+                let rounds = if len_rng.gen_bool(self.single_round_fraction) {
+                    1
+                } else {
+                    len_rng.uniform_int(self.rounds_min as u64, self.rounds_max as u64) as u32
+                };
+                let plans = (0..rounds)
+                    .map(|_| RoundPlan {
+                        user_tokens: self.prompt_len.sample(&mut len_rng),
+                        output_tokens: self.output_len.sample(&mut len_rng),
+                        think_time: if self.think_time_mean > 0.0 {
+                            len_rng.exp_gap(1.0 / self.think_time_mean)
+                        } else {
+                            0.0
+                        },
+                    })
+                    .collect();
+                ConversationWorkload {
+                    id,
+                    first_arrival: t,
+                    rounds: plans,
+                }
+            })
+            .collect()
+    }
+}
+
+/// One planned round of a conversation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundPlan {
+    /// New user text this round (excluding history).
+    pub user_tokens: u32,
+    pub output_tokens: u32,
+    /// Gap between the previous round finishing and this round arriving.
+    pub think_time: f64,
+}
+
+/// A materialized conversation: the driver replays rounds, computing
+/// each round's full prompt length from the history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConversationWorkload {
+    pub id: usize,
+    pub first_arrival: f64,
+    pub rounds: Vec<RoundPlan>,
+}
+
+impl ConversationWorkload {
+    /// Prompt length of `round` = all previous prompts + outputs + the
+    /// new user text.
+    pub fn prompt_len_of_round(&self, round: usize) -> u32 {
+        let history: u32 = self.rounds[..round]
+            .iter()
+            .map(|r| r.user_tokens + r.output_tokens)
+            .sum();
+        history + self.rounds[round].user_tokens
+    }
+
+    /// Total requests across all conversations in a workload.
+    pub fn total_rounds(convs: &[ConversationWorkload]) -> usize {
+        convs.iter().map(|c| c.rounds.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ConversationSpec {
+        ConversationSpec::chatbot(2000, 10.0, 128, 64)
+    }
+
+    #[test]
+    fn half_single_round() {
+        let convs = spec().generate();
+        let single = convs.iter().filter(|c| c.rounds.len() == 1).count();
+        let frac = single as f64 / convs.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn multi_round_counts_in_range() {
+        let convs = spec().generate();
+        for c in &convs {
+            if c.rounds.len() > 1 {
+                assert!((2..=7).contains(&c.rounds.len()));
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_grows_with_history() {
+        let convs = spec().generate();
+        let multi = convs.iter().find(|c| c.rounds.len() >= 3).unwrap();
+        let p0 = multi.prompt_len_of_round(0);
+        let p1 = multi.prompt_len_of_round(1);
+        let p2 = multi.prompt_len_of_round(2);
+        assert!(p1 > p0 && p2 > p1);
+        // round 1 prompt includes round 0's user + output text
+        assert_eq!(
+            p1,
+            multi.rounds[0].user_tokens
+                + multi.rounds[0].output_tokens
+                + multi.rounds[1].user_tokens
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = spec().generate();
+        let b = spec().generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn think_times_positive_mean() {
+        let convs = spec().generate();
+        let gaps: Vec<f64> = convs
+            .iter()
+            .flat_map(|c| c.rounds.iter().map(|r| r.think_time))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 5.0).abs() < 0.5, "mean={mean}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Arrival processes and token-length distributions.
+
+
+use crate::sim::SimRng;
+
+/// Request arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process: exponential inter-arrival gaps.
+    Poisson,
+    /// Deterministic equal spacing (1/qps).
+    Uniform,
+    /// Gamma-distributed gaps with the given coefficient of variation
+    /// (cv > 1 = burstier than Poisson; DistServe's workload knob).
+    Gamma { cv: f64 },
+    /// All requests arrive at t = 0 (offline / batch mode).
+    Burst,
+}
+
+impl ArrivalProcess {
+    /// Sample the next inter-arrival gap for rate `qps`.
+    pub fn next_gap(&self, qps: f64, rng: &mut SimRng) -> f64 {
+        assert!(qps > 0.0, "qps must be positive");
+        match self {
+            ArrivalProcess::Poisson => rng.exp_gap(qps),
+            ArrivalProcess::Uniform => 1.0 / qps,
+            ArrivalProcess::Gamma { cv } => {
+                // Gamma with mean 1/qps, cv = sigma/mean: shape k = 1/cv^2.
+                let k = 1.0 / (cv * cv);
+                let theta = 1.0 / (qps * k);
+                // sum-of-exponentials for integer k, Marsaglia-Tsang
+                // otherwise is overkill here: use the simple
+                // Wilson-Hilferty-ish approximation via normals.
+                let mut x = 0.0;
+                let ki = k.floor() as u64;
+                for _ in 0..ki {
+                    x += rng.exp_gap(1.0);
+                }
+                let frac = k - ki as f64;
+                if frac > 1e-9 {
+                    // Ahrens-Dieter for the fractional part.
+                    loop {
+                        let u = rng.uniform(0.0, 1.0);
+                        let v = rng.uniform(0.0, 1.0);
+                        let b = (std::f64::consts::E + frac) / std::f64::consts::E;
+                        let p = b * u;
+                        if p <= 1.0 {
+                            let cand = p.powf(1.0 / frac);
+                            if v <= (-cand).exp() {
+                                x += cand;
+                                break;
+                            }
+                        } else {
+                            let cand = -((b - p) / frac).ln();
+                            if v <= cand.powf(frac - 1.0) {
+                                x += cand;
+                                break;
+                            }
+                        }
+                    }
+                }
+                x * theta
+            }
+            ArrivalProcess::Burst => 0.0,
+        }
+    }
+}
+
+/// Token-length distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDistribution {
+    Fixed(u32),
+    Uniform {
+        min: u32,
+        max: u32,
+    },
+    /// Lognormal with the given median (= exp(mu)) and log-sigma,
+    /// clamped to [min, max] — the ShareGPT-fit shape.
+    LogNormal {
+        median: f64,
+        sigma: f64,
+        min: u32,
+        max: u32,
+    },
+}
+
+impl LengthDistribution {
+    pub fn sample(&self, rng: &mut SimRng) -> u32 {
+        match *self {
+            LengthDistribution::Fixed(n) => n.max(1),
+            LengthDistribution::Uniform { min, max } => {
+                assert!(min <= max, "uniform min > max");
+                rng.uniform_int(min.max(1) as u64, max as u64) as u32
+            }
+            LengthDistribution::LogNormal {
+                median,
+                sigma,
+                min,
+                max,
+            } => {
+                let v = rng.lognormal(median.ln(), sigma);
+                (v.round() as u32).clamp(min.max(1), max)
+            }
+        }
+    }
+
+    /// Expected value (used for sizing heuristics; clamping ignored for
+    /// the lognormal tail so treat as an approximation).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDistribution::Fixed(n) => n as f64,
+            LengthDistribution::Uniform { min, max } => (min + max) as f64 / 2.0,
+            LengthDistribution::LogNormal { median, sigma, .. } => {
+                median * (sigma * sigma / 2.0).exp()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gap_mean() {
+        let mut rng = SimRng::new(1, "t");
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| ArrivalProcess::Poisson.next_gap(8.0, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.125).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn uniform_process_is_deterministic() {
+        let mut rng = SimRng::new(1, "t");
+        let g = ArrivalProcess::Uniform.next_gap(4.0, &mut rng);
+        assert_eq!(g, 0.25);
+    }
+
+    #[test]
+    fn gamma_mean_and_burstiness() {
+        let mut rng = SimRng::new(1, "t");
+        let p = ArrivalProcess::Gamma { cv: 2.0 };
+        let n = 50_000;
+        let gaps: Vec<f64> = (0..n).map(|_| p.next_gap(10.0, &mut rng)).collect();
+        let mean = gaps.iter().sum::<f64>() / n as f64;
+        assert!((mean - 0.1).abs() < 0.01, "mean={mean}");
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 2.0).abs() < 0.2, "cv={cv}");
+    }
+
+    #[test]
+    fn burst_arrives_at_zero() {
+        let mut rng = SimRng::new(1, "t");
+        assert_eq!(ArrivalProcess::Burst.next_gap(3.0, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn lognormal_respects_clamp() {
+        let d = LengthDistribution::LogNormal {
+            median: 100.0,
+            sigma: 2.0,
+            min: 8,
+            max: 512,
+        };
+        let mut rng = SimRng::new(2, "len");
+        for _ in 0..10_000 {
+            let v = d.sample(&mut rng);
+            assert!((8..=512).contains(&v));
+        }
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let d = LengthDistribution::LogNormal {
+            median: 100.0,
+            sigma: 1.0,
+            min: 1,
+            max: 100_000,
+        };
+        let mut rng = SimRng::new(3, "len");
+        let mut v: Vec<u32> = (0..20_000).map(|_| d.sample(&mut rng)).collect();
+        v.sort_unstable();
+        let med = v[v.len() / 2];
+        assert!((85..115).contains(&med), "median={med}");
+    }
+
+    #[test]
+    fn fixed_never_zero() {
+        let mut rng = SimRng::new(4, "len");
+        assert_eq!(LengthDistribution::Fixed(0).sample(&mut rng), 1);
+    }
+
+    #[test]
+    fn means() {
+        assert_eq!(LengthDistribution::Fixed(10).mean(), 10.0);
+        assert_eq!(LengthDistribution::Uniform { min: 0, max: 10 }.mean(), 5.0);
+        let ln = LengthDistribution::LogNormal {
+            median: 100.0,
+            sigma: 1.0,
+            min: 1,
+            max: 1 << 20,
+        };
+        assert!((ln.mean() - 100.0 * (0.5f64).exp()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Request-trace import/export (JSONL), so real dataset traces can be
+//! replayed when available and synthetic workloads can be archived.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::request::Request;
+use crate::util::json::Json;
+
+/// One trace line: `{"arrival": 1.25, "prompt": 96, "output": 128}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    pub arrival: f64,
+    pub prompt: u32,
+    pub output: u32,
+    pub conversation: Option<usize>,
+    pub round: Option<usize>,
+}
+
+impl TraceEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            arrival: j.req("arrival")?.as_f64().context("'arrival' must be a number")?,
+            prompt: j.req("prompt")?.as_u64().context("'prompt' must be an integer")? as u32,
+            output: j.req("output")?.as_u64().context("'output' must be an integer")? as u32,
+            conversation: j.get("conversation").and_then(Json::as_u64).map(|v| v as usize),
+            round: j.get("round").and_then(Json::as_u64).map(|v| v as usize),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("arrival", Json::num(self.arrival)),
+            ("prompt", Json::num(self.prompt as f64)),
+            ("output", Json::num(self.output as f64)),
+        ];
+        if let Some(c) = self.conversation {
+            pairs.push(("conversation", Json::num(c as f64)));
+        }
+        if let Some(r) = self.round {
+            pairs.push(("round", Json::num(r as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Load a JSONL trace into a request table.
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<Request>> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening trace {}", path.as_ref().display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut requests = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let entry = TraceEntry::from_json(&Json::parse(&line)?)
+            .with_context(|| format!("trace line {}", lineno + 1))?;
+        let id = requests.len();
+        requests.push(Request::new(
+            id,
+            entry.conversation.unwrap_or(id),
+            entry.round.unwrap_or(0),
+            entry.prompt.max(1),
+            entry.output.max(1),
+            entry.arrival,
+        ));
+    }
+    anyhow::ensure!(!requests.is_empty(), "trace is empty");
+    requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    Ok(requests)
+}
+
+/// Save a request table as a JSONL trace.
+pub fn save_trace(path: impl AsRef<Path>, requests: &[Request]) -> Result<()> {
+    let mut file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating trace {}", path.as_ref().display()))?;
+    for r in requests {
+        let entry = TraceEntry {
+            arrival: r.arrival,
+            prompt: r.prompt_len,
+            output: r.output_len,
+            conversation: Some(r.conversation),
+            round: Some(r.round),
+        };
+        writeln!(file, "{}", entry.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("trace.jsonl");
+        let reqs = WorkloadSpec::sharegpt(50, 4.0).generate();
+        save_trace(&path, &reqs).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(back.len(), 50);
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sorts_by_arrival() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("trace.jsonl");
+        std::fs::write(
+            &path,
+            "{\"arrival\": 5.0, \"prompt\": 10, \"output\": 10}\n\
+             {\"arrival\": 1.0, \"prompt\": 20, \"output\": 20}\n",
+        )
+        .unwrap();
+        let reqs = load_trace(&path).unwrap();
+        assert_eq!(reqs[0].prompt_len, 20);
+        assert_eq!(reqs[1].prompt_len, 10);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("empty.jsonl");
+        std::fs::write(&path, "\n").unwrap();
+        assert!(load_trace(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("bad.jsonl");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load_trace(&path).is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Integration tests: whole-stack behaviour across the runtime (PJRT
+//! artifacts), cost models, scheduler, memory manager and driver.
+
+use tokensim::cluster::Simulation;
+use tokensim::compute::{
+    AnalyticCost, BatchDesc, ComputeModel, CostModelKind, HloCost, TableCost,
+};
+use tokensim::config::{PoolCacheConfig, SimulationConfig};
+use tokensim::hardware::{HardwareSpec, LinkSpec};
+use tokensim::metrics::MetricSet;
+use tokensim::model::ModelSpec;
+use tokensim::workload::{ConversationSpec, WorkloadSpec};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = tokensim::runtime::default_artifacts_dir();
+    dir.join("manifest.json")
+        .exists()
+        .then(|| dir.to_str().unwrap().to_string())
+}
+
+fn base_cfg(n: usize, qps: f64) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        WorkloadSpec::sharegpt(n, qps),
+    );
+    cfg.cost_model = CostModelKind::Analytic;
+    cfg
+}
+
+// ---- three-layer cross-validation -------------------------------------
+
+#[test]
+fn hlo_table_analytic_cost_models_agree() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let mut hlo = HloCost::load(&model, &hw, &dir).unwrap();
+    let mut analytic = AnalyticCost::new(&model, &hw);
+    let mut table = TableCost::build(&mut hlo, &model, &hw);
+
+    let mut batches = Vec::new();
+    for seed in 0..20u32 {
+        let mut b = BatchDesc::new();
+        let n = 1 + (seed * 13 % 90) as usize;
+        for i in 0..n {
+            let ctx = (seed * 31 + i as u32 * 97) % 4096;
+            let new = if i == 0 && seed % 3 == 0 { 256 } else { 1 };
+            b.push(ctx, new);
+        }
+        batches.push(b);
+    }
+    for b in &batches {
+        let t_h = hlo.iter_time(b);
+        let t_a = analytic.iter_time(b);
+        let t_t = table.iter_time(b);
+        let rel_ha = ((t_h - t_a) / t_a).abs();
+        let rel_ta = ((t_t - t_a) / t_a).abs();
+        assert!(rel_ha < 1e-3, "hlo vs analytic: {t_h} vs {t_a} ({rel_ha})");
+        assert!(rel_ta < 2e-3, "table vs analytic: {t_t} vs {t_a} ({rel_ta})");
+    }
+}
+
+#[test]
+fn simulation_identical_under_all_cost_models() {
+    // same workload through analytic / hlo / table cost models must give
+    // (near-)identical end-to-end results — the artifact IS the model.
+    let Some(_) = artifacts_dir() else {
+        return;
+    };
+    let mut reports = Vec::new();
+    for kind in [CostModelKind::Analytic, CostModelKind::Hlo, CostModelKind::Table] {
+        let mut cfg = base_cfg(120, 10.0);
+        cfg.cost_model = kind;
+        reports.push(Simulation::from_config(&cfg).run());
+    }
+    let base = MetricSet::new(&reports[0].records).latency_percentile(0.99);
+    for r in &reports[1..] {
+        let p99 = MetricSet::new(&r.records).latency_percentile(0.99);
+        let rel = ((p99 - base) / base).abs();
+        assert!(rel < 5e-3, "p99 drift across cost models: {p99} vs {base}");
+    }
+}
+
+// ---- end-to-end serving behaviour --------------------------------------
+
+#[test]
+fn all_requests_complete_with_sane_timestamps() {
+    let report = Simulation::from_config(&base_cfg(300, 20.0)).run();
+    assert_eq!(report.records.len(), 300);
+    for r in &report.records {
+        assert!(r.first_token >= r.arrival, "req {}", r.id);
+        assert!(r.finished >= r.first_token, "req {}", r.id);
+        assert!(r.max_token_gap >= 0.0);
+    }
+}
+
+#[test]
+fn saturation_appears_beyond_service_capacity() {
+    // throughput must plateau once offered load exceeds capacity
+    let mut prev = 0.0;
+    let mut plateaued = false;
+    for qps in [2.0, 8.0, 32.0, 128.0, 512.0, 2048.0] {
+        let report = Simulation::from_config(&base_cfg(250, qps)).run();
+        let thr = report.request_throughput();
+        if thr < prev * 1.05 {
+            plateaued = true;
+        }
+        prev = thr;
+    }
+    assert!(plateaued, "no saturation observed up to 2048 qps");
+}
+
+#[test]
+fn disaggregated_matches_unified_at_low_load_and_transfers_kv() {
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let workload = WorkloadSpec::fixed(60, 2.0, 128, 32);
+    let mut unified = SimulationConfig::single_worker(model.clone(), hw.clone(), workload.clone());
+    unified.cluster.workers[0].quantity = 2;
+    unified.cost_model = CostModelKind::Analytic;
+    let mut disagg = SimulationConfig::disaggregated(model, hw.clone(), 1, hw, 1, workload);
+    disagg.cost_model = CostModelKind::Analytic;
+
+    let ru = Simulation::from_config(&unified).run();
+    let rd = Simulation::from_config(&disagg).run();
+    assert_eq!(rd.records.len(), 60);
+    // at 2 qps both configurations are unloaded; latencies comparable
+    // (disagg pays the KV transfer, bounded by ~20%)
+    let (lu, ld) = (
+        MetricSet::new(&ru.records).latency_percentile(0.5),
+        MetricSet::new(&rd.records).latency_percentile(0.5),
+    );
+    assert!(
+        (ld - lu).abs() / lu < 0.25,
+        "unified p50 {lu} vs disagg p50 {ld}"
+    );
+}
+
+#[test]
+fn slow_interconnect_hurts_disaggregation() {
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let workload = WorkloadSpec::fixed(80, 4.0, 512, 32);
+    let mk = |link: LinkSpec| {
+        let mut cfg = SimulationConfig::disaggregated(
+            model.clone(),
+            hw.clone(),
+            1,
+            hw.clone(),
+            1,
+            workload.clone(),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        cfg.cluster.scheduler.interconnect = link;
+        Simulation::from_config(&cfg).run()
+    };
+    let fast = mk(LinkSpec::nvlink());
+    let slow = mk(LinkSpec::ethernet_100g());
+    let (pf, ps) = (
+        MetricSet::new(&fast.records).latency_percentile(0.5),
+        MetricSet::new(&slow.records).latency_percentile(0.5),
+    );
+    assert!(ps > pf, "ethernet p50 {ps} must exceed nvlink p50 {pf}");
+}
+
+#[test]
+fn yaml_config_roundtrips_through_run() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: continuous
+        max_batched_tokens: 4096
+        max_batch_size: 128
+workload:
+  num_requests: 40
+  qps: 8.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 16
+  seed: 3
+"#;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).run();
+    assert_eq!(report.records.len(), 40);
+}
+
+#[test]
+fn conversation_pool_cache_reduces_prefill_work() {
+    let convs = ConversationSpec::chatbot(150, 8.0, 128, 64).generate();
+    let run = |pool: Option<PoolCacheConfig>| {
+        let mut cfg = base_cfg(1, 1.0);
+        cfg.pool_cache = pool;
+        Simulation::from_conversations(&cfg, &convs).run()
+    };
+    let off = run(None);
+    let on = run(Some(PoolCacheConfig::with_capacity(1_000_000)));
+    assert_eq!(off.pool_hits, 0);
+    assert!(on.pool_hits > 0);
+    let cached_tokens: u64 = on.records.iter().map(|r| r.cached_prefix as u64).sum();
+    assert!(cached_tokens > 0);
+    // later rounds must see a TTFT win
+    let ttft = |recs: &[tokensim::metrics::RequestRecord]| {
+        let later: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.round > 0)
+            .map(|r| r.ttft())
+            .collect();
+        later.iter().sum::<f64>() / later.len() as f64
+    };
+    assert!(
+        ttft(&on.records) < ttft(&off.records),
+        "cached rounds must start faster"
+    );
+}
+
+#[test]
+fn static_batching_has_worse_tail_latency_under_load() {
+    use tokensim::scheduler::LocalPolicy;
+    let mk = |policy: LocalPolicy| {
+        let mut cfg = base_cfg(250, 12.0);
+        cfg.cluster.workers[0].local_scheduler = policy;
+        Simulation::from_config(&cfg).run()
+    };
+    let cont = mk(LocalPolicy::Continuous {
+        max_batched_tokens: 8192,
+        max_batch_size: Some(16),
+        mixed_batching: false,
+    });
+    let stat = mk(LocalPolicy::Static {
+        batch_size: 16,
+        max_linger: 2.0,
+    });
+    let (pc, ps) = (
+        MetricSet::new(&cont.records).mean_normalized_latency(),
+        MetricSet::new(&stat.records).mean_normalized_latency(),
+    );
+    assert!(pc < ps, "continuous {pc} must beat static {ps}");
+}
+
+#[test]
+fn trace_replay_reproduces_generated_workload() {
+    let dir = tokensim::util::TempDir::new().unwrap();
+    let path = dir.path().join("w.jsonl");
+    let cfg = base_cfg(60, 10.0);
+    let requests = cfg.workload.generate();
+    tokensim::workload::save_trace(&path, &requests).unwrap();
+    let replayed = tokensim::workload::load_trace(&path).unwrap();
+
+    let direct = Simulation::from_config(&cfg).run();
+    let replay = Simulation::from_requests(&cfg, replayed).run();
+    let (a, b) = (
+        MetricSet::new(&direct.records).latency_percentile(0.9),
+        MetricSet::new(&replay.records).latency_percentile(0.9),
+    );
+    assert!((a - b).abs() < 1e-9, "replay diverged: {a} vs {b}");
+}
+
+#[test]
+fn quarter_flops_decode_hardware_is_slower_end_to_end() {
+    let model = ModelSpec::llama2_7b();
+    let workload = WorkloadSpec::fixed(100, 16.0, 64, 128);
+    let mk = |hw: HardwareSpec| {
+        let mut cfg = SimulationConfig::disaggregated(
+            model.clone(),
+            HardwareSpec::a100_80g(),
+            1,
+            hw,
+            3,
+            workload.clone(),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        Simulation::from_config(&cfg).run()
+    };
+    let full = mk(HardwareSpec::a100_80g());
+    let quarter = mk(HardwareSpec::a100_quarter_flops());
+    assert!(
+        quarter.makespan >= full.makespan,
+        "quarter-FLOPS decode cannot be faster"
+    );
+}

@@ -1,0 +1,298 @@
+//! Randomized property tests (hand-rolled sweeps — proptest is not
+//! available in this offline build; see Cargo.toml). Each property runs
+//! across a deterministic seed sweep and asserts an invariant of the
+//! coordinator, scheduler, or memory manager.
+
+use std::collections::VecDeque;
+
+use tokensim::cluster::Simulation;
+use tokensim::compute::CostModelKind;
+use tokensim::config::SimulationConfig;
+use tokensim::hardware::HardwareSpec;
+use tokensim::memory::{AllocOutcome, PagedBlockManager, PoolCache};
+use tokensim::model::ModelSpec;
+use tokensim::request::Request;
+use tokensim::scheduler::{LocalPolicy, LocalSchedCtx};
+use tokensim::sim::SimRng;
+use tokensim::workload::{ArrivalProcess, LengthDistribution, WorkloadSpec};
+
+const SEEDS: std::ops::Range<u64> = 0..25;
+
+// ---- memory-manager invariants -----------------------------------------
+
+#[test]
+fn prop_block_manager_conserves_blocks() {
+    for seed in SEEDS {
+        let mut rng = SimRng::new(seed, "mem-prop");
+        let total = 1 + rng.uniform_int(1, 500);
+        let mut mem = PagedBlockManager::with_blocks(total, 16, 1024);
+        let mut live: Vec<usize> = Vec::new();
+        for step in 0..300 {
+            match rng.pick(3) {
+                0 => {
+                    let rid = (seed as usize) * 1000 + step;
+                    let tokens = rng.uniform_int(1, 900) as u32;
+                    if mem.reserve(rid, tokens) == AllocOutcome::Ok {
+                        live.push(rid);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let rid = live.swap_remove(rng.pick(live.len()));
+                        mem.release(rid);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let rid = live[rng.pick(live.len())];
+                        let grown = mem.blocks_held(rid) as u32 * 16 + rng.uniform_int(1, 64) as u32;
+                        let _ = mem.reserve(rid, grown);
+                    }
+                }
+            }
+            assert!(mem.check_invariants(), "seed {seed} step {step}");
+            assert!(mem.free_blocks() <= mem.total_blocks());
+        }
+    }
+}
+
+#[test]
+fn prop_pool_cache_never_exceeds_capacity() {
+    for seed in SEEDS {
+        let mut rng = SimRng::new(seed, "pool-prop");
+        let cap = 1 + rng.uniform_int(1, 200);
+        let mut pool = PoolCache::new(cap, 16);
+        for _ in 0..500 {
+            let conv = rng.pick(40);
+            match rng.pick(3) {
+                0 => pool.store(conv, rng.uniform_int(1, 4000) as u32),
+                1 => {
+                    let _ = pool.lookup(conv, rng.uniform_int(1, 4000) as u32);
+                }
+                _ => pool.invalidate(conv),
+            }
+            assert!(pool.check_invariants(), "seed {seed}");
+            assert!(pool.used_blocks() <= cap);
+        }
+    }
+}
+
+// ---- scheduler invariants ------------------------------------------------
+
+fn random_policy(rng: &mut SimRng) -> LocalPolicy {
+    match rng.pick(3) {
+        0 => LocalPolicy::Continuous {
+            max_batched_tokens: 256 + rng.uniform_int(0, 8192) as u32,
+            max_batch_size: if rng.gen_bool(0.5) {
+                Some(1 + rng.uniform_int(0, 64) as u32)
+            } else {
+                None
+            },
+            mixed_batching: rng.gen_bool(0.3),
+        },
+        1 => LocalPolicy::Static {
+            batch_size: 1 + rng.uniform_int(0, 32) as u32,
+            max_linger: rng.uniform(0.0, 2.0),
+        },
+        _ => LocalPolicy::continuous_default(),
+    }
+}
+
+#[test]
+fn prop_batch_plans_respect_memory_and_phases() {
+    for seed in SEEDS {
+        let mut rng = SimRng::new(seed, "sched-prop");
+        let policy = random_policy(&mut rng);
+        let n = 1 + rng.pick(40);
+        let mut requests: Vec<Request> = (0..n)
+            .map(|i| {
+                Request::new(
+                    i,
+                    i,
+                    0,
+                    1 + rng.uniform_int(0, 512) as u32,
+                    1 + rng.uniform_int(0, 64) as u32,
+                    0.0,
+                )
+            })
+            .collect();
+        let mut waiting: VecDeque<usize> = (0..n).collect();
+        let mut running: Vec<usize> = Vec::new();
+        let mut mem = PagedBlockManager::with_blocks(1 + rng.uniform_int(1, 400), 16, 1024);
+
+        for step in 0..50 {
+            let mut ctx = LocalSchedCtx {
+                requests: &mut requests,
+                waiting: &mut waiting,
+                running: &mut running,
+                mem: &mut mem,
+                now: step as f64,
+                draining: true,
+                oldest_wait: Some(0.0),
+            };
+            let plan = policy.form_batch(&mut ctx);
+            // members unique and consistent with batch slots
+            let mut seen = std::collections::HashSet::new();
+            for &rid in &plan.members {
+                assert!(seen.insert(rid), "duplicate member {rid} (seed {seed})");
+            }
+            assert_eq!(plan.members.len(), plan.batch.len());
+            // every member has a memory reservation covering its KV
+            for (slot, &rid) in plan.members.iter().enumerate() {
+                let tokens = plan.batch.ctx[slot] + plan.batch.new[slot];
+                assert!(
+                    mem.blocks_held(rid) >= (tokens as u64).div_ceil(16),
+                    "seed {seed}: member {rid} under-reserved"
+                );
+            }
+            assert!(mem.check_invariants());
+            if plan.is_empty() {
+                break;
+            }
+            // emulate iteration completion
+            let mut finished = Vec::new();
+            for (slot, &rid) in plan.members.iter().enumerate() {
+                let new = plan.batch.new[slot];
+                let r = &mut requests[rid];
+                match r.phase {
+                    tokensim::request::Phase::Prefill => {
+                        r.prompt_done += new;
+                        r.ctx_in_cache = r.prompt_done;
+                        if r.prefill_done() {
+                            r.generated += 1;
+                            r.phase = tokensim::request::Phase::Decode;
+                        }
+                    }
+                    tokensim::request::Phase::Decode => {
+                        r.generated += 1;
+                        r.ctx_in_cache += 1;
+                    }
+                    _ => {}
+                }
+                if r.done() {
+                    finished.push(rid);
+                }
+            }
+            for rid in finished {
+                requests[rid].phase = tokensim::request::Phase::Finished;
+                running.retain(|&x| x != rid);
+                mem.release(rid);
+            }
+        }
+    }
+}
+
+// ---- whole-simulation invariants -----------------------------------------
+
+fn random_cfg(seed: u64) -> SimulationConfig {
+    let mut rng = SimRng::new(seed, "cfg-prop");
+    let n = 20 + rng.pick(60);
+    let qps = rng.uniform(1.0, 40.0);
+    let workload = WorkloadSpec {
+        num_requests: n,
+        qps,
+        arrival: match rng.pick(3) {
+            0 => ArrivalProcess::Poisson,
+            1 => ArrivalProcess::Uniform,
+            _ => ArrivalProcess::Gamma { cv: 2.0 },
+        },
+        prompt_len: LengthDistribution::Uniform {
+            min: 1 + rng.uniform_int(0, 32) as u32,
+            max: 64 + rng.uniform_int(0, 512) as u32,
+        },
+        output_len: LengthDistribution::Uniform {
+            min: 1,
+            max: 1 + rng.uniform_int(0, 128) as u32,
+        },
+        seed,
+    };
+    let mut cfg = if rng.gen_bool(0.4) {
+        SimulationConfig::disaggregated(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            1,
+            HardwareSpec::a100_80g(),
+            1 + rng.pick(3) as u32,
+            workload,
+        )
+    } else {
+        SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            workload,
+        )
+    };
+    cfg.cost_model = CostModelKind::Analytic;
+    // occasionally a tight memory to provoke preemptions
+    if rng.gen_bool(0.3) {
+        for w in &mut cfg.cluster.workers {
+            w.hardware.mem_cap = 16e9;
+        }
+    }
+    cfg
+}
+
+#[test]
+fn prop_every_request_finishes_exactly_once() {
+    for seed in SEEDS {
+        let cfg = random_cfg(seed);
+        let n = cfg.workload.num_requests;
+        let report = Simulation::from_config(&cfg).run();
+        assert_eq!(report.records.len(), n, "seed {seed}");
+        let mut ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "seed {seed}: duplicate completions");
+    }
+}
+
+#[test]
+fn prop_causality_and_token_accounting() {
+    for seed in SEEDS {
+        let cfg = random_cfg(seed);
+        let requests = cfg.workload.generate();
+        let report = Simulation::from_config(&cfg).run();
+        for (rec, req) in report.records.iter().zip(&requests) {
+            assert_eq!(rec.prompt_len, req.prompt_len, "seed {seed}");
+            assert_eq!(rec.output_len, req.output_len, "seed {seed}");
+            assert!(rec.first_token >= rec.arrival, "seed {seed}");
+            assert!(rec.finished >= rec.first_token, "seed {seed}");
+            // a request with one output token finishes at its first token
+            if rec.output_len == 1 {
+                assert!((rec.finished - rec.first_token).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_runs_are_bit_deterministic() {
+    for seed in SEEDS.step_by(5) {
+        let cfg = random_cfg(seed);
+        let a = Simulation::from_config(&cfg).run();
+        let b = Simulation::from_config(&cfg).run();
+        assert_eq!(a.records, b.records, "seed {seed}");
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+}
+
+#[test]
+fn prop_higher_load_never_reduces_makespan() {
+    // for a fixed request set, raising qps compresses arrivals; the
+    // system cannot finish *later* at lower load than at absurd load
+    for seed in SEEDS.step_by(5) {
+        let mut cfg = random_cfg(seed);
+        cfg.workload.arrival = ArrivalProcess::Uniform;
+        cfg.workload.qps = 2.0;
+        let slow = Simulation::from_config(&cfg).run();
+        cfg.workload.qps = 2000.0;
+        let fast = Simulation::from_config(&cfg).run();
+        // same total work, arrivals compressed => completion not later
+        assert!(
+            fast.sim_end <= slow.sim_end + 1e-6,
+            "seed {seed}: {} vs {}",
+            fast.sim_end,
+            slow.sim_end
+        );
+    }
+}
