@@ -1,5 +1,6 @@
 //! Scheduler micro-benchmarks: batch formation under load (the
-//! per-iteration L3 control-path cost) and global dispatch.
+//! per-iteration L3 control-path cost) and global dispatch, across the
+//! built-in policy plugins.
 
 #[path = "harness.rs"]
 mod harness;
@@ -10,7 +11,10 @@ use harness::{bench, budget, sink};
 use tokensim::memory::PagedBlockManager;
 use tokensim::model::ModelSpec;
 use tokensim::request::Request;
-use tokensim::scheduler::{GlobalPolicy, GlobalSchedulerState, LocalPolicy, LocalSchedCtx, WorkerView};
+use tokensim::scheduler::{
+    ChunkedPrefill, ContinuousBatching, GlobalScheduler, LeastLoaded, LocalSchedCtx,
+    LocalScheduler, PowerOfTwoChoices, RoundRobin, ShortestJobFirst, WorkerView,
+};
 use tokensim::sim::SimRng;
 
 fn make_requests(n: usize) -> Vec<Request> {
@@ -19,49 +23,22 @@ fn make_requests(n: usize) -> Vec<Request> {
         .collect()
 }
 
-fn main() {
-    println!("== scheduler_bench ==");
-    let model = ModelSpec::llama2_7b();
-    let _ = &model;
-
-    // continuous batch formation with 256 running decodes
-    bench("local/continuous_form_batch_256_running", budget(), || {
-        let mut requests = make_requests(256);
-        let mut waiting: VecDeque<usize> = VecDeque::new();
-        let mut running: Vec<usize> = (0..256).collect();
-        for r in requests.iter_mut() {
+/// Run one batch-formation case: `running` decodes + `waiting` fresh
+/// prefills, rebuilt per iteration.
+fn bench_local(name: &str, mut policy: Box<dyn LocalScheduler>, n_running: usize, n_waiting: usize) {
+    bench(name, budget(), move || {
+        let total = n_running + n_waiting;
+        let mut requests = make_requests(total);
+        let mut waiting: VecDeque<usize> = (n_running..total).collect();
+        let mut running: Vec<usize> = (0..n_running).collect();
+        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
+        for rid in 0..n_running {
+            let r = &mut requests[rid];
             r.phase = tokensim::request::Phase::Decode;
             r.prompt_done = r.prompt_len;
             r.ctx_in_cache = r.prompt_len;
+            mem.reserve(rid, r.ctx_in_cache + 1);
         }
-        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
-        for (i, r) in requests.iter().enumerate() {
-            mem.reserve(i, r.ctx_in_cache + 1);
-        }
-        let policy = LocalPolicy::continuous_default();
-        let mut ctx = LocalSchedCtx {
-            requests: &mut requests,
-            waiting: &mut waiting,
-            running: &mut running,
-            mem: &mut mem,
-            now: 0.0,
-            draining: false,
-            oldest_wait: None,
-        };
-        sink(policy.form_batch(&mut ctx).members.len());
-    });
-
-    // admission of 64 fresh prefills
-    bench("local/continuous_admit_64_prefills", budget(), || {
-        let mut requests = make_requests(64);
-        let mut waiting: VecDeque<usize> = (0..64).collect();
-        let mut running: Vec<usize> = Vec::new();
-        let mut mem = PagedBlockManager::with_blocks(100_000, 16, 1024);
-        let policy = LocalPolicy::Continuous {
-            max_batched_tokens: 1 << 20,
-            max_batch_size: None,
-            mixed_batching: false,
-        };
         let mut ctx = LocalSchedCtx {
             requests: &mut requests,
             waiting: &mut waiting,
@@ -73,6 +50,62 @@ fn main() {
         };
         sink(policy.form_batch(&mut ctx).members.len());
     });
+}
+
+fn main() {
+    println!("== scheduler_bench ==");
+    let model = ModelSpec::llama2_7b();
+    let _ = &model;
+
+    // continuous batch formation with 256 running decodes
+    bench_local(
+        "local/continuous_form_batch_256_running",
+        Box::new(ContinuousBatching::vllm_default()),
+        256,
+        0,
+    );
+
+    // admission of 64 fresh prefills, per policy family
+    bench_local(
+        "local/continuous_admit_64_prefills",
+        Box::new(ContinuousBatching {
+            max_batched_tokens: 1 << 20,
+            max_batch_size: None,
+            mixed_batching: false,
+        }),
+        0,
+        64,
+    );
+    bench_local(
+        "local/chunked_prefill_admit_64_prefills",
+        Box::new(ChunkedPrefill {
+            chunk_tokens: 1 << 20,
+            max_batch_size: None,
+        }),
+        0,
+        64,
+    );
+    bench_local(
+        "local/sjf_admit_64_prefills",
+        Box::new(ShortestJobFirst {
+            max_batched_tokens: 1 << 20,
+            max_batch_size: None,
+            starvation_age: Some(10.0),
+        }),
+        0,
+        64,
+    );
+
+    // mixed steady state: 128 decodes + 32 waiting, chunked
+    bench_local(
+        "local/chunked_prefill_mixed_128d_32w",
+        Box::new(ChunkedPrefill {
+            chunk_tokens: 512,
+            max_batch_size: None,
+        }),
+        128,
+        32,
+    );
 
     // global dispatch across an 8-worker cluster
     let views: Vec<WorkerView> = (0..8)
@@ -90,16 +123,20 @@ fn main() {
         .collect();
     let requests = make_requests(64);
     let new_ids: Vec<usize> = (0..64).collect();
-    for (name, policy) in [
-        ("global/round_robin_dispatch_64", GlobalPolicy::RoundRobin),
-        ("global/load_aware_dispatch_64", GlobalPolicy::LoadAware),
-    ] {
-        let mut state = GlobalSchedulerState::new(8);
+    let globals: Vec<(&str, Box<dyn GlobalScheduler>)> = vec![
+        ("global/round_robin_dispatch_64", Box::new(RoundRobin::default())),
+        ("global/least_loaded_dispatch_64", Box::new(LeastLoaded::default())),
+        (
+            "global/power_of_two_dispatch_64",
+            Box::new(PowerOfTwoChoices::default()),
+        ),
+    ];
+    for (name, mut policy) in globals {
         let mut rng = SimRng::new(1, "bench");
         bench(name, budget(), || {
             sink(
                 policy
-                    .dispatch(&mut state, &new_ids, &[], &views, &requests, &mut rng)
+                    .dispatch(&new_ids, &[], &views, &requests, &mut rng)
                     .len(),
             );
         });

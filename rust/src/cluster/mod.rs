@@ -16,7 +16,7 @@ use crate::metrics::{MemorySample, MemoryTimeline, RequestRecord, SloSpec};
 use crate::model::ModelSpec;
 use crate::network::{CommModel, Schedule};
 use crate::request::{Phase, Request, RequestId};
-use crate::scheduler::{GlobalPolicy, GlobalSchedulerState, LocalSchedCtx, WorkerView};
+use crate::scheduler::{GlobalScheduler, LocalSchedCtx, WorkerView};
 use crate::sim::{EventPayload, EventQueue, SimRng, SimTime};
 use crate::workload::ConversationWorkload;
 
@@ -31,8 +31,7 @@ pub struct Simulation {
     requests: Vec<Request>,
     workers: Vec<Worker>,
     model: ModelSpec,
-    global: GlobalPolicy,
-    gstate: GlobalSchedulerState,
+    global: Box<dyn GlobalScheduler>,
     comm: CommModel,
     pool: PoolCache,
     pool_comm: CommModel,
@@ -145,12 +144,18 @@ impl Simulation {
                     Some(f) => f(&model, &hw, id),
                     None => build_cost_model(cfg.cost_model, &model, &hw, &cfg.artifacts_dir),
                 };
+                // every worker gets its own policy instance (policies
+                // may keep cross-iteration state)
+                let local = wc
+                    .local_scheduler
+                    .build_local()
+                    .unwrap_or_else(|e| panic!("worker {id}: {e:#}"));
                 workers.push(Worker::new(
                     id,
                     hw.clone(),
                     wc.run_prefill,
                     wc.run_decode,
-                    wc.local_scheduler.clone(),
+                    local,
                     mem,
                     cost,
                 ));
@@ -192,14 +197,18 @@ impl Simulation {
             queue.schedule_at(0.0, EventPayload::SampleTick);
         }
 
-        let n_workers = workers.len();
+        let global = cfg
+            .cluster
+            .scheduler
+            .global
+            .build_global()
+            .unwrap_or_else(|e| panic!("global scheduler: {e:#}"));
         Self {
             queue,
             requests,
             workers,
             model,
-            global: cfg.cluster.scheduler.global.clone(),
-            gstate: GlobalSchedulerState::new(n_workers),
+            global,
             comm,
             pool,
             pool_comm,
@@ -297,14 +306,9 @@ impl Simulation {
     /// Global-scheduler dispatch of new / resubmitted requests.
     fn dispatch(&mut self, new: &[RequestId], resubmitted: &[RequestId]) {
         let views: Vec<WorkerView> = self.workers.iter().map(|w| w.view(&self.requests)).collect();
-        let decisions = self.global.dispatch(
-            &mut self.gstate,
-            new,
-            resubmitted,
-            &views,
-            &self.requests,
-            &mut self.rng,
-        );
+        let decisions = self
+            .global
+            .dispatch(new, resubmitted, &views, &self.requests, &mut self.rng);
         let now = self.queue.now();
         for (rid, wid) in decisions {
             let is_resubmit = resubmitted.contains(&rid);
@@ -401,12 +405,12 @@ impl Simulation {
         }
         w.oldest_wait = if w.waiting.is_empty() { None } else { w.oldest_wait };
         if plan.is_empty() {
-            // static batching may be lingering for a fuller batch: poll
-            // again when the linger deadline passes
-            if let crate::scheduler::LocalPolicy::Static { max_linger, .. } = &w.local {
-                if let Some(t0) = w.oldest_wait {
-                    let deadline = t0 + *max_linger;
-                    if deadline > now && !w.linger_armed {
+            // the policy may be waiting on a timed condition (e.g.
+            // static batching lingering for a fuller batch): poll again
+            // at the deadline it names
+            if !w.linger_armed {
+                if let Some(deadline) = w.local.repoll_at(now, w.oldest_wait) {
+                    if deadline > now {
                         w.linger_armed = true;
                         self.queue
                             .schedule_at(deadline, EventPayload::Kick { worker: wid });
@@ -515,7 +519,7 @@ impl Simulation {
         r.phase = Phase::Finished;
         r.finished_at = Some(now);
         self.finished += 1;
-        self.gstate.complete(wid, r.final_kv_tokens() as u64);
+        self.global.on_complete(wid, r.final_kv_tokens() as u64);
         self.records.push(RequestRecord::from_request(r));
 
         // conversation bookkeeping: store KV in the pool, schedule the

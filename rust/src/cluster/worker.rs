@@ -6,7 +6,7 @@ use crate::compute::ComputeModel;
 use crate::hardware::HardwareSpec;
 use crate::memory::PagedBlockManager;
 use crate::request::{Request, RequestId};
-use crate::scheduler::{BatchPlan, LocalPolicy, WorkerView};
+use crate::scheduler::{BatchPlan, LocalScheduler, WorkerView};
 use crate::sim::SimTime;
 
 /// Worker role in a (possibly disaggregated) cluster.
@@ -23,7 +23,9 @@ pub struct Worker {
     pub hw: HardwareSpec,
     pub run_prefill: bool,
     pub run_decode: bool,
-    pub local: LocalPolicy,
+    /// The worker's local scheduling policy (each worker owns its own
+    /// instance — policies may keep cross-iteration state).
+    pub local: Box<dyn LocalScheduler>,
     pub mem: PagedBlockManager,
     pub cost: Box<dyn ComputeModel>,
 
@@ -49,7 +51,7 @@ impl Worker {
         hw: HardwareSpec,
         run_prefill: bool,
         run_decode: bool,
-        local: LocalPolicy,
+        local: Box<dyn LocalScheduler>,
         mem: PagedBlockManager,
         cost: Box<dyn ComputeModel>,
     ) -> Self {
@@ -123,7 +125,7 @@ mod tests {
             hw.clone(),
             prefill,
             decode,
-            LocalPolicy::continuous_default(),
+            Box::new(crate::scheduler::ContinuousBatching::vllm_default()),
             PagedBlockManager::with_blocks(100, 16, 1024),
             Box::new(AnalyticCost::new(&model, &hw)),
         )

@@ -14,7 +14,7 @@ use crate::hardware::{HardwareSpec, LinkSpec};
 use crate::memory::MemoryConfig;
 use crate::metrics::SloSpec;
 use crate::model::ModelSpec;
-use crate::scheduler::{GlobalPolicy, LocalPolicy, PriorityKey};
+use crate::scheduler::PolicySpec;
 use crate::workload::{ArrivalProcess, LengthDistribution, WorkloadSpec};
 
 use yaml::Yaml;
@@ -27,7 +27,9 @@ pub struct WorkerConfig {
     pub quantity: u32,
     pub run_prefill: bool,
     pub run_decode: bool,
-    pub local_scheduler: LocalPolicy,
+    /// Local scheduling policy, selected by registry name (see
+    /// [`crate::scheduler::registry`] and docs/CONFIG.md).
+    pub local_scheduler: PolicySpec,
     pub memory: MemoryConfig,
 }
 
@@ -38,7 +40,7 @@ impl WorkerConfig {
             quantity,
             run_prefill: true,
             run_decode: true,
-            local_scheduler: LocalPolicy::continuous_default(),
+            local_scheduler: PolicySpec::local_default(),
             memory: MemoryConfig::default(),
         }
     }
@@ -50,15 +52,21 @@ impl WorkerConfig {
             inline @ Yaml::Map(_) => hardware_from_yaml(inline)?,
             other => bail!("'hardware' must be a preset name or map, got {other:?}"),
         };
+        let local_scheduler = match y.get("local_scheduler") {
+            Some(ls) => PolicySpec::from_yaml(ls)?,
+            None => PolicySpec::local_default(),
+        };
+        // fail at parse time, not mid-simulation, on unknown policies
+        // or bad parameters
+        local_scheduler
+            .build_local()
+            .context("in 'local_scheduler'")?;
         Ok(Self {
             hardware,
             quantity: y.opt_u32("quantity", 1),
             run_prefill: y.opt_bool("run_prefill", true),
             run_decode: y.opt_bool("run_decode", true),
-            local_scheduler: match y.get("local_scheduler") {
-                Some(ls) => local_policy_from_yaml(ls)?,
-                None => LocalPolicy::continuous_default(),
-            },
+            local_scheduler,
             memory: match y.get("memory") {
                 Some(m) => memory_from_yaml(m)?,
                 None => MemoryConfig::default(),
@@ -88,46 +96,6 @@ fn memory_from_yaml(y: &Yaml) -> Result<MemoryConfig> {
         max_mem_ratio: y.opt_f64("max_mem_ratio", 1.0),
         watermark: y.opt_f64("watermark", 0.01),
     })
-}
-
-fn local_policy_from_yaml(y: &Yaml) -> Result<LocalPolicy> {
-    let max_batch_size = |y: &Yaml| -> Option<u32> {
-        match y.get("max_batch_size") {
-            None | Some(Yaml::Null) => None,
-            Some(v) => v.as_u32(),
-        }
-    };
-    match y.req_str("policy")? {
-        "continuous" | "Continuous" => Ok(LocalPolicy::Continuous {
-            max_batched_tokens: y.opt_u32("max_batched_tokens", 8192),
-            max_batch_size: max_batch_size(y),
-            mixed_batching: y.opt_bool("mixed_batching", false),
-        }),
-        "static" | "Static" => Ok(LocalPolicy::Static {
-            batch_size: y.req_u32("batch_size")?,
-            max_linger: y.opt_f64("max_linger", 1.0),
-        }),
-        "priority" | "Priority" => Ok(LocalPolicy::Priority {
-            max_batched_tokens: y.opt_u32("max_batched_tokens", 8192),
-            max_batch_size: max_batch_size(y),
-            by: match y.req_str("by")? {
-                "arrival" => PriorityKey::Arrival,
-                "shortest_prompt" => PriorityKey::ShortestPrompt,
-                "shortest_output" => PriorityKey::ShortestOutput,
-                other => bail!("unknown priority key '{other}'"),
-            },
-        }),
-        other => bail!("unknown local scheduler policy '{other}'"),
-    }
-}
-
-fn global_policy_from_yaml(y: &Yaml) -> Result<GlobalPolicy> {
-    match y.req_str("policy")? {
-        "round_robin" | "RoundRobin" => Ok(GlobalPolicy::RoundRobin),
-        "load_aware" | "LoadAware" => Ok(GlobalPolicy::LoadAware),
-        "random" | "Random" => Ok(GlobalPolicy::Random),
-        other => bail!("unknown global scheduler policy '{other}'"),
-    }
 }
 
 fn link_from_yaml(y: &Yaml) -> Result<LinkSpec> {
@@ -206,7 +174,9 @@ fn workload_from_yaml(y: &Yaml) -> Result<WorkloadSpec> {
 /// Scheduler section (Fig 2b).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
-    pub global: GlobalPolicy,
+    /// Global dispatch policy, selected by registry name (see
+    /// [`crate::scheduler::registry`] and docs/CONFIG.md).
+    pub global: PolicySpec,
     /// Interconnect between workers (KV transfers).
     pub interconnect: LinkSpec,
 }
@@ -214,7 +184,7 @@ pub struct SchedulerConfig {
 impl Default for SchedulerConfig {
     fn default() -> Self {
         Self {
-            global: GlobalPolicy::LoadAware,
+            global: PolicySpec::global_default(),
             interconnect: LinkSpec::nvlink(),
         }
     }
@@ -344,16 +314,21 @@ impl SimulationConfig {
             .map(WorkerConfig::from_yaml)
             .collect::<Result<Vec<_>>>()?;
         let scheduler = match cluster_y.get("scheduler") {
-            Some(s) => SchedulerConfig {
-                global: match s.get("global") {
-                    Some(g) => global_policy_from_yaml(g)?,
-                    None => GlobalPolicy::LoadAware,
-                },
-                interconnect: match s.get("interconnect") {
-                    Some(l) => link_from_yaml(l)?,
-                    None => LinkSpec::nvlink(),
-                },
-            },
+            Some(s) => {
+                let global = match s.get("global") {
+                    Some(g) => PolicySpec::from_yaml(g)?,
+                    None => PolicySpec::global_default(),
+                };
+                // validate the policy name/params at parse time
+                global.build_global().context("in scheduler 'global'")?;
+                SchedulerConfig {
+                    global,
+                    interconnect: match s.get("interconnect") {
+                        Some(l) => link_from_yaml(l)?,
+                        None => LinkSpec::nvlink(),
+                    },
+                }
+            }
             None => SchedulerConfig::default(),
         };
 
@@ -452,15 +427,12 @@ workload:
         assert_eq!(cfg.model.hidden, 4096);
         assert_eq!(cfg.cluster.workers[0].hardware.name, "A100");
         assert!(!cfg.cluster.workers[1].run_prefill);
-        assert_eq!(cfg.cluster.scheduler.global, GlobalPolicy::RoundRobin);
-        assert_eq!(
-            cfg.cluster.workers[0].local_scheduler,
-            LocalPolicy::Continuous {
-                max_batched_tokens: 1000,
-                max_batch_size: Some(256),
-                mixed_batching: false
-            }
-        );
+        assert_eq!(cfg.cluster.scheduler.global.name, "round_robin");
+        let local = &cfg.cluster.workers[0].local_scheduler;
+        assert_eq!(local.name, "continuous");
+        assert_eq!(local.params.opt_u32("max_batched_tokens", 0), 1000);
+        assert_eq!(local.params.opt_u32("max_batch_size", 0), 256);
+        assert_eq!(local.build_local().unwrap().name(), "continuous");
         assert!((cfg.cluster.workers[0].memory.gpu_utilization - 0.8).abs() < 1e-12);
         assert_eq!(cfg.workload.prompt_len, LengthDistribution::Fixed(64));
     }
@@ -534,6 +506,44 @@ workload:
         assert_eq!(cfg.total_workers(), 8);
         assert!(cfg.cluster.workers[0].run_prefill && !cfg.cluster.workers[0].run_decode);
         assert!(!cfg.cluster.workers[1].run_prefill && cfg.cluster.workers[1].run_decode);
+    }
+
+    #[test]
+    fn new_policies_selectable_from_yaml() {
+        let yaml = r#"
+model: tiny
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: chunked_prefill
+        chunk_tokens: 256
+    - hardware: A100
+      local_scheduler:
+        policy: sjf
+        starvation_age: 5.0
+  scheduler:
+    global:
+      policy: power_of_two
+workload:
+  num_requests: 10
+  qps: 1.0
+  prompt_len:
+    fixed: 8
+  output_len:
+    fixed: 8
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.cluster.workers[0].local_scheduler.name, "chunked_prefill");
+        assert_eq!(cfg.cluster.workers[1].local_scheduler.name, "sjf");
+        assert_eq!(cfg.cluster.scheduler.global.name, "power_of_two");
+    }
+
+    #[test]
+    fn unknown_scheduler_policy_is_a_parse_error() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\n      local_scheduler:\n        policy: warp\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown local scheduler policy"));
     }
 
     #[test]

@@ -130,6 +130,55 @@ impl Yaml {
     }
 }
 
+// `From` impls so programmatic parameter maps (e.g.
+// [`crate::scheduler::PolicySpec::with`]) read like YAML: `None`
+// becomes `null`, integers become numbers.
+
+impl From<bool> for Yaml {
+    fn from(v: bool) -> Self {
+        Yaml::Bool(v)
+    }
+}
+
+impl From<u32> for Yaml {
+    fn from(v: u32) -> Self {
+        Yaml::Num(v as f64)
+    }
+}
+
+impl From<u64> for Yaml {
+    fn from(v: u64) -> Self {
+        Yaml::Num(v as f64)
+    }
+}
+
+impl From<f64> for Yaml {
+    fn from(v: f64) -> Self {
+        Yaml::Num(v)
+    }
+}
+
+impl From<&str> for Yaml {
+    fn from(v: &str) -> Self {
+        Yaml::Str(v.to_string())
+    }
+}
+
+impl From<String> for Yaml {
+    fn from(v: String) -> Self {
+        Yaml::Str(v)
+    }
+}
+
+impl<T: Into<Yaml>> From<Option<T>> for Yaml {
+    fn from(v: Option<T>) -> Self {
+        match v {
+            Some(x) => x.into(),
+            None => Yaml::Null,
+        }
+    }
+}
+
 #[derive(Debug)]
 struct Line {
     no: usize,

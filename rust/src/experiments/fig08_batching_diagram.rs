@@ -14,14 +14,17 @@ use crate::hardware::HardwareSpec;
 use crate::memory::PagedBlockManager;
 use crate::model::ModelSpec;
 use crate::request::{Phase, Request};
-use crate::scheduler::{LocalPolicy, LocalSchedCtx};
+use crate::scheduler::{LocalSchedCtx, LocalScheduler};
 
 use super::common::ExpOpts;
 
 /// Drive a single worker's local scheduler directly, recording slot
 /// occupancy per iteration. Arrivals: 4 requests at t=0, 4 more during
 /// the run (like the figure's R5..R8).
-fn trace(policy: &LocalPolicy, iterations: usize) -> Vec<BTreeMap<usize, &'static str>> {
+fn trace(
+    policy: &mut dyn LocalScheduler,
+    iterations: usize,
+) -> Vec<BTreeMap<usize, &'static str>> {
     let model = ModelSpec::tiny_test();
     let hw = HardwareSpec::a100_80g();
     let mut cost = AnalyticCost::new(&model, &hw);
@@ -129,14 +132,14 @@ fn render(title: &str, frames: &[BTreeMap<usize, &'static str>]) -> String {
 pub fn run(_opts: &ExpOpts) -> Result<String> {
     let iterations = 14;
     let static_frames = trace(
-        &LocalPolicy::Static {
+        &mut crate::scheduler::StaticBatching {
             batch_size: 4,
             max_linger: 0.0,
         },
         iterations,
     );
     let cont_frames = trace(
-        &LocalPolicy::Continuous {
+        &mut crate::scheduler::ContinuousBatching {
             max_batched_tokens: 1 << 20,
             max_batch_size: Some(5),
             mixed_batching: true,

@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
 use crate::model::ModelSpec;
-use crate::scheduler::LocalPolicy;
+use crate::scheduler::PolicySpec;
 use crate::workload::WorkloadSpec;
 
 use super::common::*;
@@ -15,7 +15,7 @@ use super::common::*;
 fn cfg(
     n: usize,
     qps: f64,
-    policy: LocalPolicy,
+    policy: PolicySpec,
     cost: crate::compute::CostModelKind,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
@@ -55,15 +55,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let mut cells = vec![f1(qps)];
         for &(cap, _) in caps {
             // static batching cap: 'inf' static means a huge fixed batch
-            let static_policy = LocalPolicy::Static {
-                batch_size: cap.unwrap_or(512),
-                max_linger: 2.0,
-            };
-            let cont_policy = LocalPolicy::Continuous {
-                max_batched_tokens: 8192,
-                max_batch_size: cap,
-                mixed_batching: false,
-            };
+            let static_policy = PolicySpec::new("static")
+                .with("batch_size", cap.unwrap_or(512))
+                .with("max_linger", 2.0);
+            let cont_policy = PolicySpec::new("continuous")
+                .with("max_batched_tokens", 8192u32)
+                .with("max_batch_size", cap);
             let s = run_tokensim(&cfg(n, qps, static_policy, opts.cost_model));
             let c = run_tokensim(&cfg(n, qps, cont_policy, opts.cost_model));
             cells.push(f3(s.metrics().mean_normalized_latency()));
@@ -95,20 +92,17 @@ mod tests {
         let s = run_tokensim(&cfg(
             n,
             qps,
-            LocalPolicy::Static {
-                batch_size: 8,
-                max_linger: 2.0,
-            },
+            PolicySpec::new("static")
+                .with("batch_size", 8u32)
+                .with("max_linger", 2.0),
             opts.cost_model,
         ));
         let c = run_tokensim(&cfg(
             n,
             qps,
-            LocalPolicy::Continuous {
-                max_batched_tokens: 8192,
-                max_batch_size: Some(8),
-                mixed_batching: false,
-            },
+            PolicySpec::new("continuous")
+                .with("max_batched_tokens", 8192u32)
+                .with("max_batch_size", 8u32),
             opts.cost_model,
         ));
         assert!(
@@ -125,21 +119,17 @@ mod tests {
         let c8 = run_tokensim(&cfg(
             200,
             10.0,
-            LocalPolicy::Continuous {
-                max_batched_tokens: 8192,
-                max_batch_size: Some(4),
-                mixed_batching: false,
-            },
+            PolicySpec::new("continuous")
+                .with("max_batched_tokens", 8192u32)
+                .with("max_batch_size", 4u32),
             opts.cost_model,
         ));
         let cinf = run_tokensim(&cfg(
             200,
             10.0,
-            LocalPolicy::Continuous {
-                max_batched_tokens: 8192,
-                max_batch_size: None,
-                mixed_batching: false,
-            },
+            PolicySpec::new("continuous")
+                .with("max_batched_tokens", 8192u32)
+                .with("max_batch_size", Option::<u32>::None),
             opts.cost_model,
         ));
         assert!(

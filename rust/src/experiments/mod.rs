@@ -21,16 +21,18 @@ mod fig12_decode_hardware;
 mod fig13_memory_footprint;
 mod fig14_memory_cache;
 mod fig15_prefill_hardware;
+mod policy_comparison;
 mod table2_accuracy;
 
 pub use common::ExpOpts;
 
 use anyhow::{bail, Result};
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper's figures in paper order, then the
+/// repo's own studies ("policies" compares scheduler plugins).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15",
+    "fig14", "fig15", "policies",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -49,6 +51,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "fig13" => fig13_memory_footprint::run(opts),
         "fig14" => fig14_memory_cache::run(opts),
         "fig15" => fig15_prefill_hardware::run(opts),
+        "policies" => policy_comparison::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

@@ -67,7 +67,7 @@ pub mod prelude {
     pub use crate::memory::{MemoryConfig, PagedBlockManager};
     pub use crate::metrics::{RequestRecord, SloSpec};
     pub use crate::model::ModelSpec;
-    pub use crate::scheduler::{GlobalPolicy, LocalPolicy};
+    pub use crate::scheduler::{GlobalScheduler, LocalScheduler, PolicySpec};
     pub use crate::sim::SimTime;
     pub use crate::workload::{LengthDistribution, WorkloadSpec};
 }

@@ -24,8 +24,8 @@ fn usage() -> &'static str {
      \n\
      USAGE:\n\
        tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--cdf]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|all> [--quick] [--out-dir <dir>]\n\
-       tokensim list                 list experiments and presets\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|all> [--quick] [--out-dir <dir>]\n\
+       tokensim list                 list experiments, scheduler policies and presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n"
 }
@@ -132,7 +132,15 @@ fn cmd_exp(args: &[String]) -> Result<()> {
 
 fn cmd_list() -> Result<()> {
     println!("experiments: {}", experiments::ALL.join(", "));
-    println!("model presets: llama2-7b, llama2-13b, opt-13b, tiny");
+    println!("\nlocal scheduler policies (worker `local_scheduler: policy:`):");
+    for (name, summary) in tokensim::scheduler::local_policies() {
+        println!("  {name:<16} {summary}");
+    }
+    println!("\nglobal scheduler policies (cluster `scheduler: global: policy:`):");
+    for (name, summary) in tokensim::scheduler::global_policies() {
+        println!("  {name:<16} {summary}");
+    }
+    println!("\nmodel presets: llama2-7b, llama2-13b, opt-13b, tiny");
     println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");
     println!("link presets: NVLink, PCIe, Ethernet-100G, HostBus, PoolFabric");
     Ok(())

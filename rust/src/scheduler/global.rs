@@ -1,5 +1,5 @@
-//! Global (inter-worker) scheduling policies.
-
+//! Global (inter-worker) scheduling: the [`GlobalScheduler`] trait and
+//! the built-in dispatch policies.
 
 use crate::request::{Request, RequestId};
 use crate::sim::SimRng;
@@ -21,25 +21,63 @@ pub struct WorkerView {
     pub total_blocks: u64,
 }
 
-/// Global scheduling policy.
-#[derive(Debug, Clone, PartialEq)]
-pub enum GlobalPolicy {
-    /// Cycle new requests over eligible workers.
-    RoundRobin,
-    /// Send each request to the least-loaded eligible worker
-    /// (outstanding tokens; the "record book" idiom of §III-A).
-    LoadAware,
-    /// Uniform random choice (the paper's Fig 3 example).
-    Random,
-}
+/// An inter-worker dispatch policy (the paper's §III-A "global
+/// scheduler").
+///
+/// The default [`dispatch`](GlobalScheduler::dispatch) routes fresh
+/// arrivals to prefill-capable workers and resubmitted (prefill-done,
+/// disaggregation) requests to decode-capable workers, delegating the
+/// per-request pick to [`choose`](GlobalScheduler::choose). Policies
+/// normally implement only `choose` (and, if they keep a record book of
+/// in-flight work, [`on_complete`](GlobalScheduler::on_complete));
+/// override `dispatch` for gang decisions that must see the whole
+/// arrival batch at once.
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::request::Request;
+/// use tokensim::scheduler::{GlobalScheduler, RoundRobin, WorkerView};
+/// use tokensim::sim::SimRng;
+///
+/// let view = |id: usize| WorkerView {
+///     id,
+///     hardware: "A100".into(),
+///     run_prefill: true,
+///     run_decode: true,
+///     waiting_requests: 0,
+///     running_requests: 0,
+///     outstanding_tokens: 0,
+///     free_blocks: 100,
+///     total_blocks: 100,
+/// };
+/// let workers = vec![view(0), view(1)];
+/// let requests: Vec<Request> =
+///     (0..4).map(|i| Request::new(i, i, 0, 64, 8, 0.0)).collect();
+///
+/// let mut policy = RoundRobin::default();
+/// let mut rng = SimRng::new(0, "doc");
+/// let out = policy.dispatch(&[0, 1, 2, 3], &[], &workers, &requests, &mut rng);
+/// let targets: Vec<usize> = out.iter().map(|&(_, w)| w).collect();
+/// assert_eq!(targets, vec![0, 1, 0, 1]);
+/// ```
+pub trait GlobalScheduler: Send {
+    /// Registry name of this policy (stable, lowercase).
+    fn name(&self) -> &'static str;
 
-impl GlobalPolicy {
+    /// Pick a worker among `eligible` (never empty) for one request
+    /// that will bring `load_tokens` of work. Returns the worker id.
+    fn choose(&mut self, eligible: &[&WorkerView], load_tokens: u64, rng: &mut SimRng) -> usize;
+
+    /// Acknowledge completed work (the driver calls this as requests
+    /// finish so record books track only in-flight dispatches).
+    fn on_complete(&mut self, _worker: usize, _tokens: u64) {}
+
     /// Dispatch decisions. `new` are fresh arrivals (need prefill);
     /// `resubmitted` finished prefill on some worker and need a decode
     /// worker (disaggregation). Returns `(request, target worker)`.
-    pub fn dispatch(
-        &self,
-        state: &mut GlobalSchedulerState,
+    fn dispatch(
+        &mut self,
         new: &[RequestId],
         resubmitted: &[RequestId],
         workers: &[WorkerView],
@@ -51,7 +89,7 @@ impl GlobalPolicy {
             let eligible: Vec<&WorkerView> =
                 workers.iter().filter(|w| w.run_prefill).collect();
             assert!(!eligible.is_empty(), "no prefill-capable worker");
-            let target = self.choose(state, &eligible, requests[rid].prompt_len as u64, rng);
+            let target = self.choose(&eligible, requests[rid].prompt_len as u64, rng);
             out.push((rid, target));
         }
         for &rid in resubmitted {
@@ -59,82 +97,154 @@ impl GlobalPolicy {
                 workers.iter().filter(|w| w.run_decode).collect();
             assert!(!eligible.is_empty(), "no decode-capable worker");
             let kv = requests[rid].final_kv_tokens() as u64;
-            let target = self.choose(state, &eligible, kv, rng);
+            let target = self.choose(&eligible, kv, rng);
             out.push((rid, target));
         }
         out
     }
+}
 
-    fn choose(
-        &self,
-        state: &mut GlobalSchedulerState,
-        eligible: &[&WorkerView],
-        load_tokens: u64,
-        rng: &mut SimRng,
-    ) -> usize {
-        let id = match self {
-            GlobalPolicy::RoundRobin => {
-                let pick = eligible[state.rr_cursor % eligible.len()].id;
-                state.rr_cursor += 1;
-                pick
-            }
-            GlobalPolicy::Random => eligible[rng.pick(eligible.len())].id,
-            GlobalPolicy::LoadAware => {
-                // live view + the record book of in-flight dispatches
-                eligible
-                    .iter()
-                    .min_by_key(|w| {
-                        w.outstanding_tokens + state.recorded_load(w.id)
-                    })
-                    .unwrap()
-                    .id
-            }
-        };
-        state.record_dispatch(id, load_tokens);
+/// Tokens dispatched per worker that the worker views may not yet
+/// reflect (the paper: "It can also be stateful, so that users can
+/// actively store the number of requests already dispatched to a worker
+/// … and use the record book for future load-aware scheduling").
+/// Decays as the driver reports completions.
+#[derive(Debug, Clone, Default)]
+pub struct RecordBook {
+    in_flight: Vec<u64>,
+}
+
+impl RecordBook {
+    pub fn note_dispatch(&mut self, worker: usize, tokens: u64) {
+        if worker >= self.in_flight.len() {
+            self.in_flight.resize(worker + 1, 0);
+        }
+        self.in_flight[worker] += tokens;
+    }
+
+    pub fn note_complete(&mut self, worker: usize, tokens: u64) {
+        if let Some(t) = self.in_flight.get_mut(worker) {
+            *t = t.saturating_sub(tokens);
+        }
+    }
+
+    pub fn load(&self, worker: usize) -> u64 {
+        self.in_flight.get(worker).copied().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------------
+
+/// Cycle new requests over eligible workers.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl GlobalScheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn choose(&mut self, eligible: &[&WorkerView], _load_tokens: u64, _rng: &mut SimRng) -> usize {
+        let pick = eligible[self.cursor % eligible.len()].id;
+        self.cursor += 1;
+        pick
+    }
+}
+
+/// Uniform random choice (the paper's Fig 3 example).
+#[derive(Debug, Clone, Default)]
+pub struct Random;
+
+impl GlobalScheduler for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn choose(&mut self, eligible: &[&WorkerView], _load_tokens: u64, rng: &mut SimRng) -> usize {
+        eligible[rng.pick(eligible.len())].id
+    }
+}
+
+/// Send each request to the least-loaded eligible worker, counting both
+/// the live view (outstanding tokens) and a record book of in-flight
+/// dispatches the views may not reflect yet (§III-A's "record book").
+#[derive(Debug, Clone, Default)]
+pub struct LeastLoaded {
+    record: RecordBook,
+}
+
+impl GlobalScheduler for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn choose(&mut self, eligible: &[&WorkerView], load_tokens: u64, _rng: &mut SimRng) -> usize {
+        let id = eligible
+            .iter()
+            .min_by_key(|w| w.outstanding_tokens + self.record.load(w.id))
+            .unwrap()
+            .id;
+        self.record.note_dispatch(id, load_tokens);
         id
     }
+
+    fn on_complete(&mut self, worker: usize, tokens: u64) {
+        self.record.note_complete(worker, tokens);
+    }
 }
 
-/// Stateful side of the global scheduler (the paper: "It can also be
-/// stateful, so that users can actively store the number of requests
-/// already dispatched to a worker … and use the record book for future
-/// load-aware scheduling").
+/// Power-of-two-choices: sample two distinct eligible workers uniformly
+/// and dispatch to the less loaded of the pair. Gets most of
+/// [`LeastLoaded`]'s balance with O(1) state inspection per decision —
+/// the classic "two choices" result — and avoids the herd behaviour of
+/// full least-loaded under bursty arrivals.
 #[derive(Debug, Clone, Default)]
-pub struct GlobalSchedulerState {
-    rr_cursor: usize,
-    /// Tokens dispatched per worker that the worker view may not yet
-    /// reflect (decays as work completes).
-    record_book: Vec<(usize, u64)>,
+pub struct PowerOfTwoChoices {
+    record: RecordBook,
 }
 
-impl GlobalSchedulerState {
-    pub fn new(num_workers: usize) -> Self {
-        Self {
-            rr_cursor: 0,
-            record_book: (0..num_workers).map(|id| (id, 0)).collect(),
-        }
+impl PowerOfTwoChoices {
+    fn load_of(&self, w: &WorkerView) -> u64 {
+        w.outstanding_tokens + self.record.load(w.id)
+    }
+}
+
+impl GlobalScheduler for PowerOfTwoChoices {
+    fn name(&self) -> &'static str {
+        "power_of_two"
     }
 
-    fn record_dispatch(&mut self, worker: usize, tokens: u64) {
-        if let Some(e) = self.record_book.iter_mut().find(|(id, _)| *id == worker) {
-            e.1 += tokens;
-        }
+    fn choose(&mut self, eligible: &[&WorkerView], load_tokens: u64, rng: &mut SimRng) -> usize {
+        let id = if eligible.len() <= 2 {
+            eligible
+                .iter()
+                .min_by_key(|w| self.load_of(w))
+                .unwrap()
+                .id
+        } else {
+            // two distinct uniform samples
+            let i = rng.pick(eligible.len());
+            let mut j = rng.pick(eligible.len() - 1);
+            if j >= i {
+                j += 1;
+            }
+            let (a, b) = (eligible[i], eligible[j]);
+            if self.load_of(a) <= self.load_of(b) {
+                a.id
+            } else {
+                b.id
+            }
+        };
+        self.record.note_dispatch(id, load_tokens);
+        id
     }
 
-    fn recorded_load(&self, worker: usize) -> u64 {
-        self.record_book
-            .iter()
-            .find(|(id, _)| *id == worker)
-            .map(|(_, t)| *t)
-            .unwrap_or(0)
-    }
-
-    /// Acknowledge completed work (the driver calls this as requests
-    /// finish so the record book tracks only in-flight dispatches).
-    pub fn complete(&mut self, worker: usize, tokens: u64) {
-        if let Some(e) = self.record_book.iter_mut().find(|(id, _)| *id == worker) {
-            e.1 = e.1.saturating_sub(tokens);
-        }
+    fn on_complete(&mut self, worker: usize, tokens: u64) {
+        self.record.note_complete(worker, tokens);
     }
 }
 
@@ -166,53 +276,29 @@ mod tests {
     fn round_robin_cycles() {
         let workers = vec![view(0, true, true, 0), view(1, true, true, 0)];
         let requests = reqs(4);
-        let mut st = GlobalSchedulerState::new(2);
         let mut rng = SimRng::new(0, "g");
-        let out = GlobalPolicy::RoundRobin.dispatch(
-            &mut st,
-            &[0, 1, 2, 3],
-            &[],
-            &workers,
-            &requests,
-            &mut rng,
-        );
+        let out = RoundRobin::default().dispatch(&[0, 1, 2, 3], &[], &workers, &requests, &mut rng);
         let targets: Vec<usize> = out.iter().map(|&(_, w)| w).collect();
         assert_eq!(targets, vec![0, 1, 0, 1]);
     }
 
     #[test]
-    fn load_aware_picks_least_loaded() {
+    fn least_loaded_picks_least_loaded() {
         let workers = vec![view(0, true, true, 5000), view(1, true, true, 100)];
         let requests = reqs(1);
-        let mut st = GlobalSchedulerState::new(2);
         let mut rng = SimRng::new(0, "g");
-        let out = GlobalPolicy::LoadAware.dispatch(
-            &mut st,
-            &[0],
-            &[],
-            &workers,
-            &requests,
-            &mut rng,
-        );
+        let out = LeastLoaded::default().dispatch(&[0], &[], &workers, &requests, &mut rng);
         assert_eq!(out[0].1, 1);
     }
 
     #[test]
-    fn load_aware_record_book_spreads_burst() {
+    fn least_loaded_record_book_spreads_burst() {
         // both workers look idle; the record book must spread a burst
         let workers = vec![view(0, true, true, 0), view(1, true, true, 0)];
         let requests = reqs(10);
-        let mut st = GlobalSchedulerState::new(2);
         let mut rng = SimRng::new(0, "g");
         let ids: Vec<RequestId> = (0..10).collect();
-        let out = GlobalPolicy::LoadAware.dispatch(
-            &mut st,
-            &ids,
-            &[],
-            &workers,
-            &requests,
-            &mut rng,
-        );
+        let out = LeastLoaded::default().dispatch(&ids, &[], &workers, &requests, &mut rng);
         let w0 = out.iter().filter(|&&(_, w)| w == 0).count();
         assert_eq!(w0, 5, "burst must split evenly via the record book");
     }
@@ -222,27 +308,19 @@ mod tests {
         // worker 0: prefill only; worker 1: decode only
         let workers = vec![view(0, true, false, 0), view(1, false, true, 0)];
         let requests = reqs(2);
-        let mut st = GlobalSchedulerState::new(2);
         let mut rng = SimRng::new(0, "g");
-        let out = GlobalPolicy::RoundRobin.dispatch(
-            &mut st,
-            &[0],
-            &[1],
-            &workers,
-            &requests,
-            &mut rng,
-        );
+        let out = RoundRobin::default().dispatch(&[0], &[1], &workers, &requests, &mut rng);
         assert_eq!(out, vec![(0, 0), (1, 1)]);
     }
 
     #[test]
     fn record_book_complete_decays() {
-        let mut st = GlobalSchedulerState::new(1);
-        st.record_dispatch(0, 100);
-        st.complete(0, 60);
-        assert_eq!(st.recorded_load(0), 40);
-        st.complete(0, 100);
-        assert_eq!(st.recorded_load(0), 0, "saturating");
+        let mut book = RecordBook::default();
+        book.note_dispatch(0, 100);
+        book.note_complete(0, 60);
+        assert_eq!(book.load(0), 40);
+        book.note_complete(0, 100);
+        assert_eq!(book.load(0), 0, "saturating");
     }
 
     #[test]
@@ -250,8 +328,67 @@ mod tests {
     fn panics_without_decode_worker() {
         let workers = vec![view(0, true, false, 0)];
         let requests = reqs(1);
-        let mut st = GlobalSchedulerState::new(1);
         let mut rng = SimRng::new(0, "g");
-        GlobalPolicy::RoundRobin.dispatch(&mut st, &[], &[0], &workers, &requests, &mut rng);
+        RoundRobin::default().dispatch(&[], &[0], &workers, &requests, &mut rng);
+    }
+
+    // ---- power of two choices -------------------------------------------
+
+    #[test]
+    fn po2_avoids_the_loaded_worker_of_its_pair() {
+        // with exactly two workers po2 degenerates to least-loaded
+        let workers = vec![view(0, true, true, 9000), view(1, true, true, 10)];
+        let requests = reqs(1);
+        let mut rng = SimRng::new(0, "g");
+        let out =
+            PowerOfTwoChoices::default().dispatch(&[0], &[], &workers, &requests, &mut rng);
+        assert_eq!(out[0].1, 1);
+    }
+
+    #[test]
+    fn po2_spreads_burst_across_cluster() {
+        // 8 idle workers, 64-request burst: the record book plus the
+        // two-choices rule must avoid piling everything on one worker
+        let workers: Vec<WorkerView> = (0..8).map(|id| view(id, true, true, 0)).collect();
+        let requests = reqs(64);
+        let ids: Vec<RequestId> = (0..64).collect();
+        let mut rng = SimRng::new(7, "g");
+        let out = PowerOfTwoChoices::default().dispatch(&ids, &[], &workers, &requests, &mut rng);
+        let mut counts = [0usize; 8];
+        for &(_, w) in &out {
+            counts[w] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "every worker used: {counts:?}");
+        assert!(
+            *counts.iter().max().unwrap() <= 16,
+            "no worker swamped: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn po2_is_deterministic_per_seed() {
+        let workers: Vec<WorkerView> = (0..6).map(|id| view(id, true, true, 0)).collect();
+        let requests = reqs(16);
+        let ids: Vec<RequestId> = (0..16).collect();
+        let run = |seed| {
+            let mut rng = SimRng::new(seed, "g");
+            PowerOfTwoChoices::default().dispatch(&ids, &[], &workers, &requests, &mut rng)
+        };
+        assert_eq!(run(3), run(3));
+    }
+
+    #[test]
+    fn po2_respects_roles() {
+        let workers = vec![
+            view(0, true, false, 0),
+            view(1, false, true, 0),
+            view(2, false, true, 0),
+        ];
+        let requests = reqs(2);
+        let mut rng = SimRng::new(0, "g");
+        let out =
+            PowerOfTwoChoices::default().dispatch(&[0], &[1], &workers, &requests, &mut rng);
+        assert_eq!(out[0], (0, 0), "only worker 0 runs prefill");
+        assert!(out[1].1 == 1 || out[1].1 == 2, "decode goes to a decode worker");
     }
 }

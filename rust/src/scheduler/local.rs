@@ -1,66 +1,19 @@
-//! Local (per-worker, intra-iteration) scheduling policies.
+//! Local (per-worker, intra-iteration) scheduling: the [`LocalScheduler`]
+//! trait and the built-in policy implementations.
+//!
+//! A local scheduler runs between iterations and decides which requests
+//! join the next batch, which keep waiting, and which are preempted,
+//! coordinating with the worker's [`PagedBlockManager`]. Policies are
+//! ordinary structs implementing [`LocalScheduler`]; the string-keyed
+//! [registry](crate::scheduler::registry) makes them selectable from
+//! YAML without touching the simulation driver.
 
 use std::collections::VecDeque;
-
 
 use crate::compute::BatchDesc;
 use crate::memory::{AllocOutcome, PagedBlockManager};
 use crate::request::{Phase, Request, RequestId};
-
-/// Local scheduling policy selection.
-#[derive(Debug, Clone, PartialEq)]
-pub enum LocalPolicy {
-    /// Continuous batching (vLLM/Orca style): requests join and leave
-    /// the batch between iterations; prefill iterations take priority;
-    /// decode requests that cannot grow are preempted by recompute.
-    Continuous {
-        /// Token budget per iteration (vLLM `max_num_batched_tokens`).
-        max_batched_tokens: u32,
-        /// Max concurrent requests in the batch (None = unbounded,
-        /// the "inf" setting of Fig 9).
-        max_batch_size: Option<u32>,
-        /// Allow mixing prefill chunks and decodes in one iteration
-        /// (Orca-style) instead of prefill-only iterations.
-        mixed_batching: bool,
-    },
-    /// Static batching: a batch is formed from waiting requests and runs
-    /// to completion; finished requests leave bubbles; no admission
-    /// until the whole batch drains (Fig 8 / Fig 9 baseline).
-    Static {
-        batch_size: u32,
-        /// Form a partial batch after this long rather than waiting
-        /// indefinitely for `batch_size` arrivals.
-        max_linger: f64,
-    },
-    /// Continuous batching with priority-ordered admission.
-    Priority {
-        max_batched_tokens: u32,
-        max_batch_size: Option<u32>,
-        by: PriorityKey,
-    },
-}
-
-/// Admission ordering for [`LocalPolicy::Priority`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PriorityKey {
-    /// FIFO (equivalent to Continuous).
-    Arrival,
-    /// Shortest prompt first (cheap prefills jump the queue).
-    ShortestPrompt,
-    /// Shortest expected output first.
-    ShortestOutput,
-}
-
-impl LocalPolicy {
-    /// vLLM-flavoured defaults.
-    pub fn continuous_default() -> Self {
-        LocalPolicy::Continuous {
-            max_batched_tokens: 8192,
-            max_batch_size: Some(256),
-            mixed_batching: false,
-        }
-    }
-}
+use crate::sim::SimTime;
 
 /// Mutable view of a worker the local scheduler operates on.
 pub struct LocalSchedCtx<'a> {
@@ -71,7 +24,7 @@ pub struct LocalSchedCtx<'a> {
     pub now: f64,
     /// No more arrivals will ever come (lets Static form partial batches).
     pub draining: bool,
-    /// Time of the earliest waiting request's enqueue (Static linger).
+    /// Time of the earliest waiting request's enqueue (static linger).
     pub oldest_wait: Option<f64>,
 }
 
@@ -94,34 +47,312 @@ impl BatchPlan {
     }
 }
 
-impl LocalPolicy {
+/// A per-worker batching policy (the paper's §III-A "local scheduler").
+///
+/// Implementations own their parameters (and any cross-iteration state)
+/// and are driven by the cluster driver once per iteration boundary.
+/// The contract of [`form_batch`](LocalScheduler::form_batch):
+///
+/// * every member of the returned plan has a KV reservation in
+///   `ctx.mem` covering `batch.ctx[slot] + batch.new[slot]` tokens;
+/// * admitted requests are moved from `ctx.waiting` to `ctx.running`
+///   and flipped to [`Phase::Prefill`];
+/// * preempted requests are reset for recompute, pushed to the front of
+///   `ctx.waiting`, and listed in `plan.preempted`;
+/// * an empty plan means "nothing runnable right now" — the driver goes
+///   idle until the next event (or until
+///   [`repoll_at`](LocalScheduler::repoll_at) requests a timed wake-up).
+///
+/// # Examples
+///
+/// Driving a policy by hand over a one-request fixture:
+///
+/// ```
+/// use std::collections::VecDeque;
+/// use tokensim::memory::PagedBlockManager;
+/// use tokensim::request::Request;
+/// use tokensim::scheduler::{ContinuousBatching, LocalSchedCtx, LocalScheduler};
+///
+/// let mut requests = vec![Request::new(0, 0, 0, 64, 8, 0.0)];
+/// let mut waiting: VecDeque<usize> = VecDeque::from(vec![0]);
+/// let mut running = Vec::new();
+/// let mut mem = PagedBlockManager::with_blocks(64, 16, 1024);
+///
+/// let mut policy = ContinuousBatching::vllm_default();
+/// let plan = policy.form_batch(&mut LocalSchedCtx {
+///     requests: &mut requests,
+///     waiting: &mut waiting,
+///     running: &mut running,
+///     mem: &mut mem,
+///     now: 0.0,
+///     draining: false,
+///     oldest_wait: Some(0.0),
+/// });
+/// assert_eq!(plan.members, vec![0]);
+/// assert!(plan.has_prefill);
+/// assert_eq!(running, vec![0]);
+/// ```
+pub trait LocalScheduler: Send {
+    /// Registry name of this policy (stable, lowercase).
+    fn name(&self) -> &'static str;
+
     /// Form the next iteration's batch. Mutates queues, request phases
     /// and the memory manager (reservations + preemptions).
-    pub fn form_batch(&self, ctx: &mut LocalSchedCtx) -> BatchPlan {
-        match self {
-            LocalPolicy::Continuous {
-                max_batched_tokens,
-                max_batch_size,
-                mixed_batching,
-            } => form_continuous(
-                ctx,
-                *max_batched_tokens,
-                *max_batch_size,
-                *mixed_batching,
-                PriorityKey::Arrival,
-            ),
-            LocalPolicy::Priority {
-                max_batched_tokens,
-                max_batch_size,
-                by,
-            } => form_continuous(ctx, *max_batched_tokens, *max_batch_size, false, *by),
-            LocalPolicy::Static {
-                batch_size,
-                max_linger,
-            } => form_static(ctx, *batch_size, *max_linger),
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan;
+
+    /// After an empty plan: the absolute time at which the driver should
+    /// poll this scheduler again even if no event arrives (used by
+    /// [`StaticBatching`] to time out its linger window). `None` means
+    /// purely event-driven.
+    fn repoll_at(&self, _now: SimTime, _oldest_wait: Option<SimTime>) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Admission ordering for [`PriorityAdmission`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorityKey {
+    /// FIFO (equivalent to [`ContinuousBatching`]).
+    Arrival,
+    /// Shortest prompt first (cheap prefills jump the queue).
+    ShortestPrompt,
+    /// Shortest expected output first.
+    ShortestOutput,
+}
+
+/// How the token-budget admission loop walks the waiting queue.
+enum AdmissionOrder {
+    /// Queue order, stop at the first request that does not fit.
+    ///
+    /// FIFO admission must NOT materialize the queue: under saturation
+    /// the waiting queue holds tens of thousands of requests while
+    /// admission stops after a handful, and batch formation runs once
+    /// per iteration — an O(queue) copy here dominated whole-simulation
+    /// wall time before it was made lazy (see EXPERIMENTS.md §Perf).
+    Fifo,
+    /// An explicit ordering; requests that do not fit are skipped and
+    /// the next candidate is tried.
+    Sorted(Vec<RequestId>),
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies
+// ---------------------------------------------------------------------------
+
+/// Continuous batching (vLLM/Orca style): requests join and leave the
+/// batch between iterations; prefill iterations take priority; decode
+/// requests that cannot grow are preempted by recompute (Fig 8/9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContinuousBatching {
+    /// Token budget per iteration (vLLM `max_num_batched_tokens`).
+    pub max_batched_tokens: u32,
+    /// Max concurrent requests in the batch (None = unbounded, the
+    /// "inf" setting of Fig 9).
+    pub max_batch_size: Option<u32>,
+    /// Allow mixing prefill chunks and decodes in one iteration
+    /// (Orca-style) instead of prefill-only iterations.
+    pub mixed_batching: bool,
+}
+
+impl ContinuousBatching {
+    /// vLLM-flavoured defaults.
+    pub fn vllm_default() -> Self {
+        Self {
+            max_batched_tokens: 8192,
+            max_batch_size: Some(256),
+            mixed_batching: false,
         }
     }
 }
+
+impl Default for ContinuousBatching {
+    fn default() -> Self {
+        Self::vllm_default()
+    }
+}
+
+impl LocalScheduler for ContinuousBatching {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        form_token_budget(
+            ctx,
+            self.max_batched_tokens,
+            self.max_batch_size,
+            self.mixed_batching,
+            |_| AdmissionOrder::Fifo,
+        )
+    }
+}
+
+/// Continuous batching with priority-ordered admission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriorityAdmission {
+    pub max_batched_tokens: u32,
+    pub max_batch_size: Option<u32>,
+    pub by: PriorityKey,
+}
+
+impl LocalScheduler for PriorityAdmission {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        let by = self.by;
+        form_token_budget(
+            ctx,
+            self.max_batched_tokens,
+            self.max_batch_size,
+            false,
+            move |ctx| match by {
+                PriorityKey::Arrival => AdmissionOrder::Fifo,
+                PriorityKey::ShortestPrompt => {
+                    let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
+                    ids.sort_by_key(|&id| ctx.requests[id].effective_prompt_len());
+                    AdmissionOrder::Sorted(ids)
+                }
+                PriorityKey::ShortestOutput => {
+                    let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
+                    ids.sort_by_key(|&id| ctx.requests[id].output_len);
+                    AdmissionOrder::Sorted(ids)
+                }
+            },
+        )
+    }
+}
+
+/// Static batching: a batch is formed from waiting requests and runs to
+/// completion; finished requests leave bubbles; no admission until the
+/// whole batch drains (Fig 8 / Fig 9 baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaticBatching {
+    pub batch_size: u32,
+    /// Form a partial batch after this long rather than waiting
+    /// indefinitely for `batch_size` arrivals.
+    pub max_linger: f64,
+}
+
+impl LocalScheduler for StaticBatching {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        form_static(ctx, self.batch_size, self.max_linger)
+    }
+
+    fn repoll_at(&self, now: SimTime, oldest_wait: Option<SimTime>) -> Option<SimTime> {
+        // still lingering for a fuller batch: ask to be polled again
+        // when the linger deadline passes
+        oldest_wait
+            .map(|t0| t0 + self.max_linger)
+            .filter(|deadline| *deadline > now)
+    }
+}
+
+/// Sarathi-style chunked prefill: every iteration carries all running
+/// decodes plus up to `chunk_tokens` of prefill work, with long prompts
+/// split across iterations. Caps the per-iteration compute so decodes
+/// are never stalled behind a monolithic prefill (tail TBT control).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkedPrefill {
+    /// Per-iteration token budget shared by decodes (1 token each) and
+    /// prefill chunks (the remainder).
+    pub chunk_tokens: u32,
+    /// Max concurrent requests in the batch (None = unbounded).
+    pub max_batch_size: Option<u32>,
+}
+
+impl Default for ChunkedPrefill {
+    fn default() -> Self {
+        Self {
+            chunk_tokens: 512,
+            max_batch_size: Some(256),
+        }
+    }
+}
+
+impl LocalScheduler for ChunkedPrefill {
+    fn name(&self) -> &'static str {
+        "chunked_prefill"
+    }
+
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        form_chunked(ctx, self.chunk_tokens.max(1), self.max_batch_size)
+    }
+}
+
+/// Shortest-job-first admission: waiting requests are admitted in order
+/// of predicted remaining work (prompt + expected output tokens), with
+/// optional age-based anti-starvation promotion. Minimizes mean latency
+/// at the cost of tail fairness for long jobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShortestJobFirst {
+    pub max_batched_tokens: u32,
+    pub max_batch_size: Option<u32>,
+    /// Requests that have waited at least this long since arrival jump
+    /// ahead of the size ordering (FIFO among themselves). `None`
+    /// disables anti-starvation.
+    pub starvation_age: Option<f64>,
+}
+
+impl Default for ShortestJobFirst {
+    fn default() -> Self {
+        Self {
+            max_batched_tokens: 8192,
+            max_batch_size: Some(256),
+            starvation_age: Some(10.0),
+        }
+    }
+}
+
+impl LocalScheduler for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn form_batch(&mut self, ctx: &mut LocalSchedCtx) -> BatchPlan {
+        let age = self.starvation_age;
+        form_token_budget(
+            ctx,
+            self.max_batched_tokens,
+            self.max_batch_size,
+            false,
+            move |ctx| AdmissionOrder::Sorted(sjf_order(ctx, age)),
+        )
+    }
+}
+
+/// Predicted total remaining work of a request (the SJF key). Uses the
+/// workload's known output length as the "predictor" — the simulator
+/// equivalent of a perfect length predictor.
+fn predicted_job_tokens(r: &Request) -> u32 {
+    r.effective_prompt_len() + (r.output_len - r.generated)
+}
+
+fn sjf_order(ctx: &LocalSchedCtx, starvation_age: Option<f64>) -> Vec<RequestId> {
+    let aged = |r: &Request| starvation_age.is_some_and(|age| ctx.now - r.arrival >= age);
+    let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
+    ids.sort_by(|&a, &b| {
+        let (ra, rb) = (&ctx.requests[a], &ctx.requests[b]);
+        match (aged(ra), aged(rb)) {
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            (true, true) => ra.arrival.total_cmp(&rb.arrival).then(a.cmp(&b)),
+            (false, false) => predicted_job_tokens(ra)
+                .cmp(&predicted_job_tokens(rb))
+                .then(a.cmp(&b)),
+        }
+    });
+    ids
+}
+
+// ---------------------------------------------------------------------------
+// Shared batch-formation machinery
+// ---------------------------------------------------------------------------
 
 /// Ensure every running decode request can grow one token, preempting
 /// the most-recently-admitted requests (vLLM's recompute policy) when
@@ -169,41 +400,23 @@ fn ensure_decode_growth(ctx: &mut LocalSchedCtx) -> Vec<RequestId> {
     preempted
 }
 
-/// Admission candidates in policy order.
-///
-/// FIFO admission must NOT materialize the queue: under saturation the
-/// waiting queue holds tens of thousands of requests while admission
-/// stops after a handful, and batch formation runs once per iteration —
-/// an O(queue) copy here dominated whole-simulation wall time before it
-/// was made lazy (see EXPERIMENTS.md §Perf).
-fn admission_order<'a>(
-    ctx: &'a LocalSchedCtx,
-    by: PriorityKey,
-) -> Box<dyn Iterator<Item = RequestId> + 'a> {
-    match by {
-        PriorityKey::Arrival => Box::new(ctx.waiting.iter().copied()),
-        PriorityKey::ShortestPrompt => {
-            let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
-            ids.sort_by_key(|&id| ctx.requests[id].effective_prompt_len());
-            Box::new(ids.into_iter())
-        }
-        PriorityKey::ShortestOutput => {
-            let mut ids: Vec<RequestId> = ctx.waiting.iter().copied().collect();
-            ids.sort_by_key(|&id| ctx.requests[id].output_len);
-            Box::new(ids.into_iter())
-        }
-    }
-}
-
-fn form_continuous(
+/// The continuous-batching core shared by [`ContinuousBatching`],
+/// [`PriorityAdmission`] and [`ShortestJobFirst`]: a token budget per
+/// iteration, whole-prompt prefills, admission in the order `order_fn`
+/// produces. `order_fn` runs *after* decode-growth preemption so that
+/// just-preempted requests (pushed back onto `waiting`) are admission
+/// candidates in the same iteration, exactly like FIFO's lazy walk.
+fn form_token_budget(
     ctx: &mut LocalSchedCtx,
     max_batched_tokens: u32,
     max_batch_size: Option<u32>,
     mixed_batching: bool,
-    by: PriorityKey,
+    order_fn: impl FnOnce(&LocalSchedCtx) -> AdmissionOrder,
 ) -> BatchPlan {
     let preempted = ensure_decode_growth(ctx);
+    let order = order_fn(ctx);
     let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
+    let fifo = matches!(order, AdmissionOrder::Fifo);
 
     // --- try to admit prefills -----------------------------------------
     let mut admitted: Vec<RequestId> = Vec::new();
@@ -214,7 +427,11 @@ fn form_continuous(
         let running_len = ctx.running.len();
         let mut reservations: Vec<(RequestId, u32)> = Vec::new();
         let mut pending_blocks: u64 = 0;
-        for rid in admission_order(ctx, by) {
+        let candidates: Box<dyn Iterator<Item = RequestId> + '_> = match &order {
+            AdmissionOrder::Fifo => Box::new(ctx.waiting.iter().copied()),
+            AdmissionOrder::Sorted(ids) => Box::new(ids.iter().copied()),
+        };
+        for rid in candidates {
             if running_len + admitted.len() >= cap {
                 break;
             }
@@ -224,9 +441,9 @@ fn form_continuous(
             // cached prefix, or progress before a chunk boundary)
             let compute_tokens = prompt - r.prompt_done;
             if budget_base + prefill_tokens + compute_tokens > max_batched_tokens {
-                // budget exhausted; FIFO stops at first miss, priority
+                // budget exhausted; FIFO stops at first miss, sorted
                 // orders may skip (try next)
-                if by == PriorityKey::Arrival {
+                if fifo {
                     break;
                 }
                 continue;
@@ -234,7 +451,7 @@ fn form_continuous(
             // memory admission: the whole prompt's KV must fit, net of
             // blocks promised to earlier admissions in this pass
             if !ctx.mem.can_admit_with_pending(prompt, pending_blocks) {
-                if by == PriorityKey::Arrival {
+                if fifo {
                     break;
                 }
                 continue;
@@ -256,7 +473,7 @@ fn form_continuous(
         // first failure, so the admitted set is exactly the queue's
         // prefix — pop instead of an O(queue) retain per admission
         // (a measured hot spot; see EXPERIMENTS.md §Perf).
-        if by == PriorityKey::Arrival {
+        if fifo {
             debug_assert!(admitted.iter().zip(ctx.waiting.iter()).all(|(a, w)| a == w));
             for _ in 0..admitted.len() {
                 ctx.waiting.pop_front();
@@ -353,6 +570,99 @@ fn form_static(ctx: &mut LocalSchedCtx, batch_size: u32, max_linger: f64) -> Bat
     plan
 }
 
+/// The Sarathi-style chunked core: decodes ride every iteration; the
+/// leftover budget continues in-flight prefill chunks, then admits new
+/// requests (whole-prompt KV reservation, chunked compute).
+fn form_chunked(
+    ctx: &mut LocalSchedCtx,
+    chunk_tokens: u32,
+    max_batch_size: Option<u32>,
+) -> BatchPlan {
+    let preempted = ensure_decode_growth(ctx);
+    let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
+    let mut plan = BatchPlan::default();
+    plan.preempted = preempted;
+
+    // decodes claim budget first (1 new token each); prefill chunks
+    // fill whatever remains
+    let decode_count = ctx
+        .running
+        .iter()
+        .filter(|&&rid| ctx.requests[rid].phase == Phase::Decode)
+        .count() as u32;
+    let mut budget = chunk_tokens.saturating_sub(decode_count);
+
+    // 1) continue in-flight (partially prefilled) prompts
+    let in_flight: Vec<RequestId> = ctx
+        .running
+        .iter()
+        .copied()
+        .filter(|&rid| ctx.requests[rid].phase == Phase::Prefill)
+        .collect();
+    for rid in in_flight {
+        if budget == 0 {
+            break;
+        }
+        let r = &ctx.requests[rid];
+        let remaining = r.effective_prompt_len() - r.prompt_done;
+        if remaining == 0 {
+            continue;
+        }
+        let chunk = remaining.min(budget);
+        budget -= chunk;
+        plan.batch.push(r.prompt_done, chunk);
+        plan.members.push(rid);
+        plan.has_prefill = true;
+    }
+
+    // 2) admit waiting requests (FIFO, stop at first miss) while budget
+    //    and batch slots remain; KV is reserved for the whole prompt so
+    //    later chunks can never deadlock on memory
+    let running_len = ctx.running.len();
+    let mut reservations: Vec<(RequestId, u32, u32)> = Vec::new(); // (rid, prompt, chunk)
+    let mut pending_blocks: u64 = 0;
+    for &rid in ctx.waiting.iter() {
+        if budget == 0 || running_len + reservations.len() >= cap {
+            break;
+        }
+        let r = &ctx.requests[rid];
+        let prompt = r.effective_prompt_len();
+        if !ctx.mem.can_admit_with_pending(prompt, pending_blocks) {
+            break;
+        }
+        let chunk = (prompt - r.prompt_done).min(budget);
+        pending_blocks += ctx.mem.blocks_for_tokens(prompt);
+        budget -= chunk;
+        reservations.push((rid, prompt, chunk));
+    }
+    for _ in 0..reservations.len() {
+        ctx.waiting.pop_front();
+    }
+    for (rid, prompt, chunk) in reservations {
+        let ok = ctx.mem.reserve(rid, prompt);
+        debug_assert_eq!(ok, AllocOutcome::Ok, "can_admit guaranteed space");
+        let r = &mut ctx.requests[rid];
+        r.phase = Phase::Prefill;
+        if r.first_scheduled.is_none() {
+            r.first_scheduled = Some(ctx.now);
+        }
+        plan.batch.push(r.prompt_done, chunk);
+        plan.members.push(rid);
+        plan.has_prefill = true;
+        ctx.running.push(rid);
+    }
+
+    // 3) decodes piggyback on every iteration
+    for &rid in ctx.running.iter() {
+        let r = &ctx.requests[rid];
+        if r.phase == Phase::Decode {
+            plan.batch.push(r.ctx_in_cache, 1);
+            plan.members.push(rid);
+        }
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -395,12 +705,21 @@ mod tests {
                 oldest_wait: Some(0.0),
             }
         }
+
+        /// Complete the prefill of request `rid` out-of-band.
+        fn finish_prefill(&mut self, rid: RequestId) {
+            let r = &mut self.requests[rid];
+            let p = r.effective_prompt_len();
+            r.prompt_done = p;
+            r.ctx_in_cache = p;
+            r.phase = Phase::Decode;
+        }
     }
 
     #[test]
     fn continuous_admits_prefills_first() {
         let mut f = Fix::new(&[(100, 10), (50, 10)], 1000);
-        let policy = LocalPolicy::continuous_default();
+        let mut policy = ContinuousBatching::vllm_default();
         let plan = policy.form_batch(&mut f.ctx());
         assert!(plan.has_prefill);
         assert_eq!(plan.members, vec![0, 1]);
@@ -412,7 +731,7 @@ mod tests {
     #[test]
     fn token_budget_limits_admission() {
         let mut f = Fix::new(&[(600, 10), (600, 10), (600, 10)], 10_000);
-        let policy = LocalPolicy::Continuous {
+        let mut policy = ContinuousBatching {
             max_batched_tokens: 1000,
             max_batch_size: None,
             mixed_batching: false,
@@ -425,7 +744,7 @@ mod tests {
     #[test]
     fn batch_size_cap() {
         let mut f = Fix::new(&[(10, 5); 8], 1000);
-        let policy = LocalPolicy::Continuous {
+        let mut policy = ContinuousBatching {
             max_batched_tokens: 10_000,
             max_batch_size: Some(4),
             mixed_batching: false,
@@ -437,14 +756,12 @@ mod tests {
     #[test]
     fn decode_iteration_when_no_admittable_prefill() {
         let mut f = Fix::new(&[(100, 10)], 1000);
-        let policy = LocalPolicy::continuous_default();
+        let mut policy = ContinuousBatching::vllm_default();
         // first: prefill
         let plan = policy.form_batch(&mut f.ctx());
         assert!(plan.has_prefill);
         // simulate prefill completion
-        f.requests[0].prompt_done = 100;
-        f.requests[0].ctx_in_cache = 100;
-        f.requests[0].phase = Phase::Decode;
+        f.finish_prefill(0);
         let plan = policy.form_batch(&mut f.ctx());
         assert!(!plan.has_prefill);
         assert_eq!(plan.batch.ctx, vec![100]);
@@ -455,7 +772,7 @@ mod tests {
     fn memory_pressure_blocks_admission() {
         // 10 blocks of 16 tokens = 160 tokens KV capacity
         let mut f = Fix::new(&[(150, 10), (150, 10)], 10);
-        let policy = LocalPolicy::continuous_default();
+        let mut policy = ContinuousBatching::vllm_default();
         let plan = policy.form_batch(&mut f.ctx());
         assert_eq!(plan.members, vec![0], "second request cannot fit");
     }
@@ -463,17 +780,14 @@ mod tests {
     #[test]
     fn preemption_frees_newest_request() {
         let mut f = Fix::new(&[(64, 100), (64, 100)], 9);
-        let policy = LocalPolicy::continuous_default();
+        let mut policy = ContinuousBatching::vllm_default();
         // admit both: 64 tokens = 4 blocks each, 8 of 9 used
         let plan = policy.form_batch(&mut f.ctx());
         assert_eq!(plan.members.len(), 2);
         // fake both decoding at a block boundary: each needs a new block
         for rid in 0..2 {
-            let r = &mut f.requests[rid];
-            r.prompt_done = 64;
-            r.ctx_in_cache = 64;
-            r.phase = Phase::Decode;
-            r.generated = 1;
+            f.finish_prefill(rid);
+            f.requests[rid].generated = 1;
         }
         let plan = policy.form_batch(&mut f.ctx());
         // only one new block available: request 1 (newest) is preempted
@@ -489,7 +803,7 @@ mod tests {
         let mut f = Fix::new(&[(100, 10)], 1000);
         f.requests[0].cached_prefix = 80;
         f.requests[0].prompt_done = 80; // driver sets this on pool hit
-        let policy = LocalPolicy::continuous_default();
+        let mut policy = ContinuousBatching::vllm_default();
         let plan = policy.form_batch(&mut f.ctx());
         assert_eq!(plan.batch.ctx, vec![80]);
         assert_eq!(plan.batch.new, vec![20]);
@@ -500,18 +814,20 @@ mod tests {
     #[test]
     fn static_waits_for_full_batch() {
         let mut f = Fix::new(&[(50, 5), (50, 5)], 1000);
-        let policy = LocalPolicy::Static {
+        let mut policy = StaticBatching {
             batch_size: 4,
             max_linger: 10.0,
         };
         let plan = policy.form_batch(&mut f.ctx());
         assert!(plan.is_empty(), "only 2 of 4 arrived, no linger yet");
+        // and the policy asks to be re-polled at the linger deadline
+        assert_eq!(policy.repoll_at(0.0, Some(0.0)), Some(10.0));
     }
 
     #[test]
     fn static_forms_batch_when_draining() {
         let mut f = Fix::new(&[(50, 5), (50, 5)], 1000);
-        let policy = LocalPolicy::Static {
+        let mut policy = StaticBatching {
             batch_size: 4,
             max_linger: 10.0,
         };
@@ -525,7 +841,7 @@ mod tests {
     #[test]
     fn static_linger_timeout_forms_partial_batch() {
         let mut f = Fix::new(&[(50, 5)], 1000);
-        let policy = LocalPolicy::Static {
+        let mut policy = StaticBatching {
             batch_size: 8,
             max_linger: 1.0,
         };
@@ -534,24 +850,22 @@ mod tests {
         ctx.oldest_wait = Some(0.5);
         let plan = policy.form_batch(&mut ctx);
         assert_eq!(plan.members.len(), 1);
+        // a lapsed deadline is not re-armed
+        assert_eq!(policy.repoll_at(2.0, Some(0.5)), None);
     }
 
     #[test]
     fn static_no_admission_mid_batch() {
         let mut f = Fix::new(&[(50, 5), (50, 5), (50, 5)], 1000);
-        let policy = LocalPolicy::Static {
+        let mut policy = StaticBatching {
             batch_size: 2,
             max_linger: 0.0,
         };
         let plan = policy.form_batch(&mut f.ctx());
         assert_eq!(plan.members.len(), 2);
         // batch running; third request must wait even though memory is free
-        f.requests[0].phase = Phase::Decode;
-        f.requests[0].ctx_in_cache = 50;
-        f.requests[0].prompt_done = 50;
-        f.requests[1].phase = Phase::Decode;
-        f.requests[1].ctx_in_cache = 50;
-        f.requests[1].prompt_done = 50;
+        f.finish_prefill(0);
+        f.finish_prefill(1);
         let plan = policy.form_batch(&mut f.ctx());
         assert_eq!(plan.members.len(), 2, "no new admission mid-batch");
         assert!(!plan.has_prefill);
@@ -560,7 +874,7 @@ mod tests {
     #[test]
     fn static_reserves_final_footprint() {
         let mut f = Fix::new(&[(16, 16)], 1000);
-        let policy = LocalPolicy::Static {
+        let mut policy = StaticBatching {
             batch_size: 1,
             max_linger: 0.0,
         };
@@ -574,7 +888,7 @@ mod tests {
     #[test]
     fn priority_shortest_prompt_first() {
         let mut f = Fix::new(&[(500, 5), (20, 5), (100, 5)], 1000);
-        let policy = LocalPolicy::Priority {
+        let mut policy = PriorityAdmission {
             max_batched_tokens: 10_000,
             max_batch_size: None,
             by: PriorityKey::ShortestPrompt,
@@ -586,7 +900,7 @@ mod tests {
     #[test]
     fn mixed_batching_includes_decodes() {
         let mut f = Fix::new(&[(100, 10), (50, 10)], 1000);
-        let policy = LocalPolicy::Continuous {
+        let mut policy = ContinuousBatching {
             max_batched_tokens: 8192,
             max_batch_size: None,
             mixed_batching: true,
@@ -594,14 +908,216 @@ mod tests {
         // admit request 0, complete its prefill
         f.waiting = VecDeque::from(vec![0]);
         let _ = policy.form_batch(&mut f.ctx());
-        f.requests[0].prompt_done = 100;
-        f.requests[0].ctx_in_cache = 100;
-        f.requests[0].phase = Phase::Decode;
+        f.finish_prefill(0);
         // now request 1 arrives; mixed batch = prefill(1) + decode(0)
         f.waiting.push_back(1);
         let plan = policy.form_batch(&mut f.ctx());
         assert!(plan.has_prefill);
         assert_eq!(plan.members.len(), 2);
         assert_eq!(plan.batch.new, vec![50, 1]);
+    }
+
+    // ---- chunked prefill ------------------------------------------------
+
+    #[test]
+    fn chunked_prefill_splits_long_prompt() {
+        let mut f = Fix::new(&[(1000, 10)], 1000);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 256,
+            max_batch_size: None,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![0]);
+        assert_eq!(plan.batch.ctx, vec![0]);
+        assert_eq!(plan.batch.new, vec![256], "first chunk only");
+        assert!(plan.has_prefill);
+        // the full prompt's KV was reserved up front
+        assert_eq!(f.mem.blocks_held(0), (1000u64).div_ceil(16));
+        // simulate chunk completion (the driver's IterDone path)
+        f.requests[0].prompt_done = 256;
+        f.requests[0].ctx_in_cache = 256;
+        // second iteration: next chunk continues where the first ended
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.batch.ctx, vec![256]);
+        assert_eq!(plan.batch.new, vec![256]);
+    }
+
+    #[test]
+    fn chunked_prefill_mixes_decodes_and_chunk() {
+        let mut f = Fix::new(&[(64, 10), (600, 10)], 1000);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 128,
+            max_batch_size: None,
+        };
+        // admit request 0 alone and finish its prefill
+        f.waiting = VecDeque::from(vec![0]);
+        let _ = policy.form_batch(&mut f.ctx());
+        f.finish_prefill(0);
+        // request 1 arrives: the iteration carries decode(0) + a chunk
+        // of request 1 sized to the leftover budget (128 - 1 decode)
+        f.waiting.push_back(1);
+        let plan = policy.form_batch(&mut f.ctx());
+        assert!(plan.has_prefill);
+        assert_eq!(plan.members, vec![1, 0], "prefill chunk slot then decode");
+        assert_eq!(plan.batch.new, vec![127, 1]);
+        assert_eq!(plan.batch.ctx, vec![0, 64]);
+    }
+
+    #[test]
+    fn chunked_prefill_budget_shared_across_admissions() {
+        let mut f = Fix::new(&[(100, 10), (100, 10), (100, 10)], 1000);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 250,
+            max_batch_size: None,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        // 100 + 100 + 50: the third admission gets the truncated tail
+        assert_eq!(plan.members, vec![0, 1, 2]);
+        assert_eq!(plan.batch.new, vec![100, 100, 50]);
+        assert!(f.waiting.is_empty());
+        assert_eq!(f.running.len(), 3);
+    }
+
+    #[test]
+    fn chunked_prefill_respects_batch_cap_and_memory() {
+        // cap 1: only the first request is admitted
+        let mut f = Fix::new(&[(100, 10), (100, 10)], 1000);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 1000,
+            max_batch_size: Some(1),
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![0]);
+        assert_eq!(f.waiting.len(), 1);
+        // memory pressure stops admission exactly like continuous
+        let mut f = Fix::new(&[(150, 10), (150, 10)], 10);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 1000,
+            max_batch_size: None,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![0], "second request cannot fit in 10 blocks");
+        assert!(f.mem.check_invariants());
+    }
+
+    #[test]
+    fn chunked_prefill_plan_invariants_under_emulation() {
+        // run the policy to completion over a small mixed workload and
+        // check per-slot reservations every iteration
+        let mut f = Fix::new(&[(700, 4), (90, 3), (300, 2)], 10_000);
+        let mut policy = ChunkedPrefill {
+            chunk_tokens: 128,
+            max_batch_size: None,
+        };
+        for _ in 0..200 {
+            let plan = policy.form_batch(&mut f.ctx());
+            if plan.is_empty() {
+                break;
+            }
+            let mut seen = std::collections::HashSet::new();
+            for (slot, &rid) in plan.members.iter().enumerate() {
+                assert!(seen.insert(rid), "duplicate member {rid}");
+                let tokens = plan.batch.ctx[slot] + plan.batch.new[slot];
+                assert!(f.mem.blocks_held(rid) >= (tokens as u64).div_ceil(16));
+            }
+            // emulate IterDone
+            let mut finished = Vec::new();
+            for (slot, &rid) in plan.members.iter().enumerate() {
+                let new = plan.batch.new[slot];
+                let r = &mut f.requests[rid];
+                match r.phase {
+                    Phase::Prefill => {
+                        r.prompt_done += new;
+                        r.ctx_in_cache = r.prompt_done;
+                        if r.prefill_done() {
+                            r.generated += 1;
+                            r.phase = Phase::Decode;
+                        }
+                    }
+                    Phase::Decode => {
+                        r.generated += 1;
+                        r.ctx_in_cache += 1;
+                    }
+                    _ => {}
+                }
+                if f.requests[rid].done() {
+                    finished.push(rid);
+                }
+            }
+            for rid in finished {
+                f.requests[rid].phase = Phase::Finished;
+                f.running.retain(|&x| x != rid);
+                f.mem.release(rid);
+            }
+        }
+        assert!(
+            f.requests.iter().all(|r| r.phase == Phase::Finished),
+            "all requests must drain: {:?}",
+            f.requests.iter().map(|r| r.phase).collect::<Vec<_>>()
+        );
+        assert!(f.mem.check_invariants());
+        assert_eq!(f.mem.free_blocks(), f.mem.total_blocks());
+    }
+
+    // ---- shortest job first ---------------------------------------------
+
+    #[test]
+    fn sjf_orders_by_predicted_work() {
+        // jobs: 500+5=505, 20+300=320, 100+5=105 -> order 2, 1, 0
+        let mut f = Fix::new(&[(500, 5), (20, 300), (100, 5)], 10_000);
+        let mut policy = ShortestJobFirst {
+            max_batched_tokens: 10_000,
+            max_batch_size: None,
+            starvation_age: None,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn sjf_skips_oversized_and_admits_next() {
+        // budget 200: job 0 (150+5) fits, job 1 (180+5) does not after 0,
+        // job 2 (30+5) still fits -> sorted order [2, 0, 1], all tried
+        let mut f = Fix::new(&[(150, 5), (180, 5), (30, 5)], 10_000);
+        let mut policy = ShortestJobFirst {
+            max_batched_tokens: 200,
+            max_batch_size: None,
+            starvation_age: None,
+        };
+        let plan = policy.form_batch(&mut f.ctx());
+        assert_eq!(plan.members, vec![2, 0], "skip-not-stop on budget miss");
+        assert_eq!(f.waiting.len(), 1);
+    }
+
+    #[test]
+    fn sjf_starvation_aging_promotes_old_requests() {
+        let mut f = Fix::new(&[(900, 5), (20, 5)], 10_000);
+        // request 0 is huge but arrived long ago; request 1 is tiny
+        f.requests[0].arrival = 0.0;
+        f.requests[1].arrival = 99.0;
+        let mut policy = ShortestJobFirst {
+            max_batched_tokens: 10_000,
+            max_batch_size: None,
+            starvation_age: Some(5.0),
+        };
+        let mut ctx = f.ctx();
+        ctx.now = 100.0;
+        let plan = policy.form_batch(&mut ctx);
+        assert_eq!(
+            plan.members,
+            vec![0, 1],
+            "aged request jumps ahead of the size order"
+        );
+    }
+
+    #[test]
+    fn policy_names_are_registry_keys() {
+        assert_eq!(ContinuousBatching::vllm_default().name(), "continuous");
+        assert_eq!(
+            StaticBatching { batch_size: 1, max_linger: 0.0 }.name(),
+            "static"
+        );
+        assert_eq!(ChunkedPrefill::default().name(), "chunked_prefill");
+        assert_eq!(ShortestJobFirst::default().name(), "sjf");
     }
 }

@@ -1,16 +1,39 @@
-//! Two-stage scheduling (the paper's §III-A).
+//! Two-stage scheduling (the paper's §III-A), as a pluggable subsystem.
 //!
-//! A **global scheduler** assigns incoming (and resubmitted) requests to
-//! workers; **local schedulers** decide, between iterations, which
-//! requests run in the next batch, which wait, and which are preempted —
+//! A **global scheduler** ([`GlobalScheduler`]) assigns incoming (and
+//! resubmitted) requests to workers; **local schedulers**
+//! ([`LocalScheduler`]) decide, between iterations, which requests run
+//! in the next batch, which wait, and which are preempted —
 //! coordinating with the worker's memory manager. Operator-level
 //! breakpoints ([`crate::model::Breakpoint`]) let configurations hook
 //! scheduling at sub-iteration granularity; the disaggregation idiom
 //! (prefill-finish → submit to global → dispatch to a decode worker with
 //! a KV transfer) is exactly the two-line example of the paper's Fig 3.
+//!
+//! Policies are selected **by name** through the [`registry`]: YAML
+//! configs say `policy: chunked_prefill`, code says
+//! [`PolicySpec::new("chunked_prefill")`](PolicySpec) — and the cluster
+//! driver only ever handles boxed trait objects, so new policies are
+//! additive (implement a trait, add a registry entry; see the README's
+//! "adding a scheduler policy" walkthrough).
+//!
+//! Built-in local policies: [`ContinuousBatching`], [`StaticBatching`],
+//! [`PriorityAdmission`], [`ChunkedPrefill`], [`ShortestJobFirst`].
+//! Built-in global policies: [`RoundRobin`], [`LeastLoaded`],
+//! [`Random`], [`PowerOfTwoChoices`].
 
 mod global;
 mod local;
+pub mod registry;
 
-pub use global::{GlobalPolicy, GlobalSchedulerState, WorkerView};
-pub use local::{BatchPlan, LocalPolicy, LocalSchedCtx, PriorityKey};
+pub use global::{
+    GlobalScheduler, LeastLoaded, PowerOfTwoChoices, Random, RecordBook, RoundRobin, WorkerView,
+};
+pub use local::{
+    BatchPlan, ChunkedPrefill, ContinuousBatching, LocalSchedCtx, LocalScheduler,
+    PriorityAdmission, PriorityKey, ShortestJobFirst, StaticBatching,
+};
+pub use registry::{
+    build_global, build_local, global_policies, local_policies, register_global, register_local,
+    GlobalEntry, LocalEntry, PolicySpec, GLOBAL_POLICIES, LOCAL_POLICIES,
+};

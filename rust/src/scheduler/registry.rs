@@ -1,0 +1,631 @@
+//! String-keyed scheduler-policy registry (the paper's §III-A claim of
+//! "extensible system optimizations" made concrete).
+//!
+//! A policy is selected by name — from YAML (`policy: chunked_prefill`)
+//! or programmatically via [`PolicySpec`] — and built from its
+//! parameter map by a registered constructor. The simulation driver
+//! only ever sees `Box<dyn LocalScheduler>` / `Box<dyn GlobalScheduler>`,
+//! so adding a policy never touches `sim/engine.rs` or `cluster/mod.rs`:
+//! implement the trait, then either add a [`LocalEntry`]/[`GlobalEntry`]
+//! to the built-in tables below or call [`register_local`] /
+//! [`register_global`] at startup.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::yaml::Yaml;
+
+use super::global::{GlobalScheduler, LeastLoaded, PowerOfTwoChoices, Random, RoundRobin};
+use super::local::{
+    ChunkedPrefill, ContinuousBatching, LocalScheduler, PriorityAdmission, PriorityKey,
+    ShortestJobFirst, StaticBatching,
+};
+
+/// A declarative, cloneable policy selection: a registry name plus a
+/// parameter map (the YAML subtree, or a programmatically built map).
+///
+/// `PolicySpec` is what configs store — the built `Box<dyn …Scheduler>`
+/// itself is neither cloneable nor comparable, and every worker needs
+/// its own instance.
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::scheduler::{build_local, PolicySpec};
+///
+/// let spec = PolicySpec::new("chunked_prefill").with("chunk_tokens", 256u32);
+/// let sched = build_local(&spec).unwrap();
+/// assert_eq!(sched.name(), "chunked_prefill");
+///
+/// // unknown names are errors, listing the known policies
+/// assert!(build_local(&PolicySpec::new("fancy")).is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicySpec {
+    /// Registry name (case-insensitive; aliases accepted).
+    pub name: String,
+    /// Policy parameters (a [`Yaml::Map`]).
+    pub params: Yaml,
+}
+
+impl PolicySpec {
+    /// A spec with no parameters (registry defaults apply).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Yaml::Map(Default::default()),
+        }
+    }
+
+    /// Builder-style parameter. `Option` values map `None` to YAML
+    /// `null` (e.g. `max_batch_size: null` = unbounded).
+    pub fn with(mut self, key: &str, value: impl Into<Yaml>) -> Self {
+        if let Yaml::Map(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
+
+    /// Parse from a YAML map of the form `{policy: <name>, <params>…}`.
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let name = y
+            .req_str("policy")
+            .context("scheduler selection needs a 'policy: <name>' key")?
+            .to_string();
+        Ok(Self {
+            name,
+            params: y.clone(),
+        })
+    }
+
+    /// The default local policy: continuous batching with the vLLM
+    /// defaults of [`ContinuousBatching::vllm_default`] (in particular
+    /// the 256-request batch cap — a bare `policy: continuous` in YAML
+    /// is uncapped instead, matching the pre-registry config parser).
+    pub fn local_default() -> Self {
+        Self::new("continuous")
+            .with("max_batched_tokens", 8192u32)
+            .with("max_batch_size", 256u32)
+    }
+
+    /// The default global policy (least-loaded with a record book).
+    pub fn global_default() -> Self {
+        Self::new("least_loaded")
+    }
+
+    /// Build the local scheduler this spec names.
+    pub fn build_local(&self) -> Result<Box<dyn LocalScheduler>> {
+        build_local(self)
+    }
+
+    /// Build the global scheduler this spec names.
+    pub fn build_global(&self) -> Result<Box<dyn GlobalScheduler>> {
+        build_global(self)
+    }
+}
+
+/// A built-in local policy: name, aliases, summary, parameter keys,
+/// constructor.
+pub struct LocalEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `tokensim list`).
+    pub summary: &'static str,
+    /// Accepted parameter keys — anything else in the spec is an error
+    /// (catches typo'd keys at parse time).
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml) -> Result<Box<dyn LocalScheduler>>,
+}
+
+/// A built-in global policy: name, aliases, summary, parameter keys,
+/// constructor.
+pub struct GlobalEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml) -> Result<Box<dyn GlobalScheduler>>,
+}
+
+// Strict optional accessors: a *missing* key takes the default, but a
+// present-and-malformed value is an error rather than a silent default.
+
+fn opt_u32_strict(p: &Yaml, key: &str, default: u32) -> Result<u32> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u32()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_f64_strict(p: &Yaml, key: &str, default: f64) -> Result<f64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn opt_bool_strict(p: &Yaml, key: &str, default: bool) -> Result<bool> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .with_context(|| format!("'{key}' must be true or false")),
+    }
+}
+
+fn opt_batch_cap(p: &Yaml) -> Result<Option<u32>> {
+    match p.get("max_batch_size") {
+        None | Some(Yaml::Null) => Ok(None),
+        Some(v) => Ok(Some(v.as_u32().context(
+            "'max_batch_size' must be a non-negative integer or null",
+        )?)),
+    }
+}
+
+fn build_continuous(p: &Yaml) -> Result<Box<dyn LocalScheduler>> {
+    Ok(Box::new(ContinuousBatching {
+        max_batched_tokens: opt_u32_strict(p, "max_batched_tokens", 8192)?,
+        max_batch_size: opt_batch_cap(p)?,
+        mixed_batching: opt_bool_strict(p, "mixed_batching", false)?,
+    }))
+}
+
+fn build_static(p: &Yaml) -> Result<Box<dyn LocalScheduler>> {
+    Ok(Box::new(StaticBatching {
+        batch_size: p.req_u32("batch_size")?,
+        max_linger: opt_f64_strict(p, "max_linger", 1.0)?,
+    }))
+}
+
+fn build_priority(p: &Yaml) -> Result<Box<dyn LocalScheduler>> {
+    Ok(Box::new(PriorityAdmission {
+        max_batched_tokens: opt_u32_strict(p, "max_batched_tokens", 8192)?,
+        max_batch_size: opt_batch_cap(p)?,
+        by: match p.req_str("by")? {
+            "arrival" => PriorityKey::Arrival,
+            "shortest_prompt" => PriorityKey::ShortestPrompt,
+            "shortest_output" => PriorityKey::ShortestOutput,
+            other => bail!("unknown priority key '{other}'"),
+        },
+    }))
+}
+
+fn build_chunked_prefill(p: &Yaml) -> Result<Box<dyn LocalScheduler>> {
+    let chunk_tokens = match p.get("chunk_tokens").or_else(|| p.get("chunk_size")) {
+        Some(v) => v
+            .as_u32()
+            .context("'chunk_tokens' must be a positive integer")?,
+        None => 512,
+    };
+    if chunk_tokens == 0 {
+        bail!("'chunk_tokens' must be >= 1");
+    }
+    Ok(Box::new(ChunkedPrefill {
+        chunk_tokens,
+        max_batch_size: opt_batch_cap(p)?,
+    }))
+}
+
+fn build_sjf(p: &Yaml) -> Result<Box<dyn LocalScheduler>> {
+    let starvation_age = match p.get("starvation_age") {
+        None => Some(10.0),
+        Some(Yaml::Null) => None,
+        Some(v) => Some(
+            v.as_f64()
+                .context("'starvation_age' must be a number or null")?,
+        ),
+    };
+    Ok(Box::new(ShortestJobFirst {
+        max_batched_tokens: opt_u32_strict(p, "max_batched_tokens", 8192)?,
+        max_batch_size: opt_batch_cap(p)?,
+        starvation_age,
+    }))
+}
+
+/// Built-in local (per-worker) policies.
+pub const LOCAL_POLICIES: &[LocalEntry] = &[
+    LocalEntry {
+        name: "continuous",
+        aliases: &["vllm"],
+        summary: "continuous batching (vLLM/Orca): join/leave between iterations",
+        params: &["max_batched_tokens", "max_batch_size", "mixed_batching"],
+        build: build_continuous,
+    },
+    LocalEntry {
+        name: "static",
+        aliases: &[],
+        summary: "static batching: batch runs to completion, bubbles on early finish",
+        params: &["batch_size", "max_linger"],
+        build: build_static,
+    },
+    LocalEntry {
+        name: "priority",
+        aliases: &[],
+        summary: "continuous batching with priority-ordered admission (by: …)",
+        params: &["max_batched_tokens", "max_batch_size", "by"],
+        build: build_priority,
+    },
+    LocalEntry {
+        name: "chunked_prefill",
+        aliases: &["sarathi"],
+        summary: "Sarathi-style chunked prefill mixed with decodes (tail-TBT control)",
+        params: &["chunk_tokens", "chunk_size", "max_batch_size"],
+        build: build_chunked_prefill,
+    },
+    LocalEntry {
+        name: "sjf",
+        aliases: &["shortest_job_first"],
+        summary: "shortest-predicted-job-first admission with anti-starvation aging",
+        params: &["max_batched_tokens", "max_batch_size", "starvation_age"],
+        build: build_sjf,
+    },
+];
+
+fn build_round_robin(_p: &Yaml) -> Result<Box<dyn GlobalScheduler>> {
+    Ok(Box::new(RoundRobin::default()))
+}
+
+fn build_random(_p: &Yaml) -> Result<Box<dyn GlobalScheduler>> {
+    Ok(Box::new(Random))
+}
+
+fn build_least_loaded(_p: &Yaml) -> Result<Box<dyn GlobalScheduler>> {
+    Ok(Box::new(LeastLoaded::default()))
+}
+
+fn build_power_of_two(_p: &Yaml) -> Result<Box<dyn GlobalScheduler>> {
+    Ok(Box::new(PowerOfTwoChoices::default()))
+}
+
+/// Built-in global (inter-worker) policies.
+pub const GLOBAL_POLICIES: &[GlobalEntry] = &[
+    GlobalEntry {
+        name: "round_robin",
+        aliases: &[],
+        summary: "cycle requests over eligible workers",
+        params: &[],
+        build: build_round_robin,
+    },
+    GlobalEntry {
+        name: "least_loaded",
+        aliases: &["load_aware"],
+        summary: "least outstanding tokens, with an in-flight record book",
+        params: &[],
+        build: build_least_loaded,
+    },
+    GlobalEntry {
+        name: "random",
+        aliases: &[],
+        summary: "uniform random eligible worker (the paper's Fig 3 example)",
+        params: &[],
+        build: build_random,
+    },
+    GlobalEntry {
+        name: "power_of_two",
+        aliases: &["po2", "power_of_two_choices"],
+        summary: "two random candidates, dispatch to the less loaded",
+        params: &[],
+        build: build_power_of_two,
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime registration (library users; built-ins live in the tables)
+// ---------------------------------------------------------------------------
+
+struct DynLocalEntry {
+    name: String,
+    summary: String,
+    build: Box<dyn Fn(&Yaml) -> Result<Box<dyn LocalScheduler>> + Send + Sync>,
+}
+
+struct DynGlobalEntry {
+    name: String,
+    summary: String,
+    build: Box<dyn Fn(&Yaml) -> Result<Box<dyn GlobalScheduler>> + Send + Sync>,
+}
+
+fn extra_local() -> &'static Mutex<Vec<DynLocalEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynLocalEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn extra_global() -> &'static Mutex<Vec<DynGlobalEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynGlobalEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a local policy at runtime. Registered names take precedence
+/// over built-ins, so a library user can also shadow a built-in policy.
+///
+/// # Examples
+///
+/// The complete "bring your own scheduler" flow — define, register,
+/// select by name:
+///
+/// ```
+/// use tokensim::scheduler::{
+///     register_local, BatchPlan, LocalSchedCtx, LocalScheduler, PolicySpec,
+/// };
+///
+/// /// Admits nothing — a (useless but tiny) custom policy.
+/// struct Freeze;
+///
+/// impl LocalScheduler for Freeze {
+///     fn name(&self) -> &'static str { "freeze" }
+///     fn form_batch(&mut self, _ctx: &mut LocalSchedCtx) -> BatchPlan {
+///         BatchPlan::default()
+///     }
+/// }
+///
+/// register_local("freeze", "admits nothing (demo)", |_params| Ok(Box::new(Freeze)));
+/// let sched = PolicySpec::new("freeze").build_local().unwrap();
+/// assert_eq!(sched.name(), "freeze");
+/// ```
+pub fn register_local(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml) -> Result<Box<dyn LocalScheduler>> + Send + Sync + 'static,
+) {
+    extra_local().lock().unwrap().push(DynLocalEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Box::new(build),
+    });
+}
+
+/// Register a global policy at runtime (see [`register_local`]).
+pub fn register_global(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml) -> Result<Box<dyn GlobalScheduler>> + Send + Sync + 'static,
+) {
+    extra_global().lock().unwrap().push(DynGlobalEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Box::new(build),
+    });
+}
+
+fn matches_name(candidate: &str, name: &str, aliases: &[&str]) -> bool {
+    candidate.eq_ignore_ascii_case(name)
+        || aliases.iter().any(|a| candidate.eq_ignore_ascii_case(a))
+}
+
+/// Reject typo'd parameter keys for built-in policies ("policy" itself
+/// is the selector key YAML specs carry). Runtime-registered policies
+/// validate their own params in their builder.
+fn check_param_keys(spec: &PolicySpec, known: &[&str]) -> Result<()> {
+    if let Yaml::Map(m) = &spec.params {
+        for key in m.keys() {
+            if key != "policy" && !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown parameter '{key}' for scheduler policy '{}' (accepted: {})",
+                    spec.name,
+                    if known.is_empty() { "none".to_string() } else { known.join(", ") }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a local scheduler from a spec. Unknown names list the known
+/// policies in the error.
+pub fn build_local(spec: &PolicySpec) -> Result<Box<dyn LocalScheduler>> {
+    {
+        let extras = extra_local().lock().unwrap();
+        if let Some(e) = extras
+            .iter()
+            .rev()
+            .find(|e| spec.name.eq_ignore_ascii_case(&e.name))
+        {
+            return (e.build)(&spec.params)
+                .with_context(|| format!("building local scheduler '{}'", spec.name));
+        }
+    }
+    let entry = LOCAL_POLICIES
+        .iter()
+        .find(|e| matches_name(&spec.name, e.name, e.aliases))
+        .with_context(|| {
+            format!(
+                "unknown local scheduler policy '{}' (known: {})",
+                spec.name,
+                local_policies()
+                    .iter()
+                    .map(|(n, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params)
+        .with_context(|| format!("building local scheduler '{}'", spec.name))
+}
+
+/// Build a global scheduler from a spec.
+pub fn build_global(spec: &PolicySpec) -> Result<Box<dyn GlobalScheduler>> {
+    {
+        let extras = extra_global().lock().unwrap();
+        if let Some(e) = extras
+            .iter()
+            .rev()
+            .find(|e| spec.name.eq_ignore_ascii_case(&e.name))
+        {
+            return (e.build)(&spec.params)
+                .with_context(|| format!("building global scheduler '{}'", spec.name));
+        }
+    }
+    let entry = GLOBAL_POLICIES
+        .iter()
+        .find(|e| matches_name(&spec.name, e.name, e.aliases))
+        .with_context(|| {
+            format!(
+                "unknown global scheduler policy '{}' (known: {})",
+                spec.name,
+                global_policies()
+                    .iter()
+                    .map(|(n, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params)
+        .with_context(|| format!("building global scheduler '{}'", spec.name))
+}
+
+/// All registered local policies as `(name, summary)`, built-ins first.
+pub fn local_policies() -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = LOCAL_POLICIES
+        .iter()
+        .map(|e| (e.name.to_string(), e.summary.to_string()))
+        .collect();
+    for e in extra_local().lock().unwrap().iter() {
+        out.push((e.name.clone(), e.summary.clone()));
+    }
+    out
+}
+
+/// All registered global policies as `(name, summary)`, built-ins first.
+pub fn global_policies() -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = GLOBAL_POLICIES
+        .iter()
+        .map(|e| (e.name.to_string(), e.summary.to_string()))
+        .collect();
+    for e in extra_global().lock().unwrap().iter() {
+        out.push((e.name.clone(), e.summary.clone()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_builtin_local_policy_with_defaults() {
+        for e in LOCAL_POLICIES {
+            // 'static' and 'priority' have required params; supply them
+            let spec = match e.name {
+                "static" => PolicySpec::new(e.name).with("batch_size", 8u32),
+                "priority" => PolicySpec::new(e.name).with("by", "shortest_prompt"),
+                other => PolicySpec::new(other),
+            };
+            let sched = build_local(&spec)
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.name));
+            assert_eq!(sched.name(), e.name);
+        }
+    }
+
+    #[test]
+    fn default_local_spec_matches_vllm_defaults() {
+        // the programmatic default must keep the seed's 256-request cap
+        // (a bare `policy: continuous` in YAML stays uncapped)
+        let spec = PolicySpec::local_default();
+        assert_eq!(spec.params.opt_u32("max_batch_size", 0), 256);
+        assert!(build_local(&spec).is_ok());
+    }
+
+    #[test]
+    fn typod_or_malformed_params_are_errors() {
+        // unknown key
+        let err = build_local(&PolicySpec::new("chunked_prefill").with("chunk_toknes", 64u32))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'chunk_toknes'"));
+        // well-known key, malformed value
+        let err = build_local(&PolicySpec::new("continuous").with("max_batch_size", "lots"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("max_batch_size"));
+        // globals take no parameters at all
+        assert!(build_global(&PolicySpec::new("power_of_two").with("choices", 3u32)).is_err());
+    }
+
+    #[test]
+    fn builds_every_builtin_global_policy() {
+        for e in GLOBAL_POLICIES {
+            let sched = build_global(&PolicySpec::new(e.name)).unwrap();
+            assert_eq!(sched.name(), e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        assert_eq!(
+            build_local(&PolicySpec::new("Sarathi")).unwrap().name(),
+            "chunked_prefill"
+        );
+        assert_eq!(
+            build_local(&PolicySpec::new("Continuous")).unwrap().name(),
+            "continuous"
+        );
+        assert_eq!(
+            build_global(&PolicySpec::new("load_aware")).unwrap().name(),
+            "least_loaded"
+        );
+        assert_eq!(
+            build_global(&PolicySpec::new("po2")).unwrap().name(),
+            "power_of_two"
+        );
+    }
+
+    #[test]
+    fn unknown_policies_are_errors_listing_known() {
+        let err = build_local(&PolicySpec::new("warp_speed")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown local scheduler policy"), "{msg}");
+        assert!(msg.contains("chunked_prefill"), "{msg}");
+        let err = build_global(&PolicySpec::new("warp_speed")).unwrap_err();
+        assert!(format!("{err:#}").contains("power_of_two"));
+    }
+
+    #[test]
+    fn params_flow_through_spec() {
+        let spec = PolicySpec::new("continuous")
+            .with("max_batched_tokens", 1234u32)
+            .with("max_batch_size", Option::<u32>::None);
+        // rebuildable and comparable (what configs need)
+        assert_eq!(spec.clone(), spec);
+        assert!(build_local(&spec).is_ok());
+    }
+
+    #[test]
+    fn bad_params_are_errors() {
+        // static without batch_size
+        assert!(build_local(&PolicySpec::new("static")).is_err());
+        // priority with a bogus key
+        assert!(
+            build_local(&PolicySpec::new("priority").with("by", "vibes")).is_err()
+        );
+        // zero-chunk chunked prefill would stall the worker
+        assert!(
+            build_local(&PolicySpec::new("chunked_prefill").with("chunk_tokens", 0u32))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn runtime_registration_shadows_builtins() {
+        register_local("test_shadow_continuous", "test", |p| build_continuous(p));
+        let sched = build_local(&PolicySpec::new("test_shadow_continuous")).unwrap();
+        assert_eq!(sched.name(), "continuous");
+        assert!(local_policies()
+            .iter()
+            .any(|(n, _)| n == "test_shadow_continuous"));
+    }
+
+    #[test]
+    fn from_yaml_requires_policy_key() {
+        let y = Yaml::parse("batch_size: 4\n").unwrap();
+        assert!(PolicySpec::from_yaml(&y).is_err());
+        let y = Yaml::parse("policy: static\nbatch_size: 4\n").unwrap();
+        let spec = PolicySpec::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "static");
+        assert!(build_local(&spec).is_ok());
+    }
+}

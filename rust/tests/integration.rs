@@ -224,21 +224,18 @@ fn conversation_pool_cache_reduces_prefill_work() {
 
 #[test]
 fn static_batching_has_worse_tail_latency_under_load() {
-    use tokensim::scheduler::LocalPolicy;
-    let mk = |policy: LocalPolicy| {
+    use tokensim::scheduler::PolicySpec;
+    let mk = |policy: PolicySpec| {
         let mut cfg = base_cfg(250, 12.0);
         cfg.cluster.workers[0].local_scheduler = policy;
         Simulation::from_config(&cfg).run()
     };
-    let cont = mk(LocalPolicy::Continuous {
-        max_batched_tokens: 8192,
-        max_batch_size: Some(16),
-        mixed_batching: false,
-    });
-    let stat = mk(LocalPolicy::Static {
-        batch_size: 16,
-        max_linger: 2.0,
-    });
+    let cont = mk(PolicySpec::new("continuous")
+        .with("max_batched_tokens", 8192u32)
+        .with("max_batch_size", 16u32));
+    let stat = mk(PolicySpec::new("static")
+        .with("batch_size", 16u32)
+        .with("max_linger", 2.0));
     let (pc, ps) = (
         MetricSet::new(&cont.records).mean_normalized_latency(),
         MetricSet::new(&stat.records).mean_normalized_latency(),
@@ -286,4 +283,154 @@ fn quarter_flops_decode_hardware_is_slower_end_to_end() {
         quarter.makespan >= full.makespan,
         "quarter-FLOPS decode cannot be faster"
     );
+}
+
+// ---- pluggable scheduler policies ---------------------------------------
+
+#[test]
+fn every_example_config_parses_and_runs() {
+    // configs/ is the documented CONFIG.md example set: one runnable
+    // file per scheduler policy; every one must simulate to completion
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
+    let mut seen = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("yaml") {
+            continue;
+        }
+        let cfg = SimulationConfig::from_yaml_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let report = Simulation::from_config(&cfg).run();
+        assert_eq!(
+            report.records.len(),
+            cfg.workload.num_requests,
+            "{}",
+            path.display()
+        );
+        seen += 1;
+    }
+    assert!(seen >= 6, "expected the documented example configs, saw {seen}");
+}
+
+#[test]
+fn chunked_prefill_selected_from_yaml_runs_end_to_end() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: chunked_prefill
+        chunk_tokens: 256
+        max_batch_size: 32
+workload:
+  num_requests: 80
+  qps: 10.0
+  prompt_len:
+    uniform:
+      min: 64
+      max: 1536
+  output_len:
+    fixed: 32
+  seed: 5
+"#;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).run();
+    assert_eq!(report.records.len(), 80);
+    // chunking splits long prefills: more iterations than requests with
+    // room to spare (80 prefill chunks alone would need > 80)
+    assert!(report.workers[0].iterations > 80);
+}
+
+#[test]
+fn chunked_prefill_caps_decode_stalls_under_long_prompts() {
+    // long prompts + live decodes: the max inter-token gap with chunked
+    // prefill must not exceed the monolithic-prefill gap
+    use tokensim::scheduler::PolicySpec;
+    let mk = |policy: PolicySpec| {
+        let mut cfg = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            WorkloadSpec::fixed(60, 6.0, 3000, 64),
+        );
+        cfg.cost_model = CostModelKind::Analytic;
+        cfg.cluster.workers[0].local_scheduler = policy;
+        Simulation::from_config(&cfg).run()
+    };
+    let mono = mk(PolicySpec::new("continuous").with("max_batched_tokens", 8192u32));
+    let chunked = mk(PolicySpec::new("chunked_prefill").with("chunk_tokens", 512u32));
+    let worst_gap = |r: &tokensim::cluster::SimulationReport| {
+        r.records
+            .iter()
+            .map(|rec| rec.max_token_gap)
+            .fold(0.0f64, f64::max)
+    };
+    assert_eq!(chunked.records.len(), 60);
+    assert!(
+        worst_gap(&chunked) <= worst_gap(&mono) * 1.05,
+        "chunked {} vs monolithic {}",
+        worst_gap(&chunked),
+        worst_gap(&mono)
+    );
+}
+
+#[test]
+fn sjf_selected_from_yaml_runs_end_to_end() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: sjf
+        max_batch_size: 16
+        starvation_age: 5.0
+workload:
+  num_requests: 120
+  qps: 12.0
+  prompt_len:
+    log_normal:
+      median: 128.0
+      sigma: 1.0
+  output_len:
+    fixed: 24
+  seed: 9
+"#;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).run();
+    assert_eq!(report.records.len(), 120);
+}
+
+#[test]
+fn power_of_two_selected_from_yaml_runs_end_to_end() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      quantity: 4
+  scheduler:
+    global:
+      policy: power_of_two
+workload:
+  num_requests: 160
+  qps: 40.0
+  prompt_len:
+    fixed: 128
+  output_len:
+    fixed: 32
+  seed: 2
+"#;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).run();
+    assert_eq!(report.records.len(), 160);
+    // the two-choices rule must spread a 40 qps stream over all workers
+    assert!(report.workers.iter().all(|w| w.iterations > 0));
 }

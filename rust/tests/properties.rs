@@ -12,7 +12,10 @@ use tokensim::hardware::HardwareSpec;
 use tokensim::memory::{AllocOutcome, PagedBlockManager, PoolCache};
 use tokensim::model::ModelSpec;
 use tokensim::request::Request;
-use tokensim::scheduler::{LocalPolicy, LocalSchedCtx};
+use tokensim::scheduler::{
+    ChunkedPrefill, ContinuousBatching, LocalSchedCtx, LocalScheduler, PolicySpec,
+    ShortestJobFirst, StaticBatching,
+};
 use tokensim::sim::SimRng;
 use tokensim::workload::{ArrivalProcess, LengthDistribution, WorkloadSpec};
 
@@ -79,22 +82,36 @@ fn prop_pool_cache_never_exceeds_capacity() {
 
 // ---- scheduler invariants ------------------------------------------------
 
-fn random_policy(rng: &mut SimRng) -> LocalPolicy {
-    match rng.pick(3) {
-        0 => LocalPolicy::Continuous {
+fn random_policy(rng: &mut SimRng) -> Box<dyn LocalScheduler> {
+    let cap = if rng.gen_bool(0.5) {
+        Some(1 + rng.uniform_int(0, 64) as u32)
+    } else {
+        None
+    };
+    match rng.pick(5) {
+        0 => Box::new(ContinuousBatching {
             max_batched_tokens: 256 + rng.uniform_int(0, 8192) as u32,
-            max_batch_size: if rng.gen_bool(0.5) {
-                Some(1 + rng.uniform_int(0, 64) as u32)
+            max_batch_size: cap,
+            mixed_batching: rng.gen_bool(0.3),
+        }),
+        1 => Box::new(StaticBatching {
+            batch_size: 1 + rng.uniform_int(0, 32) as u32,
+            max_linger: rng.uniform(0.0, 2.0),
+        }),
+        2 => Box::new(ChunkedPrefill {
+            chunk_tokens: 1 + rng.uniform_int(0, 1024) as u32,
+            max_batch_size: cap,
+        }),
+        3 => Box::new(ShortestJobFirst {
+            max_batched_tokens: 256 + rng.uniform_int(0, 8192) as u32,
+            max_batch_size: cap,
+            starvation_age: if rng.gen_bool(0.5) {
+                Some(rng.uniform(0.0, 5.0))
             } else {
                 None
             },
-            mixed_batching: rng.gen_bool(0.3),
-        },
-        1 => LocalPolicy::Static {
-            batch_size: 1 + rng.uniform_int(0, 32) as u32,
-            max_linger: rng.uniform(0.0, 2.0),
-        },
-        _ => LocalPolicy::continuous_default(),
+        }),
+        _ => Box::new(ContinuousBatching::vllm_default()),
     }
 }
 
@@ -102,7 +119,7 @@ fn random_policy(rng: &mut SimRng) -> LocalPolicy {
 fn prop_batch_plans_respect_memory_and_phases() {
     for seed in SEEDS {
         let mut rng = SimRng::new(seed, "sched-prop");
-        let policy = random_policy(&mut rng);
+        let mut policy = random_policy(&mut rng);
         let n = 1 + rng.pick(40);
         let mut requests: Vec<Request> = (0..n)
             .map(|i| {
@@ -229,6 +246,25 @@ fn random_cfg(seed: u64) -> SimulationConfig {
             w.hardware.mem_cap = 16e9;
         }
     }
+    // random scheduler policies through the registry spec layer, so the
+    // whole-simulation invariants cover every continuous-family plugin
+    if rng.gen_bool(0.5) {
+        let spec = match rng.pick(3) {
+            0 => PolicySpec::new("chunked_prefill")
+                .with("chunk_tokens", 128 + rng.uniform_int(0, 512) as u32),
+            1 => PolicySpec::new("sjf"),
+            _ => PolicySpec::new("continuous"),
+        };
+        for w in &mut cfg.cluster.workers {
+            w.local_scheduler = spec.clone();
+        }
+    }
+    cfg.cluster.scheduler.global = match rng.pick(4) {
+        0 => PolicySpec::new("round_robin"),
+        1 => PolicySpec::new("least_loaded"),
+        2 => PolicySpec::new("random"),
+        _ => PolicySpec::new("power_of_two"),
+    };
     cfg
 }
 
