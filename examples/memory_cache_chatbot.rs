@@ -38,7 +38,7 @@ fn main() {
         );
         cfg.cost_model = CostModelKind::Table;
         cfg.pool_cache = pool;
-        let report = Simulation::from_conversations(&cfg, &convs).run();
+        let report = Simulation::from_conversations(&cfg, &convs).expect("valid config").run();
         let m = report.metrics();
         println!("{name}:");
         println!(

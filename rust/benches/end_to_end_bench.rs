@@ -32,7 +32,7 @@ fn main() {
     for kind in [CostModelKind::Analytic, CostModelKind::Table] {
         let c = cfg(500, kind);
         bench(&format!("e2e/500_sharegpt_requests_{kind:?}"), budget(), || {
-            sink(Simulation::from_config(&c).run().records.len());
+            sink(Simulation::from_config(&c).expect("valid config").run().records.len());
         });
     }
 
@@ -42,7 +42,7 @@ fn main() {
     {
         let c = cfg(200, CostModelKind::Hlo);
         bench("e2e/200_sharegpt_requests_Hlo", budget(), || {
-            sink(Simulation::from_config(&c).run().records.len());
+            sink(Simulation::from_config(&c).expect("valid config").run().records.len());
         });
     }
 
@@ -57,13 +57,13 @@ fn main() {
     );
     disagg.cost_model = CostModelKind::Table;
     bench("e2e/500_requests_disaggregated_2p6d", budget(), || {
-        sink(Simulation::from_config(&disagg).run().records.len());
+        sink(Simulation::from_config(&disagg).expect("valid config").run().records.len());
     });
 
     // the headline scale: Fig 9's 50k-request workload, one shot
     let big = cfg(50_000, CostModelKind::Table);
     let t0 = Instant::now();
-    let report = Simulation::from_config(&big).run();
+    let report = Simulation::from_config(&big).expect("valid config").run();
     let wall = t0.elapsed().as_secs_f64();
     let tokens: u64 = report.records.iter().map(|r| r.output_len as u64).sum();
     println!(

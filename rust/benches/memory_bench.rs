@@ -1,11 +1,11 @@
-//! Memory-manager micro-benchmarks: block reserve/grow/release churn
-//! and pool-cache operations.
+//! Memory-manager micro-benchmarks: block reserve/grow/release churn,
+//! pool-cache operations, and the swap/prefix plugin hot paths.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, budget, sink};
-use tokensim::memory::{PagedBlockManager, PoolCache};
+use tokensim::memory::{MemoryManager, PagedBlockManager, PoolCache, SwapMemoryManager};
 
 fn main() {
     println!("== memory_bench ==");
@@ -42,5 +42,19 @@ fn main() {
             sink(pool.lookup(i % 128, 512));
         }
         sink(pool.used_blocks());
+    });
+
+    bench("swap/out_in_churn_1k", budget(), || {
+        let mut mem = SwapMemoryManager::with_blocks(100_000, 16, 1024, 400_000);
+        for i in 0..1000usize {
+            mem.reserve(i, 64 + (i as u32 * 31) % 2048);
+        }
+        for i in 0..1000usize {
+            sink(mem.swap_out(i));
+        }
+        for i in 0..1000usize {
+            let _ = mem.swap_in(i, 64 + (i as u32 * 31) % 2048);
+        }
+        sink(mem.swap_space_used());
     });
 }

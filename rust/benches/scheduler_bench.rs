@@ -8,7 +8,7 @@ mod harness;
 use std::collections::VecDeque;
 
 use harness::{bench, budget, sink};
-use tokensim::memory::PagedBlockManager;
+use tokensim::memory::{PagedBlockManager, PreemptionPolicy};
 use tokensim::model::ModelSpec;
 use tokensim::request::Request;
 use tokensim::scheduler::{
@@ -47,6 +47,7 @@ fn bench_local(name: &str, mut policy: Box<dyn LocalScheduler>, n_running: usize
             now: 0.0,
             draining: false,
             oldest_wait: Some(0.0),
+            preemption: PreemptionPolicy::Recompute,
         };
         sink(policy.form_batch(&mut ctx).members.len());
     });

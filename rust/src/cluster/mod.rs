@@ -8,13 +8,15 @@ mod worker;
 pub use report::{SimulationReport, WorkerStats};
 pub use worker::{Worker, WorkerRole};
 
+use anyhow::{ensure, Context, Result};
+
 use crate::compute::{build_cost_model, ComputeModel};
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
-use crate::memory::{AllocOutcome, PagedBlockManager, PoolCache};
+use crate::memory::{AllocOutcome, Granularity, PoolCache};
 use crate::metrics::{MemorySample, MemoryTimeline, RequestRecord, SloSpec};
 use crate::model::ModelSpec;
-use crate::network::{CommModel, Schedule};
+use crate::network::{xfer_time_uniform, CommModel, Schedule};
 use crate::request::{Phase, Request, RequestId};
 use crate::scheduler::{GlobalScheduler, LocalSchedCtx, WorkerView};
 use crate::sim::{EventPayload, EventQueue, SimRng, SimTime};
@@ -25,7 +27,9 @@ use crate::workload::ConversationWorkload;
 pub type CostFactory<'a> = dyn Fn(&ModelSpec, &HardwareSpec, usize) -> Box<dyn ComputeModel> + 'a;
 
 /// A running simulation: construct from a config (or conversations),
-/// then [`Simulation::run`] to completion.
+/// then [`Simulation::run`] to completion. Construction returns an
+/// error — not a panic — when the config names unknown policies /
+/// managers or carries malformed parameters.
 pub struct Simulation {
     queue: EventQueue,
     requests: Vec<Request>,
@@ -50,21 +54,21 @@ pub struct Simulation {
 
 impl Simulation {
     /// Build from a declarative config (single-round workload).
-    pub fn from_config(cfg: &SimulationConfig) -> Self {
+    pub fn from_config(cfg: &SimulationConfig) -> Result<Self> {
         let model = cfg.model.clone();
         let requests = cfg.workload.generate();
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), None)
     }
 
     /// Build from pre-generated requests (trace replay).
-    pub fn from_requests(cfg: &SimulationConfig, requests: Vec<Request>) -> Self {
+    pub fn from_requests(cfg: &SimulationConfig, requests: Vec<Request>) -> Result<Self> {
         let model = cfg.model.clone();
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), None)
     }
 
     /// Build with a custom per-worker cost-model factory (oracle /
     /// baseline simulators run the same driver with their own models).
-    pub fn with_cost_factory(cfg: &SimulationConfig, factory: &CostFactory) -> Self {
+    pub fn with_cost_factory(cfg: &SimulationConfig, factory: &CostFactory) -> Result<Self> {
         let model = cfg.model.clone();
         let requests = cfg.workload.generate();
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), Some(factory))
@@ -75,7 +79,7 @@ impl Simulation {
         cfg: &SimulationConfig,
         requests: Vec<Request>,
         factory: &CostFactory,
-    ) -> Self {
+    ) -> Result<Self> {
         let model = cfg.model.clone();
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), Some(factory))
     }
@@ -85,12 +89,15 @@ impl Simulation {
         cfg: &SimulationConfig,
         convs: &[ConversationWorkload],
         factory: &CostFactory,
-    ) -> Self {
+    ) -> Result<Self> {
         Self::conversations_inner(cfg, convs, Some(factory))
     }
 
     /// Build a multi-round conversation simulation (Fig 14).
-    pub fn from_conversations(cfg: &SimulationConfig, convs: &[ConversationWorkload]) -> Self {
+    pub fn from_conversations(
+        cfg: &SimulationConfig,
+        convs: &[ConversationWorkload],
+    ) -> Result<Self> {
         Self::conversations_inner(cfg, convs, None)
     }
 
@@ -98,7 +105,7 @@ impl Simulation {
         cfg: &SimulationConfig,
         convs: &[ConversationWorkload],
         factory: Option<&CostFactory>,
-    ) -> Self {
+    ) -> Result<Self> {
         let model = cfg.model.clone();
         let mut requests = Vec::new();
         let mut conversations = Vec::with_capacity(convs.len());
@@ -133,13 +140,20 @@ impl Simulation {
         conversations: Vec<(Vec<RequestId>, usize)>,
         think_times: Vec<Vec<f64>>,
         factory: Option<&CostFactory>,
-    ) -> Self {
+    ) -> Result<Self> {
         let mut workers = Vec::new();
         for wc in &cfg.cluster.workers {
             let hw = wc.hardware.clone();
+            let preemption = wc
+                .memory
+                .preemption()
+                .context("in worker 'memory' section")?;
             for _ in 0..wc.quantity {
                 let id = workers.len();
-                let mem = PagedBlockManager::new(&model, hw.mem_cap, wc.memory.clone());
+                let mem = wc
+                    .memory
+                    .build(&model, hw.mem_cap)
+                    .with_context(|| format!("worker {id}: building memory manager"))?;
                 let cost = match factory {
                     Some(f) => f(&model, &hw, id),
                     None => build_cost_model(cfg.cost_model, &model, &hw, &cfg.artifacts_dir),
@@ -149,7 +163,7 @@ impl Simulation {
                 let local = wc
                     .local_scheduler
                     .build_local()
-                    .unwrap_or_else(|e| panic!("worker {id}: {e:#}"));
+                    .with_context(|| format!("worker {id}: building local scheduler"))?;
                 workers.push(Worker::new(
                     id,
                     hw.clone(),
@@ -157,12 +171,13 @@ impl Simulation {
                     wc.run_decode,
                     local,
                     mem,
+                    preemption,
                     cost,
                 ));
             }
         }
-        assert!(!workers.is_empty(), "cluster has no workers");
-        assert!(
+        ensure!(!workers.is_empty(), "cluster has no workers");
+        ensure!(
             workers.iter().any(|w| w.run_prefill) && workers.iter().any(|w| w.run_decode),
             "cluster must be able to run both phases"
         );
@@ -171,7 +186,7 @@ impl Simulation {
         let comm = CommModel::analytic(link, Schedule::Overlapped);
         let (pool, pool_comm) = match &cfg.pool_cache {
             Some(pc) => (
-                PoolCache::new(pc.capacity_blocks, cfg.cluster.workers[0].memory.block_size),
+                PoolCache::new(pc.capacity_blocks, cfg.cluster.workers[0].memory.block_size()),
                 CommModel::analytic(pc.link.clone(), Schedule::Sequential),
             ),
             None => (
@@ -202,8 +217,8 @@ impl Simulation {
             .scheduler
             .global
             .build_global()
-            .unwrap_or_else(|e| panic!("global scheduler: {e:#}"));
-        Self {
+            .context("building global scheduler")?;
+        Ok(Self {
             queue,
             requests,
             workers,
@@ -221,7 +236,7 @@ impl Simulation {
             conversations,
             think_times,
             finished: 0,
-        }
+        })
     }
 
     /// Run to completion and produce the report.
@@ -240,8 +255,8 @@ impl Simulation {
             let mut diag = String::new();
             for w in &self.workers {
                 diag.push_str(&format!(
-                    "\n  worker {}: busy={} waiting={:?} running={:?} pending_kv={:?} free={}/{}",
-                    w.id, w.busy, w.waiting, w.running, w.pending_kv,
+                    "\n  worker {} ({}): busy={} waiting={:?} running={:?} pending_kv={:?} free={}/{}",
+                    w.id, w.mem.name(), w.busy, w.waiting, w.running, w.pending_kv,
                     w.mem.free_blocks(), w.mem.total_blocks()
                 ));
             }
@@ -286,7 +301,9 @@ impl Simulation {
             }
             r.phase = Phase::Queued;
         }
-        // memory-pool lookup for conversation rounds
+        // cluster-level memory-pool lookup for conversation rounds
+        // (worker-level prefix_cache managers look up at dispatch, once
+        // the owning worker is known)
         if self.pool.enabled() {
             let (conv, prompt) = {
                 let r = &self.requests[rid];
@@ -313,14 +330,38 @@ impl Simulation {
         for (rid, wid) in decisions {
             let is_resubmit = resubmitted.contains(&rid);
             if is_resubmit {
-                // disaggregation hand-off: KV migrates over the link
+                // disaggregation hand-off: the *resident* KV migrates
+                // over the link (not the reservation — a contiguous
+                // manager over-reserves for output tokens that do not
+                // exist yet and must not be billed for them)
                 let src = self.requests[rid].worker.expect("resubmit without owner");
-                let blocks = self.workers[src].mem.blocks_held(rid);
+                let blocks = {
+                    let m = &self.workers[src].mem;
+                    m.blocks_for_tokens(self.requests[rid].ctx_in_cache)
+                };
                 let t = self.comm.kv_transfer_time(blocks, self.workers[src].mem.block_bytes());
                 self.requests[rid].phase = Phase::Transferring;
                 self.queue
                     .schedule_in(t, EventPayload::TransferDone { worker: wid, req: rid });
             } else {
+                // worker-level prefix-cache lookup (the prefix_cache
+                // manager layers the pool under the worker's allocator);
+                // an enabled cluster-level pool takes precedence so the
+                // two layers never double-count lookups
+                if !self.conversations.is_empty()
+                    && !self.pool.enabled()
+                    && self.requests[rid].cached_prefix == 0
+                {
+                    let (conv, prompt) = {
+                        let r = &self.requests[rid];
+                        (r.conversation, r.prompt_len)
+                    };
+                    if let Some(hit) = self.workers[wid].mem.prefix_lookup(conv, prompt) {
+                        let r = &mut self.requests[rid];
+                        r.cached_prefix = hit.cached_tokens;
+                        r.prompt_done = hit.cached_tokens;
+                    }
+                }
                 self.requests[rid].worker = Some(wid);
                 let w = &mut self.workers[wid];
                 if w.waiting.is_empty() {
@@ -344,7 +385,13 @@ impl Simulation {
             self.try_start(src);
         }
         self.requests[rid].worker = Some(wid);
-        let need = self.requests[rid].ctx_in_cache + 1;
+        // reserve per the target manager's admission policy (paged:
+        // current context + growth room; contiguous: final footprint,
+        // preserving its never-preempt invariant on decode workers)
+        let need = {
+            let r = &self.requests[rid];
+            self.workers[wid].mem.admission_tokens(r).max(r.ctx_in_cache + 1)
+        };
         let w = &mut self.workers[wid];
         match w.mem.reserve(rid, need) {
             AllocOutcome::Ok => {
@@ -367,7 +414,10 @@ impl Simulation {
             let Some(&rid) = self.workers[wid].pending_kv.front() else {
                 return;
             };
-            let need = self.requests[rid].ctx_in_cache + 1;
+            let need = {
+                let r = &self.requests[rid];
+                self.workers[wid].mem.admission_tokens(r).max(r.ctx_in_cache + 1)
+            };
             let w = &mut self.workers[wid];
             if w.mem.reserve(rid, need) == AllocOutcome::Ok {
                 w.pending_kv.pop_front();
@@ -391,10 +441,11 @@ impl Simulation {
             requests: &mut self.requests,
             waiting: &mut w.waiting,
             running: &mut w.running,
-            mem: &mut w.mem,
+            mem: &mut *w.mem,
             now,
             draining,
             oldest_wait: w.oldest_wait,
+            preemption: w.preemption,
         };
         let plan = w.local.form_batch(&mut ctx);
         if std::env::var("TOKENSIM_TRACE").is_ok() {
@@ -404,7 +455,15 @@ impl Simulation {
             );
         }
         w.oldest_wait = if w.waiting.is_empty() { None } else { w.oldest_wait };
-        if plan.is_empty() {
+        // host↔device traffic this batch formation caused (swap-out of
+        // victims, swap-in of restored requests)
+        let swap_blocks: u64 = plan
+            .swapped_out
+            .iter()
+            .chain(plan.swapped_in.iter())
+            .map(|&(_, blocks)| blocks)
+            .sum();
+        if plan.is_empty() && swap_blocks == 0 {
             // the policy may be waiting on a timed condition (e.g.
             // static batching lingering for a fuller batch): poll again
             // at the deadline it names
@@ -424,18 +483,33 @@ impl Simulation {
         // memory-pool fetch for members whose cached prefix is not yet
         // resident (first prefill iteration after a pool hit)
         let mut fetch_blocks = 0u64;
-        if plan.has_prefill && self.pool.enabled() {
+        if plan.has_prefill {
             for &rid in &plan.members {
                 let r = &self.requests[rid];
-                if r.cached_prefix > 0 && r.prompt_done == 0 && r.ctx_in_cache == 0 {
+                if r.phase == Phase::Prefill && r.cached_prefix > 0 && r.ctx_in_cache == 0 {
                     fetch_blocks += w.mem.blocks_for_tokens(r.cached_prefix);
                 }
             }
         }
 
-        let mut dt = w.cost.iter_time(&plan.batch);
+        let mut dt = if plan.is_empty() {
+            // pure swap traffic (the only runnable work was moving KV)
+            0.0
+        } else {
+            w.cost.iter_time(&plan.batch)
+        };
         if fetch_blocks > 0 {
-            dt += self.pool_comm.kv_transfer_time(fetch_blocks, w.mem.block_bytes());
+            dt += if self.pool.enabled() {
+                self.pool_comm.kv_transfer_time(fetch_blocks, w.mem.block_bytes())
+            } else {
+                w.mem.prefix_fetch_time(fetch_blocks)
+            };
+        }
+        if swap_blocks > 0 {
+            if let Some(link) = w.mem.swap_link() {
+                dt += xfer_time_uniform(swap_blocks, w.mem.block_bytes(), link)
+                    .of(Schedule::Sequential);
+            }
         }
         assert!(dt > 0.0, "iteration with work must take time");
         w.busy = true;
@@ -488,7 +562,7 @@ impl Simulation {
                         finished_here.push(rid);
                     }
                 }
-                Phase::Preempted => {
+                Phase::Preempted | Phase::Swapped => {
                     // was preempted while this batch was in flight; its
                     // work is discarded (conservative: no partial credit)
                 }
@@ -522,7 +596,8 @@ impl Simulation {
         self.global.on_complete(wid, r.final_kv_tokens() as u64);
         self.records.push(RequestRecord::from_request(r));
 
-        // conversation bookkeeping: store KV in the pool, schedule the
+        // conversation bookkeeping: store KV in the pool (cluster-level
+        // and/or the worker manager's prefix-cache layer), schedule the
         // next round after think time
         let conv = r.conversation;
         let round = r.round;
@@ -530,6 +605,8 @@ impl Simulation {
         if !self.conversations.is_empty() {
             if self.pool.enabled() {
                 self.pool.store(conv, total_ctx);
+            } else {
+                self.workers[wid].mem.prefix_store(conv, total_ctx);
             }
             let (ids, next) = &mut self.conversations[conv];
             debug_assert_eq!(ids[round], rid);
@@ -541,6 +618,8 @@ impl Simulation {
                     .schedule_in(think, EventPayload::Arrival(next_rid));
             } else if self.pool.enabled() {
                 self.pool.invalidate(conv);
+            } else {
+                self.workers[wid].mem.prefix_invalidate(conv);
             }
         }
     }
@@ -553,6 +632,8 @@ impl Simulation {
                 worker: w.id,
                 used_blocks: w.mem.used_blocks(),
                 total_blocks: w.mem.total_blocks(),
+                used_tokens: w.mem.used(Granularity::Token),
+                used_bytes: w.mem.used(Granularity::Byte),
             });
         }
         if self.finished < self.requests.len() {
@@ -572,6 +653,7 @@ mod tests {
     use super::*;
     use crate::compute::CostModelKind;
     use crate::hardware::HardwareSpec;
+    use crate::memory::MemorySpec;
     use crate::workload::WorkloadSpec;
 
     fn quick_cfg(n: usize, qps: f64) -> SimulationConfig {
@@ -584,9 +666,25 @@ mod tests {
         cfg
     }
 
+    /// Tiny-memory single-worker config that provokes preemptions.
+    fn tight_cfg(memory: MemorySpec) -> SimulationConfig {
+        let mut cfg = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            {
+                let mut hw = HardwareSpec::a100_80g();
+                hw.mem_cap = 16e9; // weights 13.5 GB -> tiny KV pool
+                hw
+            },
+            WorkloadSpec::fixed(20, 50.0, 256, 128),
+        );
+        cfg.cluster.workers[0].memory = memory;
+        cfg.cost_model = CostModelKind::Analytic;
+        cfg
+    }
+
     #[test]
     fn runs_to_completion() {
-        let report = Simulation::from_config(&quick_cfg(50, 20.0)).run();
+        let report = Simulation::from_config(&quick_cfg(50, 20.0)).unwrap().run();
         assert_eq!(report.records.len(), 50);
         assert!(report.makespan > 0.0);
         for r in &report.records {
@@ -597,15 +695,23 @@ mod tests {
 
     #[test]
     fn deterministic_runs() {
-        let a = Simulation::from_config(&quick_cfg(30, 10.0)).run();
-        let b = Simulation::from_config(&quick_cfg(30, 10.0)).run();
+        let a = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run();
+        let b = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run();
         assert_eq!(a.records, b.records);
     }
 
     #[test]
+    fn bad_memory_manager_is_a_build_error_not_a_panic() {
+        let mut cfg = quick_cfg(10, 1.0);
+        cfg.cluster.workers[0].memory = MemorySpec::new("infinite_memory");
+        let err = Simulation::from_config(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown memory manager"));
+    }
+
+    #[test]
     fn ttft_increases_under_overload() {
-        let light = Simulation::from_config(&quick_cfg(100, 2.0)).run();
-        let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).run();
+        let light = Simulation::from_config(&quick_cfg(100, 2.0)).unwrap().run();
+        let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).unwrap().run();
         let l = crate::metrics::MetricSet::new(&light.records);
         let h = crate::metrics::MetricSet::new(&heavy.records);
         assert!(
@@ -627,7 +733,7 @@ mod tests {
             WorkloadSpec::fixed(40, 8.0, 64, 64),
         );
         cfg.cost_model = CostModelKind::Analytic;
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(report.records.len(), 40);
         // prefill worker must have run prefill iterations, decode worker
         // decode iterations
@@ -643,7 +749,7 @@ mod tests {
         cfg.pool_cache = Some(PoolCacheConfig::with_capacity(100_000));
         let convs = ConversationSpec::chatbot(40, 4.0, 64, 32).generate();
         let total = ConversationWorkload::total_rounds(&convs);
-        let report = Simulation::from_conversations(&cfg, &convs).run();
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
         assert_eq!(report.records.len(), total);
         // multi-round conversations must have produced pool hits
         assert!(report.pool_hits > 0, "expected pool hits");
@@ -652,29 +758,82 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_manager_matches_cluster_pool_semantics() {
+        use crate::workload::ConversationSpec;
+        // the same chatbot workload served through the worker-level
+        // prefix_cache manager (no cluster pool) must also hit
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.cluster.workers[0].memory =
+            MemorySpec::new("prefix_cache").with("capacity_blocks", 100_000u64);
+        let convs = ConversationSpec::chatbot(40, 4.0, 64, 32).generate();
+        let total = ConversationWorkload::total_rounds(&convs);
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
+        assert_eq!(report.records.len(), total);
+        assert!(report.pool_hits > 0, "expected manager-layer pool hits");
+        assert!(report.records.iter().any(|r| r.cached_prefix > 0));
+        assert_eq!(report.workers[0].manager, "prefix_cache");
+    }
+
+    #[test]
     fn memory_sampling_produces_timeline() {
         let mut cfg = quick_cfg(30, 10.0);
         cfg.sample_period = 0.1;
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&cfg).unwrap().run();
         assert!(!report.timeline.samples.is_empty());
+        // token/byte granularity views are consistent with blocks
+        for s in &report.timeline.samples {
+            assert_eq!(s.used_tokens, s.used_blocks * 16);
+            assert!(s.used_bytes >= s.used_tokens, "KV tokens are > 1 byte");
+        }
     }
 
     #[test]
     fn preemptions_occur_under_memory_pressure() {
         // tiny memory: large prompts + long outputs force preemption
-        let mut cfg = SimulationConfig::single_worker(
-            ModelSpec::llama2_7b(),
-            {
-                let mut hw = HardwareSpec::a100_80g();
-                hw.mem_cap = 16e9; // weights 13.5 GB -> tiny KV pool
-                hw
-            },
-            WorkloadSpec::fixed(20, 50.0, 256, 128),
-        );
-        cfg.cost_model = CostModelKind::Analytic;
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&tight_cfg(MemorySpec::default()))
+            .unwrap()
+            .run();
         assert_eq!(report.records.len(), 20, "all must finish eventually");
         let m = crate::metrics::MetricSet::new(&report.records);
         assert!(m.total_preemptions() > 0, "expected preemptions");
+        assert!(m.total_swaps() == 0, "recompute policy must not swap");
+        assert!(m.total_recomputed_tokens() > 0);
+    }
+
+    #[test]
+    fn swap_preemption_replaces_recompute_work_with_link_traffic() {
+        let recompute = Simulation::from_config(&tight_cfg(
+            MemorySpec::new("swap").with("preemption", "recompute"),
+        ))
+        .unwrap()
+        .run();
+        let swap = Simulation::from_config(&tight_cfg(MemorySpec::new("swap")))
+            .unwrap()
+            .run();
+        assert_eq!(swap.records.len(), 20, "all must finish under swap");
+        let (mr, ms) = (recompute.metrics(), swap.metrics());
+        assert!(mr.total_preemptions() > 0, "workload must stress memory");
+        assert!(ms.total_swaps() > 0, "swap policy must actually swap");
+        assert!(
+            ms.total_recomputed_tokens() < mr.total_recomputed_tokens(),
+            "swap must strictly reduce re-prefilled tokens: {} vs {}",
+            ms.total_recomputed_tokens(),
+            mr.total_recomputed_tokens()
+        );
+        let totals = swap.swap_totals();
+        assert!(totals.swap_outs > 0 && totals.blocks_out > 0);
+        assert_eq!(recompute.swap_totals().swap_outs, 0);
+    }
+
+    #[test]
+    fn token_contiguous_never_preempts() {
+        let report = Simulation::from_config(&tight_cfg(MemorySpec::new("token_contiguous")))
+            .unwrap()
+            .run();
+        assert_eq!(report.records.len(), 20);
+        let m = report.metrics();
+        assert_eq!(m.total_preemptions(), 0, "final footprint is pre-reserved");
+        assert_eq!(report.workers[0].manager, "token_contiguous");
+        assert_eq!(report.workers[0].total_tokens, report.workers[0].total_blocks);
     }
 }

@@ -1,6 +1,6 @@
 //! Simulation output: request records + timelines + worker statistics.
 
-use crate::memory::PoolCache;
+use crate::memory::{Granularity, PoolCache, SwapStats};
 use crate::metrics::{MemoryTimeline, MetricSet, RequestRecord, SloSpec};
 
 use super::worker::Worker;
@@ -10,11 +10,19 @@ use super::worker::Worker;
 pub struct WorkerStats {
     pub id: usize,
     pub hardware: String,
+    /// Registry name of the worker's memory manager.
+    pub manager: String,
     pub iterations: u64,
     pub busy_time: f64,
     pub utilization: f64,
+    /// Blocks freed by preemption (recompute and swap-out).
     pub preemption_frees: u64,
+    /// KV-pool capacity at the paper's three reporting granularities.
     pub total_blocks: u64,
+    pub total_tokens: u64,
+    pub total_bytes: u64,
+    /// Host↔device swap traffic (zeros for managers without swap).
+    pub swap: SwapStats,
 }
 
 /// Everything a run produces.
@@ -31,6 +39,8 @@ pub struct SimulationReport {
     pub events_processed: u64,
     /// Simulator wall-clock seconds.
     pub wall_time: f64,
+    /// Cross-request KV-pool activity, aggregated over the cluster-level
+    /// pool and any worker-level `prefix_cache` manager layers.
     pub pool_hits: u64,
     pub pool_misses: u64,
     pub pool_evictions: u64,
@@ -55,6 +65,7 @@ impl SimulationReport {
             .map(|w| WorkerStats {
                 id: w.id,
                 hardware: w.hw.name.clone(),
+                manager: w.mem.name().to_string(),
                 iterations: w.iterations,
                 busy_time: w.busy_time,
                 utilization: if makespan > 0.0 {
@@ -62,10 +73,21 @@ impl SimulationReport {
                 } else {
                     0.0
                 },
-                preemption_frees: w.mem.preemption_frees,
+                preemption_frees: w.mem.preemption_frees(),
                 total_blocks: w.mem.total_blocks(),
+                total_tokens: w.mem.capacity(Granularity::Token),
+                total_bytes: w.mem.capacity(Granularity::Byte),
+                swap: w.mem.swap_stats(),
             })
             .collect();
+        let (mut pool_hits, mut pool_misses, mut pool_evictions) =
+            (pool.hits, pool.misses, pool.evictions);
+        for w in workers {
+            let ps = w.mem.pool_stats();
+            pool_hits += ps.hits;
+            pool_misses += ps.misses;
+            pool_evictions += ps.evictions;
+        }
         Self {
             records,
             timeline,
@@ -75,9 +97,9 @@ impl SimulationReport {
             makespan,
             events_processed,
             wall_time,
-            pool_hits: pool.hits,
-            pool_misses: pool.misses,
-            pool_evictions: pool.evictions,
+            pool_hits,
+            pool_misses,
+            pool_evictions,
         }
     }
 
@@ -105,13 +127,34 @@ impl SimulationReport {
         self.metrics().slo_throughput(&self.slo)
     }
 
+    /// Total swap-out/swap-in events across workers.
+    pub fn swap_totals(&self) -> SwapStats {
+        let mut total = SwapStats::default();
+        for w in &self.workers {
+            total.swap_outs += w.swap.swap_outs;
+            total.swap_ins += w.swap.swap_ins;
+            total.blocks_out += w.swap.blocks_out;
+            total.blocks_in += w.swap.blocks_in;
+        }
+        total
+    }
+
+    /// Pool hit rate over all lookups (0 when the pool never ran).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let lookups = self.pool_hits + self.pool_misses;
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.pool_hits as f64 / lookups as f64
+    }
+
     /// Pretty one-paragraph summary for CLI output.
     pub fn summary(&self) -> String {
         let m = self.metrics();
         format!(
             "{} requests in {:.2}s (sim) / {:.3}s (wall) | {:.2} req/s, {:.1} tok/s | \
              latency p50 {:.3}s p99 {:.3}s max {:.3}s | ttft p99 {:.3}s | \
-             slo attainment {:.1}% | {} events | {} preemptions",
+             slo attainment {:.1}% | {} events | {} preemptions ({} swaps)",
             self.records.len(),
             self.makespan,
             self.wall_time,
@@ -124,6 +167,7 @@ impl SimulationReport {
             100.0 * self.slo_attainment(),
             self.events_processed,
             m.total_preemptions(),
+            m.total_swaps(),
         )
     }
 }
@@ -145,6 +189,8 @@ mod tests {
             finished: fin,
             max_token_gap: 0.05,
             preemptions: 0,
+            swaps: 0,
+            recomputed_tokens: 0,
         }
     }
 
@@ -165,5 +211,7 @@ mod tests {
         assert_eq!(report.makespan, 3.0);
         assert!(report.summary().contains("2 requests"));
         assert!((report.slo_attainment() - 1.0).abs() < 1e-12);
+        assert_eq!(report.swap_totals(), SwapStats::default());
+        assert_eq!(report.pool_hit_rate(), 0.0);
     }
 }

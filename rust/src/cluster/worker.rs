@@ -4,7 +4,7 @@ use std::collections::VecDeque;
 
 use crate::compute::ComputeModel;
 use crate::hardware::HardwareSpec;
-use crate::memory::PagedBlockManager;
+use crate::memory::{MemoryManager, PreemptionPolicy};
 use crate::request::{Request, RequestId};
 use crate::scheduler::{BatchPlan, LocalScheduler, WorkerView};
 use crate::sim::SimTime;
@@ -26,7 +26,13 @@ pub struct Worker {
     /// The worker's local scheduling policy (each worker owns its own
     /// instance — policies may keep cross-iteration state).
     pub local: Box<dyn LocalScheduler>,
-    pub mem: PagedBlockManager,
+    /// The worker's KV memory manager, selected through the memory
+    /// registry (each worker owns its own instance, sized for its
+    /// hardware).
+    pub mem: Box<dyn MemoryManager>,
+    /// Preemption mechanism the local scheduler applies when KV blocks
+    /// run out (recompute vs swap-out).
+    pub preemption: PreemptionPolicy,
     pub cost: Box<dyn ComputeModel>,
 
     pub waiting: VecDeque<RequestId>,
@@ -46,13 +52,15 @@ pub struct Worker {
 }
 
 impl Worker {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
         hw: HardwareSpec,
         run_prefill: bool,
         run_decode: bool,
         local: Box<dyn LocalScheduler>,
-        mem: PagedBlockManager,
+        mem: Box<dyn MemoryManager>,
+        preemption: PreemptionPolicy,
         cost: Box<dyn ComputeModel>,
     ) -> Self {
         assert!(run_prefill || run_decode, "worker with no role");
@@ -63,6 +71,7 @@ impl Worker {
             run_decode,
             local,
             mem,
+            preemption,
             cost,
             waiting: VecDeque::new(),
             running: Vec::new(),
@@ -115,6 +124,7 @@ impl Worker {
 mod tests {
     use super::*;
     use crate::compute::AnalyticCost;
+    use crate::memory::PagedBlockManager;
     use crate::model::ModelSpec;
 
     fn worker(prefill: bool, decode: bool) -> Worker {
@@ -126,7 +136,8 @@ mod tests {
             prefill,
             decode,
             Box::new(crate::scheduler::ContinuousBatching::vllm_default()),
-            PagedBlockManager::with_blocks(100, 16, 1024),
+            Box::new(PagedBlockManager::with_blocks(100, 16, 1024)),
+            PreemptionPolicy::Recompute,
             Box::new(AnalyticCost::new(&model, &hw)),
         )
     }

@@ -11,7 +11,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::compute::CostModelKind;
 use crate::hardware::{HardwareSpec, LinkSpec};
-use crate::memory::MemoryConfig;
+use crate::memory::MemorySpec;
 use crate::metrics::SloSpec;
 use crate::model::ModelSpec;
 use crate::scheduler::PolicySpec;
@@ -30,7 +30,9 @@ pub struct WorkerConfig {
     /// Local scheduling policy, selected by registry name (see
     /// [`crate::scheduler::registry`] and docs/CONFIG.md).
     pub local_scheduler: PolicySpec,
-    pub memory: MemoryConfig,
+    /// KV memory manager, selected by registry name (see
+    /// [`crate::memory::registry`] and docs/CONFIG.md).
+    pub memory: MemorySpec,
 }
 
 impl WorkerConfig {
@@ -41,7 +43,7 @@ impl WorkerConfig {
             run_prefill: true,
             run_decode: true,
             local_scheduler: PolicySpec::local_default(),
-            memory: MemoryConfig::default(),
+            memory: MemorySpec::default(),
         }
     }
 
@@ -61,16 +63,20 @@ impl WorkerConfig {
         local_scheduler
             .build_local()
             .context("in 'local_scheduler'")?;
+        let memory = match y.get("memory") {
+            Some(m) => MemorySpec::from_yaml(m)?,
+            None => MemorySpec::default(),
+        };
+        // fail at parse time, not mid-simulation, on unknown managers
+        // or bad parameters
+        memory.validate().context("in 'memory'")?;
         Ok(Self {
             hardware,
             quantity: y.opt_u32("quantity", 1),
             run_prefill: y.opt_bool("run_prefill", true),
             run_decode: y.opt_bool("run_decode", true),
             local_scheduler,
-            memory: match y.get("memory") {
-                Some(m) => memory_from_yaml(m)?,
-                None => MemoryConfig::default(),
-            },
+            memory,
         })
     }
 }
@@ -86,15 +92,6 @@ fn hardware_from_yaml(y: &Yaml) -> Result<HardwareSpec> {
         iter_overhead: y.opt_f64("iter_overhead", 2.0e-3),
         net_bw: y.opt_f64("net_bw", 300e9),
         price: y.opt_f64("price", 1.0),
-    })
-}
-
-fn memory_from_yaml(y: &Yaml) -> Result<MemoryConfig> {
-    Ok(MemoryConfig {
-        block_size: y.opt_u32("block_size", 16),
-        gpu_utilization: y.opt_f64("gpu_utilization", 0.9),
-        max_mem_ratio: y.opt_f64("max_mem_ratio", 1.0),
-        watermark: y.opt_f64("watermark", 0.01),
     })
 }
 
@@ -433,7 +430,9 @@ workload:
         assert_eq!(local.params.opt_u32("max_batched_tokens", 0), 1000);
         assert_eq!(local.params.opt_u32("max_batch_size", 0), 256);
         assert_eq!(local.build_local().unwrap().name(), "continuous");
-        assert!((cfg.cluster.workers[0].memory.gpu_utilization - 0.8).abs() < 1e-12);
+        let memory = &cfg.cluster.workers[0].memory;
+        assert_eq!(memory.name, "paged", "bare memory sections stay paged");
+        assert!((memory.params.opt_f64("gpu_utilization", 0.9) - 0.8).abs() < 1e-12);
         assert_eq!(cfg.workload.prompt_len, LengthDistribution::Fixed(64));
     }
 
@@ -537,6 +536,52 @@ workload:
         assert_eq!(cfg.cluster.workers[0].local_scheduler.name, "chunked_prefill");
         assert_eq!(cfg.cluster.workers[1].local_scheduler.name, "sjf");
         assert_eq!(cfg.cluster.scheduler.global.name, "power_of_two");
+    }
+
+    #[test]
+    fn memory_managers_selectable_from_yaml() {
+        let yaml = r#"
+model: tiny
+cluster:
+  workers:
+    - hardware: A100
+      memory:
+        manager: swap
+        swap_blocks: 5000
+        preemption: swap
+    - hardware: A100
+      memory:
+        manager: prefix_cache
+        capacity_blocks: 10000
+    - hardware: A100
+      memory:
+        manager: token_contiguous
+workload:
+  num_requests: 10
+  qps: 1.0
+  prompt_len:
+    fixed: 8
+  output_len:
+    fixed: 8
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.cluster.workers[0].memory.name, "swap");
+        assert_eq!(
+            cfg.cluster.workers[0].memory.preemption().unwrap(),
+            crate::memory::PreemptionPolicy::Swap
+        );
+        assert_eq!(cfg.cluster.workers[1].memory.name, "prefix_cache");
+        assert_eq!(cfg.cluster.workers[2].memory.name, "token_contiguous");
+    }
+
+    #[test]
+    fn unknown_memory_manager_is_a_parse_error() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\n      memory:\n        manager: infinite\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown memory manager"));
+        let typo = yaml.replace("manager: infinite", "block_sze: 16");
+        let err = SimulationConfig::from_yaml_str(&typo).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter"));
     }
 
     #[test]

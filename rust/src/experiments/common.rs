@@ -52,8 +52,11 @@ impl ExpOpts {
 }
 
 /// Run TokenSim proper on a config (the simulator under evaluation).
+/// Experiment configs are code-authored, so a build failure is a bug.
 pub fn run_tokensim(cfg: &SimulationConfig) -> SimulationReport {
-    Simulation::from_config(cfg).run()
+    Simulation::from_config(cfg)
+        .expect("experiment config must build")
+        .run()
 }
 
 /// Run the oracle ("real system") on the same workload/cluster: same
@@ -68,7 +71,9 @@ pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> S
             seed ^ (worker as u64).wrapping_mul(0x9E37_79B9),
         )) as Box<dyn crate::compute::ComputeModel>
     };
-    Simulation::with_cost_factory(cfg, &factory).run()
+    Simulation::with_cost_factory(cfg, &factory)
+        .expect("experiment config must build")
+        .run()
 }
 
 /// The validation setup of Figs 4/5/7: TokenSim is configured with
@@ -92,8 +97,7 @@ pub fn max_slo_throughput(
     qps_hi_start: f64,
 ) -> (f64, f64) {
     let attainment = |qps: f64| -> (f64, f64) {
-        let cfg = build(qps);
-        let report = Simulation::from_config(&cfg).run();
+        let report = run_tokensim(&build(qps));
         (report.slo_attainment(), report.slo_throughput())
     };
     // grow the bracket until attainment falls below target
@@ -230,7 +234,7 @@ mod tests {
         assert!(qps > 0.0 && qps.is_finite());
         assert!(goodput > 0.0);
         // at the found point attainment holds; well beyond it, it fails
-        let report = Simulation::from_config(&build(qps * 8.0)).run();
+        let report = run_tokensim(&build(qps * 8.0));
         assert!(report.slo_attainment() < 0.9 || qps * 8.0 > 1000.0);
     }
 }

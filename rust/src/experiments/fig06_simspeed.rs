@@ -67,14 +67,18 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             );
             pretrain_const = probe.setup_cost();
         }
-        let _ = Simulation::with_cost_factory(&base, &vidur_factory).run();
+        let _ = Simulation::with_cost_factory(&base, &vidur_factory)
+            .expect("experiment config must build")
+            .run();
         let vidur_wall = t0.elapsed().as_secs_f64();
 
         let t0 = std::time::Instant::now();
         let co_factory = |model: &ModelSpec, hw: &HardwareSpec, _w: usize| {
             Box::new(LlmServingSimLike::new(model, hw)) as Box<dyn ComputeModel>
         };
-        let _ = Simulation::with_cost_factory(&base, &co_factory).run();
+        let _ = Simulation::with_cost_factory(&base, &co_factory)
+            .expect("experiment config must build")
+            .run();
         let co_wall = t0.elapsed().as_secs_f64();
 
         table.row(&[

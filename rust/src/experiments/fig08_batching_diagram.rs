@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::compute::{AnalyticCost, ComputeModel};
 use crate::hardware::HardwareSpec;
-use crate::memory::PagedBlockManager;
+use crate::memory::{PagedBlockManager, PreemptionPolicy};
 use crate::model::ModelSpec;
 use crate::request::{Phase, Request};
 use crate::scheduler::{LocalSchedCtx, LocalScheduler};
@@ -56,6 +56,7 @@ fn trace(
             now: iter as f64,
             draining: false,
             oldest_wait: Some(iter as f64),
+            preemption: PreemptionPolicy::Recompute,
         };
         let plan = policy.form_batch(&mut ctx);
         let mut frame = BTreeMap::new();

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
+use crate::memory::MemorySpec;
 use crate::metrics::SloSpec;
 use crate::model::ModelSpec;
 use crate::workload::WorkloadSpec;
@@ -32,7 +33,7 @@ fn cfg(
         },
         WorkloadSpec::sharegpt(n, qps),
     );
-    cfg.cluster.workers[0].memory.max_mem_ratio = max_mem_ratio;
+    cfg.cluster.workers[0].memory = MemorySpec::default().with("max_mem_ratio", max_mem_ratio);
     cfg.slo = slo;
     cfg.cost_model = cost;
     cfg

@@ -38,7 +38,9 @@ pub(super) fn p99_latency(
     cost: crate::compute::CostModelKind,
 ) -> f64 {
     let convs = ConversationSpec::chatbot(n_conv, qps, input_mean, output_mean).generate();
-    let report = Simulation::from_conversations(&cfg(cache, cost), &convs).run();
+    let report = Simulation::from_conversations(&cfg(cache, cost), &convs)
+        .expect("experiment config must build")
+        .run();
     report.latency_percentile(0.99)
 }
 

@@ -9,6 +9,7 @@
 //! reproduction target recorded in EXPERIMENTS.md.
 
 mod common;
+mod exp_memory;
 mod fig04_validation;
 mod fig05_cdf;
 mod fig06_simspeed;
@@ -29,10 +30,11 @@ pub use common::ExpOpts;
 use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's figures in paper order, then the
-/// repo's own studies ("policies" compares scheduler plugins).
+/// repo's own studies ("policies" compares scheduler plugins, "memory"
+/// compares memory managers x preemption policies).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies",
+    "fig14", "fig15", "policies", "memory",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -52,6 +54,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "fig14" => fig14_memory_cache::run(opts),
         "fig15" => fig15_prefill_hardware::run(opts),
         "policies" => policy_comparison::run(opts),
+        "memory" => exp_memory::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

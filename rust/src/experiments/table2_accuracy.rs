@@ -65,14 +65,18 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let vidur_factory = |model: &ModelSpec, hw: &HardwareSpec, _w: usize| {
             Box::new(VidurLike::train(model, hw, 1200, 42)) as Box<dyn ComputeModel>
         };
-        let vidur = Simulation::with_cost_factory(&base, &vidur_factory).run();
+        let vidur = Simulation::with_cost_factory(&base, &vidur_factory)
+            .expect("experiment config must build")
+            .run();
         let t_vidur = total_runtime(&vidur);
 
         // LLMServingSim-like: co-simulation (short prompts, so exact)
         let co_factory = |model: &ModelSpec, hw: &HardwareSpec, _w: usize| {
             Box::new(LlmServingSimLike::new(model, hw)) as Box<dyn ComputeModel>
         };
-        let co = Simulation::with_cost_factory(&base, &co_factory).run();
+        let co = Simulation::with_cost_factory(&base, &co_factory)
+            .expect("experiment config must build")
+            .run();
         let t_co = total_runtime(&co);
 
         let diff = |t: f64| format!("{:.3}", 100.0 * ((t - t_real) / t_real).abs());

@@ -8,9 +8,11 @@
 //! TokenSim simulates a *serving system*, not a single batch: dynamic
 //! request arrivals sampled from dataset-fitted distributions, two-stage
 //! (global + per-worker local) scheduling, operator-granularity compute
-//! cost modelling, paged KV-cache memory management, a communication
-//! model for KV movement, and QoS metrics (latency percentiles / CDFs,
-//! TTFT / mTPOT SLO attainment, memory timelines).
+//! cost modelling, pluggable KV-cache memory management (paged /
+//! contiguous / host-swap / cross-request prefix cache, with recompute
+//! or swap preemption), a communication model for KV movement, and QoS
+//! metrics (latency percentiles / CDFs, TTFT / mTPOT SLO attainment,
+//! memory timelines).
 //!
 //! ## Architecture (three layers)
 //!
@@ -36,7 +38,7 @@
 //! let hw = HardwareSpec::a100_80g();
 //! let workload = WorkloadSpec::sharegpt(2000, 30.0);
 //! let cfg = SimulationConfig::single_worker(model, hw, workload);
-//! let report = Simulation::from_config(&cfg).run();
+//! let report = Simulation::from_config(&cfg).expect("valid config").run();
 //! println!("p99 latency = {:.3}s", report.latency_percentile(0.99));
 //! ```
 
@@ -64,7 +66,9 @@ pub mod prelude {
     pub use crate::compute::{AnalyticCost, BatchDesc, ComputeModel, CostModelKind};
     pub use crate::config::{ClusterConfig, PoolCacheConfig, SchedulerConfig, SimulationConfig, WorkerConfig};
     pub use crate::hardware::{HardwareSpec, LinkSpec};
-    pub use crate::memory::{MemoryConfig, PagedBlockManager};
+    pub use crate::memory::{
+        MemoryConfig, MemoryManager, MemorySpec, PagedBlockManager, PreemptionPolicy,
+    };
     pub use crate::metrics::{RequestRecord, SloSpec};
     pub use crate::model::ModelSpec;
     pub use crate::scheduler::{GlobalScheduler, LocalScheduler, PolicySpec};

@@ -24,8 +24,8 @@ fn usage() -> &'static str {
      \n\
      USAGE:\n\
        tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--cdf]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|all> [--quick] [--out-dir <dir>]\n\
-       tokensim list                 list experiments, scheduler policies and presets\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|all> [--quick] [--out-dir <dir>]\n\
+       tokensim list                 list experiments, scheduler policies, memory managers, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n"
 }
@@ -77,13 +77,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
         tokensim::workload::save_trace(path, &requests)?;
         println!("workload trace saved to {path}");
     }
-    let report = Simulation::from_config(&cfg).run();
+    let report = Simulation::from_config(&cfg)?.run();
     println!("{}", report.summary());
     for w in &report.workers {
         println!(
-            "  worker {} ({}): {} iterations, {:.1}% busy, {} KV blocks",
+            "  worker {} ({}, memory={}): {} iterations, {:.1}% busy, {} KV blocks",
             w.id,
             w.hardware,
+            w.manager,
             w.iterations,
             100.0 * w.utilization,
             w.total_blocks
@@ -139,6 +140,11 @@ fn cmd_list() -> Result<()> {
     println!("\nglobal scheduler policies (cluster `scheduler: global: policy:`):");
     for (name, summary) in tokensim::scheduler::global_policies() {
         println!("  {name:<16} {summary}");
+    }
+    println!("\nmemory managers (worker `memory: manager:`):");
+    for (name, summary, params) in tokensim::memory::memory_managers() {
+        println!("  {name:<16} {summary}");
+        println!("  {:<16}   params: {params}", "");
     }
     println!("\nmodel presets: llama2-7b, llama2-13b, opt-13b, tiny");
     println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");

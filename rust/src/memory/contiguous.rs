@@ -1,0 +1,165 @@
+//! Token-contiguous memory manager: the Orca / FasterTransformer
+//! baseline that reserves each request's *maximum* KV footprint
+//! (prompt + full output) contiguously at admission time.
+//!
+//! Accounting is at token granularity (1-token "blocks"). Because the
+//! final footprint is reserved up front, decode growth never allocates
+//! and running requests are never preempted — the cost is wasted
+//! reservation for every token not yet generated, which is exactly the
+//! fragmentation/utilization gap PagedAttention closes (compare with
+//! `paged` via `tokensim exp memory`).
+
+use crate::model::ModelSpec;
+use crate::request::{Request, RequestId};
+
+use super::manager::MemoryManager;
+use super::paged::PagedBlockManager;
+use super::{AllocOutcome, Granularity, MemoryConfig};
+
+/// Contiguous max-length reservation at token granularity.
+#[derive(Debug, Clone)]
+pub struct TokenContiguousManager {
+    /// Token-granularity pool: a block pool with 1-token blocks.
+    inner: PagedBlockManager,
+}
+
+impl TokenContiguousManager {
+    /// Size the pool for `model` on a device with `mem_cap_bytes`.
+    /// The configured `block_size` is ignored — accounting is per token.
+    pub fn new(model: &ModelSpec, mem_cap_bytes: f64, cfg: MemoryConfig) -> Self {
+        let cfg = MemoryConfig {
+            block_size: 1,
+            ..cfg
+        };
+        Self {
+            inner: PagedBlockManager::new(model, mem_cap_bytes, cfg),
+        }
+    }
+
+    /// Construct with an explicit token capacity (tests / custom sizing).
+    pub fn with_tokens(total_tokens: u64, token_bytes: u64) -> Self {
+        Self {
+            inner: PagedBlockManager::with_blocks(total_tokens, 1, token_bytes),
+        }
+    }
+}
+
+impl MemoryManager for TokenContiguousManager {
+    fn name(&self) -> &'static str {
+        "token_contiguous"
+    }
+
+    fn block_size(&self) -> u32 {
+        1
+    }
+
+    fn block_bytes(&self) -> u64 {
+        MemoryManager::block_bytes(&self.inner)
+    }
+
+    fn total_blocks(&self) -> u64 {
+        self.inner.total_blocks()
+    }
+
+    fn free_blocks(&self) -> u64 {
+        self.inner.free_blocks()
+    }
+
+    fn blocks_held(&self, req: RequestId) -> u64 {
+        self.inner.blocks_held(req)
+    }
+
+    fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool {
+        self.inner.can_admit_with_pending(tokens, pending)
+    }
+
+    fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        self.inner.reserve(req, tokens)
+    }
+
+    fn release(&mut self, req: RequestId) -> u64 {
+        self.inner.release(req)
+    }
+
+    fn release_preempted(&mut self, req: RequestId) -> u64 {
+        self.inner.release_preempted(req)
+    }
+
+    fn preemption_frees(&self) -> u64 {
+        self.inner.preemption_frees
+    }
+
+    fn live_requests(&self) -> usize {
+        self.inner.live_requests()
+    }
+
+    fn check_invariants(&self) -> bool {
+        self.inner.check_invariants()
+    }
+
+    fn granularity(&self) -> Granularity {
+        Granularity::Token
+    }
+
+    /// The defining behaviour: admission reserves the *final* footprint
+    /// (effective prompt + every output token still to generate), so
+    /// decode growth is always pre-paid.
+    fn admission_tokens(&self, r: &Request) -> u32 {
+        r.effective_prompt_len() + (r.output_len - r.generated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_granularity_accounting() {
+        let mut m = TokenContiguousManager::with_tokens(1000, 64);
+        assert_eq!(m.block_size(), 1);
+        assert_eq!(m.blocks_for_tokens(100), 100);
+        assert_eq!(m.reserve(1, 100), AllocOutcome::Ok);
+        assert_eq!(m.used(Granularity::Token), 100);
+        assert_eq!(m.used(Granularity::Byte), 100 * 64);
+        assert_eq!(m.release(1), 100);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn admission_covers_final_footprint() {
+        let m = TokenContiguousManager::with_tokens(1000, 64);
+        let r = Request::new(0, 0, 0, 100, 50, 0.0);
+        assert_eq!(m.admission_tokens(&r), 150);
+        // after a recompute preemption the generated tokens migrate into
+        // the effective prompt but the total stays prompt + output
+        let mut r = Request::new(1, 1, 0, 100, 50, 0.0);
+        r.generated = 20;
+        assert_eq!(m.admission_tokens(&r), 150);
+    }
+
+    #[test]
+    fn growth_after_admission_is_free() {
+        let mut m = TokenContiguousManager::with_tokens(1000, 64);
+        let r = Request::new(0, 0, 0, 100, 50, 0.0);
+        assert_eq!(m.reserve(0, m.admission_tokens(&r)), AllocOutcome::Ok);
+        let before = m.free_blocks();
+        // decode growth: reserve(ctx + 1) never exceeds the admission
+        for ctx in 100..150 {
+            assert_eq!(m.reserve(0, ctx + 1), AllocOutcome::Ok);
+        }
+        assert_eq!(m.free_blocks(), before, "growth must be pre-paid");
+    }
+
+    #[test]
+    fn sizing_ignores_configured_block_size() {
+        let model = ModelSpec::llama2_7b();
+        let cfg = MemoryConfig {
+            block_size: 16,
+            ..Default::default()
+        };
+        let m = TokenContiguousManager::new(&model, 80e9, cfg);
+        assert_eq!(m.block_size(), 1);
+        // pool tokens ~ (80e9*0.9 - 13.5e9) / 512KiB ~ 111k
+        assert!(m.total_blocks() > 50_000, "{}", m.total_blocks());
+    }
+}

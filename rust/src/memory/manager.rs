@@ -1,0 +1,289 @@
+//! The [`MemoryManager`] trait: the pluggable allocator surface every
+//! worker's KV-cache manager implements.
+//!
+//! Mirrors the paper's §III-B: "TokenSim implements memory managers for
+//! various worker types … to monitor memory utilization at any
+//! granularity — by block, token, or byte — supporting user-defined
+//! scheduler behaviors." The cluster driver and the local schedulers
+//! only ever see `&mut dyn MemoryManager`, so a new allocation policy is
+//! additive: implement this trait, register it
+//! ([`register_memory`](crate::memory::register_memory)), select it by
+//! name ([`MemorySpec`](crate::memory::MemorySpec)).
+//!
+//! Built-in managers: `paged` ([`PagedBlockManager`]), `token_contiguous`
+//! ([`TokenContiguousManager`]), `swap` ([`SwapMemoryManager`]) and
+//! `prefix_cache` ([`PrefixCacheManager`]).
+//!
+//! [`PagedBlockManager`]: crate::memory::PagedBlockManager
+//! [`TokenContiguousManager`]: crate::memory::TokenContiguousManager
+//! [`SwapMemoryManager`]: crate::memory::SwapMemoryManager
+//! [`PrefixCacheManager`]: crate::memory::PrefixCacheManager
+
+use crate::hardware::LinkSpec;
+use crate::request::{ConversationId, Request, RequestId};
+
+use super::{AllocOutcome, Granularity, PoolHit};
+
+/// What a local scheduler does with a decode request whose KV cache can
+/// no longer grow (the second axis of the paper's memory design space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionPolicy {
+    /// vLLM-style: drop the victim's KV and re-prefill it later (its
+    /// already-generated tokens are recomputed as prompt).
+    #[default]
+    Recompute,
+    /// Move the victim's KV to host swap space over the host↔device
+    /// link; it resumes by swapping back in, with no re-prefill. Only
+    /// meaningful for managers with swap space ([`MemoryManager::swap_out`]
+    /// returning `None` falls back to recompute).
+    Swap,
+}
+
+/// Cumulative swap traffic of a manager (zeros when swap is unsupported).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SwapStats {
+    /// Swap-out events (preemptions serviced by the host).
+    pub swap_outs: u64,
+    /// Swap-in events (restorations).
+    pub swap_ins: u64,
+    /// Blocks moved device → host.
+    pub blocks_out: u64,
+    /// Blocks moved host → device.
+    pub blocks_in: u64,
+}
+
+/// Cumulative prefix-cache activity of a manager (zeros when the
+/// manager has no cross-request cache layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// A worker's KV-cache memory manager (the paper's §III-B component).
+///
+/// The allocator surface (reserve / release / admission) is what the
+/// local schedulers drive every iteration; the swap and prefix-cache
+/// hooks are optional capabilities with inert defaults, so simple
+/// managers implement only the allocator core.
+///
+/// All accounting is in *blocks* of [`block_size`](Self::block_size)
+/// tokens ([`block_bytes`](Self::block_bytes) bytes); token- and
+/// byte-granularity views derive from them via [`used`](Self::used) /
+/// [`capacity`](Self::capacity).
+///
+/// # Examples
+///
+/// Building the default paged manager through the registry and driving
+/// it directly:
+///
+/// ```
+/// use tokensim::memory::{AllocOutcome, MemoryManager, MemorySpec};
+/// use tokensim::model::ModelSpec;
+///
+/// let mut mem = MemorySpec::new("paged")
+///     .with("block_size", 16u32)
+///     .build(&ModelSpec::llama2_7b(), 80e9)
+///     .unwrap();
+/// assert_eq!(mem.name(), "paged");
+/// assert_eq!(mem.reserve(0, 100), AllocOutcome::Ok); // 7 blocks
+/// assert_eq!(mem.blocks_held(0), 7);
+/// mem.release(0);
+/// assert!(mem.check_invariants());
+/// ```
+pub trait MemoryManager: Send {
+    /// Registry name of this manager (stable, lowercase).
+    fn name(&self) -> &'static str;
+
+    /// Tokens per allocation block (1 for token-granularity managers).
+    fn block_size(&self) -> u32;
+
+    /// Bytes of KV per block.
+    fn block_bytes(&self) -> u64;
+
+    /// Total device KV pool size in blocks.
+    fn total_blocks(&self) -> u64;
+
+    /// Free device blocks.
+    fn free_blocks(&self) -> u64;
+
+    /// Device blocks currently held by `req`.
+    fn blocks_held(&self, req: RequestId) -> u64;
+
+    /// Can a new request with `tokens` of KV be admitted, with `pending`
+    /// blocks already promised to earlier admissions in the same
+    /// batch-formation pass? Enforces the manager's admission cap
+    /// (Fig 10's `max_mem_ratio`) and low-watermark headroom.
+    fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool;
+
+    /// Reserve blocks so `req` holds `tokens` total KV tokens (growing
+    /// an existing reservation only allocates the delta).
+    fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome;
+
+    /// Release all device blocks of `req` (finish or hand-off). Returns
+    /// the number of blocks freed.
+    fn release(&mut self, req: RequestId) -> u64;
+
+    /// Release due to preemption (tracked in
+    /// [`preemption_frees`](Self::preemption_frees)).
+    fn release_preempted(&mut self, req: RequestId) -> u64;
+
+    /// Cumulative blocks freed by preemption (recompute and swap-out).
+    fn preemption_frees(&self) -> u64;
+
+    /// Requests with live state in this manager (device or swap).
+    fn live_requests(&self) -> usize;
+
+    /// Allocator bookkeeping is self-consistent (property tests).
+    fn check_invariants(&self) -> bool;
+
+    // ---- provided: derived views ------------------------------------
+
+    /// Device blocks in use.
+    fn used_blocks(&self) -> u64 {
+        self.total_blocks() - self.free_blocks()
+    }
+
+    /// Blocks needed for `tokens` KV tokens.
+    fn blocks_for_tokens(&self, tokens: u32) -> u64 {
+        (tokens as u64).div_ceil(self.block_size().max(1) as u64)
+    }
+
+    /// Device utilization in `[0, 1]` (1.0 for an empty pool).
+    fn utilization(&self) -> f64 {
+        if self.total_blocks() == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks() as f64
+    }
+
+    /// Usage at the requested granularity (paper §III-B: "by block,
+    /// token, or byte").
+    fn used(&self, g: Granularity) -> u64 {
+        match g {
+            Granularity::Block => self.used_blocks(),
+            Granularity::Token => self.used_blocks() * self.block_size() as u64,
+            Granularity::Byte => self.used_blocks() * self.block_bytes(),
+        }
+    }
+
+    /// Capacity at the requested granularity.
+    fn capacity(&self, g: Granularity) -> u64 {
+        match g {
+            Granularity::Block => self.total_blocks(),
+            Granularity::Token => self.total_blocks() * self.block_size() as u64,
+            Granularity::Byte => self.total_blocks() * self.block_bytes(),
+        }
+    }
+
+    /// The native accounting granularity of this manager.
+    fn granularity(&self) -> Granularity {
+        Granularity::Block
+    }
+
+    /// [`can_admit_with_pending`](Self::can_admit_with_pending) with no
+    /// pending promises.
+    fn can_admit(&self, tokens: u32) -> bool {
+        self.can_admit_with_pending(tokens, 0)
+    }
+
+    /// Tokens to reserve when admitting request `r`. Paged managers
+    /// reserve the (effective) prompt and grow per token; contiguous
+    /// managers over-reserve the final footprint up front.
+    fn admission_tokens(&self, r: &Request) -> u32 {
+        r.effective_prompt_len()
+    }
+
+    // ---- provided: swap capability (inert by default) ----------------
+
+    /// Move the device KV of `req` to host swap space, freeing its
+    /// device blocks. Returns the blocks swapped out, or `None` when the
+    /// manager has no swap space (or it is full) — callers fall back to
+    /// recompute preemption.
+    fn swap_out(&mut self, _req: RequestId) -> Option<u64> {
+        None
+    }
+
+    /// Bring `req` back from swap space, reserving device blocks for
+    /// `tokens` total KV tokens. `OutOfMemory` leaves the host copy
+    /// intact for a later retry.
+    fn swap_in(&mut self, _req: RequestId, _tokens: u32) -> AllocOutcome {
+        AllocOutcome::OutOfMemory
+    }
+
+    /// Drop the host copy of a swapped-out request (it will be
+    /// recomputed instead). Returns the swap blocks freed.
+    fn discard_swapped(&mut self, _req: RequestId) -> u64 {
+        0
+    }
+
+    /// Host swap blocks currently held by `req` (0 when not swapped).
+    fn swapped_blocks(&self, _req: RequestId) -> u64 {
+        0
+    }
+
+    /// The host↔device link swap traffic is charged through.
+    fn swap_link(&self) -> Option<&LinkSpec> {
+        None
+    }
+
+    /// Cumulative swap traffic.
+    fn swap_stats(&self) -> SwapStats {
+        SwapStats::default()
+    }
+
+    // ---- provided: prefix-cache capability (inert by default) --------
+
+    /// Look up the cached KV prefix of `conv` for a round whose prompt
+    /// is `prompt_len` tokens (layered cross-request cache managers).
+    fn prefix_lookup(&mut self, _conv: ConversationId, _prompt_len: u32) -> Option<PoolHit> {
+        None
+    }
+
+    /// Store the finished context of `conv` (`tokens` KV tokens) in the
+    /// cache layer.
+    fn prefix_store(&mut self, _conv: ConversationId, _tokens: u32) {}
+
+    /// Drop `conv` from the cache layer (conversation ended).
+    fn prefix_invalidate(&mut self, _conv: ConversationId) {}
+
+    /// Seconds to fetch `blocks` cached blocks into device memory.
+    fn prefix_fetch_time(&self, _blocks: u64) -> f64 {
+        0.0
+    }
+
+    /// Cumulative prefix-cache activity.
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::PagedBlockManager;
+
+    #[test]
+    fn derived_views_consistent_through_trait_object() {
+        let mut paged = PagedBlockManager::with_blocks(10, 16, 1024);
+        let mem: &mut dyn MemoryManager = &mut paged;
+        assert_eq!(mem.reserve(1, 32), AllocOutcome::Ok);
+        assert_eq!(mem.used(Granularity::Block), 2);
+        assert_eq!(mem.used(Granularity::Token), 32);
+        assert_eq!(mem.used(Granularity::Byte), 2 * 1024);
+        assert_eq!(mem.capacity(Granularity::Token), 160);
+        assert!((mem.utilization() - 0.2).abs() < 1e-12);
+        // inert defaults: no swap, no prefix cache
+        assert!(mem.swap_out(1).is_none());
+        assert_eq!(mem.swap_in(1, 32), AllocOutcome::OutOfMemory);
+        assert!(mem.prefix_lookup(0, 100).is_none());
+        assert_eq!(mem.swap_stats(), SwapStats::default());
+        assert_eq!(mem.pool_stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn default_preemption_is_recompute() {
+        assert_eq!(PreemptionPolicy::default(), PreemptionPolicy::Recompute);
+    }
+}

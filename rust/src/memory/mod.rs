@@ -1,17 +1,36 @@
-//! Memory management: paged KV-cache block manager (PagedAttention
-//! semantics), host swap space, and the MemServe/CachedAttention-style
-//! cross-request memory-pool cache.
+//! Memory management as a pluggable subsystem: the [`MemoryManager`]
+//! trait, a string-keyed [registry](crate::memory::registry) selecting
+//! managers by name from YAML or code, and the built-in plugins —
+//! `paged` (PagedAttention blocks), `token_contiguous`
+//! (Orca/FasterTransformer max-length reservation), `swap` (paged +
+//! host swap space over the host↔device link) and `prefix_cache`
+//! (paged layered over the MemServe/CachedAttention-style
+//! cross-request memory pool).
 //!
 //! Mirrors the paper's §III-B: "TokenSim implements memory managers for
 //! various worker types … to monitor memory utilization at any
 //! granularity — by block, token, or byte — supporting user-defined
-//! scheduler behaviors."
+//! scheduler behaviors." Preemption (recompute vs swap) is a config
+//! knob ([`PreemptionPolicy`]), orthogonal to the manager choice.
 
+mod contiguous;
+mod manager;
 mod paged;
 mod pool_cache;
+mod prefix;
+pub mod registry;
+mod swap;
 
+pub use contiguous::TokenContiguousManager;
+pub use manager::{MemoryManager, PoolStats, PreemptionPolicy, SwapStats};
 pub use paged::{AllocOutcome, PagedBlockManager};
 pub use pool_cache::{PoolCache, PoolHit};
+pub use prefix::PrefixCacheManager;
+pub use registry::{
+    build_memory, memory_managers, register_memory, MemoryCtx, MemoryEntry, MemorySpec,
+    MEMORY_MANAGERS,
+};
+pub use swap::SwapMemoryManager;
 
 
 /// Accounting granularity for utilization reports (the paper exposes

@@ -12,6 +12,7 @@ use std::collections::HashMap;
 use crate::model::ModelSpec;
 use crate::request::RequestId;
 
+use super::manager::MemoryManager;
 use super::MemoryConfig;
 
 /// Result of an allocation attempt.
@@ -196,6 +197,62 @@ impl PagedBlockManager {
     pub fn check_invariants(&self) -> bool {
         let held_sum: u64 = self.held.values().sum();
         held_sum + self.free_blocks == self.total_blocks
+    }
+}
+
+/// The `paged` registry plugin is the manager itself: the trait surface
+/// delegates to the inherent methods above.
+impl MemoryManager for PagedBlockManager {
+    fn name(&self) -> &'static str {
+        "paged"
+    }
+
+    fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    fn total_blocks(&self) -> u64 {
+        self.total_blocks
+    }
+
+    fn free_blocks(&self) -> u64 {
+        self.free_blocks
+    }
+
+    fn blocks_held(&self, req: RequestId) -> u64 {
+        PagedBlockManager::blocks_held(self, req)
+    }
+
+    fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool {
+        PagedBlockManager::can_admit_with_pending(self, tokens, pending)
+    }
+
+    fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        PagedBlockManager::reserve(self, req, tokens)
+    }
+
+    fn release(&mut self, req: RequestId) -> u64 {
+        PagedBlockManager::release(self, req)
+    }
+
+    fn release_preempted(&mut self, req: RequestId) -> u64 {
+        PagedBlockManager::release_preempted(self, req)
+    }
+
+    fn preemption_frees(&self) -> u64 {
+        self.preemption_frees
+    }
+
+    fn live_requests(&self) -> usize {
+        self.held.len()
+    }
+
+    fn check_invariants(&self) -> bool {
+        PagedBlockManager::check_invariants(self)
     }
 }
 

@@ -1,0 +1,208 @@
+//! Paged memory manager layered over the cross-request KV pool
+//! (CachedAttention / MemServe): the `prefix_cache` registry plugin.
+//!
+//! Composes the `paged` device allocator with the existing
+//! [`PoolCache`] so the Fig 14 memory-cache study is a *memory-manager
+//! choice* (`memory: {manager: prefix_cache}`) rather than a cluster
+//! special case. Finished conversation rounds store their context in
+//! the pool; the next round's prompt prefix is fetched over the pool
+//! fabric (800 ns/block in the paper's setting) instead of recomputed.
+//!
+//! The pool layer is **worker-local** (CachedAttention-style
+//! per-instance caching): rounds only hit when the global scheduler
+//! routes them to the worker that stored the context. Clusters that
+//! want one shared pool across workers — in particular disaggregated
+//! clusters, where prefills and finishes happen on different workers —
+//! should use the cluster-level `pool_cache:` config section instead
+//! (which, when present, takes precedence and keeps this layer inert).
+
+use crate::hardware::LinkSpec;
+use crate::model::ModelSpec;
+use crate::network::{xfer_time_uniform, Schedule};
+use crate::request::{ConversationId, RequestId};
+
+use super::manager::{MemoryManager, PoolStats};
+use super::paged::PagedBlockManager;
+use super::pool_cache::{PoolCache, PoolHit};
+use super::{AllocOutcome, MemoryConfig};
+
+/// Paged device pool + LRU cross-request KV pool.
+#[derive(Debug, Clone)]
+pub struct PrefixCacheManager {
+    device: PagedBlockManager,
+    pool: PoolCache,
+    link: LinkSpec,
+}
+
+impl PrefixCacheManager {
+    /// Size the device pool like `paged`; the pool holds
+    /// `capacity_blocks` KV blocks behind `link`.
+    pub fn new(
+        model: &ModelSpec,
+        mem_cap_bytes: f64,
+        cfg: MemoryConfig,
+        capacity_blocks: u64,
+        link: LinkSpec,
+    ) -> Self {
+        let block_size = cfg.block_size;
+        Self {
+            device: PagedBlockManager::new(model, mem_cap_bytes, cfg),
+            pool: PoolCache::new(capacity_blocks, block_size),
+            link,
+        }
+    }
+
+    /// Construct with explicit block counts (tests / custom sizing).
+    pub fn with_blocks(
+        total_blocks: u64,
+        block_size: u32,
+        block_bytes: u64,
+        pool_blocks: u64,
+    ) -> Self {
+        Self {
+            device: PagedBlockManager::with_blocks(total_blocks, block_size, block_bytes),
+            pool: PoolCache::new(pool_blocks, block_size),
+            link: LinkSpec::pool_fabric(),
+        }
+    }
+
+    /// The pool layer (diagnostics).
+    pub fn pool(&self) -> &PoolCache {
+        &self.pool
+    }
+}
+
+impl MemoryManager for PrefixCacheManager {
+    fn name(&self) -> &'static str {
+        "prefix_cache"
+    }
+
+    fn block_size(&self) -> u32 {
+        MemoryManager::block_size(&self.device)
+    }
+
+    fn block_bytes(&self) -> u64 {
+        MemoryManager::block_bytes(&self.device)
+    }
+
+    fn total_blocks(&self) -> u64 {
+        self.device.total_blocks()
+    }
+
+    fn free_blocks(&self) -> u64 {
+        self.device.free_blocks()
+    }
+
+    fn blocks_held(&self, req: RequestId) -> u64 {
+        self.device.blocks_held(req)
+    }
+
+    fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool {
+        self.device.can_admit_with_pending(tokens, pending)
+    }
+
+    fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        self.device.reserve(req, tokens)
+    }
+
+    fn release(&mut self, req: RequestId) -> u64 {
+        self.device.release(req)
+    }
+
+    fn release_preempted(&mut self, req: RequestId) -> u64 {
+        self.device.release_preempted(req)
+    }
+
+    fn preemption_frees(&self) -> u64 {
+        self.device.preemption_frees
+    }
+
+    fn live_requests(&self) -> usize {
+        self.device.live_requests()
+    }
+
+    fn check_invariants(&self) -> bool {
+        self.device.check_invariants() && self.pool.check_invariants()
+    }
+
+    fn prefix_lookup(&mut self, conv: ConversationId, prompt_len: u32) -> Option<PoolHit> {
+        self.pool.lookup(conv, prompt_len)
+    }
+
+    fn prefix_store(&mut self, conv: ConversationId, tokens: u32) {
+        self.pool.store(conv, tokens);
+    }
+
+    fn prefix_invalidate(&mut self, conv: ConversationId) {
+        self.pool.invalidate(conv);
+    }
+
+    fn prefix_fetch_time(&self, blocks: u64) -> f64 {
+        xfer_time_uniform(blocks, MemoryManager::block_bytes(&self.device), &self.link)
+            .of(Schedule::Sequential)
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.pool.hits,
+            misses: self.pool.misses,
+            evictions: self.pool.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> PrefixCacheManager {
+        PrefixCacheManager::with_blocks(1000, 16, 1024, 500)
+    }
+
+    #[test]
+    fn lookup_store_roundtrip_through_the_manager() {
+        let mut m = mgr();
+        assert!(m.prefix_lookup(7, 100).is_none());
+        m.prefix_store(7, 96);
+        let hit = m.prefix_lookup(7, 200).unwrap();
+        assert_eq!(hit.cached_tokens, 96);
+        assert_eq!(hit.blocks, 6);
+        let s = m.pool_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        m.prefix_invalidate(7);
+        assert!(m.prefix_lookup(7, 200).is_none());
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn fetch_time_matches_pool_fabric() {
+        let m = mgr();
+        // sequential: n * (latency + bytes/bw)
+        let link = LinkSpec::pool_fabric();
+        let expect = 6.0 * (link.latency + 1024.0 / link.bandwidth);
+        assert!((m.prefix_fetch_time(6) - expect).abs() < 1e-12);
+        assert_eq!(m.prefix_fetch_time(0), 0.0);
+    }
+
+    #[test]
+    fn device_allocation_is_plain_paged() {
+        let mut m = mgr();
+        assert_eq!(m.reserve(1, 100), AllocOutcome::Ok);
+        assert_eq!(m.blocks_held(1), 7);
+        assert_eq!(m.release(1), 7);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn sized_constructor_wires_pool_capacity() {
+        let m = PrefixCacheManager::new(
+            &ModelSpec::llama2_7b(),
+            80e9,
+            MemoryConfig::default(),
+            2_000,
+            LinkSpec::pool_fabric(),
+        );
+        assert!(m.total_blocks() > 0);
+        assert!(m.pool().is_empty());
+    }
+}

@@ -1,0 +1,580 @@
+//! String-keyed memory-manager registry — the memory counterpart of
+//! [`crate::scheduler::registry`].
+//!
+//! A manager is selected by name — from YAML (`memory: {manager: swap}`)
+//! or programmatically via [`MemorySpec`] — and built from its parameter
+//! map by a registered constructor. The cluster driver only ever sees
+//! `Box<dyn MemoryManager>`, so adding an allocation policy never
+//! touches `cluster/mod.rs`: implement the trait, then either add a
+//! [`MemoryEntry`] to the built-in table or call [`register_memory`] at
+//! startup.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::yaml::Yaml;
+use crate::hardware::LinkSpec;
+use crate::model::ModelSpec;
+
+use super::contiguous::TokenContiguousManager;
+use super::manager::{MemoryManager, PreemptionPolicy};
+use super::paged::PagedBlockManager;
+use super::prefix::PrefixCacheManager;
+use super::swap::SwapMemoryManager;
+use super::MemoryConfig;
+
+/// Sizing context a manager is built against: the served model (KV
+/// bytes per token, weight footprint) and the device memory capacity.
+pub struct MemoryCtx<'a> {
+    pub model: &'a ModelSpec,
+    pub mem_cap_bytes: f64,
+}
+
+/// A declarative, cloneable memory-manager selection: a registry name
+/// plus a parameter map (the YAML subtree, or a programmatically built
+/// map). This is what configs store — the built `Box<dyn MemoryManager>`
+/// is neither cloneable nor comparable, and every worker needs its own
+/// instance sized for its own hardware.
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::memory::MemorySpec;
+/// use tokensim::model::ModelSpec;
+///
+/// let spec = MemorySpec::new("swap").with("swap_blocks", 10_000u64);
+/// let mem = spec.build(&ModelSpec::llama2_7b(), 80e9).unwrap();
+/// assert_eq!(mem.name(), "swap");
+///
+/// // unknown names are errors listing the known managers
+/// assert!(MemorySpec::new("infinite").build(&ModelSpec::tiny_test(), 1e9).is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemorySpec {
+    /// Registry name (case-insensitive; aliases accepted).
+    pub name: String,
+    /// Manager parameters (a [`Yaml::Map`]).
+    pub params: Yaml,
+}
+
+impl Default for MemorySpec {
+    /// The default manager: `paged` with vLLM-convention parameters.
+    fn default() -> Self {
+        Self::new("paged")
+    }
+}
+
+impl MemorySpec {
+    /// A spec with no parameters (registry defaults apply).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Yaml::Map(Default::default()),
+        }
+    }
+
+    /// Builder-style parameter.
+    pub fn with(mut self, key: &str, value: impl Into<Yaml>) -> Self {
+        if let Yaml::Map(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
+
+    /// Parse from a YAML map of the form `{manager: <name>, <params>…}`.
+    /// A missing `manager` key selects `paged` (the pre-registry
+    /// `memory:` sections keep working unchanged).
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let name = match y.get("manager") {
+            None => "paged".to_string(),
+            Some(v) => v
+                .as_str()
+                .context("'manager' must be a string (a memory-manager name)")?
+                .to_string(),
+        };
+        Ok(Self {
+            name,
+            params: y.clone(),
+        })
+    }
+
+    /// Build the manager this spec names, sized for `model` on a device
+    /// with `mem_cap_bytes` of memory.
+    pub fn build(&self, model: &ModelSpec, mem_cap_bytes: f64) -> Result<Box<dyn MemoryManager>> {
+        build_memory(self, &MemoryCtx { model, mem_cap_bytes })
+    }
+
+    /// Check the spec without sizing it for real hardware: unknown
+    /// names, typo'd parameter keys and malformed values are errors at
+    /// parse time, not mid-simulation.
+    pub fn validate(&self) -> Result<()> {
+        self.build(&ModelSpec::tiny_test(), 1e9).map(|_| ())?;
+        self.preemption().map(|_| ())
+    }
+
+    /// The preemption policy this spec selects (`preemption: recompute`
+    /// / `preemption: swap`). Defaults to swap for the `swap` manager
+    /// (under any of its aliases) and recompute for everything else.
+    pub fn preemption(&self) -> Result<PreemptionPolicy> {
+        match self.params.get("preemption") {
+            None => {
+                // resolve aliases so `manager: paged_swap` also defaults
+                // to swap preemption
+                let is_swap = MEMORY_MANAGERS
+                    .iter()
+                    .find(|e| matches_name(&self.name, e.name, e.aliases))
+                    .is_some_and(|e| e.name == "swap");
+                Ok(if is_swap {
+                    PreemptionPolicy::Swap
+                } else {
+                    PreemptionPolicy::Recompute
+                })
+            }
+            Some(v) => match v.as_str() {
+                Some("recompute") => Ok(PreemptionPolicy::Recompute),
+                Some("swap") => Ok(PreemptionPolicy::Swap),
+                Some(other) => {
+                    bail!("unknown preemption policy '{other}' (known: recompute, swap)")
+                }
+                None => bail!("'preemption' must be a string (recompute or swap)"),
+            },
+        }
+    }
+
+    /// Tokens per KV block this spec configures (pool-cache sizing).
+    pub fn block_size(&self) -> u32 {
+        self.params.opt_u32("block_size", 16)
+    }
+}
+
+/// A built-in memory manager: name, aliases, summary, parameter keys,
+/// constructor.
+pub struct MemoryEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `tokensim list`).
+    pub summary: &'static str,
+    /// Accepted parameter keys — anything else in the spec is an error
+    /// (catches typo'd keys at parse time).
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml, &MemoryCtx) -> Result<Box<dyn MemoryManager>>,
+}
+
+// Strict optional accessors: a *missing* key takes the default, but a
+// present-and-malformed value is an error rather than a silent default.
+
+fn opt_u32_strict(p: &Yaml, key: &str, default: u32) -> Result<u32> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u32()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_u64_strict(p: &Yaml, key: &str, default: u64) -> Result<u64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_f64_strict(p: &Yaml, key: &str, default: f64) -> Result<f64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn common_config(p: &Yaml) -> Result<MemoryConfig> {
+    let cfg = MemoryConfig {
+        block_size: opt_u32_strict(p, "block_size", 16)?,
+        gpu_utilization: opt_f64_strict(p, "gpu_utilization", 0.9)?,
+        max_mem_ratio: opt_f64_strict(p, "max_mem_ratio", 1.0)?,
+        watermark: opt_f64_strict(p, "watermark", 0.01)?,
+    };
+    if cfg.block_size == 0 {
+        bail!("'block_size' must be >= 1");
+    }
+    Ok(cfg)
+}
+
+fn link_param(p: &Yaml, key: &str, default: LinkSpec) -> Result<LinkSpec> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let name = v
+                .as_str()
+                .with_context(|| format!("'{key}' must be a link preset name"))?;
+            LinkSpec::by_name(name).with_context(|| format!("unknown link preset '{name}'"))
+        }
+    }
+}
+
+fn build_paged(p: &Yaml, ctx: &MemoryCtx) -> Result<Box<dyn MemoryManager>> {
+    Ok(Box::new(PagedBlockManager::new(
+        ctx.model,
+        ctx.mem_cap_bytes,
+        common_config(p)?,
+    )))
+}
+
+fn build_token_contiguous(p: &Yaml, ctx: &MemoryCtx) -> Result<Box<dyn MemoryManager>> {
+    Ok(Box::new(TokenContiguousManager::new(
+        ctx.model,
+        ctx.mem_cap_bytes,
+        common_config(p)?,
+    )))
+}
+
+fn build_swap(p: &Yaml, ctx: &MemoryCtx) -> Result<Box<dyn MemoryManager>> {
+    let swap_blocks = match p.get("swap_blocks") {
+        None => None,
+        Some(v) => Some(
+            v.as_u64()
+                .context("'swap_blocks' must be a non-negative integer")?,
+        ),
+    };
+    Ok(Box::new(SwapMemoryManager::new(
+        ctx.model,
+        ctx.mem_cap_bytes,
+        common_config(p)?,
+        swap_blocks,
+        link_param(p, "link", LinkSpec::host_bus())?,
+    )))
+}
+
+fn build_prefix_cache(p: &Yaml, ctx: &MemoryCtx) -> Result<Box<dyn MemoryManager>> {
+    Ok(Box::new(PrefixCacheManager::new(
+        ctx.model,
+        ctx.mem_cap_bytes,
+        common_config(p)?,
+        opt_u64_strict(p, "capacity_blocks", 1_000_000)?,
+        link_param(p, "link", LinkSpec::pool_fabric())?,
+    )))
+}
+
+/// Built-in memory managers.
+pub const MEMORY_MANAGERS: &[MemoryEntry] = &[
+    MemoryEntry {
+        name: "paged",
+        aliases: &["vllm", "paged_attention"],
+        summary: "paged KV blocks (PagedAttention): reserve prompt, grow per token",
+        params: &[
+            "block_size",
+            "gpu_utilization",
+            "max_mem_ratio",
+            "watermark",
+            "preemption",
+        ],
+        build: build_paged,
+    },
+    MemoryEntry {
+        name: "token_contiguous",
+        aliases: &["contiguous", "orca"],
+        summary: "Orca/FasterTransformer baseline: over-reserve to max length, token granularity",
+        // block_size is accepted for config uniformity but ignored —
+        // accounting is always per token
+        params: &[
+            "block_size",
+            "gpu_utilization",
+            "max_mem_ratio",
+            "watermark",
+            "preemption",
+        ],
+        build: build_token_contiguous,
+    },
+    MemoryEntry {
+        name: "swap",
+        aliases: &["paged_swap"],
+        summary: "paged + host swap space; preemption moves KV over the host link",
+        params: &[
+            "block_size",
+            "gpu_utilization",
+            "max_mem_ratio",
+            "watermark",
+            "preemption",
+            "swap_blocks",
+            "link",
+        ],
+        build: build_swap,
+    },
+    MemoryEntry {
+        name: "prefix_cache",
+        aliases: &["pool_cache", "memserve"],
+        summary: "paged layered over the cross-request KV pool (CachedAttention/MemServe)",
+        params: &[
+            "block_size",
+            "gpu_utilization",
+            "max_mem_ratio",
+            "watermark",
+            "preemption",
+            "capacity_blocks",
+            "link",
+        ],
+        build: build_prefix_cache,
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime registration (library users; built-ins live in the table)
+// ---------------------------------------------------------------------------
+
+struct DynMemoryEntry {
+    name: String,
+    summary: String,
+    #[allow(clippy::type_complexity)]
+    build: Box<dyn Fn(&Yaml, &MemoryCtx) -> Result<Box<dyn MemoryManager>> + Send + Sync>,
+}
+
+fn extra_memory() -> &'static Mutex<Vec<DynMemoryEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynMemoryEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a memory manager at runtime. Registered names take
+/// precedence over built-ins, so a library user can also shadow a
+/// built-in manager.
+///
+/// # Examples
+///
+/// A "bring your own allocator" flow — here just a reparameterized
+/// built-in, but any [`MemoryManager`] implementation works the same:
+///
+/// ```
+/// use tokensim::memory::{register_memory, MemoryConfig, MemorySpec, PagedBlockManager};
+/// use tokensim::model::ModelSpec;
+///
+/// register_memory("tiny_blocks", "paged with 4-token blocks (demo)", |_params, ctx| {
+///     let cfg = MemoryConfig { block_size: 4, ..Default::default() };
+///     Ok(Box::new(PagedBlockManager::new(ctx.model, ctx.mem_cap_bytes, cfg)))
+/// });
+///
+/// let mem = MemorySpec::new("tiny_blocks")
+///     .build(&ModelSpec::llama2_7b(), 80e9)
+///     .unwrap();
+/// assert_eq!(mem.block_size(), 4);
+/// ```
+pub fn register_memory(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml, &MemoryCtx) -> Result<Box<dyn MemoryManager>> + Send + Sync + 'static,
+) {
+    extra_memory().lock().unwrap().push(DynMemoryEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Box::new(build),
+    });
+}
+
+fn matches_name(candidate: &str, name: &str, aliases: &[&str]) -> bool {
+    candidate.eq_ignore_ascii_case(name)
+        || aliases.iter().any(|a| candidate.eq_ignore_ascii_case(a))
+}
+
+/// Reject typo'd parameter keys for built-in managers ("manager" itself
+/// is the selector key YAML specs carry). Runtime-registered managers
+/// validate their own params in their builder.
+fn check_param_keys(spec: &MemorySpec, known: &[&str]) -> Result<()> {
+    if let Yaml::Map(m) = &spec.params {
+        for key in m.keys() {
+            if key != "manager" && !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown parameter '{key}' for memory manager '{}' (accepted: {})",
+                    spec.name,
+                    known.join(", ")
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a memory manager from a spec. Unknown names list the known
+/// managers in the error.
+pub fn build_memory(spec: &MemorySpec, ctx: &MemoryCtx) -> Result<Box<dyn MemoryManager>> {
+    {
+        let extras = extra_memory().lock().unwrap();
+        if let Some(e) = extras
+            .iter()
+            .rev()
+            .find(|e| spec.name.eq_ignore_ascii_case(&e.name))
+        {
+            return (e.build)(&spec.params, ctx)
+                .with_context(|| format!("building memory manager '{}'", spec.name));
+        }
+    }
+    let entry = MEMORY_MANAGERS
+        .iter()
+        .find(|e| matches_name(&spec.name, e.name, e.aliases))
+        .with_context(|| {
+            format!(
+                "unknown memory manager '{}' (known: {})",
+                spec.name,
+                memory_managers()
+                    .iter()
+                    .map(|(n, _, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params, ctx)
+        .with_context(|| format!("building memory manager '{}'", spec.name))
+}
+
+/// All registered managers as `(name, summary, accepted-params)`,
+/// built-ins first.
+pub fn memory_managers() -> Vec<(String, String, String)> {
+    let mut out: Vec<(String, String, String)> = MEMORY_MANAGERS
+        .iter()
+        .map(|e| {
+            (
+                e.name.to_string(),
+                e.summary.to_string(),
+                e.params.join(", "),
+            )
+        })
+        .collect();
+    for e in extra_memory().lock().unwrap().iter() {
+        out.push((e.name.clone(), e.summary.clone(), "(manager-defined)".to_string()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec::llama2_7b()
+    }
+
+    #[test]
+    fn builds_every_builtin_manager_with_defaults() {
+        for e in MEMORY_MANAGERS {
+            let mem = MemorySpec::new(e.name)
+                .build(&model(), 80e9)
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.name));
+            assert_eq!(mem.name(), e.name);
+            assert!(mem.total_blocks() > 0, "{}", e.name);
+            assert!(mem.check_invariants(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        for (alias, canonical) in [
+            ("PagedAttention", "paged"),
+            ("Orca", "token_contiguous"),
+            ("paged_swap", "swap"),
+            ("MemServe", "prefix_cache"),
+        ] {
+            let mem = MemorySpec::new(alias).build(&model(), 80e9).unwrap();
+            assert_eq!(mem.name(), canonical);
+        }
+    }
+
+    #[test]
+    fn unknown_manager_is_an_error_listing_known() {
+        let err = MemorySpec::new("infinite").build(&model(), 80e9).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown memory manager"), "{msg}");
+        assert!(msg.contains("token_contiguous"), "{msg}");
+    }
+
+    #[test]
+    fn typod_or_malformed_params_are_errors() {
+        let err = MemorySpec::new("paged")
+            .with("block_sze", 16u32)
+            .build(&model(), 80e9)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'block_sze'"));
+        let err = MemorySpec::new("swap")
+            .with("swap_blocks", "lots")
+            .build(&model(), 80e9)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("swap_blocks"));
+        // zero-token blocks would divide by zero downstream
+        assert!(MemorySpec::new("paged")
+            .with("block_size", 0u32)
+            .build(&model(), 80e9)
+            .is_err());
+        // validate() catches the same without hardware sizing
+        assert!(MemorySpec::new("paged").with("block_sze", 16u32).validate().is_err());
+        assert!(MemorySpec::default().validate().is_ok());
+    }
+
+    #[test]
+    fn preemption_policy_parses_with_manager_aware_default() {
+        assert_eq!(
+            MemorySpec::new("paged").preemption().unwrap(),
+            PreemptionPolicy::Recompute
+        );
+        assert_eq!(
+            MemorySpec::new("swap").preemption().unwrap(),
+            PreemptionPolicy::Swap
+        );
+        assert_eq!(
+            MemorySpec::new("paged_swap").preemption().unwrap(),
+            PreemptionPolicy::Swap,
+            "aliases get the same default"
+        );
+        assert_eq!(
+            MemorySpec::new("swap")
+                .with("preemption", "recompute")
+                .preemption()
+                .unwrap(),
+            PreemptionPolicy::Recompute
+        );
+        assert_eq!(
+            MemorySpec::new("paged")
+                .with("preemption", "swap")
+                .preemption()
+                .unwrap(),
+            PreemptionPolicy::Swap
+        );
+        assert!(MemorySpec::new("paged")
+            .with("preemption", "pray")
+            .preemption()
+            .is_err());
+    }
+
+    #[test]
+    fn from_yaml_defaults_to_paged() {
+        let y = Yaml::parse("block_size: 32\ngpu_utilization: 0.8\n").unwrap();
+        let spec = MemorySpec::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "paged");
+        assert_eq!(spec.block_size(), 32);
+        assert!(spec.validate().is_ok());
+        let y = Yaml::parse("manager: swap\nswap_blocks: 1000\n").unwrap();
+        let spec = MemorySpec::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "swap");
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn runtime_registration_shadows_builtins() {
+        register_memory("test_shadow_paged", "test", build_paged);
+        let mem = MemorySpec::new("test_shadow_paged")
+            .build(&model(), 80e9)
+            .unwrap();
+        assert_eq!(mem.name(), "paged");
+        assert!(memory_managers().iter().any(|(n, _, _)| n == "test_shadow_paged"));
+    }
+
+    #[test]
+    fn common_params_flow_to_the_pool() {
+        let mem = MemorySpec::new("paged")
+            .with("gpu_utilization", 0.5)
+            .build(&model(), 80e9)
+            .unwrap();
+        let full = MemorySpec::new("paged").build(&model(), 80e9).unwrap();
+        assert!(mem.total_blocks() < full.total_blocks());
+    }
+}

@@ -1,0 +1,274 @@
+//! Paged memory manager with host swap space: preemption moves a
+//! victim's KV cache to host DRAM over the host↔device link instead of
+//! discarding it, and the victim later *swaps back in* with no
+//! re-prefill (vLLM's `--swap-space` / the paper's swap-vs-recompute
+//! axis).
+//!
+//! The transfer cost is charged by the cluster driver through this
+//! manager's [`swap_link`](MemoryManager::swap_link) (default:
+//! [`LinkSpec::host_bus`]), replacing the recompute policy's wasted
+//! prefill FLOPs with host-link bytes.
+
+use std::collections::HashMap;
+
+use crate::hardware::LinkSpec;
+use crate::model::ModelSpec;
+use crate::request::RequestId;
+
+use super::manager::{MemoryManager, SwapStats};
+use super::paged::PagedBlockManager;
+use super::{AllocOutcome, MemoryConfig};
+
+/// Paged device pool + bounded host swap space.
+#[derive(Debug, Clone)]
+pub struct SwapMemoryManager {
+    device: PagedBlockManager,
+    /// Host swap capacity in blocks.
+    swap_capacity: u64,
+    /// Blocks parked in host memory, per swapped-out request.
+    swapped: HashMap<RequestId, u64>,
+    swap_used: u64,
+    link: LinkSpec,
+    stats: SwapStats,
+}
+
+impl SwapMemoryManager {
+    /// Size the device pool like `paged`; `swap_blocks` bounds the host
+    /// space (`None` = 4x the device pool, the vLLM-flavoured default).
+    pub fn new(
+        model: &ModelSpec,
+        mem_cap_bytes: f64,
+        cfg: MemoryConfig,
+        swap_blocks: Option<u64>,
+        link: LinkSpec,
+    ) -> Self {
+        let device = PagedBlockManager::new(model, mem_cap_bytes, cfg);
+        let swap_capacity = swap_blocks.unwrap_or_else(|| device.total_blocks().saturating_mul(4));
+        Self {
+            device,
+            swap_capacity,
+            swapped: HashMap::new(),
+            swap_used: 0,
+            link,
+            stats: SwapStats::default(),
+        }
+    }
+
+    /// Construct with explicit block counts (tests / custom sizing).
+    pub fn with_blocks(
+        total_blocks: u64,
+        block_size: u32,
+        block_bytes: u64,
+        swap_capacity: u64,
+    ) -> Self {
+        Self {
+            device: PagedBlockManager::with_blocks(total_blocks, block_size, block_bytes),
+            swap_capacity,
+            swapped: HashMap::new(),
+            swap_used: 0,
+            link: LinkSpec::host_bus(),
+            stats: SwapStats::default(),
+        }
+    }
+
+    /// Host blocks currently parked in swap space.
+    pub fn swap_space_used(&self) -> u64 {
+        self.swap_used
+    }
+
+    /// Host swap capacity in blocks.
+    pub fn swap_capacity(&self) -> u64 {
+        self.swap_capacity
+    }
+}
+
+impl MemoryManager for SwapMemoryManager {
+    fn name(&self) -> &'static str {
+        "swap"
+    }
+
+    fn block_size(&self) -> u32 {
+        MemoryManager::block_size(&self.device)
+    }
+
+    fn block_bytes(&self) -> u64 {
+        MemoryManager::block_bytes(&self.device)
+    }
+
+    fn total_blocks(&self) -> u64 {
+        self.device.total_blocks()
+    }
+
+    fn free_blocks(&self) -> u64 {
+        self.device.free_blocks()
+    }
+
+    fn blocks_held(&self, req: RequestId) -> u64 {
+        self.device.blocks_held(req)
+    }
+
+    fn can_admit_with_pending(&self, tokens: u32, pending: u64) -> bool {
+        self.device.can_admit_with_pending(tokens, pending)
+    }
+
+    fn reserve(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        self.device.reserve(req, tokens)
+    }
+
+    fn release(&mut self, req: RequestId) -> u64 {
+        // a finishing request cannot be swapped out, but clear any host
+        // copy defensively so space never leaks
+        if let Some(b) = self.swapped.remove(&req) {
+            self.swap_used -= b;
+        }
+        self.device.release(req)
+    }
+
+    fn release_preempted(&mut self, req: RequestId) -> u64 {
+        self.device.release_preempted(req)
+    }
+
+    fn preemption_frees(&self) -> u64 {
+        self.device.preemption_frees
+    }
+
+    fn live_requests(&self) -> usize {
+        self.device.live_requests() + self.swapped.len()
+    }
+
+    fn check_invariants(&self) -> bool {
+        self.device.check_invariants()
+            && self.swap_used == self.swapped.values().sum::<u64>()
+            && self.swap_used <= self.swap_capacity
+    }
+
+    fn swap_out(&mut self, req: RequestId) -> Option<u64> {
+        let blocks = self.device.blocks_held(req);
+        if blocks == 0 || self.swap_used + blocks > self.swap_capacity {
+            return None;
+        }
+        debug_assert!(!self.swapped.contains_key(&req), "double swap-out of {req}");
+        self.device.release_preempted(req);
+        self.swapped.insert(req, blocks);
+        self.swap_used += blocks;
+        self.stats.swap_outs += 1;
+        self.stats.blocks_out += blocks;
+        Some(blocks)
+    }
+
+    fn swap_in(&mut self, req: RequestId, tokens: u32) -> AllocOutcome {
+        if !self.swapped.contains_key(&req) {
+            return AllocOutcome::OutOfMemory;
+        }
+        match self.device.reserve(req, tokens) {
+            AllocOutcome::Ok => {
+                let blocks = self.swapped.remove(&req).expect("checked above");
+                self.swap_used -= blocks;
+                self.stats.swap_ins += 1;
+                self.stats.blocks_in += blocks;
+                AllocOutcome::Ok
+            }
+            oom => oom,
+        }
+    }
+
+    fn discard_swapped(&mut self, req: RequestId) -> u64 {
+        match self.swapped.remove(&req) {
+            Some(b) => {
+                self.swap_used -= b;
+                b
+            }
+            None => 0,
+        }
+    }
+
+    fn swapped_blocks(&self, req: RequestId) -> u64 {
+        self.swapped.get(&req).copied().unwrap_or(0)
+    }
+
+    fn swap_link(&self) -> Option<&LinkSpec> {
+        Some(&self.link)
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(device: u64, swap: u64) -> SwapMemoryManager {
+        SwapMemoryManager::with_blocks(device, 16, 1024, swap)
+    }
+
+    #[test]
+    fn swap_roundtrip_preserves_blocks() {
+        let mut m = mgr(10, 100);
+        assert_eq!(m.reserve(1, 100), AllocOutcome::Ok); // 7 blocks
+        let held = m.blocks_held(1);
+        assert_eq!(m.swap_out(1), Some(held));
+        assert_eq!(m.blocks_held(1), 0, "device blocks freed");
+        assert_eq!(m.swap_space_used(), held);
+        assert_eq!(m.free_blocks(), 10);
+        assert_eq!(m.preemption_frees(), held, "swap-out is a preemption free");
+
+        assert_eq!(m.swap_in(1, 101), AllocOutcome::Ok);
+        assert_eq!(m.blocks_held(1), held, "101 tokens still fit 7 blocks");
+        assert_eq!(m.swap_space_used(), 0);
+        assert!(m.check_invariants());
+        let s = m.swap_stats();
+        assert_eq!((s.swap_outs, s.swap_ins), (1, 1));
+        assert_eq!(s.blocks_out, s.blocks_in);
+    }
+
+    #[test]
+    fn swap_space_capacity_bounds_swap_out() {
+        let mut m = mgr(10, 5);
+        m.reserve(1, 100); // 7 blocks > 5 swap capacity
+        assert_eq!(m.swap_out(1), None, "no host space: fall back to recompute");
+        assert_eq!(m.blocks_held(1), 7, "device state untouched");
+        m.reserve(2, 32); // 2 blocks
+        assert_eq!(m.swap_out(2), Some(2));
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn swap_in_oom_keeps_host_copy() {
+        let mut m = mgr(10, 100);
+        m.reserve(1, 160); // all 10 blocks
+        assert_eq!(m.swap_out(1), Some(10));
+        m.reserve(2, 160); // refill the device
+        assert_eq!(m.swap_in(1, 161), AllocOutcome::OutOfMemory);
+        assert_eq!(m.swapped_blocks(1), 10, "host copy intact for retry");
+        m.release(2);
+        assert_eq!(m.swap_in(1, 161), AllocOutcome::OutOfMemory, "161 tokens need 11 blocks");
+        assert_eq!(m.swap_in(1, 160), AllocOutcome::Ok);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn discard_swapped_frees_host_space() {
+        let mut m = mgr(10, 100);
+        m.reserve(1, 64);
+        m.swap_out(1);
+        assert_eq!(m.discard_swapped(1), 4);
+        assert_eq!(m.swap_space_used(), 0);
+        assert_eq!(m.discard_swapped(1), 0);
+        assert!(m.check_invariants());
+    }
+
+    #[test]
+    fn default_swap_capacity_is_4x_device() {
+        let m = SwapMemoryManager::new(
+            &ModelSpec::llama2_7b(),
+            80e9,
+            MemoryConfig::default(),
+            None,
+            LinkSpec::host_bus(),
+        );
+        assert_eq!(m.swap_capacity(), m.total_blocks() * 4);
+        assert!(m.swap_link().is_some());
+    }
+}

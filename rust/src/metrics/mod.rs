@@ -28,7 +28,12 @@ pub struct RequestRecord {
     pub first_token: SimTime,
     pub finished: SimTime,
     pub max_token_gap: SimTime,
+    /// Times the request was preempted (recompute or swap).
     pub preemptions: u32,
+    /// Times the request was preempted by swap-out specifically.
+    pub swaps: u32,
+    /// Tokens re-prefilled after recompute preemptions.
+    pub recomputed_tokens: u64,
 }
 
 impl RequestRecord {
@@ -46,6 +51,8 @@ impl RequestRecord {
             finished: r.finished_at.expect("request not finished"),
             max_token_gap: r.max_token_gap,
             preemptions: r.preemptions,
+            swaps: r.swaps,
+            recomputed_tokens: r.recomputed_tokens,
         }
     }
 
@@ -222,6 +229,17 @@ impl<'a> MetricSet<'a> {
     pub fn total_preemptions(&self) -> u64 {
         self.records.iter().map(|r| r.preemptions as u64).sum()
     }
+
+    /// Preemptions serviced by swap-out (no recompute work).
+    pub fn total_swaps(&self) -> u64 {
+        self.records.iter().map(|r| r.swaps as u64).sum()
+    }
+
+    /// Tokens re-prefilled because of recompute preemptions — the
+    /// wasted compute the swap policy trades for host-link traffic.
+    pub fn total_recomputed_tokens(&self) -> u64 {
+        self.records.iter().map(|r| r.recomputed_tokens).sum()
+    }
 }
 
 #[cfg(test)]
@@ -241,6 +259,8 @@ mod tests {
             finished: fin,
             max_token_gap: gap,
             preemptions: 0,
+            swaps: 0,
+            recomputed_tokens: 0,
         }
     }
 

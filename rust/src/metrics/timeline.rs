@@ -1,13 +1,18 @@
 //! Memory-usage-over-time sampling (the Fig 13 heatmaps).
 
 
-/// One sample of a worker's KV-pool occupancy.
+/// One sample of a worker's KV-pool occupancy, reported at the paper's
+/// three granularities (block / token / byte — §III-B).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MemorySample {
     pub time: f64,
     pub worker: usize,
     pub used_blocks: u64,
     pub total_blocks: u64,
+    /// Token-granularity view of `used_blocks`.
+    pub used_tokens: u64,
+    /// Byte-granularity view of `used_blocks`.
+    pub used_bytes: u64,
 }
 
 impl MemorySample {
@@ -81,21 +86,22 @@ impl MemoryTimeline {
 mod tests {
     use super::*;
 
+    fn sample(time: f64, worker: usize, used_blocks: u64, total_blocks: u64) -> MemorySample {
+        MemorySample {
+            time,
+            worker,
+            used_blocks,
+            total_blocks,
+            used_tokens: used_blocks * 16,
+            used_bytes: used_blocks * 1024,
+        }
+    }
+
     fn tl() -> MemoryTimeline {
         let mut t = MemoryTimeline::default();
         for i in 0..10 {
-            t.record(MemorySample {
-                time: i as f64,
-                worker: 0,
-                used_blocks: i * 10,
-                total_blocks: 100,
-            });
-            t.record(MemorySample {
-                time: i as f64,
-                worker: 1,
-                used_blocks: 50,
-                total_blocks: 100,
-            });
+            t.record(sample(i as f64, 0, i * 10, 100));
+            t.record(sample(i as f64, 1, 50, 100));
         }
         t
     }
@@ -132,12 +138,7 @@ mod tests {
 
     #[test]
     fn zero_capacity_reads_full() {
-        let s = MemorySample {
-            time: 0.0,
-            worker: 0,
-            used_blocks: 0,
-            total_blocks: 0,
-        };
+        let s = sample(0.0, 0, 0, 0);
         assert_eq!(s.utilization(), 1.0);
     }
 }

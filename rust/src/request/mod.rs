@@ -23,6 +23,9 @@ pub enum Phase {
     Decode,
     /// Preempted: KV released, waiting to be restarted (recompute).
     Preempted,
+    /// Preempted by swap-out: KV parked in host memory, waiting to be
+    /// swapped back in (no re-prefill needed).
+    Swapped,
     /// All output tokens generated.
     Finished,
 }
@@ -53,8 +56,13 @@ pub struct Request {
     pub generated: u32,
     /// Worker currently owning the request, if any.
     pub worker: Option<usize>,
-    /// Times the request was preempted.
+    /// Times the request was preempted (recompute or swap).
     pub preemptions: u32,
+    /// Times the request was preempted by swap-out specifically.
+    pub swaps: u32,
+    /// Tokens whose KV had to be recomputed after recompute
+    /// preemptions (the work swap preemption avoids).
+    pub recomputed_tokens: u64,
 
     // ---- metric stamps ----
     pub first_scheduled: Option<SimTime>,
@@ -90,6 +98,8 @@ impl Request {
             generated: 0,
             worker: None,
             preemptions: 0,
+            swaps: 0,
+            recomputed_tokens: 0,
             first_scheduled: None,
             first_token: None,
             last_token: None,
@@ -147,6 +157,8 @@ impl Request {
     /// re-processed from scratch.
     pub fn reset_for_recompute(&mut self) {
         self.phase = Phase::Preempted;
+        // every KV-resident token will be computed again
+        self.recomputed_tokens += self.ctx_in_cache as u64;
         self.ctx_in_cache = 0;
         // Already generated tokens become part of the "prompt" to
         // recompute; they are not re-emitted to the user. A pool-cached
@@ -155,6 +167,16 @@ impl Request {
         self.cached_prefix = 0;
         self.preemptions += 1;
         self.worker = None;
+    }
+
+    /// Mark a preemption-by-swap-out: the KV cache moves to host memory
+    /// intact, so `ctx_in_cache` / `prompt_done` are preserved and the
+    /// request resumes decoding after a swap-in (no re-prefill).
+    pub fn mark_swapped(&mut self) {
+        debug_assert_eq!(self.phase, Phase::Decode, "only completed prefills swap");
+        self.phase = Phase::Swapped;
+        self.preemptions += 1;
+        self.swaps += 1;
     }
 
     /// Effective prompt length for (re)computation, counting generated
@@ -216,6 +238,23 @@ mod tests {
         assert_eq!(r.generated, 4, "generated tokens are kept");
         assert_eq!(r.effective_prompt_len(), 104);
         assert_eq!(r.preemptions, 1);
+        assert_eq!(r.recomputed_tokens, 104, "every resident token recomputes");
+        assert_eq!(r.swaps, 0);
+    }
+
+    #[test]
+    fn swap_preemption_preserves_kv_token_counts() {
+        let mut r = req();
+        r.phase = Phase::Decode;
+        r.prompt_done = 100;
+        r.ctx_in_cache = 104;
+        r.generated = 4;
+        r.mark_swapped();
+        assert_eq!(r.phase, Phase::Swapped);
+        assert_eq!(r.ctx_in_cache, 104, "KV tokens survive the swap");
+        assert_eq!(r.prompt_done, 100);
+        assert_eq!((r.preemptions, r.swaps), (1, 1));
+        assert_eq!(r.recomputed_tokens, 0, "no re-prefill work incurred");
     }
 
     #[test]

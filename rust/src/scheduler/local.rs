@@ -3,7 +3,8 @@
 //!
 //! A local scheduler runs between iterations and decides which requests
 //! join the next batch, which keep waiting, and which are preempted,
-//! coordinating with the worker's [`PagedBlockManager`]. Policies are
+//! coordinating with the worker's [`MemoryManager`] (any registered
+//! manager — the scheduler only sees the trait). Policies are
 //! ordinary structs implementing [`LocalScheduler`]; the string-keyed
 //! [registry](crate::scheduler::registry) makes them selectable from
 //! YAML without touching the simulation driver.
@@ -11,7 +12,7 @@
 use std::collections::VecDeque;
 
 use crate::compute::BatchDesc;
-use crate::memory::{AllocOutcome, PagedBlockManager};
+use crate::memory::{AllocOutcome, MemoryManager, PreemptionPolicy};
 use crate::request::{Phase, Request, RequestId};
 use crate::sim::SimTime;
 
@@ -20,12 +21,16 @@ pub struct LocalSchedCtx<'a> {
     pub requests: &'a mut [Request],
     pub waiting: &'a mut VecDeque<RequestId>,
     pub running: &'a mut Vec<RequestId>,
-    pub mem: &'a mut PagedBlockManager,
+    pub mem: &'a mut dyn MemoryManager,
     pub now: f64,
     /// No more arrivals will ever come (lets Static form partial batches).
     pub draining: bool,
     /// Time of the earliest waiting request's enqueue (static linger).
     pub oldest_wait: Option<f64>,
+    /// What to do with a decode request whose KV cannot grow: recompute
+    /// (vLLM default) or swap-out over the host link (managers without
+    /// swap space fall back to recompute).
+    pub preemption: PreemptionPolicy,
 }
 
 /// The iteration plan a local scheduler produces.
@@ -35,8 +40,14 @@ pub struct BatchPlan {
     pub members: Vec<RequestId>,
     /// Per-slot (ctx, new) descriptors.
     pub batch: BatchDesc,
-    /// Requests preempted (recompute) while forming this batch.
+    /// Requests preempted by recompute while forming this batch.
     pub preempted: Vec<RequestId>,
+    /// `(request, blocks)` preempted by swap-out while forming this
+    /// batch; the driver charges the host-link transfer.
+    pub swapped_out: Vec<(RequestId, u64)>,
+    /// `(request, blocks)` restored from swap space into this batch's
+    /// running set; the driver charges the host-link transfer.
+    pub swapped_in: Vec<(RequestId, u64)>,
     /// True if this iteration runs prefill work.
     pub has_prefill: bool,
 }
@@ -57,8 +68,11 @@ impl BatchPlan {
 ///   `ctx.mem` covering `batch.ctx[slot] + batch.new[slot]` tokens;
 /// * admitted requests are moved from `ctx.waiting` to `ctx.running`
 ///   and flipped to [`Phase::Prefill`];
-/// * preempted requests are reset for recompute, pushed to the front of
-///   `ctx.waiting`, and listed in `plan.preempted`;
+/// * preempted requests are pushed to the front of `ctx.waiting` and —
+///   depending on `ctx.preemption` and the manager's swap support —
+///   either reset for recompute (listed in `plan.preempted`) or parked
+///   in host swap space (listed in `plan.swapped_out`); swapped
+///   requests later re-enter through `plan.swapped_in`, not re-prefill;
 /// * an empty plan means "nothing runnable right now" — the driver goes
 ///   idle until the next event (or until
 ///   [`repoll_at`](LocalScheduler::repoll_at) requests a timed wake-up).
@@ -69,7 +83,7 @@ impl BatchPlan {
 ///
 /// ```
 /// use std::collections::VecDeque;
-/// use tokensim::memory::PagedBlockManager;
+/// use tokensim::memory::{PagedBlockManager, PreemptionPolicy};
 /// use tokensim::request::Request;
 /// use tokensim::scheduler::{ContinuousBatching, LocalSchedCtx, LocalScheduler};
 ///
@@ -87,6 +101,7 @@ impl BatchPlan {
 ///     now: 0.0,
 ///     draining: false,
 ///     oldest_wait: Some(0.0),
+///     preemption: PreemptionPolicy::Recompute,
 /// });
 /// assert_eq!(plan.members, vec![0]);
 /// assert!(plan.has_prefill);
@@ -355,49 +370,91 @@ fn sjf_order(ctx: &LocalSchedCtx, starvation_age: Option<f64>) -> Vec<RequestId>
 // ---------------------------------------------------------------------------
 
 /// Ensure every running decode request can grow one token, preempting
-/// the most-recently-admitted requests (vLLM's recompute policy) when
-/// blocks run out. Returns preempted ids.
-fn ensure_decode_growth(ctx: &mut LocalSchedCtx) -> Vec<RequestId> {
-    let mut preempted = Vec::new();
+/// the most-recently-admitted requests when blocks run out. The
+/// context's [`PreemptionPolicy`] picks the mechanism per victim:
+/// recompute (KV dropped, re-prefill later) or swap-out (KV parked in
+/// host memory via [`MemoryManager::swap_out`]; falls back to recompute
+/// when the manager has no swap space or the victim is mid-prefill).
+/// Victims are recorded in `plan.preempted` / `plan.swapped_out`.
+fn ensure_decode_growth(ctx: &mut LocalSchedCtx, plan: &mut BatchPlan) {
     let mut i = 0;
     while i < ctx.running.len() {
         let rid = ctx.running[i];
-        let need = {
-            let r = &ctx.requests[rid];
-            // after this iteration the request holds ctx + 1 tokens
-            r.ctx_in_cache + 1
-        };
-        loop {
-            match ctx.mem.reserve(rid, need) {
-                AllocOutcome::Ok => break,
-                AllocOutcome::OutOfMemory => {
-                    // evict the last-admitted running request (not rid
-                    // itself unless it is the only one left)
-                    let victim_pos = ctx.running.len() - 1;
-                    let victim = ctx.running[victim_pos];
-                    if victim == rid {
-                        // rid itself is the newest: preempt it
-                        ctx.running.remove(victim_pos);
-                        ctx.mem.release_preempted(victim);
-                        ctx.requests[victim].reset_for_recompute();
-                        ctx.waiting.push_front(victim);
-                        preempted.push(victim);
-                        break;
-                    }
-                    ctx.running.remove(victim_pos);
-                    ctx.mem.release_preempted(victim);
-                    ctx.requests[victim].reset_for_recompute();
-                    ctx.waiting.push_front(victim);
-                    preempted.push(victim);
+        // after this iteration the request holds ctx + 1 tokens
+        let need = ctx.requests[rid].ctx_in_cache + 1;
+        let mut self_evicted = false;
+        while ctx.mem.reserve(rid, need) == AllocOutcome::OutOfMemory {
+            // evict the last-admitted running request (not rid itself
+            // unless it is the only one left)
+            let victim_pos = ctx.running.len() - 1;
+            let victim = ctx.running[victim_pos];
+            ctx.running.remove(victim_pos);
+            let mut swapped = false;
+            if ctx.preemption == PreemptionPolicy::Swap
+                && ctx.requests[victim].phase == Phase::Decode
+            {
+                if let Some(blocks) = ctx.mem.swap_out(victim) {
+                    plan.swapped_out.push((victim, blocks));
+                    ctx.requests[victim].mark_swapped();
+                    swapped = true;
                 }
             }
+            if !swapped {
+                ctx.mem.release_preempted(victim);
+                ctx.requests[victim].reset_for_recompute();
+                plan.preempted.push(victim);
+            }
+            ctx.waiting.push_front(victim);
+            if victim == rid {
+                self_evicted = true;
+                break;
+            }
         }
-        // if rid survived, move on; if rid was preempted it was removed
-        if i < ctx.running.len() && ctx.running[i] == rid {
+        // if rid survived, move on; if rid evicted itself it is gone
+        if !self_evicted {
             i += 1;
         }
     }
-    preempted
+}
+
+/// Swap preempted-by-swap requests back in, from the front of the
+/// waiting queue (oldest victims first): device blocks are re-reserved
+/// for their preserved context and they rejoin the running set in
+/// [`Phase::Decode`] — no re-prefill. The driver charges the host-link
+/// transfer for the blocks recorded in `plan.swapped_in`. If the
+/// worker is otherwise empty and the context still cannot fit, the
+/// host copy is dropped and the request falls back to recompute so it
+/// can make progress through ordinary admission.
+fn restore_swapped(ctx: &mut LocalSchedCtx, plan: &mut BatchPlan) {
+    loop {
+        let Some(&rid) = ctx.waiting.front() else {
+            return;
+        };
+        if ctx.requests[rid].phase != Phase::Swapped {
+            return;
+        }
+        let need = ctx.requests[rid].ctx_in_cache + 1;
+        let admit = ctx.mem.can_admit_with_pending(need, 0) || ctx.running.is_empty();
+        // blocks actually crossing the host link (read before swap_in
+        // consumes the host copy; the reservation may add a growth
+        // block that never moved over the link)
+        let host_blocks = ctx.mem.swapped_blocks(rid);
+        if admit && ctx.mem.swap_in(rid, need) == AllocOutcome::Ok {
+            ctx.waiting.pop_front();
+            ctx.requests[rid].phase = Phase::Decode;
+            ctx.running.push(rid);
+            plan.swapped_in.push((rid, host_blocks));
+        } else if ctx.running.is_empty() && plan.swapped_in.is_empty() {
+            // nothing can ever free more device blocks: drop the host
+            // copy, recompute from scratch via normal admission
+            ctx.mem.discard_swapped(rid);
+            ctx.requests[rid].reset_for_recompute();
+            plan.preempted.push(rid);
+            return;
+        } else {
+            return;
+        }
+    }
 }
 
 /// The continuous-batching core shared by [`ContinuousBatching`],
@@ -413,7 +470,9 @@ fn form_token_budget(
     mixed_batching: bool,
     order_fn: impl FnOnce(&LocalSchedCtx) -> AdmissionOrder,
 ) -> BatchPlan {
-    let preempted = ensure_decode_growth(ctx);
+    let mut plan = BatchPlan::default();
+    ensure_decode_growth(ctx, &mut plan);
+    restore_swapped(ctx, &mut plan);
     let order = order_fn(ctx);
     let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
     let fifo = matches!(order, AdmissionOrder::Fifo);
@@ -436,6 +495,15 @@ fn form_token_budget(
                 break;
             }
             let r = &ctx.requests[rid];
+            // swapped-out requests re-enter via swap-in (above), never
+            // as prefills; one parked at the queue head blocks FIFO
+            // admission so fresh arrivals cannot starve it
+            if r.phase == Phase::Swapped {
+                if fifo {
+                    break;
+                }
+                continue;
+            }
             let prompt = r.effective_prompt_len();
             // prompt_done counts tokens already accounted for (a pool-
             // cached prefix, or progress before a chunk boundary)
@@ -448,26 +516,28 @@ fn form_token_budget(
                 }
                 continue;
             }
-            // memory admission: the whole prompt's KV must fit, net of
-            // blocks promised to earlier admissions in this pass
-            if !ctx.mem.can_admit_with_pending(prompt, pending_blocks) {
+            // memory admission: the manager decides the reservation
+            // size (paged: the whole prompt; contiguous: the final
+            // footprint), net of blocks promised to earlier admissions
+            // in this pass
+            let admit_tokens = ctx.mem.admission_tokens(r);
+            if !ctx.mem.can_admit_with_pending(admit_tokens, pending_blocks) {
                 if fifo {
                     break;
                 }
                 continue;
             }
-            pending_blocks += ctx.mem.blocks_for_tokens(prompt);
-            reservations.push((rid, prompt));
+            pending_blocks += ctx.mem.blocks_for_tokens(admit_tokens);
+            reservations.push((rid, admit_tokens));
             prefill_tokens += compute_tokens;
             admitted.push(rid);
         }
-        for (rid, prompt) in reservations {
-            let ok = ctx.mem.reserve(rid, prompt);
+        for (rid, tokens) in reservations {
+            let ok = ctx.mem.reserve(rid, tokens);
             debug_assert_eq!(ok, AllocOutcome::Ok, "can_admit guaranteed space");
         }
     }
 
-    let mut plan = BatchPlan::default();
     if !admitted.is_empty() {
         // dequeue the admitted requests. FIFO admission stops at the
         // first failure, so the admitted set is exactly the queue's
@@ -517,7 +587,6 @@ fn form_token_budget(
             plan.members.push(rid);
         }
     }
-    plan.preempted = preempted;
     plan
 }
 
@@ -578,10 +647,10 @@ fn form_chunked(
     chunk_tokens: u32,
     max_batch_size: Option<u32>,
 ) -> BatchPlan {
-    let preempted = ensure_decode_growth(ctx);
-    let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
     let mut plan = BatchPlan::default();
-    plan.preempted = preempted;
+    ensure_decode_growth(ctx, &mut plan);
+    restore_swapped(ctx, &mut plan);
+    let cap = max_batch_size.unwrap_or(u32::MAX) as usize;
 
     // decodes claim budget first (1 new token each); prefill chunks
     // fill whatever remains
@@ -619,27 +688,32 @@ fn form_chunked(
     //    and batch slots remain; KV is reserved for the whole prompt so
     //    later chunks can never deadlock on memory
     let running_len = ctx.running.len();
-    let mut reservations: Vec<(RequestId, u32, u32)> = Vec::new(); // (rid, prompt, chunk)
+    let mut reservations: Vec<(RequestId, u32, u32)> = Vec::new(); // (rid, reserve, chunk)
     let mut pending_blocks: u64 = 0;
     for &rid in ctx.waiting.iter() {
         if budget == 0 || running_len + reservations.len() >= cap {
             break;
         }
         let r = &ctx.requests[rid];
+        // swapped-out requests only re-enter via swap-in (FIFO: stop)
+        if r.phase == Phase::Swapped {
+            break;
+        }
         let prompt = r.effective_prompt_len();
-        if !ctx.mem.can_admit_with_pending(prompt, pending_blocks) {
+        let admit_tokens = ctx.mem.admission_tokens(r);
+        if !ctx.mem.can_admit_with_pending(admit_tokens, pending_blocks) {
             break;
         }
         let chunk = (prompt - r.prompt_done).min(budget);
-        pending_blocks += ctx.mem.blocks_for_tokens(prompt);
+        pending_blocks += ctx.mem.blocks_for_tokens(admit_tokens);
         budget -= chunk;
-        reservations.push((rid, prompt, chunk));
+        reservations.push((rid, admit_tokens, chunk));
     }
     for _ in 0..reservations.len() {
         ctx.waiting.pop_front();
     }
-    for (rid, prompt, chunk) in reservations {
-        let ok = ctx.mem.reserve(rid, prompt);
+    for (rid, tokens, chunk) in reservations {
+        let ok = ctx.mem.reserve(rid, tokens);
         debug_assert_eq!(ok, AllocOutcome::Ok, "can_admit guaranteed space");
         let r = &mut ctx.requests[rid];
         r.phase = Phase::Prefill;
@@ -666,6 +740,7 @@ fn form_chunked(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::{PagedBlockManager, SwapMemoryManager};
 
     fn make_requests(specs: &[(u32, u32)]) -> Vec<Request> {
         specs
@@ -703,6 +778,22 @@ mod tests {
                 now: 0.0,
                 draining: false,
                 oldest_wait: Some(0.0),
+                preemption: PreemptionPolicy::Recompute,
+            }
+        }
+
+        /// Same view, but with swap-preemption policy and a swap-capable
+        /// memory manager supplied by the caller.
+        fn swap_ctx<'a>(&'a mut self, mem: &'a mut dyn MemoryManager) -> LocalSchedCtx<'a> {
+            LocalSchedCtx {
+                requests: &mut self.requests,
+                waiting: &mut self.waiting,
+                running: &mut self.running,
+                mem,
+                now: 0.0,
+                draining: false,
+                oldest_wait: Some(0.0),
+                preemption: PreemptionPolicy::Swap,
             }
         }
 
@@ -796,6 +887,91 @@ mod tests {
         assert_eq!(f.requests[1].preemptions, 1);
         assert_eq!(f.waiting.front(), Some(&1), "victim back at queue head");
         assert!(f.mem.check_invariants());
+    }
+
+    #[test]
+    fn swap_preemption_parks_newest_decode() {
+        let mut f = Fix::new(&[(64, 100), (64, 100)], 9);
+        let mut swap_mem = SwapMemoryManager::with_blocks(9, 16, 1024, 100);
+        let mut policy = ContinuousBatching::vllm_default();
+        // admit both: 4 blocks each, 8 of 9 used
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut swap_mem));
+        assert_eq!(plan.members.len(), 2);
+        for rid in 0..2 {
+            f.finish_prefill(rid);
+            f.requests[rid].generated = 1;
+        }
+        // only one spare block: request 1 (newest) is swapped out, not
+        // recomputed — its KV token counts survive
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut swap_mem));
+        assert!(plan.preempted.is_empty());
+        assert!(plan.swapped_in.is_empty());
+        assert_eq!(plan.swapped_out.len(), 1);
+        assert_eq!(plan.swapped_out[0].0, 1);
+        assert_eq!(f.requests[1].phase, Phase::Swapped);
+        assert_eq!(f.requests[1].ctx_in_cache, 64, "KV preserved in host");
+        assert_eq!((f.requests[1].preemptions, f.requests[1].swaps), (1, 1));
+        assert_eq!(f.waiting.front(), Some(&1), "victim back at queue head");
+        assert!(swap_mem.check_invariants());
+
+        // request 0 finishes: its blocks free and request 1 swaps back
+        // in as a decode — with zero recomputed tokens
+        f.requests[0].phase = Phase::Finished;
+        f.running.retain(|&x| x != 0);
+        swap_mem.release(0);
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut swap_mem));
+        assert_eq!(plan.swapped_in.len(), 1);
+        assert_eq!(plan.swapped_in[0].0, 1);
+        assert_eq!(f.requests[1].phase, Phase::Decode);
+        assert_eq!(plan.members, vec![1], "restored request decodes");
+        assert!(!plan.has_prefill, "no re-prefill after swap-in");
+        assert_eq!(f.requests[1].recomputed_tokens, 0);
+        assert!(swap_mem.check_invariants());
+    }
+
+    #[test]
+    fn swap_policy_without_swap_space_falls_back_to_recompute() {
+        let mut f = Fix::new(&[(64, 100), (64, 100)], 9);
+        let mut plain = PagedBlockManager::with_blocks(9, 16, 1024);
+        let mut policy = ContinuousBatching::vllm_default();
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut plain));
+        assert_eq!(plan.members.len(), 2);
+        for rid in 0..2 {
+            f.finish_prefill(rid);
+            f.requests[rid].generated = 1;
+        }
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut plain));
+        assert_eq!(plan.preempted, vec![1], "no swap space: recompute");
+        assert!(plan.swapped_out.is_empty());
+        assert_eq!(f.requests[1].phase, Phase::Preempted);
+    }
+
+    #[test]
+    fn unrestorable_swapped_request_falls_back_to_recompute() {
+        let mut f = Fix::new(&[(64, 100)], 4);
+        let mut swap_mem = SwapMemoryManager::with_blocks(4, 16, 1024, 100);
+        // hand-build the stuck state: request 0 swapped out with a
+        // context that has outgrown the whole pool
+        swap_mem.reserve(0, 64);
+        assert_eq!(MemoryManager::swap_out(&mut swap_mem, 0), Some(4));
+        {
+            let r = &mut f.requests[0];
+            r.phase = Phase::Decode;
+            r.prompt_done = 64;
+            r.ctx_in_cache = 80; // 5 blocks > 4-block pool
+            r.generated = 16;
+            r.mark_swapped();
+        }
+        f.waiting = VecDeque::from(vec![0]);
+        let mut policy = ContinuousBatching::vllm_default();
+        let plan = policy.form_batch(&mut f.swap_ctx(&mut swap_mem));
+        // swap-in is impossible forever -> host copy dropped, request
+        // recomputes (it re-enters admission as a preempted request)
+        assert!(plan.swapped_in.is_empty());
+        assert!(plan.preempted.contains(&0));
+        assert_eq!(swap_mem.swap_space_used(), 0, "host copy dropped");
+        assert!(f.requests[0].recomputed_tokens > 0);
+        assert!(swap_mem.check_invariants());
     }
 
     #[test]

@@ -75,7 +75,7 @@ fn simulation_identical_under_all_cost_models() {
     for kind in [CostModelKind::Analytic, CostModelKind::Hlo, CostModelKind::Table] {
         let mut cfg = base_cfg(120, 10.0);
         cfg.cost_model = kind;
-        reports.push(Simulation::from_config(&cfg).run());
+        reports.push(Simulation::from_config(&cfg).unwrap().run());
     }
     let base = MetricSet::new(&reports[0].records).latency_percentile(0.99);
     for r in &reports[1..] {
@@ -89,7 +89,7 @@ fn simulation_identical_under_all_cost_models() {
 
 #[test]
 fn all_requests_complete_with_sane_timestamps() {
-    let report = Simulation::from_config(&base_cfg(300, 20.0)).run();
+    let report = Simulation::from_config(&base_cfg(300, 20.0)).unwrap().run();
     assert_eq!(report.records.len(), 300);
     for r in &report.records {
         assert!(r.first_token >= r.arrival, "req {}", r.id);
@@ -104,7 +104,7 @@ fn saturation_appears_beyond_service_capacity() {
     let mut prev = 0.0;
     let mut plateaued = false;
     for qps in [2.0, 8.0, 32.0, 128.0, 512.0, 2048.0] {
-        let report = Simulation::from_config(&base_cfg(250, qps)).run();
+        let report = Simulation::from_config(&base_cfg(250, qps)).unwrap().run();
         let thr = report.request_throughput();
         if thr < prev * 1.05 {
             plateaued = true;
@@ -125,8 +125,8 @@ fn disaggregated_matches_unified_at_low_load_and_transfers_kv() {
     let mut disagg = SimulationConfig::disaggregated(model, hw.clone(), 1, hw, 1, workload);
     disagg.cost_model = CostModelKind::Analytic;
 
-    let ru = Simulation::from_config(&unified).run();
-    let rd = Simulation::from_config(&disagg).run();
+    let ru = Simulation::from_config(&unified).unwrap().run();
+    let rd = Simulation::from_config(&disagg).unwrap().run();
     assert_eq!(rd.records.len(), 60);
     // at 2 qps both configurations are unloaded; latencies comparable
     // (disagg pays the KV transfer, bounded by ~20%)
@@ -156,7 +156,7 @@ fn slow_interconnect_hurts_disaggregation() {
         );
         cfg.cost_model = CostModelKind::Analytic;
         cfg.cluster.scheduler.interconnect = link;
-        Simulation::from_config(&cfg).run()
+        Simulation::from_config(&cfg).unwrap().run()
     };
     let fast = mk(LinkSpec::nvlink());
     let slow = mk(LinkSpec::ethernet_100g());
@@ -189,7 +189,7 @@ workload:
   seed: 3
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).run();
+    let report = Simulation::from_config(&cfg).unwrap().run();
     assert_eq!(report.records.len(), 40);
 }
 
@@ -199,7 +199,7 @@ fn conversation_pool_cache_reduces_prefill_work() {
     let run = |pool: Option<PoolCacheConfig>| {
         let mut cfg = base_cfg(1, 1.0);
         cfg.pool_cache = pool;
-        Simulation::from_conversations(&cfg, &convs).run()
+        Simulation::from_conversations(&cfg, &convs).unwrap().run()
     };
     let off = run(None);
     let on = run(Some(PoolCacheConfig::with_capacity(1_000_000)));
@@ -228,7 +228,7 @@ fn static_batching_has_worse_tail_latency_under_load() {
     let mk = |policy: PolicySpec| {
         let mut cfg = base_cfg(250, 12.0);
         cfg.cluster.workers[0].local_scheduler = policy;
-        Simulation::from_config(&cfg).run()
+        Simulation::from_config(&cfg).unwrap().run()
     };
     let cont = mk(PolicySpec::new("continuous")
         .with("max_batched_tokens", 8192u32)
@@ -252,8 +252,8 @@ fn trace_replay_reproduces_generated_workload() {
     tokensim::workload::save_trace(&path, &requests).unwrap();
     let replayed = tokensim::workload::load_trace(&path).unwrap();
 
-    let direct = Simulation::from_config(&cfg).run();
-    let replay = Simulation::from_requests(&cfg, replayed).run();
+    let direct = Simulation::from_config(&cfg).unwrap().run();
+    let replay = Simulation::from_requests(&cfg, replayed).unwrap().run();
     let (a, b) = (
         MetricSet::new(&direct.records).latency_percentile(0.9),
         MetricSet::new(&replay.records).latency_percentile(0.9),
@@ -275,7 +275,7 @@ fn quarter_flops_decode_hardware_is_slower_end_to_end() {
             workload.clone(),
         );
         cfg.cost_model = CostModelKind::Analytic;
-        Simulation::from_config(&cfg).run()
+        Simulation::from_config(&cfg).unwrap().run()
     };
     let full = mk(HardwareSpec::a100_80g());
     let quarter = mk(HardwareSpec::a100_quarter_flops());
@@ -304,7 +304,7 @@ fn every_example_config_parses_and_runs() {
         }
         let cfg = SimulationConfig::from_yaml_file(&path)
             .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(
             report.records.len(),
             cfg.workload.num_requests,
@@ -313,7 +313,7 @@ fn every_example_config_parses_and_runs() {
         );
         seen += 1;
     }
-    assert!(seen >= 6, "expected the documented example configs, saw {seen}");
+    assert!(seen >= 9, "expected the documented example configs, saw {seen}");
 }
 
 #[test]
@@ -340,7 +340,7 @@ workload:
   seed: 5
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).run();
+    let report = Simulation::from_config(&cfg).unwrap().run();
     assert_eq!(report.records.len(), 80);
     // chunking splits long prefills: more iterations than requests with
     // room to spare (80 prefill chunks alone would need > 80)
@@ -360,7 +360,7 @@ fn chunked_prefill_caps_decode_stalls_under_long_prompts() {
         );
         cfg.cost_model = CostModelKind::Analytic;
         cfg.cluster.workers[0].local_scheduler = policy;
-        Simulation::from_config(&cfg).run()
+        Simulation::from_config(&cfg).unwrap().run()
     };
     let mono = mk(PolicySpec::new("continuous").with("max_batched_tokens", 8192u32));
     let chunked = mk(PolicySpec::new("chunked_prefill").with("chunk_tokens", 512u32));
@@ -403,8 +403,136 @@ workload:
   seed: 9
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).run();
+    let report = Simulation::from_config(&cfg).unwrap().run();
     assert_eq!(report.records.len(), 120);
+}
+
+// ---- pluggable memory managers ------------------------------------------
+
+/// Tight-memory config (the Fig 10 stress shape) with a chosen manager.
+fn tight_memory_cfg(memory: tokensim::memory::MemorySpec) -> SimulationConfig {
+    let mut hw = HardwareSpec::a100_80g();
+    hw.mem_cap = 16e9; // weights 13.5 GB -> tiny KV pool
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        hw,
+        WorkloadSpec::fixed(30, 50.0, 256, 128),
+    );
+    cfg.cluster.workers[0].memory = memory;
+    cfg.cost_model = CostModelKind::Analytic;
+    cfg
+}
+
+#[test]
+fn swap_manager_selected_from_yaml_runs_end_to_end() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware:
+        name: small-a100
+        peak_flops: 312e12
+        mem_bw: 2.0e12
+        mem_cap: 16e9
+      memory:
+        manager: swap
+        preemption: swap
+        swap_blocks: 100000
+workload:
+  num_requests: 30
+  qps: 50.0
+  prompt_len:
+    fixed: 256
+  output_len:
+    fixed: 128
+  seed: 11
+"#;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).unwrap().run();
+    assert_eq!(report.records.len(), 30);
+    let m = MetricSet::new(&report.records);
+    assert!(m.total_swaps() > 0, "tight memory must force swaps");
+    let totals = report.swap_totals();
+    assert!(totals.swap_outs > 0 && totals.swap_ins > 0);
+    assert_eq!(report.workers[0].manager, "swap");
+}
+
+#[test]
+fn swap_preemption_strictly_reduces_reprefilled_tokens() {
+    use tokensim::memory::MemorySpec;
+    let recompute = Simulation::from_config(&tight_memory_cfg(
+        MemorySpec::new("swap").with("preemption", "recompute"),
+    ))
+    .unwrap()
+    .run();
+    let swap = Simulation::from_config(&tight_memory_cfg(MemorySpec::new("swap")))
+        .unwrap()
+        .run();
+    let (mr, ms) = (
+        MetricSet::new(&recompute.records),
+        MetricSet::new(&swap.records),
+    );
+    assert!(mr.total_preemptions() > 0);
+    assert!(ms.total_swaps() > 0);
+    assert!(
+        ms.total_recomputed_tokens() < mr.total_recomputed_tokens(),
+        "swap preemption must re-prefill strictly fewer tokens: {} vs {}",
+        ms.total_recomputed_tokens(),
+        mr.total_recomputed_tokens()
+    );
+    // the avoided recompute work is paid in host-link traffic instead
+    assert!(swap.swap_totals().blocks_out > 0);
+}
+
+#[test]
+fn token_contiguous_over_reserves_and_never_preempts() {
+    use tokensim::memory::MemorySpec;
+    let paged = Simulation::from_config(&tight_memory_cfg(MemorySpec::default()))
+        .unwrap()
+        .run();
+    let contiguous =
+        Simulation::from_config(&tight_memory_cfg(MemorySpec::new("token_contiguous")))
+            .unwrap()
+            .run();
+    assert_eq!(contiguous.records.len(), 30);
+    assert_eq!(
+        MetricSet::new(&contiguous.records).total_preemptions(),
+        0,
+        "max-length reservation can never run out mid-decode"
+    );
+    assert!(
+        MetricSet::new(&paged.records).total_preemptions() > 0,
+        "paged must preempt on this workload (the contrast the exp shows)"
+    );
+}
+
+#[test]
+fn prefix_cache_manager_reduces_ttft_like_the_cluster_pool() {
+    use tokensim::memory::MemorySpec;
+    let convs = ConversationSpec::chatbot(150, 8.0, 128, 64).generate();
+    let run = |memory: MemorySpec| {
+        let mut cfg = base_cfg(1, 1.0);
+        cfg.cluster.workers[0].memory = memory;
+        Simulation::from_conversations(&cfg, &convs).unwrap().run()
+    };
+    let off = run(MemorySpec::default());
+    let on = run(MemorySpec::new("prefix_cache").with("capacity_blocks", 1_000_000u64));
+    assert_eq!(off.pool_hits, 0);
+    assert!(on.pool_hits > 0, "manager-layer pool must hit");
+    assert!(on.pool_hit_rate() > 0.0);
+    let ttft = |recs: &[tokensim::metrics::RequestRecord]| {
+        let later: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.round > 0)
+            .map(|r| r.ttft())
+            .collect();
+        later.iter().sum::<f64>() / later.len() as f64
+    };
+    assert!(
+        ttft(&on.records) < ttft(&off.records),
+        "cached rounds must start faster through the registry path too"
+    );
 }
 
 #[test]
@@ -429,7 +557,7 @@ workload:
   seed: 2
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).run();
+    let report = Simulation::from_config(&cfg).unwrap().run();
     assert_eq!(report.records.len(), 160);
     // the two-choices rule must spread a 40 qps stream over all workers
     assert!(report.workers.iter().all(|w| w.iterations > 0));

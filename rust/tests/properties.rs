@@ -9,7 +9,10 @@ use tokensim::cluster::Simulation;
 use tokensim::compute::CostModelKind;
 use tokensim::config::SimulationConfig;
 use tokensim::hardware::HardwareSpec;
-use tokensim::memory::{AllocOutcome, PagedBlockManager, PoolCache};
+use tokensim::memory::{
+    AllocOutcome, MemoryManager, MemorySpec, PagedBlockManager, PoolCache, PreemptionPolicy,
+    PrefixCacheManager, SwapMemoryManager, TokenContiguousManager,
+};
 use tokensim::model::ModelSpec;
 use tokensim::request::Request;
 use tokensim::scheduler::{
@@ -55,6 +58,145 @@ fn prop_block_manager_conserves_blocks() {
             }
             assert!(mem.check_invariants(), "seed {seed} step {step}");
             assert!(mem.free_blocks() <= mem.total_blocks());
+        }
+    }
+}
+
+/// Every registered manager shape, built small for op-sequence sweeps.
+/// `(manager, swap_capable)`.
+fn managers_under_test(total_blocks: u64) -> Vec<(Box<dyn MemoryManager>, bool)> {
+    vec![
+        (
+            Box::new(PagedBlockManager::with_blocks(total_blocks, 16, 1024))
+                as Box<dyn MemoryManager>,
+            false,
+        ),
+        (
+            Box::new(TokenContiguousManager::with_tokens(total_blocks * 16, 64))
+                as Box<dyn MemoryManager>,
+            false,
+        ),
+        (
+            Box::new(SwapMemoryManager::with_blocks(
+                total_blocks,
+                16,
+                1024,
+                total_blocks * 4,
+            )) as Box<dyn MemoryManager>,
+            true,
+        ),
+        (
+            Box::new(PrefixCacheManager::with_blocks(total_blocks, 16, 1024, 64))
+                as Box<dyn MemoryManager>,
+            false,
+        ),
+    ]
+}
+
+#[test]
+fn prop_all_managers_conserve_memory_under_random_ops() {
+    // invariants across every manager, any op sequence:
+    //   * used + free == total (check_invariants)
+    //   * alloc/release balance to zero once everything is released
+    //   * preemption_frees matches the blocks preempt-ops actually freed
+    //   * swap-out followed by swap-in preserves the blocks held
+    for seed in SEEDS {
+        let mut rng = SimRng::new(seed, "mgr-matrix-prop");
+        let total = 1 + rng.uniform_int(1, 400);
+        for (mut mem, swap_capable) in managers_under_test(total) {
+            let mut live: Vec<usize> = Vec::new();
+            let mut swapped: Vec<(usize, u64)> = Vec::new();
+            let mut preempt_freed: u64 = 0;
+            for step in 0..300 {
+                match rng.pick(5) {
+                    0 => {
+                        let rid = (seed as usize) * 10_000 + step;
+                        let tokens = rng.uniform_int(1, 900) as u32;
+                        if mem.reserve(rid, tokens) == AllocOutcome::Ok {
+                            live.push(rid);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let rid = live.swap_remove(rng.pick(live.len()));
+                            mem.release(rid);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let rid = live.swap_remove(rng.pick(live.len()));
+                            preempt_freed += mem.release_preempted(rid);
+                        }
+                    }
+                    3 => {
+                        // swap-out (inert on non-swap managers)
+                        if !live.is_empty() {
+                            let pos = rng.pick(live.len());
+                            let rid = live[pos];
+                            let held = mem.blocks_held(rid);
+                            match mem.swap_out(rid) {
+                                Some(blocks) => {
+                                    assert!(swap_capable, "seed {seed}: unexpected swap support");
+                                    assert_eq!(blocks, held, "swap-out moves exactly the held blocks");
+                                    assert_eq!(mem.blocks_held(rid), 0);
+                                    live.swap_remove(pos);
+                                    swapped.push((rid, blocks));
+                                    preempt_freed += blocks;
+                                }
+                                None => {
+                                    assert_eq!(mem.blocks_held(rid), held, "failed swap is a no-op");
+                                }
+                            }
+                        }
+                    }
+                    _ => {
+                        // swap-in with enough tokens to cover the parked blocks
+                        if !swapped.is_empty() {
+                            let pos = rng.pick(swapped.len());
+                            let (rid, blocks) = swapped[pos];
+                            let tokens = (blocks * mem.block_size() as u64) as u32;
+                            if mem.swap_in(rid, tokens.max(1)) == AllocOutcome::Ok {
+                                assert_eq!(
+                                    mem.blocks_held(rid),
+                                    blocks,
+                                    "seed {seed}: swap roundtrip must preserve KV blocks"
+                                );
+                                swapped.swap_remove(pos);
+                                live.push(rid);
+                            } else {
+                                assert_eq!(mem.swapped_blocks(rid), blocks, "host copy kept");
+                            }
+                        }
+                    }
+                }
+                assert!(mem.check_invariants(), "seed {seed} step {step} ({})", mem.name());
+                assert!(mem.free_blocks() <= mem.total_blocks());
+                assert_eq!(
+                    mem.used_blocks(),
+                    mem.total_blocks() - mem.free_blocks(),
+                    "granularity views must agree"
+                );
+            }
+            assert_eq!(
+                mem.preemption_frees(),
+                preempt_freed,
+                "seed {seed} ({}): preemption_frees must match blocks actually released",
+                mem.name()
+            );
+            // drain: alloc/release must balance to zero
+            for rid in live.drain(..) {
+                mem.release(rid);
+            }
+            for (rid, _) in swapped.drain(..) {
+                mem.discard_swapped(rid);
+            }
+            assert_eq!(
+                mem.free_blocks(),
+                mem.total_blocks(),
+                "seed {seed} ({}): all blocks must return to the pool",
+                mem.name()
+            );
+            assert!(mem.check_invariants());
         }
     }
 }
@@ -146,6 +288,7 @@ fn prop_batch_plans_respect_memory_and_phases() {
                 now: step as f64,
                 draining: true,
                 oldest_wait: Some(0.0),
+                preemption: PreemptionPolicy::Recompute,
             };
             let plan = policy.form_batch(&mut ctx);
             // members unique and consistent with batch slots
@@ -246,6 +389,23 @@ fn random_cfg(seed: u64) -> SimulationConfig {
             w.hardware.mem_cap = 16e9;
         }
     }
+    // random memory managers through the registry spec layer, so the
+    // whole-simulation invariants cover every built-in plugin x both
+    // preemption policies
+    let memory = match rng.pick(4) {
+        0 => MemorySpec::default(),
+        1 => MemorySpec::new("token_contiguous"),
+        2 => MemorySpec::new("swap"), // defaults to swap preemption
+        _ => MemorySpec::new("prefix_cache"),
+    };
+    let memory = if rng.gen_bool(0.3) {
+        memory.with("preemption", "recompute")
+    } else {
+        memory
+    };
+    for w in &mut cfg.cluster.workers {
+        w.memory = memory.clone();
+    }
     // random scheduler policies through the registry spec layer, so the
     // whole-simulation invariants cover every continuous-family plugin
     if rng.gen_bool(0.5) {
@@ -273,7 +433,7 @@ fn prop_every_request_finishes_exactly_once() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
         let n = cfg.workload.num_requests;
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(report.records.len(), n, "seed {seed}");
         let mut ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -287,7 +447,7 @@ fn prop_causality_and_token_accounting() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
         let requests = cfg.workload.generate();
-        let report = Simulation::from_config(&cfg).run();
+        let report = Simulation::from_config(&cfg).unwrap().run();
         for (rec, req) in report.records.iter().zip(&requests) {
             assert_eq!(rec.prompt_len, req.prompt_len, "seed {seed}");
             assert_eq!(rec.output_len, req.output_len, "seed {seed}");
@@ -305,8 +465,8 @@ fn prop_causality_and_token_accounting() {
 fn prop_runs_are_bit_deterministic() {
     for seed in SEEDS.step_by(5) {
         let cfg = random_cfg(seed);
-        let a = Simulation::from_config(&cfg).run();
-        let b = Simulation::from_config(&cfg).run();
+        let a = Simulation::from_config(&cfg).unwrap().run();
+        let b = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(a.records, b.records, "seed {seed}");
         assert_eq!(a.events_processed, b.events_processed);
     }
@@ -320,9 +480,9 @@ fn prop_higher_load_never_reduces_makespan() {
         let mut cfg = random_cfg(seed);
         cfg.workload.arrival = ArrivalProcess::Uniform;
         cfg.workload.qps = 2.0;
-        let slow = Simulation::from_config(&cfg).run();
+        let slow = Simulation::from_config(&cfg).unwrap().run();
         cfg.workload.qps = 2000.0;
-        let fast = Simulation::from_config(&cfg).run();
+        let fast = Simulation::from_config(&cfg).unwrap().run();
         // same total work, arrivals compressed => completion not later
         assert!(
             fast.sim_end <= slow.sim_end + 1e-6,
