@@ -49,14 +49,19 @@ pub struct Simulation {
     conversations: Vec<(Vec<RequestId>, usize)>,
     /// think time before each round (parallel to conversations rounds)
     think_times: Vec<Vec<f64>>,
+    /// conversation id -> worker whose *local* prefix layer holds its
+    /// cached KV (conversation affinity; None when uncached or when the
+    /// cluster-level pool — location-transparent — is in charge)
+    conv_home: Vec<Option<usize>>,
     finished: usize,
 }
 
 impl Simulation {
-    /// Build from a declarative config (single-round workload).
+    /// Build from a declarative config (single-round workload; any
+    /// registered workload generator).
     pub fn from_config(cfg: &SimulationConfig) -> Result<Self> {
         let model = cfg.model.clone();
-        let requests = cfg.workload.generate();
+        let requests = cfg.workload.generate().context("generating workload")?;
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), None)
     }
 
@@ -70,7 +75,7 @@ impl Simulation {
     /// baseline simulators run the same driver with their own models).
     pub fn with_cost_factory(cfg: &SimulationConfig, factory: &CostFactory) -> Result<Self> {
         let model = cfg.model.clone();
-        let requests = cfg.workload.generate();
+        let requests = cfg.workload.generate().context("generating workload")?;
         Self::build(cfg, model, requests, Vec::new(), Vec::new(), Some(factory))
     }
 
@@ -218,6 +223,7 @@ impl Simulation {
             .global
             .build_global()
             .context("building global scheduler")?;
+        let conv_home = vec![None; conversations.len()];
         Ok(Self {
             queue,
             requests,
@@ -228,13 +234,14 @@ impl Simulation {
             pool,
             pool_comm,
             slo: cfg.slo,
-            rng: SimRng::new(cfg.workload.seed, "driver"),
+            rng: SimRng::new(cfg.workload.seed(), "driver"),
             records: Vec::new(),
             timeline: MemoryTimeline::default(),
             sample_period: cfg.sample_period,
             arrivals_remaining: arrivals,
             conversations,
             think_times,
+            conv_home,
             finished: 0,
         })
     }
@@ -320,12 +327,48 @@ impl Simulation {
         self.dispatch(&[rid], &[]);
     }
 
+    /// The worker holding this round's cached prefix, when the cache is
+    /// a *worker-local* manager layer. Cluster-level pools are
+    /// location-transparent and need no affinity; round 0 has nothing
+    /// cached; a home worker that cannot run prefill (disaggregation)
+    /// falls back to ordinary dispatch.
+    fn affinity_target(&self, rid: RequestId) -> Option<usize> {
+        if self.pool.enabled() {
+            return None;
+        }
+        let r = &self.requests[rid];
+        if r.round == 0 {
+            return None;
+        }
+        let wid = self.conv_home.get(r.conversation).copied()??;
+        self.workers[wid].run_prefill.then_some(wid)
+    }
+
     /// Global-scheduler dispatch of new / resubmitted requests.
+    /// Conversation rounds whose previous round cached KV in a
+    /// worker-local prefix layer bypass the global policy and return to
+    /// the caching worker — on any other worker the guaranteed hit
+    /// would silently become a miss.
     fn dispatch(&mut self, new: &[RequestId], resubmitted: &[RequestId]) {
-        let views: Vec<WorkerView> = self.workers.iter().map(|w| w.view(&self.requests)).collect();
-        let decisions = self
-            .global
-            .dispatch(new, resubmitted, &views, &self.requests, &mut self.rng);
+        let mut decisions: Vec<(RequestId, usize)> = Vec::new();
+        let mut unrouted: Vec<RequestId> = Vec::new();
+        for &rid in new {
+            match self.affinity_target(rid) {
+                Some(wid) => decisions.push((rid, wid)),
+                None => unrouted.push(rid),
+            }
+        }
+        if !unrouted.is_empty() || !resubmitted.is_empty() {
+            let views: Vec<WorkerView> =
+                self.workers.iter().map(|w| w.view(&self.requests)).collect();
+            decisions.extend(self.global.dispatch(
+                &unrouted,
+                resubmitted,
+                &views,
+                &self.requests,
+                &mut self.rng,
+            ));
+        }
         let now = self.queue.now();
         for (rid, wid) in decisions {
             let is_resubmit = resubmitted.contains(&rid);
@@ -363,6 +406,7 @@ impl Simulation {
                     }
                 }
                 self.requests[rid].worker = Some(wid);
+                self.requests[rid].queued_at = now;
                 let w = &mut self.workers[wid];
                 if w.waiting.is_empty() {
                     w.oldest_wait = Some(now);
@@ -454,7 +498,14 @@ impl Simulation {
                 plan.members.len(), w.waiting.len(), w.running.len(), w.mem.free_blocks()
             );
         }
-        w.oldest_wait = if w.waiting.is_empty() { None } else { w.oldest_wait };
+        // the oldest waiter may just have been admitted: re-anchor the
+        // linger clock on a request that is *still* queued, not on one
+        // that left the queue (a departed anchor made static-batching
+        // linger deadlines fire early)
+        w.oldest_wait = w
+            .waiting
+            .front()
+            .map(|&rid| self.requests[rid].queued_at);
         // host↔device traffic this batch formation caused (swap-out of
         // victims, swap-in of restored requests)
         let swap_blocks: u64 = plan
@@ -605,8 +656,11 @@ impl Simulation {
         if !self.conversations.is_empty() {
             if self.pool.enabled() {
                 self.pool.store(conv, total_ctx);
-            } else {
+            } else if self.workers[wid].mem.has_prefix_layer() {
                 self.workers[wid].mem.prefix_store(conv, total_ctx);
+                // remember which worker holds the KV so the next round
+                // is routed back to it (see `affinity_target`)
+                self.conv_home[conv] = Some(wid);
             }
             let (ids, next) = &mut self.conversations[conv];
             debug_assert_eq!(ids[round], rid);
@@ -620,6 +674,7 @@ impl Simulation {
                 self.pool.invalidate(conv);
             } else {
                 self.workers[wid].mem.prefix_invalidate(conv);
+                self.conv_home[conv] = None;
             }
         }
     }
@@ -772,6 +827,68 @@ mod tests {
         assert!(report.pool_hits > 0, "expected manager-layer pool hits");
         assert!(report.records.iter().any(|r| r.cached_prefix > 0));
         assert_eq!(report.workers[0].manager, "prefix_cache");
+    }
+
+    #[test]
+    fn static_linger_anchors_on_surviving_waiters() {
+        use crate::scheduler::PolicySpec;
+        // regression: `oldest_wait` used to stay pinned to a request
+        // that had already been admitted, so a lone leftover waiter
+        // could be lingered out *before* its own enqueue + max_linger
+        // window elapsed
+        let max_linger = 20.0;
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.cluster.workers[0].local_scheduler = PolicySpec::new("static")
+            .with("batch_size", 2u32)
+            .with("max_linger", max_linger);
+        // A,B fill batch 1; C,D (queued ~0) fill batch 2 while E
+        // (queued at 1.5) stays behind it; F keeps arrivals pending so
+        // the drain path cannot admit E early
+        let mk = |id: usize, out: u32, at: f64| Request::new(id, id, 0, 64, out, at);
+        let requests = vec![
+            mk(0, 512, 0.0),
+            mk(1, 512, 0.01),
+            mk(2, 512, 0.02),
+            mk(3, 512, 0.03),
+            mk(4, 4, 1.5),
+            mk(5, 4, 100.0),
+        ];
+        let report = Simulation::from_requests(&cfg, requests).unwrap().run();
+        let e = report.records.iter().find(|r| r.id == 4).unwrap();
+        assert!(
+            e.ttft() >= max_linger,
+            "lone waiter lingered out early: ttft {}",
+            e.ttft()
+        );
+    }
+
+    #[test]
+    fn conversation_affinity_routes_rounds_to_the_caching_worker() {
+        use crate::workload::ConversationSpec;
+        // two workers with worker-local prefix caches: without affinity
+        // routing the global scheduler lands follow-up rounds on either
+        // worker and guaranteed hits silently become misses
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.cluster.workers[0].quantity = 2;
+        cfg.cluster.workers[0].memory =
+            MemorySpec::new("prefix_cache").with("capacity_blocks", 1_000_000u64);
+        let convs = ConversationSpec::chatbot(60, 6.0, 64, 32).generate();
+        let total = ConversationWorkload::total_rounds(&convs);
+        let follow_ups = (total - convs.len()) as u64;
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
+        assert_eq!(report.records.len(), total);
+        assert!(follow_ups > 0, "workload must have multi-round conversations");
+        assert_eq!(
+            report.pool_hits, follow_ups,
+            "every follow-up round must hit its caching worker"
+        );
+        assert_eq!(
+            report.pool_misses,
+            convs.len() as u64,
+            "only first rounds may miss"
+        );
+        // round-0 dispatch stays with the global policy: both workers work
+        assert!(report.workers.iter().all(|w| w.iterations > 0));
     }
 
     #[test]

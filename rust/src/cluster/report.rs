@@ -181,6 +181,7 @@ mod tests {
             id,
             conversation: id,
             round: 0,
+            tenant: None,
             prompt_len: 10,
             output_len: 10,
             cached_prefix: 0,

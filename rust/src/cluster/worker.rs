@@ -41,7 +41,11 @@ pub struct Worker {
     pub pending_kv: VecDeque<RequestId>,
     pub busy: bool,
     pub current: Option<BatchPlan>,
-    /// Enqueue time of the oldest waiting request (static linger).
+    /// Enqueue time of the request at the head of the wait queue — the
+    /// oldest waiter for FIFO-ordered queues (static batching, the only
+    /// consumer, never preempts so its queue is pure FIFO). Re-anchored
+    /// after every batch formation so linger deadlines are measured
+    /// from a request that is still waiting.
     pub oldest_wait: Option<SimTime>,
     /// A linger-deadline kick is already scheduled.
     pub linger_armed: bool,

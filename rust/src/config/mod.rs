@@ -15,7 +15,7 @@ use crate::memory::MemorySpec;
 use crate::metrics::SloSpec;
 use crate::model::ModelSpec;
 use crate::scheduler::PolicySpec;
-use crate::workload::{ArrivalProcess, LengthDistribution, WorkloadSpec};
+use crate::workload::WorkloadSpecV2;
 
 use yaml::Yaml;
 
@@ -110,64 +110,6 @@ fn link_from_yaml(y: &Yaml) -> Result<LinkSpec> {
     }
 }
 
-fn length_dist_from_yaml(y: &Yaml) -> Result<LengthDistribution> {
-    if let Some(v) = y.get("fixed") {
-        return Ok(LengthDistribution::Fixed(
-            v.as_u32().context("'fixed' must be an integer")?,
-        ));
-    }
-    if let Some(u) = y.get("uniform") {
-        return Ok(LengthDistribution::Uniform {
-            min: u.req_u32("min")?,
-            max: u.req_u32("max")?,
-        });
-    }
-    if let Some(l) = y.get("log_normal") {
-        return Ok(LengthDistribution::LogNormal {
-            median: l.req_f64("median")?,
-            sigma: l.req_f64("sigma")?,
-            min: l.opt_u32("min", 1),
-            max: l.opt_u32("max", 1 << 20),
-        });
-    }
-    bail!("length distribution needs 'fixed', 'uniform' or 'log_normal'")
-}
-
-fn arrival_from_yaml(y: &Yaml) -> Result<ArrivalProcess> {
-    match y {
-        Yaml::Str(s) => match s.as_str() {
-            "poisson" => Ok(ArrivalProcess::Poisson),
-            "uniform" => Ok(ArrivalProcess::Uniform),
-            "burst" => Ok(ArrivalProcess::Burst),
-            other => bail!("unknown arrival process '{other}'"),
-        },
-        Yaml::Map(_) => {
-            if let Some(g) = y.get("gamma") {
-                Ok(ArrivalProcess::Gamma {
-                    cv: g.req_f64("cv")?,
-                })
-            } else {
-                bail!("arrival map must contain 'gamma'")
-            }
-        }
-        other => bail!("bad arrival process {other:?}"),
-    }
-}
-
-fn workload_from_yaml(y: &Yaml) -> Result<WorkloadSpec> {
-    Ok(WorkloadSpec {
-        num_requests: y.req_u32("num_requests")? as usize,
-        qps: y.req_f64("qps")?,
-        arrival: match y.get("arrival") {
-            Some(a) => arrival_from_yaml(a)?,
-            None => ArrivalProcess::Poisson,
-        },
-        prompt_len: length_dist_from_yaml(y.req("prompt_len")?)?,
-        output_len: length_dist_from_yaml(y.req("output_len")?)?,
-        seed: y.opt_u32("seed", 0) as u64,
-    })
-}
-
 /// Scheduler section (Fig 2b).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
@@ -217,7 +159,11 @@ impl PoolCacheConfig {
 pub struct SimulationConfig {
     pub model: ModelSpec,
     pub cluster: ClusterConfig,
-    pub workload: WorkloadSpec,
+    /// Workload generator selection (see
+    /// [`crate::workload::registry`] and docs/CONFIG.md). A plain
+    /// [`WorkloadSpec`](crate::workload::WorkloadSpec) converts via
+    /// `Into` (the `synthetic` generator).
+    pub workload: WorkloadSpecV2,
     pub cost_model: CostModelKind,
     /// Artifacts directory ("" = auto-discover).
     pub artifacts_dir: String,
@@ -229,14 +175,21 @@ pub struct SimulationConfig {
 
 impl SimulationConfig {
     /// One worker, continuous batching — the vLLM-like baseline setup.
-    pub fn single_worker(model: ModelSpec, hw: HardwareSpec, workload: WorkloadSpec) -> Self {
+    /// `workload` is anything convertible to a generator spec: a
+    /// [`WorkloadSpec`](crate::workload::WorkloadSpec) or a
+    /// [`WorkloadSpecV2`].
+    pub fn single_worker(
+        model: ModelSpec,
+        hw: HardwareSpec,
+        workload: impl Into<WorkloadSpecV2>,
+    ) -> Self {
         Self {
             model,
             cluster: ClusterConfig {
                 workers: vec![WorkerConfig::unified(hw, 1)],
                 scheduler: SchedulerConfig::default(),
             },
-            workload,
+            workload: workload.into(),
             cost_model: CostModelKind::default(),
             artifacts_dir: String::new(),
             slo: SloSpec::paper_default(),
@@ -252,7 +205,7 @@ impl SimulationConfig {
         n_prefill: u32,
         decode_hw: HardwareSpec,
         n_decode: u32,
-        workload: WorkloadSpec,
+        workload: impl Into<WorkloadSpecV2>,
     ) -> Self {
         let mut prefill = WorkerConfig::unified(prefill_hw, n_prefill);
         prefill.run_decode = false;
@@ -264,7 +217,7 @@ impl SimulationConfig {
                 workers: vec![prefill, decode],
                 scheduler: SchedulerConfig::default(),
             },
-            workload,
+            workload: workload.into(),
             cost_model: CostModelKind::default(),
             artifacts_dir: String::new(),
             slo: SloSpec::paper_default(),
@@ -351,10 +304,15 @@ impl SimulationConfig {
             None => None,
         };
 
+        // fail at parse time, not mid-simulation, on unknown generators
+        // or bad parameters (trace files are read at generation time)
+        let workload = WorkloadSpecV2::from_yaml(y.req("workload")?)?;
+        workload.validate().context("in 'workload'")?;
+
         Ok(Self {
             model,
             cluster: ClusterConfig { workers, scheduler },
-            workload: workload_from_yaml(y.req("workload")?)?,
+            workload,
             cost_model: match y.get("cost_model").and_then(Yaml::as_str) {
                 None | Some("hlo") => CostModelKind::Hlo,
                 Some("analytic") => CostModelKind::Analytic,
@@ -381,6 +339,7 @@ impl SimulationConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::WorkloadSpec;
 
     #[test]
     fn parses_fig2_style_config() {
@@ -433,7 +392,12 @@ workload:
         let memory = &cfg.cluster.workers[0].memory;
         assert_eq!(memory.name, "paged", "bare memory sections stay paged");
         assert!((memory.params.opt_f64("gpu_utilization", 0.9) - 0.8).abs() < 1e-12);
-        assert_eq!(cfg.workload.prompt_len, LengthDistribution::Fixed(64));
+        // a bare `workload:` section selects the synthetic generator
+        assert_eq!(cfg.workload.name, "synthetic");
+        assert_eq!(cfg.workload.seed(), 7);
+        let reqs = cfg.workload.generate().unwrap();
+        assert_eq!(reqs.len(), 1000);
+        assert!(reqs.iter().all(|r| r.prompt_len == 64));
     }
 
     #[test]
@@ -467,10 +431,8 @@ workload:
         assert_eq!(cfg.model.name, "custom");
         assert_eq!(cfg.model.kv_heads, 16, "kv_heads defaults to heads");
         assert_eq!(cfg.cluster.workers[0].hardware.name, "widget");
-        assert_eq!(
-            cfg.workload.output_len,
-            LengthDistribution::Uniform { min: 4, max: 12 }
-        );
+        let reqs = cfg.workload.generate().unwrap();
+        assert!(reqs.iter().all(|r| (4..=12).contains(&r.output_len)));
     }
 
     #[test]
@@ -589,6 +551,52 @@ workload:
         let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\n      local_scheduler:\n        policy: warp\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
         let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
         assert!(format!("{err:#}").contains("unknown local scheduler policy"));
+    }
+
+    #[test]
+    fn workload_generators_selectable_from_yaml() {
+        let yaml = r#"
+model: tiny
+cluster:
+  workers:
+    - hardware: A100
+workload:
+  generator: bursty
+  num_requests: 40
+  qps: 20.0
+  off_qps: 2.0
+  on_s: 5.0
+  off_s: 5.0
+  seed: 3
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.workload.name, "bursty");
+        assert_eq!(cfg.workload.generate().unwrap().len(), 40);
+        let mt = yaml.replace(
+            "  generator: bursty\n  num_requests: 40\n  qps: 20.0\n  off_qps: 2.0\n  on_s: 5.0\n  off_s: 5.0\n  seed: 3\n",
+            "  generator: multi_tenant\n  tenants:\n    - name: chat\n      num_requests: 10\n      qps: 4.0\n      ttft: 2.0\n    - name: batch\n      num_requests: 5\n      qps: 1.0\n",
+        );
+        let cfg = SimulationConfig::from_yaml_str(&mt).unwrap();
+        assert_eq!(cfg.workload.name, "multi_tenant");
+        let reqs = cfg.workload.generate().unwrap();
+        assert_eq!(reqs.len(), 15);
+        assert!(reqs.iter().all(|r| r.tenant.is_some()));
+    }
+
+    #[test]
+    fn unknown_workload_generator_is_a_parse_error() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  generator: infinite\n  num_requests: 1\n  qps: 1.0\n";
+        let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown workload generator"));
+    }
+
+    #[test]
+    fn inverted_uniform_bounds_are_a_parse_error() {
+        // regression: this used to parse fine and panic inside
+        // `sample()` mid-simulation
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    uniform:\n      min: 9\n      max: 3\n  output_len:\n    fixed: 8\n";
+        let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("min (9) > max (3)"), "{err:#}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Shared experiment machinery: run options, oracle/simulator run
-//! helpers, SLO-throughput search, table formatting.
+//! helpers, the parallel sweep runner, SLO-throughput search, table
+//! formatting.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::cluster::{Simulation, SimulationReport};
 use crate::compute::CostModelKind;
@@ -49,6 +52,101 @@ impl ExpOpts {
             full
         }
     }
+}
+
+/// Fan a sweep of independent jobs across CPU cores and return the
+/// results in input order — the shape every figure-style experiment
+/// has: a grid of `Simulation::run` calls with no cross-cell
+/// dependencies.
+///
+/// This is the in-tree substitute for rayon's `par_iter` (the offline
+/// build policy allows no new crates — see Cargo.toml): scoped threads
+/// pull item indices off a shared counter and write each result into
+/// its input slot. Output order is therefore index-determined, and
+/// because every simulation seeds its own [`crate::sim::SimRng`]
+/// streams from its config alone, the results are **bit-identical** to
+/// the sequential `items.iter().map(f)` path (asserted by the
+/// integration test `parallel_sweep_is_bit_identical_to_sequential`) —
+/// only wall-clock fields differ.
+///
+/// `TOKENSIM_SWEEP_THREADS` overrides the worker count; `=1` forces the
+/// sequential path. (Timing-sensitive experiments — fig 6 measures
+/// wall-clock seconds — stay sequential unless that variable is set
+/// explicitly.) A panic inside `f` is re-raised on the calling thread
+/// with its original payload.
+pub fn parallel_sweep<I, T, F>(items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let threads = std::env::var("TOKENSIM_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .min(items.len());
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(item) = items.get(i) else { break };
+                    let out = f(item);
+                    *slots[i].lock().unwrap() = Some(out);
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Err(panic) = h.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .expect("no thread panicked while writing a slot")
+                .expect("every sweep slot is filled before join")
+        })
+        .collect()
+}
+
+/// Two-dimensional [`parallel_sweep`]: evaluate `f` over the
+/// `rows × cols` cross product and return the results grouped per row
+/// (row-major), so table emitters never hand-roll stride arithmetic —
+/// a transposed `i * len + j` index was an easy silent bug.
+pub fn sweep_grid<R, C, T, F>(rows: &[R], cols: &[C], f: F) -> Vec<Vec<T>>
+where
+    R: Sync,
+    C: Sync,
+    T: Send,
+    F: Fn(&R, &C) -> T + Sync,
+{
+    let cells: Vec<(&R, &C)> = rows
+        .iter()
+        .flat_map(|r| cols.iter().map(move |c| (r, c)))
+        .collect();
+    let mut flat = parallel_sweep(&cells, |&(r, c)| f(r, c)).into_iter();
+    let mut out = Vec::with_capacity(rows.len());
+    for _ in 0..rows.len() {
+        out.push(
+            (0..cols.len())
+                .map(|_| flat.next().expect("sweep returns one result per cell"))
+                .collect(),
+        );
+    }
+    out
 }
 
 /// Run TokenSim proper on a config (the simulator under evaluation).
@@ -202,6 +300,48 @@ pub fn total_runtime(report: &SimulationReport) -> f64 {
 mod tests {
     use super::*;
     use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn parallel_sweep_preserves_input_order() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_sweep(&items, |&i| i * i);
+        assert_eq!(out, items.iter().map(|&i| i * i).collect::<Vec<_>>());
+        // empty and single-item sweeps take the sequential path
+        assert!(parallel_sweep(&Vec::<u64>::new(), |&i| i).is_empty());
+        assert_eq!(parallel_sweep(&[7u64], |&i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn sweep_grid_is_row_major() {
+        let rows = [10u64, 20];
+        let cols = [1u64, 2, 3];
+        let grid = sweep_grid(&rows, &cols, |&r, &c| r + c);
+        assert_eq!(grid, vec![vec![11, 12, 13], vec![21, 22, 23]]);
+        let empty = sweep_grid(&rows, &[] as &[u64], |&r, &c| r + c);
+        assert_eq!(empty, vec![Vec::<u64>::new(), Vec::new()]);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential_simulations() {
+        let cfgs: Vec<SimulationConfig> = [4.0, 12.0, 24.0]
+            .iter()
+            .map(|&qps| {
+                let mut cfg = SimulationConfig::single_worker(
+                    ModelSpec::llama2_7b(),
+                    HardwareSpec::a100_80g(),
+                    WorkloadSpec::fixed(40, qps, 64, 16),
+                );
+                cfg.cost_model = CostModelKind::Analytic;
+                cfg
+            })
+            .collect();
+        let seq: Vec<SimulationReport> = cfgs.iter().map(run_tokensim).collect();
+        let par = parallel_sweep(&cfgs, run_tokensim);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.records, b.records, "sweep must be bit-deterministic");
+            assert_eq!(a.events_processed, b.events_processed);
+        }
+    }
 
     #[test]
     fn geomean_of_known_errors() {

@@ -94,23 +94,28 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         "reprefill-tok",
         "swap-blk",
     ]);
-    for entry in MEMORY_MANAGERS {
-        for policy in ["recompute", "swap"] {
-            let memory = MemorySpec::new(entry.name).with("preemption", policy);
-            let report = run_tokensim(&stress_cfg(n, qps, memory, opts.cost_model));
-            let m = report.metrics();
-            let swap = report.swap_totals();
-            table.row(&[
-                entry.name.to_string(),
-                policy.to_string(),
-                f3(report.request_throughput()),
-                f3(report.latency_percentile(0.99)),
-                m.total_preemptions().to_string(),
-                m.total_swaps().to_string(),
-                m.total_recomputed_tokens().to_string(),
-                swap.blocks_out.to_string(),
-            ]);
-        }
+    // manager x preemption rows are independent simulations: sweep them
+    let grid: Vec<(&str, &str)> = MEMORY_MANAGERS
+        .iter()
+        .flat_map(|entry| ["recompute", "swap"].map(|policy| (entry.name, policy)))
+        .collect();
+    let reports = parallel_sweep(&grid, |&(manager, policy)| {
+        let memory = MemorySpec::new(manager).with("preemption", policy);
+        run_tokensim(&stress_cfg(n, qps, memory, opts.cost_model))
+    });
+    for (&(manager, policy), report) in grid.iter().zip(&reports) {
+        let m = report.metrics();
+        let swap = report.swap_totals();
+        table.row(&[
+            manager.to_string(),
+            policy.to_string(),
+            f3(report.request_throughput()),
+            f3(report.latency_percentile(0.99)),
+            m.total_preemptions().to_string(),
+            m.total_swaps().to_string(),
+            m.total_recomputed_tokens().to_string(),
+            swap.blocks_out.to_string(),
+        ]);
     }
     out.push_str("\n(a) Fig 10 workload: ShareGPT @ 16 GB card (tight KV pool)\n");
     out.push_str(&table.finish());
@@ -120,16 +125,18 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let conv_qps = 10.0;
     let convs = ConversationSpec::chatbot(n_conv, conv_qps, 128, 64).generate();
     let mut table = Table::new(&["manager", "p99 (s)", "hit-rate", "pool-hits"]);
-    for memory in [
+    let managers = [
         MemorySpec::new("paged"),
         MemorySpec::new("prefix_cache").with("capacity_blocks", 2_000_000u64),
-    ] {
-        let name = memory.name.clone();
-        let report = Simulation::from_conversations(&chatbot_cfg(memory, opts.cost_model), &convs)
+    ];
+    let reports = parallel_sweep(&managers, |memory| {
+        Simulation::from_conversations(&chatbot_cfg(memory.clone(), opts.cost_model), &convs)
             .expect("experiment config must build")
-            .run();
+            .run()
+    });
+    for (memory, report) in managers.iter().zip(&reports) {
         table.row(&[
-            name,
+            memory.name.clone(),
             f3(report.latency_percentile(0.99)),
             f3(report.pool_hit_rate()),
             report.pool_hits.to_string(),

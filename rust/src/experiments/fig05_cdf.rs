@@ -54,7 +54,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let quantiles = [0.05, 0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99];
 
     let mut out = String::from("Fig 5 — latency CDF alignment (dashed=vLLM ref, solid=TokenSim)\n");
-    for &qps in qps_list {
+    // every (qps, side) cell is an independent simulation: sweep the
+    // oracle + calibrated-sim pairs across cores
+    let pairs = parallel_sweep(qps_list, |&qps| {
         let workload = WorkloadSpec::sharegpt(n, qps);
         let mut base = SimulationConfig::single_worker(
             ModelSpec::llama2_7b(),
@@ -64,7 +66,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         base.cost_model = opts.cost_model;
         let real = run_oracle(&base, &params, 0xF16_5);
         let sim = run_tokensim(&calibrated_config(&base, &params));
-
+        (real, sim)
+    });
+    for (&qps, (real, sim)) in qps_list.iter().zip(&pairs) {
         let rm = MetricSet::new(&real.records);
         let sm = MetricSet::new(&sim.records);
         let mut table = Table::new(&["quantile", "ref-lat", "sim-lat"]);

@@ -42,7 +42,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         "LLMServingSim(s)",
     ]);
 
-    for &n in counts {
+    // this figure's OUTPUT is wall-clock seconds, so rows default to
+    // the sequential path (concurrent rows would inflate each other's
+    // timings); setting TOKENSIM_SWEEP_THREADS explicitly opts into
+    // parallel rows — each row's three measurements still share one
+    // thread, preserving the within-row ranking the figure reports
+    let time_row = |&n: &usize| {
         let base = cfg(n, opts.cost_model);
 
         let t0 = std::time::Instant::now();
@@ -81,6 +86,15 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             .run();
         let co_wall = t0.elapsed().as_secs_f64();
 
+        (n, tokensim_wall, vidur_wall, pretrain_const, co_wall)
+    };
+    let rows: Vec<(usize, f64, f64, f64, f64)> =
+        if std::env::var("TOKENSIM_SWEEP_THREADS").is_ok() {
+            parallel_sweep(counts, time_row)
+        } else {
+            counts.iter().map(time_row).collect()
+        };
+    for (n, tokensim_wall, vidur_wall, pretrain_const, co_wall) in rows {
         table.row(&[
             n.to_string(),
             format!("{tokensim_wall:.3}"),

@@ -51,20 +51,28 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
 
-    for &qps in rates {
+    // sweep the (qps x cap) grid across cores; each cell runs its
+    // static + continuous pair
+    let results = sweep_grid(rates, caps, |&qps, &(cap, _)| {
+        // static batching cap: 'inf' static means a huge fixed batch
+        let static_policy = PolicySpec::new("static")
+            .with("batch_size", cap.unwrap_or(512))
+            .with("max_linger", 2.0);
+        let cont_policy = PolicySpec::new("continuous")
+            .with("max_batched_tokens", 8192u32)
+            .with("max_batch_size", cap);
+        let s = run_tokensim(&cfg(n, qps, static_policy, opts.cost_model));
+        let c = run_tokensim(&cfg(n, qps, cont_policy, opts.cost_model));
+        (
+            s.metrics().mean_normalized_latency(),
+            c.metrics().mean_normalized_latency(),
+        )
+    });
+    for (&qps, row) in rates.iter().zip(&results) {
         let mut cells = vec![f1(qps)];
-        for &(cap, _) in caps {
-            // static batching cap: 'inf' static means a huge fixed batch
-            let static_policy = PolicySpec::new("static")
-                .with("batch_size", cap.unwrap_or(512))
-                .with("max_linger", 2.0);
-            let cont_policy = PolicySpec::new("continuous")
-                .with("max_batched_tokens", 8192u32)
-                .with("max_batch_size", cap);
-            let s = run_tokensim(&cfg(n, qps, static_policy, opts.cost_model));
-            let c = run_tokensim(&cfg(n, qps, cont_policy, opts.cost_model));
-            cells.push(f3(s.metrics().mean_normalized_latency()));
-            cells.push(f3(c.metrics().mean_normalized_latency()));
+        for &(s, c) in row {
+            cells.push(f3(s));
+            cells.push(f3(c));
         }
         table.row(&cells);
     }

@@ -61,12 +61,13 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         headers.extend(ratios.iter().map(|r| format!("ratio-{r}")));
         let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut table = Table::new(&hdr);
-        for &qps in rates {
+        // independent (qps x ratio) cells: sweep across cores
+        let goodputs = sweep_grid(rates, ratios, |&qps, &ratio| {
+            run_tokensim(&cfg(n, qps, ratio, slo, opts.cost_model)).slo_throughput()
+        });
+        for (&qps, row) in rates.iter().zip(&goodputs) {
             let mut cells = vec![f1(qps)];
-            for &ratio in ratios {
-                let report = run_tokensim(&cfg(n, qps, ratio, slo, opts.cost_model));
-                cells.push(f3(report.slo_throughput()));
-            }
+            cells.extend(row.iter().map(|&g| f3(g)));
             table.row(&cells);
         }
         out.push_str(&format!("\n{title}\n"));

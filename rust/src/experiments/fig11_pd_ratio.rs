@@ -74,14 +74,17 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         headers.extend(outputs.iter().map(|o| o.to_string()));
         let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut table = Table::new(&hdr);
-        for &input in inputs {
-            let mut cells = vec![input.to_string()];
-            for &output in outputs {
-                let ((p, d), thr) =
-                    best_split(&model, n_req, input, output, splits, opts.cost_model);
-                cells.push(format!("P{p}D{d}@{thr:.1}"));
+        // every (input, output) cell runs its own SLO-throughput search
+        // over all splits: sweep the cells across cores
+        let cells = sweep_grid(inputs, outputs, |&input, &output| {
+            best_split(&model, n_req, input, output, splits, opts.cost_model)
+        });
+        for (&input, results) in inputs.iter().zip(&cells) {
+            let mut row = vec![input.to_string()];
+            for &((p, d), thr) in results {
+                row.push(format!("P{p}D{d}@{thr:.1}"));
             }
-            table.row(&cells);
+            table.row(&row);
         }
         out.push_str(&table.finish());
     }

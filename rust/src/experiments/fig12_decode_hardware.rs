@@ -57,14 +57,15 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     };
 
     let mut table = Table::new(&["config", "price", "max SLO thr (req/s)"]);
-    let mut results = Vec::new();
-    for (label, hw, np, nd) in setups {
-        let price = np as f64 * a100.price + nd as f64 * hw.price;
-        let build =
-            |qps: f64| cfg(np, hw.clone(), nd, n_req, qps, opts.cost_model);
+    // every setup runs its own SLO-throughput search: sweep across cores
+    let goodputs = parallel_sweep(&setups, |(_, hw, np, nd)| {
+        let build = |qps: f64| cfg(*np, hw.clone(), *nd, n_req, qps, opts.cost_model);
         let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+        goodput
+    });
+    for ((label, hw, np, nd), goodput) in setups.iter().zip(goodputs) {
+        let price = *np as f64 * a100.price + *nd as f64 * hw.price;
         table.row(&[label.clone(), format!("{price:.2}"), f1(goodput)]);
-        results.push((label, price, goodput));
     }
 
     let mut out = String::from(

@@ -10,6 +10,7 @@
 
 mod common;
 mod exp_memory;
+mod exp_workloads;
 mod fig04_validation;
 mod fig05_cdf;
 mod fig06_simspeed;
@@ -25,16 +26,17 @@ mod fig15_prefill_hardware;
 mod policy_comparison;
 mod table2_accuracy;
 
-pub use common::ExpOpts;
+pub use common::{parallel_sweep, ExpOpts};
 
 use anyhow::{bail, Result};
 
 /// All experiment ids: the paper's figures in paper order, then the
 /// repo's own studies ("policies" compares scheduler plugins, "memory"
-/// compares memory managers x preemption policies).
+/// compares memory managers x preemption policies, "workloads"
+/// compares workload generators and per-tenant service quality).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies", "memory",
+    "fig14", "fig15", "policies", "memory", "workloads",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -55,6 +57,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "fig15" => fig15_prefill_hardware::run(opts),
         "policies" => policy_comparison::run(opts),
         "memory" => exp_memory::run(opts),
+        "workloads" => exp_workloads::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

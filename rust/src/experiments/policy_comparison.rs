@@ -118,17 +118,19 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     headers.extend(locals.iter().map(|(label, _)| label.to_string()));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
-    for &qps in rates {
+    // independent (qps x policy) cells: sweep across cores
+    let results = sweep_grid(rates, &locals, |&qps, (_, spec)| {
+        let report = run_tokensim(&local_cfg(n, qps, spec.clone(), opts.cost_model));
+        let m = report.metrics();
+        format!(
+            "{}|{}",
+            f3(m.mean_normalized_latency()),
+            f3(m.ttft_percentile(0.99))
+        )
+    });
+    for (&qps, row) in rates.iter().zip(&results) {
         let mut cells = vec![f1(qps)];
-        for (_, spec) in &locals {
-            let report = run_tokensim(&local_cfg(n, qps, spec.clone(), opts.cost_model));
-            let m = report.metrics();
-            cells.push(format!(
-                "{}|{}",
-                f3(m.mean_normalized_latency()),
-                f3(m.ttft_percentile(0.99))
-            ));
-        }
+        cells.extend(row.iter().cloned());
         table.row(&cells);
     }
     out.push_str(&table.finish());
@@ -143,17 +145,18 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     headers.extend(globals.iter().map(|(label, _)| label.to_string()));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
-    for &qps in cluster_qps {
+    let results = sweep_grid(cluster_qps, &globals, |&qps, (_, spec)| {
+        let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), opts.cost_model));
+        let m = report.metrics();
+        format!(
+            "{}|{}",
+            f3(m.mean_normalized_latency()),
+            f3(m.ttft_percentile(0.99))
+        )
+    });
+    for (&qps, row) in cluster_qps.iter().zip(&results) {
         let mut cells = vec![f1(qps)];
-        for (_, spec) in &globals {
-            let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), opts.cost_model));
-            let m = report.metrics();
-            cells.push(format!(
-                "{}|{}",
-                f3(m.mean_normalized_latency()),
-                f3(m.ttft_percentile(0.99))
-            ));
-        }
+        cells.extend(row.iter().cloned());
         table.row(&cells);
     }
     out.push_str(&table.finish());

@@ -10,9 +10,11 @@
 //! (global + per-worker local) scheduling, operator-granularity compute
 //! cost modelling, pluggable KV-cache memory management (paged /
 //! contiguous / host-swap / cross-request prefix cache, with recompute
-//! or swap preemption), a communication model for KV movement, and QoS
-//! metrics (latency percentiles / CDFs, TTFT / mTPOT SLO attainment,
-//! memory timelines).
+//! or swap preemption), pluggable workload generators (synthetic /
+//! trace replay / bursty / multi-tenant / long-context), a
+//! communication model for KV movement, and QoS metrics (latency
+//! percentiles / CDFs, TTFT / mTPOT SLO attainment, per-tenant
+//! breakdowns, memory timelines).
 //!
 //! ## Architecture (three layers)
 //!
@@ -73,5 +75,7 @@ pub mod prelude {
     pub use crate::model::ModelSpec;
     pub use crate::scheduler::{GlobalScheduler, LocalScheduler, PolicySpec};
     pub use crate::sim::SimTime;
-    pub use crate::workload::{LengthDistribution, WorkloadSpec};
+    pub use crate::workload::{
+        LengthDistribution, WorkloadGenerator, WorkloadSpec, WorkloadSpecV2,
+    };
 }

@@ -24,8 +24,8 @@ fn usage() -> &'static str {
      \n\
      USAGE:\n\
        tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--cdf]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|all> [--quick] [--out-dir <dir>]\n\
-       tokensim list                 list experiments, scheduler policies, memory managers, presets\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|all> [--quick] [--out-dir <dir>]\n\
+       tokensim list                 list experiments, policies, memory managers, workload generators, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n"
 }
@@ -66,14 +66,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let config_path = flag_value(args, "--config").context("run requires --config <file>")?;
     let cfg = SimulationConfig::from_yaml_file(config_path)?;
     println!(
-        "model={} workers={} requests={} qps={}",
+        "model={} workers={} workload={}",
         cfg.model.name,
         cfg.total_workers(),
-        cfg.workload.num_requests,
-        cfg.workload.qps
+        cfg.workload.name
     );
     if let Some(path) = flag_value(args, "--save-trace") {
-        let requests = cfg.workload.generate();
+        let requests = cfg.workload.generate()?;
         tokensim::workload::save_trace(path, &requests)?;
         println!("workload trace saved to {path}");
     }
@@ -90,9 +89,25 @@ fn cmd_run(args: &[String]) -> Result<()> {
             w.total_blocks
         );
     }
+    // multi-tenant workloads: per-class TTFT/TBT + per-class SLOs
+    let slos = cfg.workload.build()?.tenant_slos();
+    let m = report.metrics();
+    let tenants = m.tenant_breakdown(&slos);
+    if !tenants.is_empty() {
+        println!("\nper-tenant breakdown:");
+        for t in tenants {
+            let slo = t
+                .slo_attainment
+                .map(|a| format!("{:.1}%", 100.0 * a))
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "  {:<12} {:>5} reqs | ttft p50 {:.3}s p99 {:.3}s | tbt p99 {:.3}s | slo {}",
+                t.tenant, t.requests, t.ttft_p50, t.ttft_p99, t.tbt_p99, slo
+            );
+        }
+    }
     if args.iter().any(|a| a == "--cdf") {
         println!("\nlatency CDF:");
-        let m = report.metrics();
         for q in [0.05, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
             println!("  p{:<4} {:.3}s", q * 100.0, m.latency_percentile(q));
         }
@@ -143,6 +158,11 @@ fn cmd_list() -> Result<()> {
     }
     println!("\nmemory managers (worker `memory: manager:`):");
     for (name, summary, params) in tokensim::memory::memory_managers() {
+        println!("  {name:<16} {summary}");
+        println!("  {:<16}   params: {params}", "");
+    }
+    println!("\nworkload generators (`workload: generator:`):");
+    for (name, summary, params) in tokensim::workload::workload_generators() {
         println!("  {name:<16} {summary}");
         println!("  {:<16}   params: {params}", "");
     }

@@ -235,6 +235,16 @@ pub trait MemoryManager: Send {
 
     // ---- provided: prefix-cache capability (inert by default) --------
 
+    /// Does this manager carry a cross-request prefix-cache layer? The
+    /// cluster driver anchors *conversation affinity* on this: when a
+    /// finished round stores KV in a worker-local layer, follow-up
+    /// rounds are routed back to that worker instead of through the
+    /// global dispatch policy — on any other worker the guaranteed hit
+    /// would silently become a miss.
+    fn has_prefix_layer(&self) -> bool {
+        false
+    }
+
     /// Look up the cached KV prefix of `conv` for a round whose prompt
     /// is `prompt_len` tokens (layered cross-request cache managers).
     fn prefix_lookup(&mut self, _conv: ConversationId, _prompt_len: u32) -> Option<PoolHit> {
@@ -277,6 +287,7 @@ mod tests {
         // inert defaults: no swap, no prefix cache
         assert!(mem.swap_out(1).is_none());
         assert_eq!(mem.swap_in(1, 32), AllocOutcome::OutOfMemory);
+        assert!(!mem.has_prefix_layer());
         assert!(mem.prefix_lookup(0, 100).is_none());
         assert_eq!(mem.swap_stats(), SwapStats::default());
         assert_eq!(mem.pool_stats(), PoolStats::default());

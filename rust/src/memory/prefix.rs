@@ -125,6 +125,10 @@ impl MemoryManager for PrefixCacheManager {
         self.device.check_invariants() && self.pool.check_invariants()
     }
 
+    fn has_prefix_layer(&self) -> bool {
+        true
+    }
+
     fn prefix_lookup(&mut self, conv: ConversationId, prompt_len: u32) -> Option<PoolHit> {
         self.pool.lookup(conv, prompt_len)
     }
@@ -162,6 +166,7 @@ mod tests {
     #[test]
     fn lookup_store_roundtrip_through_the_manager() {
         let mut m = mgr();
+        assert!(m.has_prefix_layer(), "affinity anchor for the driver");
         assert!(m.prefix_lookup(7, 100).is_none());
         m.prefix_store(7, 96);
         let hit = m.prefix_lookup(7, 200).unwrap();

@@ -21,6 +21,8 @@ pub struct RequestRecord {
     pub id: usize,
     pub conversation: usize,
     pub round: usize,
+    /// Tenant class of a multi-tenant workload (None = single-tenant).
+    pub tenant: Option<String>,
     pub prompt_len: u32,
     pub output_len: u32,
     pub cached_prefix: u32,
@@ -43,6 +45,7 @@ impl RequestRecord {
             id: r.id,
             conversation: r.conversation,
             round: r.round,
+            tenant: r.tenant.clone(),
             prompt_len: r.prompt_len,
             output_len: r.output_len,
             cached_prefix: r.cached_prefix,
@@ -190,6 +193,12 @@ impl<'a> MetricSet<'a> {
         percentile(self.records.iter().map(|r| r.ttft()), q)
     }
 
+    /// Percentile of the per-request worst inter-token gap (the TBT
+    /// figure the mTPOT SLO constrains).
+    pub fn tbt_percentile(&self, q: f64) -> f64 {
+        percentile(self.records.iter().map(|r| r.max_token_gap), q)
+    }
+
     /// Mean normalized latency (s/token) — vLLM's serving metric.
     pub fn mean_normalized_latency(&self) -> f64 {
         if self.records.is_empty() {
@@ -240,6 +249,61 @@ impl<'a> MetricSet<'a> {
     pub fn total_recomputed_tokens(&self) -> u64 {
         self.records.iter().map(|r| r.recomputed_tokens).sum()
     }
+
+    /// Per-tenant TTFT/TBT percentiles for multi-tenant workloads, in
+    /// first-appearance order (records are id-sorted, so this is the
+    /// dispatch order and deterministic). `slos` supplies per-class
+    /// objectives (e.g. from
+    /// [`WorkloadGenerator::tenant_slos`](crate::workload::WorkloadGenerator::tenant_slos));
+    /// attainment is `None` for tenants without an entry. Empty when no
+    /// record carries a tenant tag.
+    pub fn tenant_breakdown(&self, slos: &[(String, SloSpec)]) -> Vec<TenantSummary> {
+        let mut names: Vec<&str> = Vec::new();
+        for r in self.records {
+            if let Some(t) = r.tenant.as_deref() {
+                if !names.contains(&t) {
+                    names.push(t);
+                }
+            }
+        }
+        names
+            .into_iter()
+            .map(|name| {
+                let recs: Vec<&RequestRecord> = self
+                    .records
+                    .iter()
+                    .filter(|r| r.tenant.as_deref() == Some(name))
+                    .collect();
+                let slo = slos.iter().find(|(n, _)| n == name).map(|(_, s)| *s);
+                let attainment = slo.map(|s| {
+                    recs.iter().filter(|r| s.satisfied(r)).count() as f64 / recs.len() as f64
+                });
+                TenantSummary {
+                    tenant: name.to_string(),
+                    requests: recs.len(),
+                    ttft_p50: percentile(recs.iter().map(|r| r.ttft()), 0.50),
+                    ttft_p99: percentile(recs.iter().map(|r| r.ttft()), 0.99),
+                    tbt_p99: percentile(recs.iter().map(|r| r.max_token_gap), 0.99),
+                    slo_attainment: attainment,
+                }
+            })
+            .collect()
+    }
+}
+
+/// One tenant's aggregate service quality (see
+/// [`MetricSet::tenant_breakdown`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSummary {
+    pub tenant: String,
+    pub requests: usize,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// P99 of the per-request worst inter-token gap.
+    pub tbt_p99: f64,
+    /// Fraction of this tenant's requests meeting its own SLO (None
+    /// when no SLO was supplied for it).
+    pub slo_attainment: Option<f64>,
 }
 
 #[cfg(test)]
@@ -251,6 +315,7 @@ mod tests {
             id,
             conversation: id,
             round: 0,
+            tenant: None,
             prompt_len: 32,
             output_len: out,
             cached_prefix: 0,
@@ -295,6 +360,39 @@ mod tests {
         assert_eq!(m.makespan(), 10.0);
         assert!((m.request_throughput() - 0.2).abs() < 1e-12);
         assert!((m.token_throughput() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_breakdown_groups_and_scores_per_class() {
+        let mut a = rec(0, 0.0, 0.5, 5.0, 10, 0.1);
+        a.tenant = Some("chat".into());
+        let mut b = rec(1, 0.0, 4.0, 9.0, 10, 0.1);
+        b.tenant = Some("chat".into());
+        let mut c = rec(2, 0.0, 8.0, 20.0, 10, 0.4);
+        c.tenant = Some("batch".into());
+        let recs = vec![a, b, c];
+        let m = MetricSet::new(&recs);
+        let slos = vec![(
+            "chat".to_string(),
+            SloSpec {
+                ttft: Some(2.0),
+                mtpot: Some(0.2),
+            },
+        )];
+        let out = m.tenant_breakdown(&slos);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tenant, "chat");
+        assert_eq!(out[0].requests, 2);
+        // one of the two chat requests misses the 2 s TTFT bound
+        assert_eq!(out[0].slo_attainment, Some(0.5));
+        assert!(out[0].ttft_p99 >= out[0].ttft_p50);
+        assert_eq!(out[1].tenant, "batch");
+        assert_eq!(out[1].slo_attainment, None, "no SLO supplied for batch");
+        assert!((out[1].tbt_p99 - 0.4).abs() < 1e-12);
+        // untagged records produce no breakdown at all
+        assert!(MetricSet::new(&[rec(0, 0.0, 1.0, 2.0, 5, 0.0)])
+            .tenant_breakdown(&[])
+            .is_empty());
     }
 
     #[test]

@@ -45,9 +45,16 @@ pub struct Request {
     /// Number of output tokens this request will generate.
     pub output_len: u32,
     pub arrival: SimTime,
+    /// Tenant class of a multi-tenant workload (None = single-tenant).
+    /// Carried through to [`RequestRecord`](crate::metrics::RequestRecord)
+    /// so reports can break out per-tenant percentiles.
+    pub tenant: Option<String>,
 
     // ---- mutable execution state ----
     pub phase: Phase,
+    /// Time this request last entered a worker's waiting queue
+    /// (dispatch or preemption push-back); anchors linger deadlines.
+    pub queued_at: SimTime,
     /// Tokens currently resident in this worker's KV cache.
     pub ctx_in_cache: u32,
     /// Prompt tokens already processed (chunked prefill / restart).
@@ -92,7 +99,9 @@ impl Request {
             cached_prefix: 0,
             output_len,
             arrival,
+            tenant: None,
             phase: Phase::Pending,
+            queued_at: 0.0,
             ctx_in_cache: 0,
             prompt_done: 0,
             generated: 0,

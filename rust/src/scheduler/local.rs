@@ -404,6 +404,7 @@ fn ensure_decode_growth(ctx: &mut LocalSchedCtx, plan: &mut BatchPlan) {
                 ctx.requests[victim].reset_for_recompute();
                 plan.preempted.push(victim);
             }
+            ctx.requests[victim].queued_at = ctx.now;
             ctx.waiting.push_front(victim);
             if victim == rid {
                 self_evicted = true;

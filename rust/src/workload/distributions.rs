@@ -90,7 +90,11 @@ impl LengthDistribution {
             LengthDistribution::Fixed(n) => n.max(1),
             LengthDistribution::Uniform { min, max } => {
                 assert!(min <= max, "uniform min > max");
-                rng.uniform_int(min.max(1) as u64, max as u64) as u32
+                // clamp BOTH bounds to >= 1 token: `min` alone would
+                // invert the range for `{min: 0, max: 0}` and panic in
+                // `uniform_int` (config parsing rejects min > max, so
+                // lo <= hi always holds here)
+                rng.uniform_int(min.max(1) as u64, max.max(1) as u64) as u32
             }
             LengthDistribution::LogNormal {
                 median,
@@ -192,6 +196,21 @@ mod tests {
     fn fixed_never_zero() {
         let mut rng = SimRng::new(4, "len");
         assert_eq!(LengthDistribution::Fixed(0).sample(&mut rng), 1);
+    }
+
+    #[test]
+    fn uniform_zero_bounds_clamp_to_one_token() {
+        // regression: `{min: 0, max: 0}` used to clamp only `min`,
+        // calling uniform_int(1, 0) with an inverted range (panic)
+        let mut rng = SimRng::new(4, "len");
+        let d = LengthDistribution::Uniform { min: 0, max: 0 };
+        for _ in 0..100 {
+            assert_eq!(d.sample(&mut rng), 1);
+        }
+        let d = LengthDistribution::Uniform { min: 0, max: 3 };
+        for _ in 0..100 {
+            assert!((1..=3).contains(&d.sample(&mut rng)));
+        }
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! The [`WorkloadGenerator`] trait and the built-in generator
+//! implementations — the workload counterpart of the scheduler and
+//! memory plugin subsystems.
+//!
+//! A generator owns its parameters (rates, length distributions, trace
+//! paths, tenant classes) and materializes a request table on demand.
+//! The simulation driver only ever sees `Box<dyn WorkloadGenerator>`
+//! through [`WorkloadSpecV2`](crate::workload::WorkloadSpecV2), so a new
+//! serving scenario never touches `cluster/mod.rs`: implement the
+//! trait, then either add a
+//! [`WorkloadEntry`](crate::workload::registry::WorkloadEntry) to the
+//! built-in table or call
+//! [`register_workload`](crate::workload::register_workload) at startup.
+
+use anyhow::{Context, Result};
+
+use crate::metrics::SloSpec;
+use crate::request::Request;
+use crate::sim::SimRng;
+
+use super::{load_trace, ArrivalProcess, LengthDistribution, WorkloadSpec};
+
+/// A pluggable workload scenario (the paper's §IV "workloads generated
+/// from datasets and parameters", generalized to a registry).
+///
+/// The contract of [`generate`](WorkloadGenerator::generate):
+///
+/// * requests are returned sorted by arrival time, with `id` equal to
+///   their index in the returned table (the driver schedules
+///   `Arrival(id)` events directly from it);
+/// * generation is a pure function of the generator's parameters —
+///   every stochastic draw comes from a [`SimRng`] stream seeded from
+///   the generator's own seed, so repeated calls are bit-identical
+///   (what the parallel sweep runner relies on);
+/// * multi-tenant generators tag each request's `tenant` field and
+///   expose per-class objectives via
+///   [`tenant_slos`](WorkloadGenerator::tenant_slos) so reports can
+///   break out per-tenant TTFT/TBT percentiles.
+pub trait WorkloadGenerator: Send {
+    /// Registry name of this generator (stable, lowercase).
+    fn name(&self) -> &'static str;
+
+    /// Materialize the request table (sorted by arrival, ids = indices).
+    fn generate(&self) -> Result<Vec<Request>>;
+
+    /// Per-tenant service-level objectives, for generators that model
+    /// tenant classes (empty for single-tenant workloads).
+    fn tenant_slos(&self) -> Vec<(String, SloSpec)> {
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in generators
+// ---------------------------------------------------------------------------
+
+/// `synthetic`: the classic parametric workload — an arrival process
+/// crossed with prompt/output length distributions (wraps
+/// [`WorkloadSpec`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyntheticWorkload(pub WorkloadSpec);
+
+impl WorkloadGenerator for SyntheticWorkload {
+    fn name(&self) -> &'static str {
+        "synthetic"
+    }
+
+    fn generate(&self) -> Result<Vec<Request>> {
+        Ok(self.0.generate())
+    }
+}
+
+/// `trace`: JSONL trace replay through the [`load_trace`] loader, so
+/// real dataset traces (or archived synthetic ones saved with
+/// `tokensim run --save-trace`) drive the simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceWorkload {
+    /// Path of the JSONL trace (one `{"arrival", "prompt", "output"}`
+    /// object per line; resolved against the process working
+    /// directory).
+    pub path: String,
+    /// Multiply every arrival time (2.0 = half the offered load).
+    pub time_scale: f64,
+    /// Keep only the first N requests by arrival (None = all).
+    pub max_requests: Option<usize>,
+}
+
+impl WorkloadGenerator for TraceWorkload {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn generate(&self) -> Result<Vec<Request>> {
+        let mut requests =
+            load_trace(&self.path).with_context(|| format!("replaying trace '{}'", self.path))?;
+        if let Some(cap) = self.max_requests {
+            anyhow::ensure!(cap > 0, "'max_requests' must be >= 1");
+            requests.truncate(cap);
+        }
+        if self.time_scale != 1.0 {
+            for r in &mut requests {
+                r.arrival *= self.time_scale;
+            }
+        }
+        Ok(requests)
+    }
+}
+
+/// `bursty`: BurstGPT-style on/off load — alternating high-rate and
+/// low-rate phases, with Gamma-distributed gaps inside each phase
+/// (`cv` > 1 adds within-phase burstiness on top of the phase
+/// envelope).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurstyWorkload {
+    pub num_requests: usize,
+    /// Arrival rate during ON phases (req/s).
+    pub qps_on: f64,
+    /// Arrival rate during OFF phases (req/s).
+    pub qps_off: f64,
+    /// ON-phase duration (s).
+    pub on_s: f64,
+    /// OFF-phase duration (s).
+    pub off_s: f64,
+    /// Coefficient of variation of the within-phase Gamma gaps
+    /// (1.0 = Poisson).
+    pub cv: f64,
+    pub prompt_len: LengthDistribution,
+    pub output_len: LengthDistribution,
+    pub seed: u64,
+}
+
+impl WorkloadGenerator for BurstyWorkload {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn generate(&self) -> Result<Vec<Request>> {
+        let mut arrival_rng = SimRng::new(self.seed, "bursty-arrivals");
+        let mut len_rng = SimRng::new(self.seed, "bursty-lengths");
+        let process = ArrivalProcess::Gamma { cv: self.cv };
+        let mut t = 0.0f64;
+        let mut on = true;
+        let mut phase_end = self.on_s;
+        let mut requests = Vec::with_capacity(self.num_requests);
+        for id in 0..self.num_requests {
+            loop {
+                let rate = if on { self.qps_on } else { self.qps_off };
+                let gap = process.next_gap(rate, &mut arrival_rng);
+                if t + gap <= phase_end {
+                    t += gap;
+                    break;
+                }
+                // the sampled gap crosses the phase boundary: jump to
+                // the boundary and resample at the next phase's rate
+                // (memoryless across the switch)
+                t = phase_end;
+                on = !on;
+                phase_end += if on { self.on_s } else { self.off_s };
+            }
+            let prompt = self.prompt_len.sample(&mut len_rng);
+            let output = self.output_len.sample(&mut len_rng);
+            requests.push(Request::new(id, id, 0, prompt, output, t));
+        }
+        Ok(requests)
+    }
+}
+
+/// One tenant class of a [`MultiTenantWorkload`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    pub name: String,
+    pub num_requests: usize,
+    pub qps: f64,
+    pub arrival: ArrivalProcess,
+    pub prompt_len: LengthDistribution,
+    pub output_len: LengthDistribution,
+    /// This class's service-level objectives (reported per tenant).
+    pub slo: SloSpec,
+}
+
+/// `multi_tenant`: N tenant classes, each with its own rate, length
+/// distributions and SLOs. Streams are merged by arrival time and every
+/// request is tagged with its tenant so reports can break out
+/// per-tenant TTFT/TBT percentiles and SLO attainment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiTenantWorkload {
+    pub tenants: Vec<TenantClass>,
+    pub seed: u64,
+}
+
+impl WorkloadGenerator for MultiTenantWorkload {
+    fn name(&self) -> &'static str {
+        "multi_tenant"
+    }
+
+    fn generate(&self) -> Result<Vec<Request>> {
+        let mut all: Vec<Request> = Vec::new();
+        for tc in &self.tenants {
+            // one independent stream pair per tenant, labelled by name,
+            // so adding a tenant never perturbs the others' draws
+            let mut arrival_rng = SimRng::new(self.seed, &format!("tenant-{}-arrivals", tc.name));
+            let mut len_rng = SimRng::new(self.seed, &format!("tenant-{}-lengths", tc.name));
+            let mut t = 0.0;
+            for _ in 0..tc.num_requests {
+                t += tc.arrival.next_gap(tc.qps, &mut arrival_rng);
+                let prompt = tc.prompt_len.sample(&mut len_rng);
+                let output = tc.output_len.sample(&mut len_rng);
+                let mut r = Request::new(0, 0, 0, prompt, output, t);
+                r.tenant = Some(tc.name.clone());
+                all.push(r);
+            }
+        }
+        // stable by arrival; ties keep tenant declaration order
+        all.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (id, r) in all.iter_mut().enumerate() {
+            r.id = id;
+            r.conversation = id;
+        }
+        Ok(all)
+    }
+
+    fn tenant_slos(&self) -> Vec<(String, SloSpec)> {
+        self.tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.slo))
+            .collect()
+    }
+}
+
+/// `long_context`: a heavy-prefill mix — most prompts follow the
+/// ShareGPT-like lognormal, but a `long_fraction` tail draws from a
+/// long-context lognormal (RAG / document-QA style), stressing prefill
+/// scheduling and KV capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LongContextWorkload {
+    pub num_requests: usize,
+    pub qps: f64,
+    /// Fraction of requests drawn from the long-context distribution.
+    pub long_fraction: f64,
+    pub short_prompt: LengthDistribution,
+    pub long_prompt: LengthDistribution,
+    pub output_len: LengthDistribution,
+    pub seed: u64,
+}
+
+impl WorkloadGenerator for LongContextWorkload {
+    fn name(&self) -> &'static str {
+        "long_context"
+    }
+
+    fn generate(&self) -> Result<Vec<Request>> {
+        let mut arrival_rng = SimRng::new(self.seed, "longctx-arrivals");
+        let mut len_rng = SimRng::new(self.seed, "longctx-lengths");
+        let mut t = 0.0;
+        let requests = (0..self.num_requests)
+            .map(|id| {
+                t += ArrivalProcess::Poisson.next_gap(self.qps, &mut arrival_rng);
+                let prompt = if len_rng.gen_bool(self.long_fraction) {
+                    self.long_prompt.sample(&mut len_rng)
+                } else {
+                    self.short_prompt.sample(&mut len_rng)
+                };
+                let output = self.output_len.sample(&mut len_rng);
+                Request::new(id, id, 0, prompt, output, t)
+            })
+            .collect();
+        Ok(requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+    use crate::workload::save_trace;
+
+    #[test]
+    fn synthetic_matches_workload_spec() {
+        let spec = WorkloadSpec::sharegpt(100, 5.0);
+        let direct = spec.generate();
+        let via = SyntheticWorkload(spec).generate().unwrap();
+        assert_eq!(direct.len(), via.len());
+        for (a, b) in direct.iter().zip(&via) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.arrival, b.arrival);
+        }
+    }
+
+    #[test]
+    fn trace_generator_replays_scales_and_caps() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("t.jsonl");
+        let reqs = WorkloadSpec::fixed(20, 10.0, 64, 8).generate();
+        save_trace(&path, &reqs).unwrap();
+        let full = TraceWorkload {
+            path: path.to_str().unwrap().to_string(),
+            time_scale: 1.0,
+            max_requests: None,
+        }
+        .generate()
+        .unwrap();
+        assert_eq!(full.len(), 20);
+        let scaled = TraceWorkload {
+            path: path.to_str().unwrap().to_string(),
+            time_scale: 2.0,
+            max_requests: Some(5),
+        }
+        .generate()
+        .unwrap();
+        assert_eq!(scaled.len(), 5);
+        for (a, b) in full.iter().zip(&scaled) {
+            assert!((b.arrival - 2.0 * a.arrival).abs() < 1e-9);
+        }
+    }
+
+    fn bursty(cv: f64) -> BurstyWorkload {
+        BurstyWorkload {
+            num_requests: 4000,
+            qps_on: 40.0,
+            qps_off: 2.0,
+            on_s: 10.0,
+            off_s: 10.0,
+            cv,
+            prompt_len: LengthDistribution::Fixed(64),
+            output_len: LengthDistribution::Fixed(8),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn bursty_phases_modulate_the_rate() {
+        let reqs = bursty(1.0).generate().unwrap();
+        assert_eq!(reqs.len(), 4000);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // count arrivals in ON windows [0,10), [20,30), … vs OFF windows
+        let (mut on, mut off) = (0usize, 0usize);
+        for r in &reqs {
+            let phase = (r.arrival / 10.0).floor() as u64;
+            if phase % 2 == 0 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        assert!(
+            on as f64 > 5.0 * off as f64,
+            "ON phases must dominate: on={on} off={off}"
+        );
+    }
+
+    #[test]
+    fn bursty_is_deterministic() {
+        let a = bursty(2.0).generate().unwrap();
+        let b = bursty(2.0).generate().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+    }
+
+    fn two_tenants() -> MultiTenantWorkload {
+        MultiTenantWorkload {
+            tenants: vec![
+                TenantClass {
+                    name: "chat".into(),
+                    num_requests: 300,
+                    qps: 10.0,
+                    arrival: ArrivalProcess::Poisson,
+                    prompt_len: LengthDistribution::Fixed(64),
+                    output_len: LengthDistribution::Fixed(32),
+                    slo: SloSpec {
+                        ttft: Some(2.0),
+                        mtpot: Some(0.2),
+                    },
+                },
+                TenantClass {
+                    name: "batch".into(),
+                    num_requests: 100,
+                    qps: 3.0,
+                    arrival: ArrivalProcess::Poisson,
+                    prompt_len: LengthDistribution::Fixed(512),
+                    output_len: LengthDistribution::Fixed(128),
+                    slo: SloSpec::none(),
+                },
+            ],
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn multi_tenant_tags_merges_and_reports_slos() {
+        let workload = two_tenants();
+        let reqs = workload.generate().unwrap();
+        assert_eq!(reqs.len(), 400);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "merged stream sorted");
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i, "ids are table indices");
+            assert!(r.tenant.is_some());
+        }
+        let chat = reqs
+            .iter()
+            .filter(|r| r.tenant.as_deref() == Some("chat"))
+            .count();
+        assert_eq!(chat, 300);
+        let slos = workload.tenant_slos();
+        assert_eq!(slos.len(), 2);
+        assert_eq!(slos[0].0, "chat");
+        assert_eq!(slos[0].1.ttft, Some(2.0));
+    }
+
+    #[test]
+    fn long_context_mix_has_a_heavy_tail() {
+        let workload = LongContextWorkload {
+            num_requests: 4000,
+            qps: 10.0,
+            long_fraction: 0.25,
+            short_prompt: LengthDistribution::LogNormal {
+                median: 96.0,
+                sigma: 1.1,
+                min: 4,
+                max: 2048,
+            },
+            long_prompt: LengthDistribution::LogNormal {
+                median: 4096.0,
+                sigma: 0.3,
+                min: 2048,
+                max: 16384,
+            },
+            output_len: LengthDistribution::Fixed(32),
+            seed: 3,
+        };
+        let reqs = workload.generate().unwrap();
+        let long = reqs.iter().filter(|r| r.prompt_len >= 2048).count();
+        let frac = long as f64 / reqs.len() as f64;
+        assert!((frac - 0.25).abs() < 0.03, "long fraction {frac}");
+        let mut prompts: Vec<u32> = reqs.iter().map(|r| r.prompt_len).collect();
+        prompts.sort_unstable();
+        assert!(prompts[prompts.len() / 2] < 1024, "median stays short");
+        assert!(*prompts.last().unwrap() > 3000, "tail is long");
+    }
+}

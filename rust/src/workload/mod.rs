@@ -1,19 +1,39 @@
-//! Workload generation: arrival processes, length distributions
-//! (including a ShareGPT-fit sampler), multi-round conversations, and
-//! trace import/export.
+//! Workloads as a pluggable subsystem: arrival processes, length
+//! distributions (including a ShareGPT-fit sampler), multi-round
+//! conversations, trace import/export, and the [`WorkloadGenerator`]
+//! trait + string-keyed [registry](crate::workload::registry) selecting
+//! scenario generators by name from YAML or code.
 //!
 //! "TokenSim generates workloads from datasets and parameters, with
 //! requests dispatched by a dispatcher to the global scheduler" (§III).
 //! The real ShareGPT dataset is not redistributable here; `sharegpt()`
 //! uses a lognormal fit to its published prompt/output length statistics
 //! (see DESIGN.md §Substitutions).
+//!
+//! Built-in generators: `synthetic` (the classic parametric
+//! [`WorkloadSpec`]), `trace` (JSONL replay), `bursty` (BurstGPT-style
+//! on/off phases), `multi_tenant` (per-class rates/lengths/SLOs, tagged
+//! through [`Request`](crate::request::Request) →
+//! [`RequestRecord`](crate::metrics::RequestRecord)) and `long_context`
+//! (heavy-prefill lognormal mix). `tokensim list` prints the live
+//! registry; [`register_workload`] adds generators at runtime.
 
 mod conversation;
 mod distributions;
+mod generator;
+pub mod registry;
 mod trace;
 
 pub use conversation::{ConversationSpec, ConversationWorkload};
 pub use distributions::{ArrivalProcess, LengthDistribution};
+pub use generator::{
+    BurstyWorkload, LongContextWorkload, MultiTenantWorkload, SyntheticWorkload, TenantClass,
+    TraceWorkload, WorkloadGenerator,
+};
+pub use registry::{
+    build_workload, register_workload, workload_generators, WorkloadEntry, WorkloadSpecV2,
+    WORKLOAD_GENERATORS,
+};
 pub use trace::{load_trace, save_trace, TraceEntry};
 
 

@@ -1,0 +1,833 @@
+//! String-keyed workload-generator registry — the workload counterpart
+//! of [`crate::scheduler::registry`] and [`crate::memory::registry`].
+//!
+//! A generator is selected by name — from YAML
+//! (`workload: {generator: bursty, …}`) or programmatically via
+//! [`WorkloadSpecV2`] — and built from its parameter map by a
+//! registered constructor. The simulation driver only ever sees
+//! `Box<dyn WorkloadGenerator>`, so opening a new serving scenario
+//! never touches `cluster/mod.rs`: implement the trait, then either add
+//! a [`WorkloadEntry`] to the built-in table or call
+//! [`register_workload`] at startup.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::yaml::Yaml;
+use crate::metrics::SloSpec;
+
+use super::generator::{
+    BurstyWorkload, LongContextWorkload, MultiTenantWorkload, SyntheticWorkload, TenantClass,
+    TraceWorkload, WorkloadGenerator,
+};
+use super::{ArrivalProcess, LengthDistribution, WorkloadSpec};
+
+/// A declarative, cloneable workload selection: a registry name plus a
+/// parameter map (the YAML subtree, or a programmatically built map).
+/// This is what configs store — the built `Box<dyn WorkloadGenerator>`
+/// is neither cloneable nor comparable.
+///
+/// The name carries the `V2` suffix because the original
+/// [`WorkloadSpec`] — now the parameter struct of the `synthetic`
+/// generator — remains a first-class public type; `From<WorkloadSpec>`
+/// converts it losslessly, so existing call sites keep working.
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::workload::WorkloadSpecV2;
+///
+/// let spec = WorkloadSpecV2::new("bursty")
+///     .with("num_requests", 50u32)
+///     .with("qps", 20.0)
+///     .with("off_qps", 2.0);
+/// let requests = spec.generate().unwrap();
+/// assert_eq!(requests.len(), 50);
+///
+/// // unknown names are errors listing the known generators
+/// assert!(WorkloadSpecV2::new("fancy").build().is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpecV2 {
+    /// Registry name (case-insensitive; aliases accepted).
+    pub name: String,
+    /// Generator parameters (a [`Yaml::Map`]).
+    pub params: Yaml,
+}
+
+impl WorkloadSpecV2 {
+    /// A spec with no parameters (registry defaults apply).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Yaml::Map(Default::default()),
+        }
+    }
+
+    /// Builder-style parameter.
+    pub fn with(mut self, key: &str, value: impl Into<Yaml>) -> Self {
+        if let Yaml::Map(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
+
+    /// Parse from a YAML map of the form `{generator: <name>, <params>…}`.
+    /// A missing `generator` key selects `synthetic` (the pre-registry
+    /// `workload:` sections keep working unchanged).
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let name = match y.get("generator") {
+            None => "synthetic".to_string(),
+            Some(v) => v
+                .as_str()
+                .context("'generator' must be a string (a workload-generator name)")?
+                .to_string(),
+        };
+        Ok(Self {
+            name,
+            params: y.clone(),
+        })
+    }
+
+    /// Build the generator this spec names.
+    pub fn build(&self) -> Result<Box<dyn WorkloadGenerator>> {
+        build_workload(self)
+    }
+
+    /// Check the spec without generating: unknown names, typo'd
+    /// parameter keys and malformed values are errors at parse time,
+    /// not mid-simulation. (Trace files are read at generation time,
+    /// not here.)
+    pub fn validate(&self) -> Result<()> {
+        self.build().map(|_| ())
+    }
+
+    /// Build and materialize the request table in one step.
+    pub fn generate(&self) -> Result<Vec<crate::request::Request>> {
+        self.build()?.generate()
+    }
+
+    /// The RNG seed this spec configures (also seeds the driver's own
+    /// stream, like the pre-registry `workload.seed` field).
+    pub fn seed(&self) -> u64 {
+        self.params
+            .get("seed")
+            .and_then(Yaml::as_u64)
+            .unwrap_or(0)
+    }
+}
+
+fn ymap(pairs: Vec<(&str, Yaml)>) -> Yaml {
+    Yaml::Map(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn dist_to_yaml(d: &LengthDistribution) -> Yaml {
+    match *d {
+        LengthDistribution::Fixed(n) => ymap(vec![("fixed", Yaml::from(n))]),
+        LengthDistribution::Uniform { min, max } => ymap(vec![(
+            "uniform",
+            ymap(vec![("min", Yaml::from(min)), ("max", Yaml::from(max))]),
+        )]),
+        LengthDistribution::LogNormal {
+            median,
+            sigma,
+            min,
+            max,
+        } => ymap(vec![(
+            "log_normal",
+            ymap(vec![
+                ("median", Yaml::from(median)),
+                ("sigma", Yaml::from(sigma)),
+                ("min", Yaml::from(min)),
+                ("max", Yaml::from(max)),
+            ]),
+        )]),
+    }
+}
+
+fn arrival_to_yaml(a: &ArrivalProcess) -> Yaml {
+    match *a {
+        ArrivalProcess::Poisson => Yaml::from("poisson"),
+        ArrivalProcess::Uniform => Yaml::from("uniform"),
+        ArrivalProcess::Burst => Yaml::from("burst"),
+        ArrivalProcess::Gamma { cv } => {
+            ymap(vec![("gamma", ymap(vec![("cv", Yaml::from(cv))]))])
+        }
+    }
+}
+
+impl From<WorkloadSpec> for WorkloadSpecV2 {
+    /// Lossless conversion to the `synthetic` generator (numbers pass
+    /// through the parameter map as `f64`, exact up to 2^53 — every
+    /// distribution parameter and the seed round-trip bit-identically).
+    fn from(w: WorkloadSpec) -> Self {
+        WorkloadSpecV2::new("synthetic")
+            .with("num_requests", w.num_requests as u64)
+            .with("qps", w.qps)
+            .with("arrival", arrival_to_yaml(&w.arrival))
+            .with("prompt_len", dist_to_yaml(&w.prompt_len))
+            .with("output_len", dist_to_yaml(&w.output_len))
+            .with("seed", w.seed)
+    }
+}
+
+/// Parse a length distribution from its YAML form (`fixed` / `uniform`
+/// / `log_normal`). Malformed bounds — `uniform` with `min > max`, a
+/// non-positive `log_normal` median — are parse-time errors rather than
+/// sampling-time panics.
+pub(crate) fn length_dist_from_yaml(y: &Yaml) -> Result<LengthDistribution> {
+    if let Some(v) = y.get("fixed") {
+        return Ok(LengthDistribution::Fixed(
+            v.as_u32().context("'fixed' must be an integer")?,
+        ));
+    }
+    if let Some(u) = y.get("uniform") {
+        let min = u.req_u32("min")?;
+        let max = u.req_u32("max")?;
+        ensure!(min <= max, "uniform length: min ({min}) > max ({max})");
+        return Ok(LengthDistribution::Uniform { min, max });
+    }
+    if let Some(l) = y.get("log_normal") {
+        let median = l.req_f64("median")?;
+        let sigma = l.req_f64("sigma")?;
+        let min = l.opt_u32("min", 1);
+        let max = l.opt_u32("max", 1 << 20);
+        ensure!(median > 0.0, "log_normal median must be > 0");
+        ensure!(sigma >= 0.0, "log_normal sigma must be >= 0");
+        ensure!(min <= max, "log_normal clamp: min ({min}) > max ({max})");
+        return Ok(LengthDistribution::LogNormal {
+            median,
+            sigma,
+            min,
+            max,
+        });
+    }
+    bail!("length distribution needs 'fixed', 'uniform' or 'log_normal'")
+}
+
+/// Parse an arrival process (`poisson` / `uniform` / `burst` / a
+/// `gamma: {cv}` map).
+pub(crate) fn arrival_from_yaml(y: &Yaml) -> Result<ArrivalProcess> {
+    match y {
+        Yaml::Str(s) => match s.as_str() {
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            "uniform" => Ok(ArrivalProcess::Uniform),
+            "burst" => Ok(ArrivalProcess::Burst),
+            other => bail!("unknown arrival process '{other}'"),
+        },
+        Yaml::Map(_) => {
+            if let Some(g) = y.get("gamma") {
+                let cv = g.req_f64("cv")?;
+                ensure!(cv > 0.0, "gamma cv must be > 0");
+                Ok(ArrivalProcess::Gamma { cv })
+            } else {
+                bail!("arrival map must contain 'gamma'")
+            }
+        }
+        other => bail!("bad arrival process {other:?}"),
+    }
+}
+
+/// A built-in workload generator: name, aliases, summary, parameter
+/// keys, constructor.
+pub struct WorkloadEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `tokensim list`).
+    pub summary: &'static str,
+    /// Accepted parameter keys — anything else in the spec is an error
+    /// (catches typo'd keys at parse time).
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml) -> Result<Box<dyn WorkloadGenerator>>,
+}
+
+// Strict optional accessors: a *missing* key takes the default, but a
+// present-and-malformed value is an error rather than a silent default.
+
+fn opt_usize_strict(p: &Yaml, key: &str, default: usize) -> Result<usize> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => Ok(v
+            .as_u64()
+            .with_context(|| format!("'{key}' must be a non-negative integer"))?
+            as usize),
+    }
+}
+
+fn opt_u64_strict(p: &Yaml, key: &str, default: u64) -> Result<u64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_f64_strict(p: &Yaml, key: &str, default: f64) -> Result<f64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn opt_dist_strict(p: &Yaml, key: &str, default: LengthDistribution) -> Result<LengthDistribution> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(d) => length_dist_from_yaml(d).with_context(|| format!("in '{key}'")),
+    }
+}
+
+fn req_qps(p: &Yaml, key: &str) -> Result<f64> {
+    let qps = p.req_f64(key)?;
+    ensure!(qps > 0.0, "'{key}' must be > 0");
+    Ok(qps)
+}
+
+fn sharegpt_prompt() -> LengthDistribution {
+    LengthDistribution::LogNormal {
+        median: 96.0,
+        sigma: 1.1,
+        min: 4,
+        max: 2048,
+    }
+}
+
+fn sharegpt_output() -> LengthDistribution {
+    LengthDistribution::LogNormal {
+        median: 128.0,
+        sigma: 1.0,
+        min: 4,
+        max: 2048,
+    }
+}
+
+fn build_synthetic(p: &Yaml) -> Result<Box<dyn WorkloadGenerator>> {
+    let spec = WorkloadSpec {
+        num_requests: p
+            .req("num_requests")?
+            .as_u64()
+            .context("'num_requests' must be a non-negative integer")? as usize,
+        qps: req_qps(p, "qps")?,
+        arrival: match p.get("arrival") {
+            Some(a) => arrival_from_yaml(a)?,
+            None => ArrivalProcess::Poisson,
+        },
+        prompt_len: length_dist_from_yaml(p.req("prompt_len")?).context("in 'prompt_len'")?,
+        output_len: length_dist_from_yaml(p.req("output_len")?).context("in 'output_len'")?,
+        seed: opt_u64_strict(p, "seed", 0)?,
+    };
+    Ok(Box::new(SyntheticWorkload(spec)))
+}
+
+fn build_trace(p: &Yaml) -> Result<Box<dyn WorkloadGenerator>> {
+    let time_scale = opt_f64_strict(p, "time_scale", 1.0)?;
+    ensure!(time_scale > 0.0, "'time_scale' must be > 0");
+    let max_requests = match p.get("max_requests") {
+        None | Some(Yaml::Null) => None,
+        Some(v) => Some(
+            v.as_u64()
+                .context("'max_requests' must be a non-negative integer or null")? as usize,
+        ),
+    };
+    Ok(Box::new(TraceWorkload {
+        path: p.req_str("path")?.to_string(),
+        time_scale,
+        max_requests,
+    }))
+}
+
+fn build_bursty(p: &Yaml) -> Result<Box<dyn WorkloadGenerator>> {
+    let qps_on = req_qps(p, "qps")?;
+    let qps_off = opt_f64_strict(p, "off_qps", qps_on / 10.0)?;
+    let on_s = opt_f64_strict(p, "on_s", 10.0)?;
+    let off_s = opt_f64_strict(p, "off_s", 10.0)?;
+    let cv = opt_f64_strict(p, "cv", 1.0)?;
+    ensure!(qps_off > 0.0, "'off_qps' must be > 0");
+    ensure!(on_s > 0.0 && off_s > 0.0, "'on_s'/'off_s' must be > 0");
+    ensure!(cv > 0.0, "'cv' must be > 0");
+    Ok(Box::new(BurstyWorkload {
+        num_requests: p
+            .req("num_requests")?
+            .as_u64()
+            .context("'num_requests' must be a non-negative integer")? as usize,
+        qps_on,
+        qps_off,
+        on_s,
+        off_s,
+        cv,
+        prompt_len: opt_dist_strict(p, "prompt_len", sharegpt_prompt())?,
+        output_len: opt_dist_strict(p, "output_len", sharegpt_output())?,
+        seed: opt_u64_strict(p, "seed", 0)?,
+    }))
+}
+
+const TENANT_KEYS: &[&str] = &[
+    "name",
+    "num_requests",
+    "qps",
+    "arrival",
+    "prompt_len",
+    "output_len",
+    "ttft",
+    "mtpot",
+];
+
+fn parse_tenant(ty: &Yaml) -> Result<TenantClass> {
+    let Yaml::Map(m) = ty else {
+        bail!("tenant entries must be maps");
+    };
+    for key in m.keys() {
+        if !TENANT_KEYS.contains(&key.as_str()) {
+            bail!(
+                "unknown tenant parameter '{key}' (accepted: {})",
+                TENANT_KEYS.join(", ")
+            );
+        }
+    }
+    Ok(TenantClass {
+        name: ty.req_str("name")?.to_string(),
+        num_requests: ty
+            .req("num_requests")?
+            .as_u64()
+            .context("'num_requests' must be a non-negative integer")? as usize,
+        qps: req_qps(ty, "qps")?,
+        arrival: match ty.get("arrival") {
+            Some(a) => arrival_from_yaml(a)?,
+            None => ArrivalProcess::Poisson,
+        },
+        prompt_len: opt_dist_strict(ty, "prompt_len", sharegpt_prompt())?,
+        output_len: opt_dist_strict(ty, "output_len", sharegpt_output())?,
+        slo: SloSpec {
+            ttft: ty.get("ttft").and_then(Yaml::as_f64),
+            mtpot: ty.get("mtpot").and_then(Yaml::as_f64),
+        },
+    })
+}
+
+fn build_multi_tenant(p: &Yaml) -> Result<Box<dyn WorkloadGenerator>> {
+    let list = p
+        .req("tenants")?
+        .as_list()
+        .context("'tenants' must be a list of tenant classes")?;
+    ensure!(!list.is_empty(), "'tenants' must name at least one class");
+    let mut tenants: Vec<TenantClass> = Vec::with_capacity(list.len());
+    for (i, ty) in list.iter().enumerate() {
+        let tenant = parse_tenant(ty).with_context(|| format!("in tenant {}", i + 1))?;
+        if tenants.iter().any(|t| t.name == tenant.name) {
+            bail!("duplicate tenant name '{}'", tenant.name);
+        }
+        tenants.push(tenant);
+    }
+    Ok(Box::new(MultiTenantWorkload {
+        tenants,
+        seed: opt_u64_strict(p, "seed", 0)?,
+    }))
+}
+
+fn build_long_context(p: &Yaml) -> Result<Box<dyn WorkloadGenerator>> {
+    let long_fraction = opt_f64_strict(p, "long_fraction", 0.25)?;
+    ensure!(
+        (0.0..=1.0).contains(&long_fraction),
+        "'long_fraction' must be in [0, 1]"
+    );
+    let long_median = opt_f64_strict(p, "long_median", 4096.0)?;
+    let long_sigma = opt_f64_strict(p, "long_sigma", 0.3)?;
+    let max_prompt = opt_u64_strict(p, "max_prompt", 16_384)? as u32;
+    ensure!(long_median > 0.0, "'long_median' must be > 0");
+    ensure!(max_prompt >= 1, "'max_prompt' must be >= 1");
+    Ok(Box::new(LongContextWorkload {
+        num_requests: opt_usize_strict(p, "num_requests", 1000)?,
+        qps: req_qps(p, "qps")?,
+        long_fraction,
+        short_prompt: sharegpt_prompt(),
+        long_prompt: LengthDistribution::LogNormal {
+            median: long_median,
+            sigma: long_sigma,
+            min: 1,
+            max: max_prompt,
+        },
+        output_len: opt_dist_strict(
+            p,
+            "output_len",
+            LengthDistribution::LogNormal {
+                median: 128.0,
+                sigma: 1.0,
+                min: 4,
+                max: 1024,
+            },
+        )?,
+        seed: opt_u64_strict(p, "seed", 0)?,
+    }))
+}
+
+/// Built-in workload generators.
+pub const WORKLOAD_GENERATORS: &[WorkloadEntry] = &[
+    WorkloadEntry {
+        name: "synthetic",
+        aliases: &["parametric"],
+        summary: "arrival process x length distributions (the classic workload section)",
+        params: &[
+            "num_requests",
+            "qps",
+            "arrival",
+            "prompt_len",
+            "output_len",
+            "seed",
+        ],
+        build: build_synthetic,
+    },
+    WorkloadEntry {
+        name: "trace",
+        aliases: &["replay", "jsonl"],
+        summary: "JSONL trace replay (archive one with `tokensim run --save-trace`)",
+        params: &["path", "time_scale", "max_requests"],
+        build: build_trace,
+    },
+    WorkloadEntry {
+        name: "bursty",
+        aliases: &["burstgpt", "on_off"],
+        summary: "BurstGPT-style on/off phases over Gamma within-phase arrivals",
+        params: &[
+            "num_requests",
+            "qps",
+            "off_qps",
+            "on_s",
+            "off_s",
+            "cv",
+            "prompt_len",
+            "output_len",
+            "seed",
+        ],
+        build: build_bursty,
+    },
+    WorkloadEntry {
+        name: "multi_tenant",
+        aliases: &["tenants"],
+        summary: "N tenant classes with per-class rate/lengths/SLOs, tagged in reports",
+        params: &["tenants", "seed"],
+        build: build_multi_tenant,
+    },
+    WorkloadEntry {
+        name: "long_context",
+        aliases: &["longctx", "rag"],
+        summary: "heavy-prefill mix: ShareGPT prompts with a long-context lognormal tail",
+        params: &[
+            "num_requests",
+            "qps",
+            "long_fraction",
+            "long_median",
+            "long_sigma",
+            "max_prompt",
+            "output_len",
+            "seed",
+        ],
+        build: build_long_context,
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime registration (library users; built-ins live in the table)
+// ---------------------------------------------------------------------------
+
+struct DynWorkloadEntry {
+    name: String,
+    summary: String,
+    #[allow(clippy::type_complexity)]
+    build: Box<dyn Fn(&Yaml) -> Result<Box<dyn WorkloadGenerator>> + Send + Sync>,
+}
+
+fn extra_workloads() -> &'static Mutex<Vec<DynWorkloadEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynWorkloadEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a workload generator at runtime. Registered names take
+/// precedence over built-ins, so a library user can also shadow a
+/// built-in generator.
+///
+/// # Examples
+///
+/// A "bring your own scenario" flow — any [`WorkloadGenerator`]
+/// implementation becomes selectable by name, including from YAML:
+///
+/// ```
+/// use tokensim::request::Request;
+/// use tokensim::workload::{register_workload, WorkloadGenerator, WorkloadSpecV2};
+///
+/// /// Two back-to-back probe requests (demo).
+/// struct Probe;
+///
+/// impl WorkloadGenerator for Probe {
+///     fn name(&self) -> &'static str { "probe" }
+///     fn generate(&self) -> anyhow::Result<Vec<Request>> {
+///         Ok(vec![
+///             Request::new(0, 0, 0, 8, 4, 0.0),
+///             Request::new(1, 1, 0, 8, 4, 0.1),
+///         ])
+///     }
+/// }
+///
+/// register_workload("probe", "two probe requests (demo)", |_params| Ok(Box::new(Probe)));
+///
+/// let requests = WorkloadSpecV2::new("probe").generate().unwrap();
+/// assert_eq!(requests.len(), 2);
+/// ```
+pub fn register_workload(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml) -> Result<Box<dyn WorkloadGenerator>> + Send + Sync + 'static,
+) {
+    extra_workloads().lock().unwrap().push(DynWorkloadEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Box::new(build),
+    });
+}
+
+fn matches_name(candidate: &str, name: &str, aliases: &[&str]) -> bool {
+    candidate.eq_ignore_ascii_case(name)
+        || aliases.iter().any(|a| candidate.eq_ignore_ascii_case(a))
+}
+
+/// Reject typo'd parameter keys for built-in generators ("generator"
+/// itself is the selector key YAML specs carry). Runtime-registered
+/// generators validate their own params in their builder.
+fn check_param_keys(spec: &WorkloadSpecV2, known: &[&str]) -> Result<()> {
+    if let Yaml::Map(m) = &spec.params {
+        for key in m.keys() {
+            if key != "generator" && !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown parameter '{key}' for workload generator '{}' (accepted: {})",
+                    spec.name,
+                    known.join(", ")
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a workload generator from a spec. Unknown names list the known
+/// generators in the error.
+pub fn build_workload(spec: &WorkloadSpecV2) -> Result<Box<dyn WorkloadGenerator>> {
+    {
+        let extras = extra_workloads().lock().unwrap();
+        if let Some(e) = extras
+            .iter()
+            .rev()
+            .find(|e| spec.name.eq_ignore_ascii_case(&e.name))
+        {
+            return (e.build)(&spec.params)
+                .with_context(|| format!("building workload generator '{}'", spec.name));
+        }
+    }
+    let entry = WORKLOAD_GENERATORS
+        .iter()
+        .find(|e| matches_name(&spec.name, e.name, e.aliases))
+        .with_context(|| {
+            format!(
+                "unknown workload generator '{}' (known: {})",
+                spec.name,
+                workload_generators()
+                    .iter()
+                    .map(|(n, _, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params)
+        .with_context(|| format!("building workload generator '{}'", spec.name))
+}
+
+/// All registered generators as `(name, summary, accepted-params)`,
+/// built-ins first.
+pub fn workload_generators() -> Vec<(String, String, String)> {
+    let mut out: Vec<(String, String, String)> = WORKLOAD_GENERATORS
+        .iter()
+        .map(|e| {
+            (
+                e.name.to_string(),
+                e.summary.to_string(),
+                e.params.join(", "),
+            )
+        })
+        .collect();
+    for e in extra_workloads().lock().unwrap().iter() {
+        out.push((e.name.clone(), e.summary.clone(), "(generator-defined)".to_string()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_round_trips_workload_spec_bit_identically() {
+        let spec = WorkloadSpec::sharegpt(200, 7.5).with_seed(42);
+        let direct = spec.clone().generate();
+        let v2: WorkloadSpecV2 = spec.into();
+        assert_eq!(v2.name, "synthetic");
+        assert_eq!(v2.seed(), 42);
+        let via = v2.generate().unwrap();
+        assert_eq!(direct.len(), via.len());
+        for (a, b) in direct.iter().zip(&via) {
+            assert_eq!(a.arrival, b.arrival, "arrivals must round-trip exactly");
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+        }
+    }
+
+    #[test]
+    fn builds_every_builtin_generator() {
+        let trace_params = |spec: WorkloadSpecV2| spec.with("path", "unused.jsonl");
+        let tenants = Yaml::List(vec![Yaml::parse(
+            "name: a\nnum_requests: 5\nqps: 1.0\n",
+        )
+        .unwrap()]);
+        for e in WORKLOAD_GENERATORS {
+            let spec = match e.name {
+                "trace" => trace_params(WorkloadSpecV2::new(e.name)),
+                "multi_tenant" => WorkloadSpecV2::new(e.name).with("tenants", tenants.clone()),
+                "synthetic" => WorkloadSpecV2::new(e.name)
+                    .with("num_requests", 10u32)
+                    .with("qps", 4.0)
+                    .with("prompt_len", ymap(vec![("fixed", Yaml::from(8u32))]))
+                    .with("output_len", ymap(vec![("fixed", Yaml::from(8u32))])),
+                // bursty / long_context: every length knob has a default
+                name => WorkloadSpecV2::new(name)
+                    .with("num_requests", 10u32)
+                    .with("qps", 4.0),
+            };
+            let generator = spec
+                .build()
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.name));
+            assert_eq!(generator.name(), e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        for (alias, canonical) in [
+            ("BurstGPT", "bursty"),
+            ("Tenants", "multi_tenant"),
+            ("longctx", "long_context"),
+            ("Replay", "trace"),
+        ] {
+            let spec = match canonical {
+                "trace" => WorkloadSpecV2::new(alias).with("path", "x.jsonl"),
+                "multi_tenant" => WorkloadSpecV2::new(alias).with(
+                    "tenants",
+                    Yaml::List(vec![Yaml::parse("name: a\nnum_requests: 1\nqps: 1.0\n").unwrap()]),
+                ),
+                _ => WorkloadSpecV2::new(alias)
+                    .with("num_requests", 1u32)
+                    .with("qps", 1.0),
+            };
+            assert_eq!(spec.build().unwrap().name(), canonical);
+        }
+    }
+
+    #[test]
+    fn unknown_generator_is_an_error_listing_known() {
+        let err = WorkloadSpecV2::new("infinite").build().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown workload generator"), "{msg}");
+        assert!(msg.contains("multi_tenant"), "{msg}");
+    }
+
+    #[test]
+    fn typod_or_malformed_params_are_errors() {
+        let err = WorkloadSpecV2::new("bursty")
+            .with("num_requests", 10u32)
+            .with("qps", 4.0)
+            .with("off_qsp", 1.0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'off_qsp'"));
+        // malformed value on a well-known key
+        let err = WorkloadSpecV2::new("trace")
+            .with("path", "t.jsonl")
+            .with("time_scale", "fast")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("time_scale"));
+        // typo'd per-tenant key
+        let err = WorkloadSpecV2::new("multi_tenant")
+            .with(
+                "tenants",
+                Yaml::List(vec![Yaml::parse(
+                    "name: a\nnum_requests: 1\nqps: 1.0\nqqs: 2.0\n",
+                )
+                .unwrap()]),
+            )
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown tenant parameter 'qqs'"));
+    }
+
+    #[test]
+    fn uniform_min_above_max_is_a_parse_error_not_a_panic() {
+        let y = Yaml::parse(
+            "num_requests: 5\nqps: 1.0\nprompt_len:\n  uniform:\n    min: 5\n    max: 2\noutput_len:\n  fixed: 8\n",
+        )
+        .unwrap();
+        let spec = WorkloadSpecV2::from_yaml(&y).unwrap();
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("min (5) > max (2)"));
+    }
+
+    #[test]
+    fn from_yaml_defaults_to_synthetic() {
+        let y = Yaml::parse(
+            "num_requests: 10\nqps: 2.0\nprompt_len:\n  fixed: 8\noutput_len:\n  fixed: 4\nseed: 3\n",
+        )
+        .unwrap();
+        let spec = WorkloadSpecV2::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "synthetic");
+        assert_eq!(spec.seed(), 3);
+        assert_eq!(spec.generate().unwrap().len(), 10);
+        let y = Yaml::parse("generator: bursty\nnum_requests: 10\nqps: 20.0\n").unwrap();
+        let spec = WorkloadSpecV2::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "bursty");
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn runtime_registration_shadows_builtins() {
+        register_workload("test_shadow_synth", "test", build_synthetic);
+        let spec = WorkloadSpecV2::new("test_shadow_synth")
+            .with("num_requests", 3u32)
+            .with("qps", 1.0)
+            .with("prompt_len", ymap(vec![("fixed", Yaml::from(8u32))]))
+            .with("output_len", ymap(vec![("fixed", Yaml::from(8u32))]));
+        assert_eq!(spec.generate().unwrap().len(), 3);
+        assert!(workload_generators()
+            .iter()
+            .any(|(n, _, _)| n == "test_shadow_synth"));
+    }
+
+    #[test]
+    fn multi_tenant_slos_flow_through_the_registry() {
+        let spec = WorkloadSpecV2::new("multi_tenant").with(
+            "tenants",
+            Yaml::List(vec![
+                Yaml::parse("name: chat\nnum_requests: 5\nqps: 4.0\nttft: 2.0\nmtpot: 0.2\n")
+                    .unwrap(),
+                Yaml::parse("name: batch\nnum_requests: 5\nqps: 1.0\n").unwrap(),
+            ]),
+        );
+        let generator = spec.build().unwrap();
+        let slos = generator.tenant_slos();
+        assert_eq!(slos.len(), 2);
+        assert_eq!(slos[0].0, "chat");
+        assert_eq!(slos[0].1.ttft, Some(2.0));
+        assert_eq!(slos[1].1.ttft, None);
+        let reqs = generator.generate().unwrap();
+        assert!(reqs.iter().all(|r| r.tenant.is_some()));
+    }
+}

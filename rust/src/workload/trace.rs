@@ -46,12 +46,16 @@ impl TraceEntry {
     }
 }
 
-/// Load a JSONL trace into a request table.
+/// Load a JSONL trace into a request table. Entries are sorted by
+/// arrival **before** ids are assigned, so ids always equal table
+/// positions — the invariant the simulation driver indexes by (an
+/// out-of-order trace must not dispatch request A at request B's
+/// arrival time).
 pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<Request>> {
     let file = std::fs::File::open(path.as_ref())
         .with_context(|| format!("opening trace {}", path.as_ref().display()))?;
     let reader = std::io::BufReader::new(file);
-    let mut requests = Vec::new();
+    let mut entries = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         if line.trim().is_empty() {
@@ -59,19 +63,24 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<Request>> {
         }
         let entry = TraceEntry::from_json(&Json::parse(&line)?)
             .with_context(|| format!("trace line {}", lineno + 1))?;
-        let id = requests.len();
-        requests.push(Request::new(
-            id,
-            entry.conversation.unwrap_or(id),
-            entry.round.unwrap_or(0),
-            entry.prompt.max(1),
-            entry.output.max(1),
-            entry.arrival,
-        ));
+        entries.push(entry);
     }
-    anyhow::ensure!(!requests.is_empty(), "trace is empty");
-    requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
-    Ok(requests)
+    anyhow::ensure!(!entries.is_empty(), "trace is empty");
+    entries.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    Ok(entries
+        .iter()
+        .enumerate()
+        .map(|(id, e)| {
+            Request::new(
+                id,
+                e.conversation.unwrap_or(id),
+                e.round.unwrap_or(0),
+                e.prompt.max(1),
+                e.output.max(1),
+                e.arrival,
+            )
+        })
+        .collect())
 }
 
 /// Save a request table as a JSONL trace.
@@ -113,7 +122,7 @@ mod tests {
     }
 
     #[test]
-    fn sorts_by_arrival() {
+    fn sorts_by_arrival_and_reindexes_ids() {
         let dir = TempDir::new().unwrap();
         let path = dir.path().join("trace.jsonl");
         std::fs::write(
@@ -125,6 +134,33 @@ mod tests {
         let reqs = load_trace(&path).unwrap();
         assert_eq!(reqs[0].prompt_len, 20);
         assert_eq!(reqs[1].prompt_len, 10);
+        // regression: ids must equal table positions even when the
+        // trace file is not arrival-sorted — the driver indexes its
+        // request table by id, so a stale pre-sort id dispatched one
+        // request at another's arrival time
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i, "ids must be reassigned after sorting");
+        }
+        // distinct defaulted conversation keys follow the new ids
+        assert_ne!(reqs[0].conversation, reqs[1].conversation);
+    }
+
+    #[test]
+    fn explicit_conversation_keys_survive_reordering() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("conv.jsonl");
+        std::fs::write(
+            &path,
+            "{\"arrival\": 5.0, \"prompt\": 10, \"output\": 10, \"conversation\": 3, \"round\": 1}\n\
+             {\"arrival\": 1.0, \"prompt\": 20, \"output\": 20, \"conversation\": 3, \"round\": 0}\n",
+        )
+        .unwrap();
+        let reqs = load_trace(&path).unwrap();
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[1].id, 1);
+        assert_eq!(reqs[0].conversation, 3, "explicit grouping preserved");
+        assert_eq!(reqs[1].conversation, 3);
+        assert_eq!((reqs[0].round, reqs[1].round), (0, 1));
     }
 
     #[test]

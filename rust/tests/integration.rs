@@ -248,7 +248,7 @@ fn trace_replay_reproduces_generated_workload() {
     let dir = tokensim::util::TempDir::new().unwrap();
     let path = dir.path().join("w.jsonl");
     let cfg = base_cfg(60, 10.0);
-    let requests = cfg.workload.generate();
+    let requests = cfg.workload.generate().unwrap();
     tokensim::workload::save_trace(&path, &requests).unwrap();
     let replayed = tokensim::workload::load_trace(&path).unwrap();
 
@@ -259,6 +259,121 @@ fn trace_replay_reproduces_generated_workload() {
         MetricSet::new(&replay.records).latency_percentile(0.9),
     );
     assert!((a - b).abs() < 1e-9, "replay diverged: {a} vs {b}");
+}
+
+#[test]
+fn trace_generator_replays_a_saved_trace_end_to_end() {
+    // the full loop through the workload registry: archive a synthetic
+    // workload, select `generator: trace` in the config, and get the
+    // same serving behaviour back
+    use tokensim::workload::WorkloadSpecV2;
+    let dir = tokensim::util::TempDir::new().unwrap();
+    let path = dir.path().join("archived.jsonl");
+    let base = base_cfg(60, 10.0);
+    tokensim::workload::save_trace(&path, &base.workload.generate().unwrap()).unwrap();
+
+    let mut replay_cfg = base.clone();
+    replay_cfg.workload = WorkloadSpecV2::new("trace").with("path", path.to_str().unwrap());
+    let direct = Simulation::from_config(&base).unwrap().run();
+    let replay = Simulation::from_config(&replay_cfg).unwrap().run();
+    assert_eq!(direct.records.len(), replay.records.len());
+    let (a, b) = (
+        MetricSet::new(&direct.records).latency_percentile(0.9),
+        MetricSet::new(&replay.records).latency_percentile(0.9),
+    );
+    assert!((a - b).abs() < 1e-9, "trace generator diverged: {a} vs {b}");
+}
+
+#[test]
+fn unsorted_trace_replays_with_consistent_ids() {
+    // regression: load_trace assigned ids in file order and then sorted
+    // by arrival, so an out-of-order trace dispatched request A at
+    // request B's arrival — and with `max_requests` truncation the
+    // driver indexed out of bounds
+    use tokensim::workload::WorkloadSpecV2;
+    let dir = tokensim::util::TempDir::new().unwrap();
+    let path = dir.path().join("unsorted.jsonl");
+    let mut lines = String::new();
+    for i in 0..20 {
+        lines.push_str(&format!(
+            "{{\"arrival\": {:.1}, \"prompt\": 32, \"output\": 8}}\n",
+            (20 - i) as f64 * 0.1
+        ));
+    }
+    std::fs::write(&path, lines).unwrap();
+    let mut cfg = base_cfg(1, 1.0);
+    cfg.workload = WorkloadSpecV2::new("trace")
+        .with("path", path.to_str().unwrap())
+        .with("max_requests", 10u32);
+    let requests = cfg.workload.generate().unwrap();
+    assert_eq!(requests.len(), 10);
+    for (i, r) in requests.iter().enumerate() {
+        assert_eq!(r.id, i, "ids must equal table positions");
+        assert!(i == 0 || requests[i - 1].arrival <= r.arrival);
+    }
+    let report = Simulation::from_config(&cfg).unwrap().run();
+    assert_eq!(report.records.len(), 10);
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_sequential() {
+    use tokensim::experiments::parallel_sweep;
+    let cfgs: Vec<SimulationConfig> = [4.0, 8.0, 16.0, 24.0]
+        .iter()
+        .map(|&qps| base_cfg(80, qps))
+        .collect();
+    let seq: Vec<_> = cfgs
+        .iter()
+        .map(|c| Simulation::from_config(c).unwrap().run())
+        .collect();
+    let par = parallel_sweep(&cfgs, |c| Simulation::from_config(c).unwrap().run());
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.records, b.records, "sweep must be bit-deterministic");
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.pool_hits, b.pool_hits);
+    }
+}
+
+#[test]
+fn multi_tenant_generator_from_yaml_reports_per_tenant() {
+    let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+workload:
+  generator: multi_tenant
+  seed: 5
+  tenants:
+    - name: chat
+      num_requests: 60
+      qps: 6.0
+      ttft: 5.0
+      mtpot: 0.5
+    - name: batch
+      num_requests: 30
+      qps: 2.0
+      prompt_len:
+        fixed: 512
+      output_len:
+        fixed: 128
+"#;
+    use tokensim::workload::WorkloadGenerator as _;
+    let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+    let report = Simulation::from_config(&cfg).unwrap().run();
+    assert_eq!(report.records.len(), 90);
+    assert!(report.records.iter().all(|r| r.tenant.is_some()));
+    let slos = cfg.workload.build().unwrap().tenant_slos();
+    let breakdown = report.metrics().tenant_breakdown(&slos);
+    assert_eq!(breakdown.len(), 2);
+    let chat = breakdown.iter().find(|t| t.tenant == "chat").unwrap();
+    assert_eq!(chat.requests, 60);
+    assert!(chat.slo_attainment.is_some());
+    let batch = breakdown.iter().find(|t| t.tenant == "batch").unwrap();
+    assert_eq!(batch.requests, 30);
+    assert_eq!(batch.slo_attainment, None, "no SLO configured for batch");
 }
 
 #[test]
@@ -307,13 +422,13 @@ fn every_example_config_parses_and_runs() {
         let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(
             report.records.len(),
-            cfg.workload.num_requests,
+            cfg.workload.generate().unwrap().len(),
             "{}",
             path.display()
         );
         seen += 1;
     }
-    assert!(seen >= 9, "expected the documented example configs, saw {seen}");
+    assert!(seen >= 12, "expected the documented example configs, saw {seen}");
 }
 
 #[test]

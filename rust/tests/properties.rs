@@ -432,7 +432,7 @@ fn random_cfg(seed: u64) -> SimulationConfig {
 fn prop_every_request_finishes_exactly_once() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
-        let n = cfg.workload.num_requests;
+        let n = cfg.workload.generate().unwrap().len();
         let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(report.records.len(), n, "seed {seed}");
         let mut ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
@@ -446,7 +446,7 @@ fn prop_every_request_finishes_exactly_once() {
 fn prop_causality_and_token_accounting() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
-        let requests = cfg.workload.generate();
+        let requests = cfg.workload.generate().unwrap();
         let report = Simulation::from_config(&cfg).unwrap().run();
         for (rec, req) in report.records.iter().zip(&requests) {
             assert_eq!(rec.prompt_len, req.prompt_len, "seed {seed}");
@@ -478,10 +478,10 @@ fn prop_higher_load_never_reduces_makespan() {
     // system cannot finish *later* at lower load than at absurd load
     for seed in SEEDS.step_by(5) {
         let mut cfg = random_cfg(seed);
-        cfg.workload.arrival = ArrivalProcess::Uniform;
-        cfg.workload.qps = 2.0;
+        // override the synthetic generator's params through the spec map
+        cfg.workload = cfg.workload.clone().with("arrival", "uniform").with("qps", 2.0);
         let slow = Simulation::from_config(&cfg).unwrap().run();
-        cfg.workload.qps = 2000.0;
+        cfg.workload = cfg.workload.clone().with("qps", 2000.0);
         let fast = Simulation::from_config(&cfg).unwrap().run();
         // same total work, arrivals compressed => completion not later
         assert!(
