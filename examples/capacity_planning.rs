@@ -68,7 +68,7 @@ fn main() {
                 7,
                 wl.clone().with_qps(qps),
             );
-            cfg.cost_model = CostModelKind::Table;
+            cfg.compute = ComputeSpec::new("table");
             cfg
         };
         let goodput = max_goodput(&build);

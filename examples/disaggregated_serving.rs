@@ -31,7 +31,7 @@ fn main() {
     // unified: every GPU does both phases
     let mut unified = SimulationConfig::single_worker(model.clone(), a100.clone(), workload.clone());
     unified.cluster.workers[0].quantity = 8;
-    unified.cost_model = CostModelKind::Table;
+    unified.compute = ComputeSpec::new("table");
     simulate("unified x8", &unified);
 
     // disaggregated splits over NVLink
@@ -44,7 +44,7 @@ fn main() {
             nd,
             workload.clone(),
         );
-        cfg.cost_model = CostModelKind::Table;
+        cfg.compute = ComputeSpec::new("table");
         simulate(&format!("disaggregated P{np}-D{nd}"), &cfg);
     }
 
@@ -59,7 +59,7 @@ fn main() {
             6,
             workload.clone(),
         );
-        cfg.cost_model = CostModelKind::Table;
+        cfg.compute = ComputeSpec::new("table");
         let name = link.name.clone();
         cfg.cluster.scheduler.interconnect = link;
         simulate(&format!("  over {name}"), &cfg);

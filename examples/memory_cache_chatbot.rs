@@ -36,7 +36,7 @@ fn main() {
             hw.clone(),
             WorkloadSpec::fixed(1, 1.0, 8, 8), // unused stub for conversations
         );
-        cfg.cost_model = CostModelKind::Table;
+        cfg.compute = ComputeSpec::new("table");
         cfg.pool_cache = pool;
         let report = Simulation::from_conversations(&cfg, &convs).expect("valid config").run();
         let m = report.metrics();

@@ -18,7 +18,7 @@ fn main() {
     // Use the AOT-compiled JAX/Pallas cost artifact when built
     // (`make artifacts`); it degrades to the bit-compatible analytic
     // mirror automatically otherwise.
-    cfg.cost_model = CostModelKind::Table;
+    cfg.compute = ComputeSpec::new("table");
     cfg.sample_period = 0.5;
 
     // 3. Run to completion.

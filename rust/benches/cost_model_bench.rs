@@ -9,7 +9,7 @@ mod harness;
 
 use harness::{bench, budget, sink};
 use tokensim::baselines::{LlmServingSimLike, VidurLike};
-use tokensim::compute::{AnalyticCost, BatchDesc, ComputeModel, HloCost, TableCost};
+use tokensim::compute::{AnalyticCost, BatchDesc, ComputeModel, HloCost, RooflineCost, TableCost};
 use tokensim::hardware::HardwareSpec;
 use tokensim::model::ModelSpec;
 use tokensim::oracle::{OracleCost, OracleParams};
@@ -38,6 +38,11 @@ fn main() {
     let mut table = TableCost::build(&mut probe, &model, &hw);
     bench("cost/table_extracted", budget(), || {
         sink(table.iter_time(&batch));
+    });
+
+    let mut roofline = RooflineCost::new(&model, &hw);
+    bench("cost/roofline_aggregate", budget(), || {
+        sink(roofline.iter_time(&batch));
     });
 
     let dir = tokensim::runtime::default_artifacts_dir();

@@ -10,28 +10,28 @@ use std::time::Instant;
 
 use harness::{bench, budget, sink};
 use tokensim::cluster::Simulation;
-use tokensim::compute::CostModelKind;
+use tokensim::compute::ComputeSpec;
 use tokensim::config::SimulationConfig;
 use tokensim::hardware::HardwareSpec;
 use tokensim::model::ModelSpec;
 use tokensim::workload::WorkloadSpec;
 
-fn cfg(n: usize, kind: CostModelKind) -> SimulationConfig {
+fn cfg(n: usize, compute: &ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
         WorkloadSpec::sharegpt(n, 16.0),
     );
-    cfg.cost_model = kind;
+    cfg.compute = compute.clone();
     cfg
 }
 
 fn main() {
     println!("== end_to_end_bench ==");
 
-    for kind in [CostModelKind::Analytic, CostModelKind::Table] {
-        let c = cfg(500, kind);
-        bench(&format!("e2e/500_sharegpt_requests_{kind:?}"), budget(), || {
+    for name in ["analytic", "table", "roofline"] {
+        let c = cfg(500, &ComputeSpec::new(name));
+        bench(&format!("e2e/500_sharegpt_requests_{name}"), budget(), || {
             sink(Simulation::from_config(&c).expect("valid config").run().records.len());
         });
     }
@@ -40,8 +40,8 @@ fn main() {
         .join("manifest.json")
         .exists()
     {
-        let c = cfg(200, CostModelKind::Hlo);
-        bench("e2e/200_sharegpt_requests_Hlo", budget(), || {
+        let c = cfg(200, &ComputeSpec::new("hlo"));
+        bench("e2e/200_sharegpt_requests_hlo", budget(), || {
             sink(Simulation::from_config(&c).expect("valid config").run().records.len());
         });
     }
@@ -55,13 +55,13 @@ fn main() {
         6,
         WorkloadSpec::sharegpt(500, 40.0),
     );
-    disagg.cost_model = CostModelKind::Table;
+    disagg.compute = ComputeSpec::new("table");
     bench("e2e/500_requests_disaggregated_2p6d", budget(), || {
         sink(Simulation::from_config(&disagg).expect("valid config").run().records.len());
     });
 
     // the headline scale: Fig 9's 50k-request workload, one shot
-    let big = cfg(50_000, CostModelKind::Table);
+    let big = cfg(50_000, &ComputeSpec::new("table"));
     let t0 = Instant::now();
     let report = Simulation::from_config(&big).expect("valid config").run();
     let wall = t0.elapsed().as_secs_f64();

@@ -3,7 +3,13 @@
 //! max iterations, reports mean / p50 / p99 per-op latency and
 //! throughput. Used by every `cargo bench` target via `#[path]` module
 //! inclusion.
+//!
+//! Set `TOKENSIM_BENCH_JSON=<path>` to additionally append one JSON
+//! line per case (`{"name", "iters", "mean_ns", "p50_ns", "p99_ns",
+//! "per_sec"}`) — CI collects these into the `BENCH_ci.json` artifact
+//! so the perf trajectory is machine-readable across commits.
 
+use std::io::Write as _;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -57,7 +63,34 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult 
         fmt_ns(result.p99_ns),
         result.per_sec(),
     );
+    emit_json(&result);
     result
+}
+
+/// Append the result as one JSON line to `TOKENSIM_BENCH_JSON` (no-op
+/// when unset). Append mode lets every bench binary write into the same
+/// artifact file.
+fn emit_json(r: &BenchResult) {
+    let Ok(path) = std::env::var("TOKENSIM_BENCH_JSON") else {
+        return;
+    };
+    let line = format!(
+        "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"per_sec\":{:.3}}}\n",
+        r.name.replace('"', "'"),
+        r.iters,
+        r.mean_ns,
+        r.p50_ns,
+        r.p99_ns,
+        r.per_sec(),
+    );
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| f.write_all(line.as_bytes()));
+    if let Err(e) = appended {
+        eprintln!("warning: TOKENSIM_BENCH_JSON={path}: {e}");
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {

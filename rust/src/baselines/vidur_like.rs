@@ -35,10 +35,12 @@ fn features(batch: &BatchDesc) -> [f64; NUM_FEATURES] {
 
 /// One randomized regression tree (CART on a bootstrap sample with
 /// random feature subsets — the random-forest recipe).
+#[derive(Clone)]
 struct Tree {
     nodes: Vec<Node>,
 }
 
+#[derive(Clone)]
 enum Node {
     Leaf(f64),
     Split {
@@ -145,7 +147,10 @@ impl Tree {
     }
 }
 
-/// Vidur-like learned cost model.
+/// Vidur-like learned cost model. `Clone` is cheap relative to
+/// training, which lets the compute registry cache one trained forest
+/// per (model, hardware, samples, seed) and hand each worker a copy.
+#[derive(Clone)]
 pub struct VidurLike {
     trees: Vec<Tree>,
     /// Simulated pre-training wall-clock (Fig 6's shaded region).

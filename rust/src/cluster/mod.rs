@@ -10,7 +10,7 @@ pub use worker::{Worker, WorkerRole};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::compute::{build_cost_model, ComputeModel};
+use crate::compute::{ComputeCtx, ComputeModel};
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
 use crate::memory::{AllocOutcome, Granularity, PoolCache};
@@ -161,7 +161,18 @@ impl Simulation {
                     .with_context(|| format!("worker {id}: building memory manager"))?;
                 let cost = match factory {
                     Some(f) => f(&model, &hw, id),
-                    None => build_cost_model(cfg.cost_model, &model, &hw, &cfg.artifacts_dir),
+                    None => {
+                        // per-worker override beats the cluster-wide
+                        // selection (heterogeneous clusters)
+                        let spec = wc.compute.as_ref().unwrap_or(&cfg.compute);
+                        spec.build(&ComputeCtx {
+                            model: &model,
+                            hw: &hw,
+                            artifacts_dir: &cfg.artifacts_dir,
+                            worker: id,
+                        })
+                        .with_context(|| format!("worker {id}: building compute model"))?
+                    }
                 };
                 // every worker gets its own policy instance (policies
                 // may keep cross-iteration state)
@@ -706,7 +717,7 @@ impl Simulation {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::CostModelKind;
+    use crate::compute::ComputeSpec;
     use crate::hardware::HardwareSpec;
     use crate::memory::MemorySpec;
     use crate::workload::WorkloadSpec;
@@ -717,7 +728,7 @@ mod tests {
             HardwareSpec::a100_80g(),
             WorkloadSpec::fixed(n, qps, 128, 16),
         );
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         cfg
     }
 
@@ -733,7 +744,7 @@ mod tests {
             WorkloadSpec::fixed(20, 50.0, 256, 128),
         );
         cfg.cluster.workers[0].memory = memory;
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         cfg
     }
 
@@ -764,6 +775,36 @@ mod tests {
     }
 
     #[test]
+    fn bad_compute_model_is_a_build_error_not_a_panic() {
+        let mut cfg = quick_cfg(10, 1.0);
+        cfg.compute = ComputeSpec::new("quantum");
+        let err = Simulation::from_config(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown compute model"));
+    }
+
+    #[test]
+    fn per_worker_compute_overrides_build_heterogeneous_clusters() {
+        // A100 prefill under the analytic mirror, V100 decode under the
+        // roofline model — the hetero_pd.yaml shape, programmatically
+        let mut cfg = SimulationConfig::disaggregated(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            1,
+            HardwareSpec::v100_32g(),
+            1,
+            WorkloadSpec::fixed(30, 6.0, 64, 32),
+        );
+        cfg.compute = ComputeSpec::new("analytic");
+        cfg.cluster.workers[1].compute = Some(ComputeSpec::new("roofline"));
+        let report = Simulation::from_config(&cfg).unwrap().run();
+        assert_eq!(report.records.len(), 30);
+        assert!(report.workers[0].compute.starts_with("analytic["));
+        assert!(report.workers[1].compute.starts_with("roofline["));
+        assert_eq!(report.workers[1].hardware, "V100");
+        assert!(report.workers.iter().all(|w| w.iterations > 0));
+    }
+
+    #[test]
     fn ttft_increases_under_overload() {
         let light = Simulation::from_config(&quick_cfg(100, 2.0)).unwrap().run();
         let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).unwrap().run();
@@ -787,7 +828,7 @@ mod tests {
             1,
             WorkloadSpec::fixed(40, 8.0, 64, 64),
         );
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         let report = Simulation::from_config(&cfg).unwrap().run();
         assert_eq!(report.records.len(), 40);
         // prefill worker must have run prefill iterations, decode worker

@@ -2,6 +2,7 @@
 
 use crate::memory::{Granularity, PoolCache, SwapStats};
 use crate::metrics::{MemoryTimeline, MetricSet, RequestRecord, SloSpec};
+use crate::util::json::Json;
 
 use super::worker::Worker;
 
@@ -12,6 +13,9 @@ pub struct WorkerStats {
     pub hardware: String,
     /// Registry name of the worker's memory manager.
     pub manager: String,
+    /// Name of the worker's compute model (heterogeneous clusters run
+    /// different models per worker).
+    pub compute: String,
     pub iterations: u64,
     pub busy_time: f64,
     pub utilization: f64,
@@ -66,6 +70,7 @@ impl SimulationReport {
                 id: w.id,
                 hardware: w.hw.name.clone(),
                 manager: w.mem.name().to_string(),
+                compute: w.cost.name().to_string(),
                 iterations: w.iterations,
                 busy_time: w.busy_time,
                 utilization: if makespan > 0.0 {
@@ -148,6 +153,71 @@ impl SimulationReport {
         self.pool_hits as f64 / lookups as f64
     }
 
+    /// Deterministic JSON rendering of the report (`tokensim run
+    /// --json`). Contains every *simulated* quantity and deliberately
+    /// omits wall-clock fields, so two runs of the same config — at any
+    /// sweep thread count — must serialize byte-for-byte identically;
+    /// the CI determinism gate diffs exactly this output.
+    pub fn to_json(&self) -> Json {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("conversation", Json::num(r.conversation as f64)),
+                    ("round", Json::num(r.round as f64)),
+                    (
+                        "tenant",
+                        r.tenant.as_deref().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("prompt_len", Json::num(r.prompt_len)),
+                    ("output_len", Json::num(r.output_len)),
+                    ("cached_prefix", Json::num(r.cached_prefix)),
+                    ("arrival", Json::num(r.arrival)),
+                    ("first_token", Json::num(r.first_token)),
+                    ("finished", Json::num(r.finished)),
+                    ("max_token_gap", Json::num(r.max_token_gap)),
+                    ("preemptions", Json::num(r.preemptions)),
+                    ("swaps", Json::num(r.swaps)),
+                    ("recomputed_tokens", Json::num(r.recomputed_tokens as f64)),
+                ])
+            })
+            .collect();
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("id", Json::num(w.id as f64)),
+                    ("hardware", Json::str(&w.hardware)),
+                    ("manager", Json::str(&w.manager)),
+                    ("compute", Json::str(&w.compute)),
+                    ("iterations", Json::num(w.iterations as f64)),
+                    ("busy_time", Json::num(w.busy_time)),
+                    ("preemption_frees", Json::num(w.preemption_frees as f64)),
+                    ("total_blocks", Json::num(w.total_blocks as f64)),
+                    ("swap_outs", Json::num(w.swap.swap_outs as f64)),
+                    ("swap_ins", Json::num(w.swap.swap_ins as f64)),
+                ])
+            })
+            .collect();
+        let m = self.metrics();
+        Json::obj(vec![
+            ("records", Json::Arr(records)),
+            ("workers", Json::Arr(workers)),
+            ("makespan", Json::num(self.makespan)),
+            ("sim_end", Json::num(self.sim_end)),
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("request_throughput", Json::num(m.request_throughput())),
+            ("token_throughput", Json::num(m.token_throughput())),
+            ("slo_attainment", Json::num(self.slo_attainment())),
+            ("pool_hits", Json::num(self.pool_hits as f64)),
+            ("pool_misses", Json::num(self.pool_misses as f64)),
+            ("pool_evictions", Json::num(self.pool_evictions as f64)),
+        ])
+    }
+
     /// Pretty one-paragraph summary for CLI output.
     pub fn summary(&self) -> String {
         let m = self.metrics();
@@ -214,5 +284,28 @@ mod tests {
         assert!((report.slo_attainment() - 1.0).abs() < 1e-12);
         assert_eq!(report.swap_totals(), SwapStats::default());
         assert_eq!(report.pool_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_rendering_ignores_wall_clock() {
+        // two runs of the same simulation differ only in wall_time; the
+        // JSON the determinism gate diffs must not see that
+        let mk = |wall: f64| {
+            SimulationReport::assemble(
+                vec![rec(0, 0.0, 2.0), rec(1, 1.0, 3.0)],
+                MemoryTimeline::default(),
+                &[],
+                &PoolCache::disabled(),
+                SloSpec::paper_default(),
+                3.0,
+                100,
+                wall,
+            )
+        };
+        let a = mk(0.017).to_json().to_string();
+        let b = mk(12.9).to_json().to_string();
+        assert_eq!(a, b, "wall clock leaked into the JSON report");
+        assert!(a.contains("\"records\""));
+        assert!(!a.contains("wall"));
     }
 }

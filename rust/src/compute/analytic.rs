@@ -174,6 +174,10 @@ impl ComputeModel for AnalyticCost {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn as_probe(&mut self) -> Option<&mut dyn super::CostProbe> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -160,6 +160,10 @@ impl ComputeModel for HloCost {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn as_probe(&mut self) -> Option<&mut dyn super::CostProbe> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -10,19 +10,34 @@
 //! * [`AnalyticCost`] — bit-compatible pure-rust mirror of the artifact
 //!   semantics (`python/compile/kernels/ref.py`); the fallback when
 //!   artifacts are absent and the cross-validation comparator.
-//! * [`TableCost`] — interpolated lookup table built by sampling another
-//!   model at startup; the §Perf optimization of the hot path.
+//! * [`TableCost`] — coefficient table extracted by probing another
+//!   model at startup; the §Perf optimization of the hot path,
+//!   registered as a composable layer (`table` over any probe-able
+//!   base).
+//! * [`RooflineCost`] — a single `max(FLOPs/peak, bytes/bw)` per
+//!   iteration; the cheap-and-cheerful reference point.
 //! * Oracle / baseline models live in [`crate::oracle`] and
-//!   [`crate::baselines`].
+//!   [`crate::baselines`] and are registered here as `oracle`,
+//!   `vidur_like` and `llmservingsim_like`.
+//!
+//! Models are selected by registry name ([`ComputeSpec`], YAML
+//! `compute: {model: …}`) — see [`registry`]; [`register_compute`] adds
+//! new simulators at runtime.
 
 pub(crate) mod analytic;
 mod hlo;
+pub mod registry;
+mod roofline;
 mod table;
 
 pub use analytic::{AnalyticCost, ATTN_GATHER_EFF};
 pub use hlo::HloCost;
+pub use registry::{
+    build_compute, compute_models, register_compute, ComputeCtx, ComputeEntry, ComputeSpec,
+    COMPUTE_MODELS,
+};
+pub use roofline::RooflineCost;
 pub use table::{CostProbe, TableCost};
-
 
 use crate::hardware::HardwareSpec;
 use crate::model::ModelSpec;
@@ -116,9 +131,18 @@ pub trait ComputeModel {
     fn setup_cost(&self) -> f64 {
         0.0
     }
+
+    /// Linear-probe hook: models whose per-op costs are affine in the
+    /// batch aggregates return `Some(self)` so the `table` accelerator
+    /// layer can extract their coefficients. Default: not probe-able.
+    fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
+        None
+    }
 }
 
-/// Which cost model a simulation config selects.
+/// The pre-registry closed cost-model selector, kept for API
+/// compatibility. [`ComputeSpec`] replaces it in configs; it converts
+/// losslessly (`ComputeSpec::from(kind)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum CostModelKind {
     /// PJRT-executed AOT artifact (fall back to analytic if missing).
@@ -126,27 +150,13 @@ pub enum CostModelKind {
     Hlo,
     /// Pure-rust mirror of the artifact semantics.
     Analytic,
-    /// Interpolated table sampled from the HLO artifact (perf path).
+    /// Coefficient table extracted from the HLO artifact (perf path).
     Table,
 }
 
-thread_local! {
-    /// Extracted-table cache keyed by (model, hardware) parameter
-    /// vectors: probing the artifact costs ~10 PJRT executions, and SLO
-    /// sweeps construct hundreds of simulations per (model, hw) pair.
-    #[allow(clippy::type_complexity)]
-    static TABLES: std::cell::RefCell<
-        std::collections::HashMap<([u32; 8], [u64; 6]), TableCost>,
-    > = std::cell::RefCell::new(std::collections::HashMap::new());
-}
-
-fn table_cache_key(model: &ModelSpec, hw: &HardwareSpec) -> ([u32; 8], [u64; 6]) {
-    let m = model.to_vec().map(|v| v.to_bits());
-    let h = hw.to_vec().map(|v| (v as f64).to_bits());
-    (m, h)
-}
-
-/// Construct the configured cost model for a (model, hardware) pair.
+/// Construct the configured cost model for a (model, hardware) pair —
+/// the pre-registry entry point, now a thin shim over the compute
+/// registry.
 ///
 /// `Hlo` and `Table` gracefully degrade to [`AnalyticCost`] when the
 /// artifacts directory is missing (e.g. in unit tests), with a warning —
@@ -157,40 +167,26 @@ pub fn build_cost_model(
     hw: &HardwareSpec,
     artifacts_dir: &str,
 ) -> Box<dyn ComputeModel> {
-    match kind {
-        CostModelKind::Analytic => Box::new(AnalyticCost::new(model, hw)),
-        CostModelKind::Hlo => match HloCost::load(model, hw, artifacts_dir) {
-            Ok(m) => Box::new(m),
-            Err(e) => {
-                warn_once(&format!(
-                    "HLO cost artifact unavailable ({e}); using analytic mirror"
-                ));
-                Box::new(AnalyticCost::new(model, hw))
-            }
-        },
-        CostModelKind::Table => {
-            let key = table_cache_key(model, hw);
-            let cached = TABLES.with(|c| c.borrow().get(&key).cloned());
-            if let Some(t) = cached {
-                return Box::new(t);
-            }
-            let table = match HloCost::load(model, hw, artifacts_dir) {
-                Ok(mut m) => TableCost::build(&mut m, model, hw),
-                Err(e) => {
-                    warn_once(&format!(
-                        "HLO cost artifact unavailable ({e}); table over analytic"
-                    ));
-                    let mut probe = AnalyticCost::new(model, hw);
-                    TableCost::build(&mut probe, model, hw)
-                }
-            };
-            TABLES.with(|c| c.borrow_mut().insert(key, table.clone()));
-            Box::new(table)
+    let ctx = ComputeCtx {
+        model,
+        hw,
+        artifacts_dir,
+        worker: 0,
+    };
+    match ComputeSpec::from(kind).build(&ctx) {
+        Ok(m) => m,
+        // unreachable for the unshadowed built-ins (they take no
+        // parameters and cannot fail), but a library user may shadow
+        // a built-in name with a fallible builder via
+        // `register_compute` — degrade gracefully instead of panicking
+        Err(e) => {
+            eprintln!("warning: building {kind:?} cost model failed ({e:#}); using analytic mirror");
+            Box::new(AnalyticCost::new(model, hw))
         }
     }
 }
 
-fn warn_once(msg: &str) {
+pub(crate) fn warn_once(msg: &str) {
     use std::sync::atomic::{AtomicBool, Ordering};
     static WARNED: AtomicBool = AtomicBool::new(false);
     if !WARNED.swap(true, Ordering::Relaxed) {

@@ -1,0 +1,747 @@
+//! String-keyed compute-model registry — the fourth plugin subsystem,
+//! mirroring [`crate::scheduler::registry`], [`crate::memory::registry`]
+//! and [`crate::workload::registry`]. This completes the paper's Fig 1:
+//! "the architecture supports diverse compute simulators".
+//!
+//! A cost model is selected by name — from YAML (`compute: {model: …}`,
+//! or per worker) or programmatically via [`ComputeSpec`] — and built
+//! from its parameter map by a registered constructor. The cluster
+//! driver only ever sees `Box<dyn ComputeModel>`, so plugging in a new
+//! compute simulator never touches `cluster/mod.rs`: implement the
+//! trait, then either add a [`ComputeEntry`] to the built-in table or
+//! call [`register_compute`] at startup.
+//!
+//! `table` is registered as a *composable accelerator layer*, not a
+//! hard-wired special case: `compute: {model: table, base: analytic}`
+//! probes any base model exposing
+//! [`ComputeModel::as_probe`](super::ComputeModel::as_probe) and
+//! replaces its hot path with the extracted coefficient table.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::{LlmServingSimLike, VidurLike};
+use crate::config::yaml::Yaml;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::oracle::{OracleCost, OracleParams};
+
+use super::{
+    warn_once, AnalyticCost, ComputeModel, CostModelKind, HloCost, RooflineCost, TableCost,
+};
+
+/// Context a compute model is built against: the served model, the
+/// worker's hardware, where HLO artifacts live, and the worker index
+/// (diversifies the RNG streams of stochastic models like `oracle`).
+pub struct ComputeCtx<'a> {
+    pub model: &'a ModelSpec,
+    pub hw: &'a HardwareSpec,
+    /// Artifacts directory ("" = auto-discover).
+    pub artifacts_dir: &'a str,
+    pub worker: usize,
+}
+
+impl<'a> ComputeCtx<'a> {
+    /// A context with default artifact discovery for worker 0.
+    pub fn new(model: &'a ModelSpec, hw: &'a HardwareSpec) -> Self {
+        Self {
+            model,
+            hw,
+            artifacts_dir: "",
+            worker: 0,
+        }
+    }
+}
+
+/// A declarative, cloneable compute-model selection: a registry name
+/// plus a parameter map (the YAML subtree, or a programmatically built
+/// map). This is what configs store — the built `Box<dyn ComputeModel>`
+/// is neither cloneable nor comparable, and every worker needs its own
+/// instance built for its own hardware.
+///
+/// The closed `CostModelKind` enum it replaces converts losslessly
+/// (`ComputeSpec::from(CostModelKind::Table)`), so pre-registry call
+/// sites keep working through [`super::build_cost_model`].
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::compute::{ComputeCtx, ComputeSpec};
+/// use tokensim::hardware::HardwareSpec;
+/// use tokensim::model::ModelSpec;
+///
+/// let model = ModelSpec::llama2_7b();
+/// let hw = HardwareSpec::a100_80g();
+/// let spec = ComputeSpec::new("table").with("base", "analytic");
+/// let cost = spec.build(&ComputeCtx::new(&model, &hw)).unwrap();
+/// assert!(cost.name().starts_with("table["));
+///
+/// // unknown names are errors listing the known models
+/// assert!(ComputeSpec::new("quantum").validate().is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeSpec {
+    /// Registry name (case-insensitive; aliases accepted).
+    pub name: String,
+    /// Model parameters (a [`Yaml::Map`]).
+    pub params: Yaml,
+}
+
+impl Default for ComputeSpec {
+    /// The default model: `hlo` (PJRT artifact, analytic fallback).
+    fn default() -> Self {
+        Self::new("hlo")
+    }
+}
+
+impl ComputeSpec {
+    /// A spec with no parameters (registry defaults apply).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Yaml::Map(Default::default()),
+        }
+    }
+
+    /// Builder-style parameter.
+    pub fn with(mut self, key: &str, value: impl Into<Yaml>) -> Self {
+        if let Yaml::Map(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
+
+    /// Parse from a YAML map of the form `{model: <name>, <params>…}`,
+    /// or a bare name string. A map without a `model` key selects `hlo`
+    /// (the pre-registry default).
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        if let Some(name) = y.as_str() {
+            // `compute: analytic` — scalar shorthand, no parameters
+            return Ok(Self::new(name));
+        }
+        let name = match y.get("model") {
+            None => "hlo".to_string(),
+            Some(v) => v
+                .as_str()
+                .context("'model' must be a string (a compute-model name)")?
+                .to_string(),
+        };
+        Ok(Self {
+            name,
+            params: y.clone(),
+        })
+    }
+
+    /// Build the model this spec names for the given (model, hardware)
+    /// pair.
+    pub fn build(&self, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+        build_compute(self, ctx)
+    }
+
+    /// Check the spec without sizing it for real hardware: unknown
+    /// names, typo'd parameter keys and malformed values are errors at
+    /// parse time, not mid-simulation.
+    pub fn validate(&self) -> Result<()> {
+        let model = ModelSpec::tiny_test();
+        let hw = HardwareSpec::a100_80g();
+        self.build(&ComputeCtx::new(&model, &hw)).map(|_| ())
+    }
+}
+
+impl From<CostModelKind> for ComputeSpec {
+    /// Lossless conversion from the pre-registry enum: `Table` keeps
+    /// its hard-wired meaning (a table layered over `hlo`).
+    fn from(kind: CostModelKind) -> Self {
+        match kind {
+            CostModelKind::Hlo => Self::new("hlo"),
+            CostModelKind::Analytic => Self::new("analytic"),
+            CostModelKind::Table => Self::new("table"),
+        }
+    }
+}
+
+/// A built-in compute model: name, aliases, summary, parameter keys,
+/// constructor.
+pub struct ComputeEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `tokensim list`).
+    pub summary: &'static str,
+    /// Accepted parameter keys — anything else in the spec is an error
+    /// (catches typo'd keys at parse time).
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml, &ComputeCtx) -> Result<Box<dyn ComputeModel>>,
+}
+
+// Strict optional accessors: a *missing* key takes the default, but a
+// present-and-malformed value is an error rather than a silent default.
+
+fn opt_u64_strict(p: &Yaml, key: &str, default: u64) -> Result<u64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn opt_f64_strict(p: &Yaml, key: &str, default: f64) -> Result<f64> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number")),
+    }
+}
+
+/// Per-worker seed mix, shared with the experiment harness's oracle
+/// cost factory so registry-built and factory-built oracle workers
+/// draw identical noise streams.
+pub fn worker_seed(seed: u64, worker: usize) -> u64 {
+    seed ^ (worker as u64).wrapping_mul(0x9E37_79B9)
+}
+
+fn build_hlo(_p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    match HloCost::load(ctx.model, ctx.hw, ctx.artifacts_dir) {
+        Ok(m) => Ok(Box::new(m)),
+        Err(e) => {
+            warn_once(&format!(
+                "HLO cost artifact unavailable ({e}); using analytic mirror"
+            ));
+            Ok(Box::new(AnalyticCost::new(ctx.model, ctx.hw)))
+        }
+    }
+}
+
+fn build_analytic(_p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    Ok(Box::new(AnalyticCost::new(ctx.model, ctx.hw)))
+}
+
+fn build_roofline(_p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    Ok(Box::new(RooflineCost::new(ctx.model, ctx.hw)))
+}
+
+thread_local! {
+    /// Extracted-table cache keyed by (base model name, model vector,
+    /// hardware vector): probing costs ~10 base-model executions, and
+    /// SLO sweeps construct hundreds of simulations per (model, hw)
+    /// pair.
+    #[allow(clippy::type_complexity)]
+    static TABLES: RefCell<HashMap<(String, [u32; 8], [u64; 6]), TableCost>> =
+        RefCell::new(HashMap::new());
+
+    /// Trained-forest cache for `vidur_like` (training profiles the
+    /// oracle on ~1.5k batches; SLO searches rebuild workers per probe).
+    #[allow(clippy::type_complexity)]
+    static FORESTS: RefCell<HashMap<([u32; 8], [u64; 6], u64, u64), VidurLike>> =
+        RefCell::new(HashMap::new());
+}
+
+fn hw_key(model: &ModelSpec, hw: &HardwareSpec) -> ([u32; 8], [u64; 6]) {
+    let m = model.to_vec().map(|v| v.to_bits());
+    let h = hw.to_vec().map(|v| (v as f64).to_bits());
+    (m, h)
+}
+
+fn build_table(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    let base_name = match p.get("base") {
+        None => "hlo",
+        Some(v) => v
+            .as_str()
+            .context("'base' must be a string (a compute-model name)")?,
+    };
+    // resolve the base exactly like build_compute: runtime-registered
+    // models shadow built-ins, so a user's probe-able model works as a
+    // table base too. Only immutable built-in bases are table-cached —
+    // a registered name can be re-registered (latest wins), so a cached
+    // extraction could silently serve the *previous* model's physics.
+    let (canonical, build, cacheable): (String, DynBuild, bool) = match find_extra(base_name) {
+        Some(build) => (base_name.to_ascii_lowercase(), build, false),
+        None => {
+            let entry = find_builtin(base_name).with_context(|| {
+                format!(
+                    "unknown table base '{base_name}' (probe-able built-ins: hlo, analytic, \
+                     roofline; runtime-registered models also accepted)"
+                )
+            })?;
+            if entry.name == "table" {
+                bail!("'table' cannot layer over itself");
+            }
+            // a plain fn pointer already implements the Fn traits
+            let build: DynBuild = Arc::new(entry.build);
+            (entry.name.to_string(), build, true)
+        }
+    };
+    let (mk, hk) = hw_key(ctx.model, ctx.hw);
+    let key = (canonical.clone(), mk, hk);
+    if cacheable {
+        if let Some(t) = TABLES.with(|c| c.borrow().get(&key).cloned()) {
+            return Ok(Box::new(t));
+        }
+    }
+    // the base is built with its registry defaults (a probe-able model
+    // is deterministic, so there is nothing else to configure)
+    let mut base = (*build)(&Yaml::Map(Default::default()), ctx)
+        .with_context(|| format!("building table base '{canonical}'"))?;
+    let Some(probe) = base.as_probe() else {
+        bail!(
+            "compute model '{canonical}' exposes no linear-probe hook; 'table' can only \
+             accelerate probe-able models (built-ins: hlo, analytic, roofline)"
+        )
+    };
+    let table = TableCost::build(probe, ctx.model, ctx.hw);
+    if cacheable {
+        TABLES.with(|c| c.borrow_mut().insert(key, table.clone()));
+    }
+    Ok(Box::new(table))
+}
+
+fn build_oracle(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    let mut params = match p.get("preset") {
+        None => OracleParams::vllm(),
+        Some(v) => match v.as_str() {
+            Some("vllm") => OracleParams::vllm(),
+            Some("distserve") => OracleParams::distserve(),
+            Some(other) => bail!("unknown oracle preset '{other}' (known: vllm, distserve)"),
+            None => bail!("'preset' must be a string (vllm or distserve)"),
+        },
+    };
+    params.noise_sigma = opt_f64_strict(p, "noise_sigma", params.noise_sigma)?;
+    let seed = worker_seed(opt_u64_strict(p, "seed", 0)?, ctx.worker);
+    Ok(Box::new(OracleCost::new(ctx.model, ctx.hw, params, seed)))
+}
+
+fn build_vidur_like(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    let samples = opt_u64_strict(p, "samples", 1500)?;
+    let seed = opt_u64_strict(p, "seed", 42)?;
+    let (mk, hk) = hw_key(ctx.model, ctx.hw);
+    let key = (mk, hk, samples, seed);
+    if let Some(v) = FORESTS.with(|c| c.borrow().get(&key).cloned()) {
+        return Ok(Box::new(v));
+    }
+    let forest = VidurLike::train(ctx.model, ctx.hw, samples as usize, seed);
+    FORESTS.with(|c| c.borrow_mut().insert(key, forest.clone()));
+    Ok(Box::new(forest))
+}
+
+fn build_llmservingsim_like(_p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    Ok(Box::new(LlmServingSimLike::new(ctx.model, ctx.hw)))
+}
+
+/// Built-in compute models.
+pub const COMPUTE_MODELS: &[ComputeEntry] = &[
+    ComputeEntry {
+        name: "hlo",
+        aliases: &["pjrt", "artifact"],
+        summary: "PJRT-executed AOT cost artifact (falls back to analytic when absent)",
+        params: &[],
+        build: build_hlo,
+    },
+    ComputeEntry {
+        name: "analytic",
+        aliases: &["mirror", "ref"],
+        summary: "pure-rust mirror of the artifact semantics (bit-compatible)",
+        params: &[],
+        build: build_analytic,
+    },
+    ComputeEntry {
+        name: "table",
+        aliases: &["extracted", "fast"],
+        summary: "coefficient table extracted from a probe-able base model (perf path)",
+        params: &["base"],
+        build: build_table,
+    },
+    ComputeEntry {
+        name: "roofline",
+        aliases: &["napkin"],
+        summary: "single max(FLOPs/peak, bytes/bw) per iteration, no per-op breakdown",
+        params: &[],
+        build: build_roofline,
+    },
+    ComputeEntry {
+        name: "oracle",
+        aliases: &["reference"],
+        summary: "high-fidelity reference executor (GEMM ramp, noise; the 'real system')",
+        params: &["preset", "noise_sigma", "seed"],
+        build: build_oracle,
+    },
+    ComputeEntry {
+        name: "vidur_like",
+        aliases: &["vidur", "forest"],
+        summary: "Vidur-style learned regression (oracle-profiled random forest, ~400s setup)",
+        params: &["samples", "seed"],
+        build: build_vidur_like,
+    },
+    ComputeEntry {
+        name: "llmservingsim_like",
+        aliases: &["llmservingsim", "cosim"],
+        summary: "LLMServingSim-style tile-walking co-simulation (slow, short prompts only)",
+        params: &[],
+        build: build_llmservingsim_like,
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime registration (library users; built-ins live in the table)
+// ---------------------------------------------------------------------------
+
+/// Runtime builders live behind `Arc` so lookups can clone the handle
+/// and release the registry lock *before* invoking the builder — a
+/// builder is then free to compose other models by name (the pattern
+/// the built-in `table` layer demonstrates) or even register more
+/// models without deadlocking on the non-reentrant mutex.
+type DynBuild = Arc<dyn Fn(&Yaml, &ComputeCtx) -> Result<Box<dyn ComputeModel>> + Send + Sync>;
+
+struct DynComputeEntry {
+    name: String,
+    summary: String,
+    build: DynBuild,
+}
+
+fn extra_computes() -> &'static Mutex<Vec<DynComputeEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynComputeEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Clone the newest runtime-registered builder for `name`, holding the
+/// registry lock only for the lookup.
+fn find_extra(name: &str) -> Option<DynBuild> {
+    let extras = extra_computes().lock().unwrap();
+    extras
+        .iter()
+        .rev()
+        .find(|e| name.eq_ignore_ascii_case(&e.name))
+        .map(|e| Arc::clone(&e.build))
+}
+
+/// Register a compute model at runtime. Registered names take
+/// precedence over built-ins, so a library user can also shadow a
+/// built-in model.
+///
+/// # Examples
+///
+/// A "bring your own compute simulator" flow — any [`ComputeModel`]
+/// implementation becomes selectable by name, including from YAML:
+///
+/// ```
+/// use tokensim::compute::{register_compute, BatchDesc, ComputeCtx, ComputeModel, ComputeSpec};
+/// use tokensim::hardware::HardwareSpec;
+/// use tokensim::model::ModelSpec;
+///
+/// /// Fixed 1 ms per iteration (demo).
+/// struct FlatMillisecond;
+///
+/// impl ComputeModel for FlatMillisecond {
+///     fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+///         if batch.is_empty() { 0.0 } else { 1e-3 }
+///     }
+///     fn name(&self) -> &str { "flat_ms" }
+/// }
+///
+/// register_compute("flat_ms", "1 ms per iteration (demo)", |_params, _ctx| {
+///     Ok(Box::new(FlatMillisecond))
+/// });
+///
+/// let model = ModelSpec::tiny_test();
+/// let hw = HardwareSpec::a100_80g();
+/// let cost = ComputeSpec::new("flat_ms").build(&ComputeCtx::new(&model, &hw)).unwrap();
+/// assert_eq!(cost.name(), "flat_ms");
+/// ```
+pub fn register_compute(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml, &ComputeCtx) -> Result<Box<dyn ComputeModel>> + Send + Sync + 'static,
+) {
+    extra_computes().lock().unwrap().push(DynComputeEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Arc::new(build),
+    });
+}
+
+fn matches_name(candidate: &str, name: &str, aliases: &[&str]) -> bool {
+    candidate.eq_ignore_ascii_case(name)
+        || aliases.iter().any(|a| candidate.eq_ignore_ascii_case(a))
+}
+
+fn find_builtin(name: &str) -> Option<&'static ComputeEntry> {
+    COMPUTE_MODELS
+        .iter()
+        .find(|e| matches_name(name, e.name, e.aliases))
+}
+
+/// Reject typo'd parameter keys for built-in models ("model" itself is
+/// the selector key YAML specs carry). Runtime-registered models
+/// validate their own params in their builder.
+fn check_param_keys(spec: &ComputeSpec, known: &[&str]) -> Result<()> {
+    if let Yaml::Map(m) = &spec.params {
+        for key in m.keys() {
+            if key != "model" && !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown parameter '{key}' for compute model '{}' (accepted: {})",
+                    spec.name,
+                    if known.is_empty() {
+                        "none".to_string()
+                    } else {
+                        known.join(", ")
+                    }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a compute model from a spec. Unknown names list the known
+/// models in the error.
+pub fn build_compute(spec: &ComputeSpec, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    // the registry lock is released before the builder runs (see
+    // [`DynBuild`]), so builders may recursively build by name
+    if let Some(build) = find_extra(&spec.name) {
+        return (*build)(&spec.params, ctx)
+            .with_context(|| format!("building compute model '{}'", spec.name));
+    }
+    let entry = find_builtin(&spec.name).with_context(|| {
+        format!(
+            "unknown compute model '{}' (known: {})",
+            spec.name,
+            compute_models()
+                .iter()
+                .map(|(n, _, _)| n.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params, ctx)
+        .with_context(|| format!("building compute model '{}'", spec.name))
+}
+
+/// All registered compute models as `(name, summary, accepted-params)`,
+/// built-ins first.
+pub fn compute_models() -> Vec<(String, String, String)> {
+    let mut out: Vec<(String, String, String)> = COMPUTE_MODELS
+        .iter()
+        .map(|e| {
+            (
+                e.name.to_string(),
+                e.summary.to_string(),
+                if e.params.is_empty() {
+                    "(none)".to_string()
+                } else {
+                    e.params.join(", ")
+                },
+            )
+        })
+        .collect();
+    for e in extra_computes().lock().unwrap().iter() {
+        out.push((e.name.clone(), e.summary.clone(), "(model-defined)".to_string()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_parts() -> (ModelSpec, HardwareSpec) {
+        (ModelSpec::llama2_7b(), HardwareSpec::a100_80g())
+    }
+
+    fn decode(n: usize, ctx_len: u32) -> crate::compute::BatchDesc {
+        let mut b = crate::compute::BatchDesc::new();
+        for _ in 0..n {
+            b.push(ctx_len, 1);
+        }
+        b
+    }
+
+    #[test]
+    fn builds_every_builtin_model() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        for e in COMPUTE_MODELS {
+            // keep the smoke test fast: a small forest is still a forest
+            let spec = if e.name == "vidur_like" {
+                ComputeSpec::new(e.name).with("samples", 200u64)
+            } else {
+                ComputeSpec::new(e.name)
+            };
+            let mut m = spec
+                .build(&ctx)
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.name));
+            assert!(m.iter_time(&decode(4, 64)) > 0.0, "{} must cost time", e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        for (alias, expect_prefix) in [
+            ("Mirror", "analytic["),
+            ("NAPKIN", "roofline["),
+            ("cosim", "llmservingsim-like["),
+            ("reference", "oracle"),
+        ] {
+            let m = ComputeSpec::new(alias).build(&ctx).unwrap();
+            assert!(
+                m.name().starts_with(expect_prefix),
+                "{alias} -> {}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_listing_known() {
+        let err = ComputeSpec::new("quantum").validate().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown compute model"), "{msg}");
+        assert!(msg.contains("vidur_like"), "{msg}");
+    }
+
+    #[test]
+    fn typod_or_malformed_params_are_errors() {
+        let err = ComputeSpec::new("oracle")
+            .with("noise_sgima", 0.0)
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'noise_sgima'"));
+        let err = ComputeSpec::new("oracle")
+            .with("preset", "tgi")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown oracle preset"));
+        let err = ComputeSpec::new("analytic")
+            .with("base", "hlo")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'base'"));
+    }
+
+    #[test]
+    fn table_layers_over_probeable_bases_only() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        for base in ["analytic", "roofline", "hlo"] {
+            let m = ComputeSpec::new("table").with("base", base).build(&ctx);
+            assert!(m.is_ok(), "table over {base}: {:?}", m.err());
+        }
+        let err = ComputeSpec::new("table")
+            .with("base", "vidur_like")
+            .build(&ctx)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no linear-probe hook"), "{err:#}");
+        let err = ComputeSpec::new("table")
+            .with("base", "table")
+            .build(&ctx)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cannot layer over itself"));
+    }
+
+    #[test]
+    fn table_over_roofline_reconstructs_it_exactly() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        let mut table = ComputeSpec::new("table")
+            .with("base", "roofline")
+            .build(&ctx)
+            .unwrap();
+        let mut base = ComputeSpec::new("roofline").build(&ctx).unwrap();
+        for batch in [decode(16, 512), decode(200, 2048), {
+            let mut b = crate::compute::BatchDesc::new();
+            b.push(0, 777);
+            b.push(123, 1);
+            b
+        }] {
+            let tt = table.iter_time(&batch);
+            let tb = base.iter_time(&batch);
+            assert!(((tt - tb) / tb).abs() < 1e-6, "{tt} vs {tb}");
+        }
+    }
+
+    #[test]
+    fn cost_model_kind_converts_losslessly() {
+        assert_eq!(ComputeSpec::from(CostModelKind::Hlo), ComputeSpec::new("hlo"));
+        assert_eq!(
+            ComputeSpec::from(CostModelKind::Analytic),
+            ComputeSpec::new("analytic")
+        );
+        assert_eq!(
+            ComputeSpec::from(CostModelKind::Table),
+            ComputeSpec::new("table")
+        );
+        assert_eq!(ComputeSpec::default(), CostModelKind::default().into());
+    }
+
+    #[test]
+    fn oracle_seeds_diversify_per_worker_but_stay_deterministic() {
+        let (model, hw) = ctx_parts();
+        let spec = ComputeSpec::new("oracle");
+        let build = |worker: usize| {
+            let ctx = ComputeCtx {
+                model: &model,
+                hw: &hw,
+                artifacts_dir: "",
+                worker,
+            };
+            spec.build(&ctx).unwrap()
+        };
+        let batch = decode(8, 256);
+        let (mut a, mut b, mut c) = (build(0), build(0), build(1));
+        let ta = a.iter_time(&batch);
+        assert_eq!(ta, b.iter_time(&batch), "same worker, same stream");
+        assert_ne!(ta, c.iter_time(&batch), "workers draw distinct noise");
+    }
+
+    #[test]
+    fn runtime_builders_can_compose_other_models_by_name() {
+        // regression: the registry lock used to be held across builder
+        // invocation, so a builder that built its base by name — the
+        // composition pattern `table` demonstrates — deadlocked
+        register_compute("test_composed_analytic", "composition demo", |_p, ctx| {
+            ComputeSpec::new("analytic").build(ctx)
+        });
+        let (model, hw) = ctx_parts();
+        let m = ComputeSpec::new("test_composed_analytic")
+            .build(&ComputeCtx::new(&model, &hw))
+            .unwrap();
+        assert!(m.name().starts_with("analytic["));
+    }
+
+    #[test]
+    fn table_layers_over_runtime_registered_probeable_bases() {
+        // a user's registered model that exposes the probe hook is a
+        // valid `base:`, exactly as the module docs promise
+        register_compute("test_probeable_base", "registered roofline", |_p, ctx| {
+            Ok(Box::new(RooflineCost::new(ctx.model, ctx.hw)))
+        });
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        let mut table = ComputeSpec::new("table")
+            .with("base", "test_probeable_base")
+            .build(&ctx)
+            .unwrap();
+        let mut base = ComputeSpec::new("roofline").build(&ctx).unwrap();
+        let b = decode(8, 128);
+        let (tt, tb) = (table.iter_time(&b), base.iter_time(&b));
+        assert!(((tt - tb) / tb).abs() < 1e-6, "{tt} vs {tb}");
+    }
+
+    #[test]
+    fn runtime_registration_shadows_builtins() {
+        register_compute("test_shadow_analytic", "test", build_analytic);
+        let (model, hw) = ctx_parts();
+        let m = ComputeSpec::new("test_shadow_analytic")
+            .build(&ComputeCtx::new(&model, &hw))
+            .unwrap();
+        assert!(m.name().starts_with("analytic["));
+        assert!(compute_models()
+            .iter()
+            .any(|(n, _, _)| n == "test_shadow_analytic"));
+    }
+}

@@ -1,0 +1,200 @@
+//! The cheap-and-cheerful reference point: one `max(FLOPs/peak,
+//! bytes/bw)` roofline over whole-iteration aggregates — no per-op
+//! breakdown, no per-layer walk, no artifact.
+//!
+//! The iteration's total FLOP and byte counts are *affine* in the batch
+//! aggregates `T = Σ new`, `R = #active`, `A = Σ new·(ctx+new)`,
+//! `S = Σ (ctx+new)` (the same structure [`super::TableCost`] exploits),
+//! so the whole model is seven coefficients fixed at construction. It is
+//! deliberately coarser than [`super::AnalyticCost`]: no per-operator
+//! launch overheads (one fused `op_overhead` per iteration), no
+//! attention-gather inefficiency, no TP all-reduce term — the honest
+//! lower bound a napkin calculation gives, useful as the sanity anchor
+//! in cross-model sweeps (`tokensim exp hardware`).
+
+use super::{BatchDesc, ComputeModel, CostProbe, NUM_OPS};
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+
+/// Pure iteration-level roofline cost model.
+#[derive(Debug, Clone)]
+pub struct RooflineCost {
+    name: String,
+    /// FLOPs = `flop_t`·T + `flop_a`·A + `flop_r`·R.
+    flop_t: f64,
+    flop_a: f64,
+    flop_r: f64,
+    /// Bytes = `byte_k` + `byte_t`·T + `byte_s`·S.
+    byte_k: f64,
+    byte_t: f64,
+    byte_s: f64,
+    peak: f64,
+    bw: f64,
+    op_oh: f64,
+    iter_oh: f64,
+}
+
+impl RooflineCost {
+    pub fn new(model: &ModelSpec, hw: &HardwareSpec) -> Self {
+        let h = model.hidden as f64;
+        let h_kv = h * model.kv_heads as f64 / model.heads as f64;
+        let ffn = model.ffn as f64;
+        let vocab = model.vocab as f64;
+        let dtype = model.dtype_bytes as f64;
+        let tp = model.tp as f64;
+        let layers = model.layers as f64;
+
+        // per-layer GEMMs (qkv, out, gate+up, down) per new token
+        let gemm_flops_per_tok = (2.0 * h * (h + 2.0 * h_kv)
+            + 2.0 * h * h
+            + 4.0 * h * ffn
+            + 2.0 * ffn * h)
+            / tp;
+        // per-layer weight reads (the decode-side bandwidth floor)
+        let weight_bytes = (h * (h + 2.0 * h_kv) + h * h + 2.0 * h * ffn + ffn * h) * dtype / tp;
+
+        Self {
+            name: format!("roofline[{}/{}]", model.name, hw.name),
+            flop_t: layers * gemm_flops_per_tok,
+            flop_a: layers * 4.0 * h / tp,
+            flop_r: 2.0 * h * vocab / tp,
+            byte_k: layers * weight_bytes + h * vocab * dtype / tp,
+            byte_t: dtype * (h + layers * 2.0 * (h + ffn) / tp),
+            byte_s: layers * 2.0 * h_kv * dtype / tp,
+            peak: hw.achievable_flops(),
+            bw: hw.mem_bw,
+            op_oh: hw.op_overhead,
+            iter_oh: hw.iter_overhead,
+        }
+    }
+
+    /// `(T, R, A, S)` batch aggregates over active slots.
+    fn aggregates(batch: &BatchDesc) -> (f64, f64, f64, f64) {
+        let (mut t, mut r, mut a, mut s) = (0.0, 0.0, 0.0, 0.0);
+        for i in 0..batch.len() {
+            let n = batch.new[i] as f64;
+            if n > 0.0 {
+                let c = batch.ctx[i] as f64;
+                t += n;
+                r += 1.0;
+                a += n * (c + n);
+                s += c + n;
+            }
+        }
+        (t, r, a, s)
+    }
+
+    /// Total iteration FLOPs and bytes for a batch.
+    fn totals(&self, batch: &BatchDesc) -> Option<(f64, f64)> {
+        let (t, r, a, s) = Self::aggregates(batch);
+        if t == 0.0 {
+            return None;
+        }
+        Some((
+            self.flop_t * t + self.flop_a * a + self.flop_r * r,
+            self.byte_k + self.byte_t * t + self.byte_s * s,
+        ))
+    }
+}
+
+impl ComputeModel for RooflineCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        match self.totals(batch) {
+            None => 0.0,
+            Some((flops, bytes)) => {
+                (flops / self.peak).max(bytes / self.bw) + self.op_oh + self.iter_oh
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
+        Some(self)
+    }
+}
+
+impl CostProbe for RooflineCost {
+    /// The whole iteration reported as a single per-iteration op (slot
+    /// 0), so a [`super::TableCost`] extracted from this probe
+    /// reconstructs the model exactly.
+    fn probe_op_times(&mut self, batch: &BatchDesc, hw_vec: [f32; 6]) -> [f64; NUM_OPS] {
+        let mut ops = [0.0f64; NUM_OPS];
+        if let Some((flops, bytes)) = self.totals(batch) {
+            ops[0] = (flops / hw_vec[0] as f64).max(bytes / hw_vec[1] as f64) + hw_vec[2] as f64;
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::AnalyticCost;
+
+    fn setup() -> RooflineCost {
+        RooflineCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g())
+    }
+
+    fn decode(n: usize, ctx: u32) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        for _ in 0..n {
+            b.push(ctx, 1);
+        }
+        b
+    }
+
+    #[test]
+    fn empty_batch_free() {
+        let mut m = setup();
+        assert_eq!(m.iter_time(&BatchDesc::new()), 0.0);
+    }
+
+    #[test]
+    fn decode_floor_is_the_weight_read() {
+        // single-token decode: bytes ≈ weights (13.5 GB) / 2.039 TB/s
+        let mut m = setup();
+        let t = m.iter_time(&decode(1, 128));
+        assert!((0.005..0.02).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn tracks_analytic_within_a_factor() {
+        // coarser, but the same physics: within 2x of the mirror on
+        // representative batches
+        let mut r = setup();
+        let mut a = AnalyticCost::new(&ModelSpec::llama2_7b(), &HardwareSpec::a100_80g());
+        for batch in [decode(32, 512), decode(128, 1024), {
+            let mut b = BatchDesc::new();
+            b.push(0, 1024);
+            b
+        }] {
+            let tr = r.iter_time(&batch);
+            let ta = a.iter_time(&batch);
+            let ratio = tr / ta;
+            assert!((0.3..2.0).contains(&ratio), "ratio={ratio} on {batch:?}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_every_aggregate() {
+        let mut m = setup();
+        assert!(m.iter_time(&decode(2, 512)) > m.iter_time(&decode(1, 512)));
+        assert!(m.iter_time(&decode(8, 2048)) > m.iter_time(&decode(8, 512)));
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_decode_is_not() {
+        let model = ModelSpec::llama2_7b();
+        let a100 = HardwareSpec::a100_80g();
+        let mut base = RooflineCost::new(&model, &a100);
+        let mut fast_fl = RooflineCost::new(&model, &a100.scale_compute(2.0));
+        let mut prefill = BatchDesc::new();
+        prefill.push(0, 2048);
+        assert!(fast_fl.iter_time(&prefill) < 0.62 * base.iter_time(&prefill));
+        let d = decode(4, 256);
+        assert!(fast_fl.iter_time(&d) > 0.95 * base.iter_time(&d));
+    }
+}

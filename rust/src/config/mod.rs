@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::compute::CostModelKind;
+use crate::compute::ComputeSpec;
 use crate::hardware::{HardwareSpec, LinkSpec};
 use crate::memory::MemorySpec;
 use crate::metrics::SloSpec;
@@ -33,6 +33,13 @@ pub struct WorkerConfig {
     /// KV memory manager, selected by registry name (see
     /// [`crate::memory::registry`] and docs/CONFIG.md).
     pub memory: MemorySpec,
+    /// Per-worker compute-model override (see
+    /// [`crate::compute::registry`]); `None` inherits the simulation's
+    /// top-level `compute` selection. Together with per-worker
+    /// `hardware` this is what makes heterogeneous clusters (A100
+    /// prefill / V100 decode, each under its own cost model)
+    /// expressible in YAML.
+    pub compute: Option<ComputeSpec>,
 }
 
 impl WorkerConfig {
@@ -44,6 +51,7 @@ impl WorkerConfig {
             run_decode: true,
             local_scheduler: PolicySpec::local_default(),
             memory: MemorySpec::default(),
+            compute: None,
         }
     }
 
@@ -70,6 +78,15 @@ impl WorkerConfig {
         // fail at parse time, not mid-simulation, on unknown managers
         // or bad parameters
         memory.validate().context("in 'memory'")?;
+        let compute = match y.get("compute") {
+            Some(c) => {
+                let spec = ComputeSpec::from_yaml(c)?;
+                // fail at parse time on unknown models or bad parameters
+                spec.validate().context("in worker 'compute'")?;
+                Some(spec)
+            }
+            None => None,
+        };
         Ok(Self {
             hardware,
             quantity: y.opt_u32("quantity", 1),
@@ -77,6 +94,7 @@ impl WorkerConfig {
             run_decode: y.opt_bool("run_decode", true),
             local_scheduler,
             memory,
+            compute,
         })
     }
 }
@@ -164,7 +182,12 @@ pub struct SimulationConfig {
     /// [`WorkloadSpec`](crate::workload::WorkloadSpec) converts via
     /// `Into` (the `synthetic` generator).
     pub workload: WorkloadSpecV2,
-    pub cost_model: CostModelKind,
+    /// Cluster-wide compute-model selection (see
+    /// [`crate::compute::registry`] and docs/CONFIG.md); workers may
+    /// override it individually. A plain
+    /// [`CostModelKind`](crate::compute::CostModelKind) converts via
+    /// `Into`.
+    pub compute: ComputeSpec,
     /// Artifacts directory ("" = auto-discover).
     pub artifacts_dir: String,
     pub slo: SloSpec,
@@ -190,7 +213,7 @@ impl SimulationConfig {
                 scheduler: SchedulerConfig::default(),
             },
             workload: workload.into(),
-            cost_model: CostModelKind::default(),
+            compute: ComputeSpec::default(),
             artifacts_dir: String::new(),
             slo: SloSpec::paper_default(),
             pool_cache: None,
@@ -218,7 +241,7 @@ impl SimulationConfig {
                 scheduler: SchedulerConfig::default(),
             },
             workload: workload.into(),
-            cost_model: CostModelKind::default(),
+            compute: ComputeSpec::default(),
             artifacts_dir: String::new(),
             slo: SloSpec::paper_default(),
             pool_cache: None,
@@ -309,16 +332,26 @@ impl SimulationConfig {
         let workload = WorkloadSpecV2::from_yaml(y.req("workload")?)?;
         workload.validate().context("in 'workload'")?;
 
+        // the `compute:` section selects from the compute registry; the
+        // pre-registry scalar `cost_model: <name>` keeps working and now
+        // accepts any registered name
+        let compute = match (y.get("compute"), y.get("cost_model")) {
+            (Some(c), _) => ComputeSpec::from_yaml(c)?,
+            (None, Some(k)) => ComputeSpec::new(
+                k.as_str()
+                    .context("'cost_model' must be a string (a compute-model name)")?,
+            ),
+            (None, None) => ComputeSpec::default(),
+        };
+        // fail at parse time, not mid-simulation, on unknown models or
+        // bad parameters
+        compute.validate().context("in 'compute'")?;
+
         Ok(Self {
             model,
             cluster: ClusterConfig { workers, scheduler },
             workload,
-            cost_model: match y.get("cost_model").and_then(Yaml::as_str) {
-                None | Some("hlo") => CostModelKind::Hlo,
-                Some("analytic") => CostModelKind::Analytic,
-                Some("table") => CostModelKind::Table,
-                Some(other) => bail!("unknown cost model '{other}'"),
-            },
+            compute,
             artifacts_dir: y
                 .get("artifacts_dir")
                 .and_then(Yaml::as_str)
@@ -451,7 +484,8 @@ workload:
         assert!(cfg.cluster.workers[0].run_prefill);
         assert_eq!(cfg.slo, SloSpec::paper_default());
         assert!(cfg.pool_cache.is_none());
-        assert_eq!(cfg.cost_model, CostModelKind::Hlo);
+        assert_eq!(cfg.compute, ComputeSpec::new("hlo"));
+        assert!(cfg.cluster.workers[0].compute.is_none());
     }
 
     #[test]
@@ -607,6 +641,52 @@ workload:
         assert_eq!(cfg.slo.mtpot, Some(0.25));
         assert_eq!(cfg.pool_cache.unwrap().capacity_blocks, 5000);
         assert_eq!(cfg.sample_period, 0.5);
-        assert_eq!(cfg.cost_model, CostModelKind::Table);
+        assert_eq!(cfg.compute, ComputeSpec::new("table"));
+    }
+
+    #[test]
+    fn compute_section_and_per_worker_overrides() {
+        let yaml = r#"
+model: tiny
+cluster:
+  workers:
+    - hardware: A100
+      compute:
+        model: table
+        base: analytic
+    - hardware: V100
+      compute:
+        model: roofline
+workload:
+  num_requests: 10
+  qps: 1.0
+  prompt_len:
+    fixed: 8
+  output_len:
+    fixed: 8
+compute:
+  model: analytic
+"#;
+        let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(cfg.compute.name, "analytic");
+        let w0 = cfg.cluster.workers[0].compute.as_ref().unwrap();
+        assert_eq!(w0.name, "table");
+        assert_eq!(w0.params.get("base").and_then(Yaml::as_str), Some("analytic"));
+        assert_eq!(cfg.cluster.workers[1].compute.as_ref().unwrap().name, "roofline");
+    }
+
+    #[test]
+    fn unknown_compute_model_is_a_parse_error() {
+        let yaml = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\ncompute:\n  model: quantum\n";
+        let err = SimulationConfig::from_yaml_str(yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown compute model"), "{err:#}");
+        // legacy scalar key routes through the same registry
+        let legacy = yaml.replace("compute:\n  model: quantum", "cost_model: quantum");
+        let err = SimulationConfig::from_yaml_str(&legacy).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown compute model"), "{err:#}");
+        // typo'd parameter keys are parse errors too
+        let typo = yaml.replace("model: quantum", "model: table\n  bse: analytic");
+        let err = SimulationConfig::from_yaml_str(&typo).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'bse'"), "{err:#}");
     }
 }

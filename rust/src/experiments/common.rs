@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::cluster::{Simulation, SimulationReport};
-use crate::compute::CostModelKind;
+use crate::compute::ComputeSpec;
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
 use crate::model::ModelSpec;
@@ -21,8 +21,9 @@ pub struct ExpOpts {
     pub quick: bool,
     /// Where to also write the report text.
     pub out_dir: Option<PathBuf>,
-    /// Cost model for the TokenSim side of comparisons.
-    pub cost_model: CostModelKind,
+    /// Compute model for the TokenSim side of comparisons (any
+    /// registered name — see [`crate::compute::registry`]).
+    pub compute: ComputeSpec,
 }
 
 impl ExpOpts {
@@ -30,7 +31,7 @@ impl ExpOpts {
         Self {
             quick: false,
             out_dir: None,
-            cost_model: CostModelKind::Table,
+            compute: ComputeSpec::new("table"),
         }
     }
 
@@ -40,7 +41,7 @@ impl ExpOpts {
             out_dir: None,
             // quick paths avoid artifact loading so unit tests run
             // without `make artifacts`
-            cost_model: CostModelKind::Analytic,
+            compute: ComputeSpec::new("analytic"),
         }
     }
 
@@ -158,7 +159,9 @@ pub fn run_tokensim(cfg: &SimulationConfig) -> SimulationReport {
 }
 
 /// Run the oracle ("real system") on the same workload/cluster: same
-/// driver, oracle cost model, per-worker noise streams.
+/// driver, oracle cost model, per-worker noise streams (the same
+/// [`worker_seed`](crate::compute::registry::worker_seed) mix the
+/// registry's `oracle` entry uses, so both paths draw identical noise).
 pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> SimulationReport {
     let params = params.clone();
     let factory = move |model: &ModelSpec, hw: &HardwareSpec, worker: usize| {
@@ -166,7 +169,7 @@ pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> S
             model,
             hw,
             params.clone(),
-            seed ^ (worker as u64).wrapping_mul(0x9E37_79B9),
+            crate::compute::registry::worker_seed(seed, worker),
         )) as Box<dyn crate::compute::ComputeModel>
     };
     Simulation::with_cost_factory(cfg, &factory)
@@ -331,7 +334,7 @@ mod tests {
                     HardwareSpec::a100_80g(),
                     WorkloadSpec::fixed(40, qps, 64, 16),
                 );
-                cfg.cost_model = CostModelKind::Analytic;
+                cfg.compute = ComputeSpec::new("analytic");
                 cfg
             })
             .collect();
@@ -367,7 +370,7 @@ mod tests {
                 HardwareSpec::a100_80g(),
                 WorkloadSpec::fixed(60, qps, 64, 16),
             );
-            cfg.cost_model = CostModelKind::Analytic;
+            cfg.compute = ComputeSpec::new("analytic");
             cfg
         };
         let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0);

@@ -34,7 +34,7 @@ fn stress_cfg(
     n: usize,
     qps: f64,
     memory: MemorySpec,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut workload = WorkloadSpec::sharegpt(n, qps);
     workload.prompt_len = LengthDistribution::LogNormal {
@@ -59,12 +59,12 @@ fn stress_cfg(
         workload,
     );
     cfg.cluster.workers[0].memory = memory;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
 /// Fig 14-style chatbot config with the prefix cache as a manager.
-fn chatbot_cfg(memory: MemorySpec, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn chatbot_cfg(memory: MemorySpec, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
@@ -72,7 +72,7 @@ fn chatbot_cfg(memory: MemorySpec, cost: crate::compute::CostModelKind) -> Simul
         WorkloadSpec::fixed(1, 1.0, 8, 8),
     );
     cfg.cluster.workers[0].memory = memory;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -101,7 +101,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         .collect();
     let reports = parallel_sweep(&grid, |&(manager, policy)| {
         let memory = MemorySpec::new(manager).with("preemption", policy);
-        run_tokensim(&stress_cfg(n, qps, memory, opts.cost_model))
+        run_tokensim(&stress_cfg(n, qps, memory, &opts.compute))
     });
     for (&(manager, policy), report) in grid.iter().zip(&reports) {
         let m = report.metrics();
@@ -130,7 +130,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         MemorySpec::new("prefix_cache").with("capacity_blocks", 2_000_000u64),
     ];
     let reports = parallel_sweep(&managers, |memory| {
-        Simulation::from_conversations(&chatbot_cfg(memory.clone(), opts.cost_model), &convs)
+        Simulation::from_conversations(&chatbot_cfg(memory.clone(), &opts.compute), &convs)
             .expect("experiment config must build")
             .run()
     });
@@ -162,14 +162,14 @@ mod tests {
 
     #[test]
     fn swap_preemption_strictly_reduces_reprefill_on_fig10_workload() {
-        let cost = ExpOpts::quick().cost_model;
+        let cost = ExpOpts::quick().compute;
         let recompute = run_tokensim(&stress_cfg(
             200,
             20.0,
             MemorySpec::new("swap").with("preemption", "recompute"),
-            cost,
+            &cost,
         ));
-        let swap = run_tokensim(&stress_cfg(200, 20.0, MemorySpec::new("swap"), cost));
+        let swap = run_tokensim(&stress_cfg(200, 20.0, MemorySpec::new("swap"), &cost));
         let (mr, ms) = (recompute.metrics(), swap.metrics());
         assert!(mr.total_preemptions() > 0, "workload must stress memory");
         assert!(ms.total_swaps() > 0);
@@ -183,10 +183,10 @@ mod tests {
 
     #[test]
     fn prefix_cache_reproduces_fig14_hit_behaviour_via_registry() {
-        let cost = ExpOpts::quick().cost_model;
+        let cost = ExpOpts::quick().compute;
         let convs = ConversationSpec::chatbot(200, 10.0, 128, 64).generate();
         let run = |memory: MemorySpec| {
-            Simulation::from_conversations(&chatbot_cfg(memory, cost), &convs)
+            Simulation::from_conversations(&chatbot_cfg(memory, &cost), &convs)
                 .unwrap()
                 .run()
         };

@@ -19,13 +19,13 @@ use crate::workload::{save_trace, WorkloadGenerator as _, WorkloadSpec, Workload
 
 use super::common::*;
 
-fn cfg(workload: WorkloadSpecV2, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn cfg(workload: WorkloadSpecV2, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
         workload,
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -88,7 +88,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // every scenario is an independent simulation: sweep across cores
     let cfgs: Vec<SimulationConfig> = roster
         .iter()
-        .map(|(_, spec)| cfg(spec.clone(), opts.cost_model))
+        .map(|(_, spec)| cfg(spec.clone(), &opts.compute))
         .collect();
     let reports = parallel_sweep(&cfgs, run_tokensim);
 
@@ -185,7 +185,7 @@ mod tests {
             roster
                 .iter()
                 .find(|(label, _)| *label == name)
-                .map(|(_, spec)| cfg(spec.clone(), opts.cost_model))
+                .map(|(_, spec)| cfg(spec.clone(), &opts.compute))
                 .unwrap()
         };
         let synth = run_tokensim(&get("synthetic"));

@@ -41,7 +41,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             HardwareSpec::a100_80g(),
             workload,
         );
-        base.cost_model = opts.cost_model;
+        base.compute = opts.compute.clone();
 
         // "real system": oracle at full fidelity
         let real = run_oracle(&base, &params, 0xF16_4);

@@ -63,7 +63,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             HardwareSpec::a100_80g(),
             workload,
         );
-        base.cost_model = opts.cost_model;
+        base.compute = opts.compute.clone();
         let real = run_oracle(&base, &params, 0xF16_5);
         let sim = run_tokensim(&calibrated_config(&base, &params));
         (real, sim)

@@ -17,13 +17,13 @@ use crate::workload::WorkloadSpec;
 
 use super::common::*;
 
-fn cfg(n: usize, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn cfg(n: usize, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
         WorkloadSpec::fixed(n, 40.0, 10, 10),
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -48,7 +48,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // parallel rows — each row's three measurements still share one
     // thread, preserving the within-row ranking the figure reports
     let time_row = |&n: &usize| {
-        let base = cfg(n, opts.cost_model);
+        let base = cfg(n, &opts.compute);
 
         let t0 = std::time::Instant::now();
         let _ = run_tokensim(&base);

@@ -16,7 +16,7 @@ use crate::workload::WorkloadSpec;
 
 use super::common::*;
 
-fn cfg(n: usize, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn cfg(n: usize, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::disaggregated(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
@@ -28,7 +28,7 @@ fn cfg(n: usize, cost: crate::compute::CostModelKind) -> SimulationConfig {
     // "we measure the actual communication bandwidth and use this data"
     cfg.cluster.scheduler.interconnect = crate::hardware::LinkSpec::nvlink()
         .with_measured_bandwidth(430e9);
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -43,7 +43,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mut table = Table::new(&["requests", "DistServe(s)", "TokenSim(s)", "err%"]);
     let mut pairs = Vec::new();
     for &n in counts {
-        let base = cfg(n, opts.cost_model);
+        let base = cfg(n, &opts.compute);
         let real = run_oracle(&base, &params, 0xD157);
         let sim = run_tokensim(&calibrated_config(&base, &params));
         let (tr, ts) = (total_runtime(&real), total_runtime(&sim));

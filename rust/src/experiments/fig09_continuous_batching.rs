@@ -16,7 +16,7 @@ fn cfg(
     n: usize,
     qps: f64,
     policy: PolicySpec,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
@@ -24,7 +24,7 @@ fn cfg(
         WorkloadSpec::sharegpt(n, qps),
     );
     cfg.cluster.workers[0].local_scheduler = policy;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -61,8 +61,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let cont_policy = PolicySpec::new("continuous")
             .with("max_batched_tokens", 8192u32)
             .with("max_batch_size", cap);
-        let s = run_tokensim(&cfg(n, qps, static_policy, opts.cost_model));
-        let c = run_tokensim(&cfg(n, qps, cont_policy, opts.cost_model));
+        let s = run_tokensim(&cfg(n, qps, static_policy, &opts.compute));
+        let c = run_tokensim(&cfg(n, qps, cont_policy, &opts.compute));
         (
             s.metrics().mean_normalized_latency(),
             c.metrics().mean_normalized_latency(),
@@ -103,7 +103,7 @@ mod tests {
             PolicySpec::new("static")
                 .with("batch_size", 8u32)
                 .with("max_linger", 2.0),
-            opts.cost_model,
+            &opts.compute,
         ));
         let c = run_tokensim(&cfg(
             n,
@@ -111,7 +111,7 @@ mod tests {
             PolicySpec::new("continuous")
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", 8u32),
-            opts.cost_model,
+            &opts.compute,
         ));
         assert!(
             c.metrics().mean_normalized_latency() < s.metrics().mean_normalized_latency(),
@@ -130,7 +130,7 @@ mod tests {
             PolicySpec::new("continuous")
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", 4u32),
-            opts.cost_model,
+            &opts.compute,
         ));
         let cinf = run_tokensim(&cfg(
             200,
@@ -138,7 +138,7 @@ mod tests {
             PolicySpec::new("continuous")
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", Option::<u32>::None),
-            opts.cost_model,
+            &opts.compute,
         ));
         assert!(
             cinf.metrics().mean_normalized_latency()

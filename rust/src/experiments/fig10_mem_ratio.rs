@@ -20,7 +20,7 @@ fn cfg(
     qps: f64,
     max_mem_ratio: f64,
     slo: SloSpec,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
@@ -35,7 +35,7 @@ fn cfg(
     );
     cfg.cluster.workers[0].memory = MemorySpec::default().with("max_mem_ratio", max_mem_ratio);
     cfg.slo = slo;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -63,7 +63,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let mut table = Table::new(&hdr);
         // independent (qps x ratio) cells: sweep across cores
         let goodputs = sweep_grid(rates, ratios, |&qps, &ratio| {
-            run_tokensim(&cfg(n, qps, ratio, slo, opts.cost_model)).slo_throughput()
+            run_tokensim(&cfg(n, qps, ratio, slo, &opts.compute)).slo_throughput()
         });
         for (&qps, row) in rates.iter().zip(&goodputs) {
             let mut cells = vec![f1(qps)];
@@ -88,8 +88,8 @@ mod tests {
     #[test]
     fn capping_ratio_reduces_preemptions() {
         let opts = ExpOpts::quick();
-        let full = run_tokensim(&cfg(250, 20.0, 1.0, SloSpec::paper_default(), opts.cost_model));
-        let capped = run_tokensim(&cfg(250, 20.0, 0.7, SloSpec::paper_default(), opts.cost_model));
+        let full = run_tokensim(&cfg(250, 20.0, 1.0, SloSpec::paper_default(), &opts.compute));
+        let capped = run_tokensim(&cfg(250, 20.0, 0.7, SloSpec::paper_default(), &opts.compute));
         assert!(
             capped.metrics().total_preemptions() <= full.metrics().total_preemptions(),
             "cap must not increase preemptions: {} vs {}",

@@ -21,7 +21,7 @@ pub(super) fn disagg_cfg(
     qps: f64,
     input_mean: u32,
     output_mean: u32,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::disaggregated(
         model.clone(),
@@ -31,7 +31,7 @@ pub(super) fn disagg_cfg(
         n_decode,
         WorkloadSpec::mean_lengths(n_req, qps, input_mean, output_mean),
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -42,7 +42,7 @@ pub(super) fn best_split(
     input_mean: u32,
     output_mean: u32,
     splits: &[(u32, u32)],
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> ((u32, u32), f64) {
     let mut best = ((0, 0), -1.0f64);
     for &(p, d) in splits {
@@ -77,7 +77,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         // every (input, output) cell runs its own SLO-throughput search
         // over all splits: sweep the cells across cores
         let cells = sweep_grid(inputs, outputs, |&input, &output| {
-            best_split(&model, n_req, input, output, splits, opts.cost_model)
+            best_split(&model, n_req, input, output, splits, &opts.compute)
         });
         for (&input, results) in inputs.iter().zip(&cells) {
             let mut row = vec![input.to_string()];
@@ -102,13 +102,13 @@ mod tests {
 
     #[test]
     fn long_outputs_prefer_fewer_prefill_devices() {
-        let cost = ExpOpts::quick().cost_model;
+        let cost = ExpOpts::quick().compute;
         let model = ModelSpec::llama2_7b();
         let splits = [(1u32, 7u32), (4, 4)];
         // decode-heavy workload: long outputs, short inputs
-        let ((p_long, _), _) = best_split(&model, 100, 64, 256, &splits, cost);
+        let ((p_long, _), _) = best_split(&model, 100, 64, 256, &splits, &cost);
         // prefill-heavy workload: long inputs, tiny outputs
-        let ((p_short, _), _) = best_split(&model, 100, 1024, 8, &splits, cost);
+        let ((p_short, _), _) = best_split(&model, 100, 1024, 8, &splits, &cost);
         assert!(p_long <= p_short, "long outputs got {p_long} prefill, short got {p_short}");
     }
 }

@@ -20,7 +20,7 @@ fn cfg(
     n_decode: u32,
     n_req: usize,
     qps: f64,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::disaggregated(
         ModelSpec::llama2_7b(),
@@ -30,7 +30,7 @@ fn cfg(
         n_decode,
         WorkloadSpec::mean_lengths(n_req, qps, 128, 128),
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -59,7 +59,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mut table = Table::new(&["config", "price", "max SLO thr (req/s)"]);
     // every setup runs its own SLO-throughput search: sweep across cores
     let goodputs = parallel_sweep(&setups, |(_, hw, np, nd)| {
-        let build = |qps: f64| cfg(*np, hw.clone(), *nd, n_req, qps, opts.cost_model);
+        let build = |qps: f64| cfg(*np, hw.clone(), *nd, n_req, qps, &opts.compute);
         let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
         goodput
     });
@@ -88,8 +88,8 @@ mod tests {
     #[test]
     fn aim_decode_beats_v100_decode() {
         let opts = ExpOpts::quick();
-        let build_g = |qps: f64| cfg(1, HardwareSpec::gddr6_aim(), 7, 120, qps, opts.cost_model);
-        let build_v = |qps: f64| cfg(1, HardwareSpec::v100_32g(), 7, 120, qps, opts.cost_model);
+        let build_g = |qps: f64| cfg(1, HardwareSpec::gddr6_aim(), 7, 120, qps, &opts.compute);
+        let build_v = |qps: f64| cfg(1, HardwareSpec::v100_32g(), 7, 120, qps, &opts.compute);
         let (_, g) = max_slo_throughput(&build_g, 0.9, 4.0);
         let (_, v) = max_slo_throughput(&build_v, 0.9, 4.0);
         assert!(g > v, "G6-AiM decode ({g}) must beat V100 decode ({v})");

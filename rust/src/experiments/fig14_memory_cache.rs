@@ -15,7 +15,7 @@ use crate::workload::{ConversationSpec, WorkloadSpec};
 
 use super::common::*;
 
-fn cfg(cache: bool, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn cfg(cache: bool, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
@@ -25,7 +25,7 @@ fn cfg(cache: bool, cost: crate::compute::CostModelKind) -> SimulationConfig {
     if cache {
         cfg.pool_cache = Some(PoolCacheConfig::with_capacity(2_000_000));
     }
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -35,7 +35,7 @@ pub(super) fn p99_latency(
     n_conv: usize,
     qps: f64,
     cache: bool,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> f64 {
     let convs = ConversationSpec::chatbot(n_conv, qps, input_mean, output_mean).generate();
     let report = Simulation::from_conversations(&cfg(cache, cost), &convs)
@@ -68,8 +68,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for &qps in rates {
         let mut cells = vec![f1(qps)];
         for &(input, output) in mixes {
-            cells.push(f3(p99_latency(input, output, n_conv, qps, false, opts.cost_model)));
-            cells.push(f3(p99_latency(input, output, n_conv, qps, true, opts.cost_model)));
+            cells.push(f3(p99_latency(input, output, n_conv, qps, false, &opts.compute)));
+            cells.push(f3(p99_latency(input, output, n_conv, qps, true, &opts.compute)));
         }
         table.row(&cells);
     }
@@ -92,9 +92,9 @@ mod tests {
 
     #[test]
     fn cache_reduces_p99_under_load() {
-        let cost = ExpOpts::quick().cost_model;
-        let off = p99_latency(128, 64, 200, 10.0, false, cost);
-        let on = p99_latency(128, 64, 200, 10.0, true, cost);
+        let cost = ExpOpts::quick().compute;
+        let off = p99_latency(128, 64, 200, 10.0, false, &cost);
+        let on = p99_latency(128, 64, 200, 10.0, true, &cost);
         assert!(on < off, "cache must reduce P99: on={on} off={off}");
     }
 }

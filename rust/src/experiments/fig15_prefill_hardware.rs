@@ -17,7 +17,7 @@ fn cfg(
     np: u32,
     n_req: usize,
     qps: f64,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::disaggregated(
         ModelSpec::llama2_7b(),
@@ -27,7 +27,7 @@ fn cfg(
         8 - np,
         WorkloadSpec::sharegpt(n_req, qps),
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -35,7 +35,7 @@ pub(super) fn max_thr(
     prefill_hw: HardwareSpec,
     np: u32,
     n_req: usize,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> f64 {
     let build = |qps: f64| cfg(prefill_hw.clone(), np, n_req, qps, cost);
     max_slo_throughput(&build, 0.9, 4.0).1
@@ -68,7 +68,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for (label, hw) in &variants {
         let mut cells = vec![label.clone()];
         for &np in splits {
-            cells.push(f1(max_thr(hw.clone(), np, n_req, opts.cost_model)));
+            cells.push(f1(max_thr(hw.clone(), np, n_req, &opts.compute)));
         }
         table.row(&cells);
     }
@@ -92,11 +92,11 @@ mod tests {
 
     #[test]
     fn prefill_compute_matters_bandwidth_does_not() {
-        let cost = ExpOpts::quick().cost_model;
+        let cost = ExpOpts::quick().compute;
         let a100 = HardwareSpec::a100_80g();
-        let base = max_thr(a100.clone(), 1, 120, cost);
-        let slow_t = max_thr(a100.scale_compute(0.25), 1, 120, cost);
-        let slow_b = max_thr(a100.scale_bandwidth(0.25), 1, 120, cost);
+        let base = max_thr(a100.clone(), 1, 120, &cost);
+        let slow_t = max_thr(a100.scale_compute(0.25), 1, 120, &cost);
+        let slow_b = max_thr(a100.scale_bandwidth(0.25), 1, 120, &cost);
         assert!(
             slow_t < 0.8 * base,
             "1/4 compute should hurt: {slow_t} vs {base}"

@@ -9,6 +9,7 @@
 //! reproduction target recorded in EXPERIMENTS.md.
 
 mod common;
+mod exp_hardware;
 mod exp_memory;
 mod exp_workloads;
 mod fig04_validation;
@@ -33,10 +34,12 @@ use anyhow::{bail, Result};
 /// All experiment ids: the paper's figures in paper order, then the
 /// repo's own studies ("policies" compares scheduler plugins, "memory"
 /// compares memory managers x preemption policies, "workloads"
-/// compares workload generators and per-tenant service quality).
+/// compares workload generators and per-tenant service quality,
+/// "hardware" sweeps the hardware catalog x compute models x PD splits
+/// for the price-normalized frontier).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies", "memory", "workloads",
+    "fig14", "fig15", "policies", "memory", "workloads", "hardware",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -58,6 +61,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "policies" => policy_comparison::run(opts),
         "memory" => exp_memory::run(opts),
         "workloads" => exp_workloads::run(opts),
+        "hardware" => exp_hardware::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

@@ -70,7 +70,7 @@ fn local_cfg(
     n: usize,
     qps: f64,
     policy: PolicySpec,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
@@ -78,7 +78,7 @@ fn local_cfg(
         WorkloadSpec::sharegpt(n, qps),
     );
     cfg.cluster.workers[0].local_scheduler = policy;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -86,7 +86,7 @@ fn cluster_cfg(
     n: usize,
     qps: f64,
     global: PolicySpec,
-    cost: crate::compute::CostModelKind,
+    cost: &crate::compute::ComputeSpec,
 ) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
@@ -95,7 +95,7 @@ fn cluster_cfg(
     );
     cfg.cluster.workers[0].quantity = 4;
     cfg.cluster.scheduler.global = global;
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -120,7 +120,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mut table = Table::new(&hdr_refs);
     // independent (qps x policy) cells: sweep across cores
     let results = sweep_grid(rates, &locals, |&qps, (_, spec)| {
-        let report = run_tokensim(&local_cfg(n, qps, spec.clone(), opts.cost_model));
+        let report = run_tokensim(&local_cfg(n, qps, spec.clone(), &opts.compute));
         let m = report.metrics();
         format!(
             "{}|{}",
@@ -146,7 +146,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
     let results = sweep_grid(cluster_qps, &globals, |&qps, (_, spec)| {
-        let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), opts.cost_model));
+        let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), &opts.compute));
         let m = report.metrics();
         format!(
             "{}|{}",
@@ -173,14 +173,14 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compute::CostModelKind;
+    use crate::compute::ComputeSpec;
 
     #[test]
     fn chunked_prefill_completes_fig9_workload() {
         let spec = PolicySpec::new("chunked_prefill")
             .with("chunk_tokens", 256u32)
             .with("max_batch_size", 16u32);
-        let report = run_tokensim(&local_cfg(150, 8.0, spec, CostModelKind::Analytic));
+        let report = run_tokensim(&local_cfg(150, 8.0, spec, &ComputeSpec::new("analytic")));
         assert_eq!(report.records.len(), 150);
     }
 
@@ -192,8 +192,8 @@ mod tests {
         let fifo = PolicySpec::new("continuous")
             .with("max_batched_tokens", 2048u32)
             .with("max_batch_size", 8u32);
-        let rs = run_tokensim(&local_cfg(250, 12.0, sjf, CostModelKind::Analytic));
-        let rf = run_tokensim(&local_cfg(250, 12.0, fifo, CostModelKind::Analytic));
+        let rs = run_tokensim(&local_cfg(250, 12.0, sjf, &ComputeSpec::new("analytic")));
+        let rf = run_tokensim(&local_cfg(250, 12.0, fifo, &ComputeSpec::new("analytic")));
         assert_eq!(rs.records.len(), 250);
         // SJF must not be (much) worse than FIFO on mean normalized
         // latency — its entire reason to exist
@@ -210,7 +210,7 @@ mod tests {
             200,
             24.0,
             PolicySpec::new("power_of_two"),
-            CostModelKind::Analytic,
+            &ComputeSpec::new("analytic"),
         ));
         assert_eq!(report.records.len(), 200);
         // all four workers must have seen work

@@ -21,13 +21,13 @@ use crate::workload::WorkloadSpec;
 
 use super::common::*;
 
-fn cfg(n: usize, qps: f64, cost: crate::compute::CostModelKind) -> SimulationConfig {
+fn cfg(n: usize, qps: f64, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
         HardwareSpec::a100_80g(),
         WorkloadSpec::fixed(n, qps, 10, 10),
     );
-    cfg.cost_model = cost;
+    cfg.compute = cost.clone();
     cfg
 }
 
@@ -48,7 +48,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     );
 
     for &n in counts {
-        let base = cfg(n, qps, opts.cost_model);
+        let base = cfg(n, qps, &opts.compute);
         // ground truth ("real hardware"): oracle, seed A
         let real = run_oracle(&base, &params, 0x7AB1E_A);
         let t_real = total_runtime(&real);

@@ -7,14 +7,16 @@
 //!
 //! TokenSim simulates a *serving system*, not a single batch: dynamic
 //! request arrivals sampled from dataset-fitted distributions, two-stage
-//! (global + per-worker local) scheduling, operator-granularity compute
-//! cost modelling, pluggable KV-cache memory management (paged /
-//! contiguous / host-swap / cross-request prefix cache, with recompute
-//! or swap preemption), pluggable workload generators (synthetic /
-//! trace replay / bursty / multi-tenant / long-context), a
-//! communication model for KV movement, and QoS metrics (latency
-//! percentiles / CDFs, TTFT / mTPOT SLO attainment, per-tenant
-//! breakdowns, memory timelines).
+//! (global + per-worker local) scheduling, pluggable compute cost
+//! models (HLO artifacts / extracted tables / analytic mirror /
+//! roofline / oracle / Vidur-like / LLMServingSim-like, per-worker
+//! selectable for heterogeneous clusters), pluggable KV-cache memory
+//! management (paged / contiguous / host-swap / cross-request prefix
+//! cache, with recompute or swap preemption), pluggable workload
+//! generators (synthetic / trace replay / bursty / multi-tenant /
+//! long-context), a communication model for KV movement, and QoS
+//! metrics (latency percentiles / CDFs, TTFT / mTPOT SLO attainment,
+//! per-tenant breakdowns, memory timelines).
 //!
 //! ## Architecture (three layers)
 //!
@@ -65,7 +67,10 @@ pub mod workload;
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::cluster::{Simulation, SimulationReport, WorkerRole};
-    pub use crate::compute::{AnalyticCost, BatchDesc, ComputeModel, CostModelKind};
+    pub use crate::compute::{
+        AnalyticCost, BatchDesc, ComputeCtx, ComputeModel, ComputeSpec, CostModelKind,
+        RooflineCost,
+    };
     pub use crate::config::{ClusterConfig, PoolCacheConfig, SchedulerConfig, SimulationConfig, WorkerConfig};
     pub use crate::hardware::{HardwareSpec, LinkSpec};
     pub use crate::memory::{

@@ -1,8 +1,8 @@
 //! TokenSim CLI — the L3 launcher.
 //!
 //! ```text
-//! tokensim run --config cfg.yaml [--trace out.jsonl]
-//! tokensim exp <id>|all [--quick] [--out-dir results/]
+//! tokensim run --config cfg.yaml [--save-trace out.jsonl] [--json report.json]
+//! tokensim exp <id>|all [--quick] [--out-dir results/] [--cost-model <name>]
 //! tokensim list
 //! tokensim validate-artifacts
 //! ```
@@ -14,7 +14,7 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use tokensim::compute::CostModelKind;
+use tokensim::compute::ComputeSpec;
 use tokensim::config::SimulationConfig;
 use tokensim::experiments::{self, ExpOpts};
 use tokensim::prelude::*;
@@ -23,9 +23,9 @@ fn usage() -> &'static str {
     "TokenSim — LLM inference system simulator (paper reproduction)\n\
      \n\
      USAGE:\n\
-       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--cdf]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|all> [--quick] [--out-dir <dir>]\n\
-       tokensim list                 list experiments, policies, memory managers, workload generators, presets\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf]\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
+       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n"
 }
@@ -80,14 +80,22 @@ fn cmd_run(args: &[String]) -> Result<()> {
     println!("{}", report.summary());
     for w in &report.workers {
         println!(
-            "  worker {} ({}, memory={}): {} iterations, {:.1}% busy, {} KV blocks",
+            "  worker {} ({}, memory={}, compute={}): {} iterations, {:.1}% busy, {} KV blocks",
             w.id,
             w.hardware,
             w.manager,
+            w.compute,
             w.iterations,
             100.0 * w.utilization,
             w.total_blocks
         );
+    }
+    if let Some(path) = flag_value(args, "--json") {
+        // deterministic JSON (no wall-clock fields): two runs of the
+        // same config diff byte-for-byte — the CI determinism gate
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("JSON report saved to {path}");
     }
     // multi-tenant workloads: per-class TTFT/TBT + per-class SLOs
     let slos = cfg.workload.build()?.tenant_slos();
@@ -125,13 +133,12 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     if let Some(dir) = flag_value(args, "--out-dir") {
         opts.out_dir = Some(dir.into());
     }
-    if let Some(kind) = flag_value(args, "--cost-model") {
-        opts.cost_model = match kind {
-            "hlo" => CostModelKind::Hlo,
-            "analytic" => CostModelKind::Analytic,
-            "table" => CostModelKind::Table,
-            other => bail!("unknown cost model '{other}'"),
-        };
+    if let Some(name) = flag_value(args, "--cost-model") {
+        // any registered compute model is selectable; unknown names
+        // fail here instead of mid-experiment
+        let spec = ComputeSpec::new(name);
+        spec.validate()?;
+        opts.compute = spec;
     }
     if id == "all" {
         for id in experiments::ALL {
@@ -165,6 +172,11 @@ fn cmd_list() -> Result<()> {
     for (name, summary, params) in tokensim::workload::workload_generators() {
         println!("  {name:<16} {summary}");
         println!("  {:<16}   params: {params}", "");
+    }
+    println!("\ncompute models (`compute: model:`, per-worker overridable):");
+    for (name, summary, params) in tokensim::compute::compute_models() {
+        println!("  {name:<18} {summary}");
+        println!("  {:<18}   params: {params}", "");
     }
     println!("\nmodel presets: llama2-7b, llama2-13b, opt-13b, tiny");
     println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");

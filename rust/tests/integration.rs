@@ -3,7 +3,7 @@
 
 use tokensim::cluster::Simulation;
 use tokensim::compute::{
-    AnalyticCost, BatchDesc, ComputeModel, CostModelKind, HloCost, TableCost,
+    AnalyticCost, BatchDesc, ComputeModel, ComputeSpec, CostModelKind, HloCost, TableCost,
 };
 use tokensim::config::{PoolCacheConfig, SimulationConfig};
 use tokensim::hardware::{HardwareSpec, LinkSpec};
@@ -24,7 +24,7 @@ fn base_cfg(n: usize, qps: f64) -> SimulationConfig {
         HardwareSpec::a100_80g(),
         WorkloadSpec::sharegpt(n, qps),
     );
-    cfg.cost_model = CostModelKind::Analytic;
+    cfg.compute = ComputeSpec::new("analytic");
     cfg
 }
 
@@ -74,7 +74,9 @@ fn simulation_identical_under_all_cost_models() {
     let mut reports = Vec::new();
     for kind in [CostModelKind::Analytic, CostModelKind::Hlo, CostModelKind::Table] {
         let mut cfg = base_cfg(120, 10.0);
-        cfg.cost_model = kind;
+        // lossless enum -> registry-spec conversion keeps this call
+        // site's pre-registry shape working
+        cfg.compute = kind.into();
         reports.push(Simulation::from_config(&cfg).unwrap().run());
     }
     let base = MetricSet::new(&reports[0].records).latency_percentile(0.99);
@@ -121,9 +123,9 @@ fn disaggregated_matches_unified_at_low_load_and_transfers_kv() {
     let workload = WorkloadSpec::fixed(60, 2.0, 128, 32);
     let mut unified = SimulationConfig::single_worker(model.clone(), hw.clone(), workload.clone());
     unified.cluster.workers[0].quantity = 2;
-    unified.cost_model = CostModelKind::Analytic;
+    unified.compute = ComputeSpec::new("analytic");
     let mut disagg = SimulationConfig::disaggregated(model, hw.clone(), 1, hw, 1, workload);
-    disagg.cost_model = CostModelKind::Analytic;
+    disagg.compute = ComputeSpec::new("analytic");
 
     let ru = Simulation::from_config(&unified).unwrap().run();
     let rd = Simulation::from_config(&disagg).unwrap().run();
@@ -154,7 +156,7 @@ fn slow_interconnect_hurts_disaggregation() {
             1,
             workload.clone(),
         );
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         cfg.cluster.scheduler.interconnect = link;
         Simulation::from_config(&cfg).unwrap().run()
     };
@@ -389,7 +391,7 @@ fn quarter_flops_decode_hardware_is_slower_end_to_end() {
             3,
             workload.clone(),
         );
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         Simulation::from_config(&cfg).unwrap().run()
     };
     let full = mk(HardwareSpec::a100_80g());
@@ -473,7 +475,7 @@ fn chunked_prefill_caps_decode_stalls_under_long_prompts() {
             HardwareSpec::a100_80g(),
             WorkloadSpec::fixed(60, 6.0, 3000, 64),
         );
-        cfg.cost_model = CostModelKind::Analytic;
+        cfg.compute = ComputeSpec::new("analytic");
         cfg.cluster.workers[0].local_scheduler = policy;
         Simulation::from_config(&cfg).unwrap().run()
     };
@@ -534,7 +536,7 @@ fn tight_memory_cfg(memory: tokensim::memory::MemorySpec) -> SimulationConfig {
         WorkloadSpec::fixed(30, 50.0, 256, 128),
     );
     cfg.cluster.workers[0].memory = memory;
-    cfg.cost_model = CostModelKind::Analytic;
+    cfg.compute = ComputeSpec::new("analytic");
     cfg
 }
 
@@ -648,6 +650,73 @@ fn prefix_cache_manager_reduces_ttft_like_the_cluster_pool() {
         ttft(&on.records) < ttft(&off.records),
         "cached rounds must start faster through the registry path too"
     );
+}
+
+// ---- pluggable compute models -------------------------------------------
+
+#[test]
+fn hetero_pd_config_runs_mixed_hardware_with_per_worker_compute() {
+    // the documented heterogeneous example: A100 prefill under the
+    // table model, V100 decode under roofline, per-worker `compute:`
+    // overrides routed through the compute registry
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs/hetero_pd.yaml");
+    let cfg = SimulationConfig::from_yaml_file(&path).unwrap();
+    assert_eq!(cfg.compute.name, "analytic");
+    assert_eq!(cfg.cluster.workers[0].compute.as_ref().unwrap().name, "table");
+    assert_eq!(cfg.cluster.workers[1].compute.as_ref().unwrap().name, "roofline");
+    let report = Simulation::from_config(&cfg).unwrap().run();
+    assert_eq!(report.records.len(), 60);
+    assert_eq!(report.workers.len(), 4, "1 prefill + 3 decode");
+    assert!(report.workers[0].compute.starts_with("table["));
+    assert_eq!(report.workers[0].hardware, "A100");
+    for w in &report.workers[1..] {
+        assert!(w.compute.starts_with("roofline["), "{}", w.compute);
+        assert_eq!(w.hardware, "V100");
+        assert!(w.iterations > 0, "decode worker {} idle", w.id);
+    }
+}
+
+#[test]
+fn compute_models_selected_from_yaml_change_predicted_latency() {
+    // the same cluster under two registered models must simulate to
+    // completion under both and actually use different cost physics
+    let mk = |compute_yaml: &str| {
+        let yaml = format!(
+            "model: llama2-7b\n{compute_yaml}cluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 50\n  qps: 5.0\n  prompt_len:\n    fixed: 128\n  output_len:\n    fixed: 32\n  seed: 6\n"
+        );
+        let cfg = SimulationConfig::from_yaml_str(&yaml).unwrap();
+        Simulation::from_config(&cfg).unwrap().run()
+    };
+    let analytic = mk("compute:\n  model: analytic\n");
+    let roofline = mk("compute:\n  model: roofline\n");
+    assert_eq!(analytic.records.len(), 50);
+    assert_eq!(roofline.records.len(), 50);
+    assert!(analytic.workers[0].compute.starts_with("analytic["));
+    assert!(roofline.workers[0].compute.starts_with("roofline["));
+    let (pa, pr) = (
+        MetricSet::new(&analytic.records).latency_percentile(0.5),
+        MetricSet::new(&roofline.records).latency_percentile(0.5),
+    );
+    assert!(
+        (pa - pr).abs() / pa > 1e-3,
+        "distinct models should predict distinct latencies: {pa} vs {pr}"
+    );
+    // roofline drops per-op launch overheads, so it can only be faster
+    assert!(pr < pa, "roofline {pr} must lower-bound analytic {pa}");
+}
+
+#[test]
+fn oracle_as_registry_model_runs_noisy_but_deterministic() {
+    let mk = || {
+        let mut cfg = base_cfg(40, 6.0);
+        cfg.compute = ComputeSpec::new("oracle").with("seed", 3u64);
+        Simulation::from_config(&cfg).unwrap().run()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.records.len(), 40);
+    assert_eq!(a.records, b.records, "seeded oracle noise must replay");
+    assert!(a.workers[0].compute == "oracle");
 }
 
 #[test]

@@ -6,7 +6,7 @@
 use std::collections::VecDeque;
 
 use tokensim::cluster::Simulation;
-use tokensim::compute::CostModelKind;
+use tokensim::compute::{compute_models, BatchDesc, ComputeCtx, ComputeModel, ComputeSpec};
 use tokensim::config::SimulationConfig;
 use tokensim::hardware::HardwareSpec;
 use tokensim::memory::{
@@ -382,7 +382,7 @@ fn random_cfg(seed: u64) -> SimulationConfig {
             workload,
         )
     };
-    cfg.cost_model = CostModelKind::Analytic;
+    cfg.compute = ComputeSpec::new("analytic");
     // occasionally a tight memory to provoke preemptions
     if rng.gen_bool(0.3) {
         for w in &mut cfg.cluster.workers {
@@ -490,5 +490,143 @@ fn prop_higher_load_never_reduces_makespan() {
             fast.sim_end,
             slow.sim_end
         );
+    }
+}
+
+// ---- cross-model compute-registry invariants ----------------------------
+
+/// Build one instance of every registered compute model against
+/// llama2-7b/A100, configured deterministically (oracle noise off,
+/// small vidur forest) so the properties below are stable.
+fn registered_models_under_test() -> Vec<(String, Box<dyn ComputeModel>)> {
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let ctx = ComputeCtx::new(&model, &hw);
+    compute_models()
+        .into_iter()
+        .map(|(name, _, _)| {
+            let spec = match name.as_str() {
+                "oracle" => ComputeSpec::new("oracle").with("noise_sigma", 0.0),
+                "vidur_like" => ComputeSpec::new("vidur_like").with("samples", 600u64),
+                other => ComputeSpec::new(other),
+            };
+            let built = spec
+                .build(&ctx)
+                .unwrap_or_else(|e| panic!("building '{name}': {e:#}"));
+            (name, built)
+        })
+        .collect()
+}
+
+fn decode_batch(n: usize, ctx_len: u32) -> BatchDesc {
+    let mut b = BatchDesc::new();
+    for _ in 0..n {
+        b.push(ctx_len, 1);
+    }
+    b
+}
+
+/// Per-model monotonicity slack: the physical models must be exactly
+/// monotone (float-noise epsilon only); the learned `vidur_like`
+/// regression is held to the same ordering with a small finite-sample
+/// allowance — its forest averages leaf regions, so adjacent grid
+/// points may wobble by a few percent even though the trend (asserted
+/// strictly via the endpoints below) cannot invert.
+fn mono_slack(name: &str, prev: f64) -> f64 {
+    if name == "vidur_like" {
+        1e-12 + 0.05 * prev
+    } else {
+        1e-12
+    }
+}
+
+#[test]
+fn prop_every_registered_compute_model_is_monotone_in_batch_aggregates() {
+    // adding tokens to an iteration never decreases its predicted time:
+    // growing the decode batch (T, R, S up), the attended context
+    // (A, S up), or the prefill length (T, A, S up).
+    // (`llmservingsim_like` truncates prompts beyond its short-request
+    // limit, so equality — never a decrease — is allowed everywhere.)
+    for (name, mut m) in registered_models_under_test() {
+        let mut series: Vec<f64> = Vec::new();
+        for n in [1usize, 4, 16, 64, 256] {
+            series.push(m.iter_time(&decode_batch(n, 512)));
+        }
+        for ctx_len in [0u32, 512, 2048, 8192] {
+            series.push(m.iter_time(&decode_batch(16, ctx_len)));
+        }
+        for prompt in [8u32, 64, 512, 4096] {
+            let mut b = BatchDesc::new();
+            b.push(0, prompt);
+            series.push(m.iter_time(&b));
+        }
+        // each sweep restarts: check within-sweep adjacency
+        for (i, sweep) in [&series[0..5], &series[5..9], &series[9..13]]
+            .into_iter()
+            .enumerate()
+        {
+            for w in sweep.windows(2) {
+                assert!(
+                    w[1] >= w[0] - mono_slack(&name, w[0]),
+                    "{name}: adding tokens decreased iteration time ({} -> {}) in {series:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+            // endpoints are strictly ordered for every model (the
+            // trend itself can never invert, slack or not) — except
+            // the co-sim's prompt truncation, which legitimately
+            // flattens the prefill sweep (i == 2)
+            if !(name == "llmservingsim_like" && i == 2) {
+                assert!(
+                    sweep[sweep.len() - 1] > sweep[0],
+                    "{name}: no growth across the whole sweep {sweep:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_every_registered_compute_model_charges_nothing_for_empty_batches() {
+    for (name, mut m) in registered_models_under_test() {
+        assert_eq!(m.iter_time(&BatchDesc::new()), 0.0, "{name}");
+        let mut ctx_only = BatchDesc::new();
+        ctx_only.push(100, 0);
+        assert_eq!(m.iter_time(&ctx_only), 0.0, "{name}: no new tokens");
+    }
+}
+
+#[test]
+fn prop_table_acceleration_stays_within_tolerance_of_its_base() {
+    // the `table` layer is a perf path, not a different model: across a
+    // randomized batch sweep its prediction must stay within solver
+    // tolerance of the base model it was extracted from
+    let model = ModelSpec::llama2_7b();
+    let hw = HardwareSpec::a100_80g();
+    let ctx = ComputeCtx::new(&model, &hw);
+    for (base_name, tol) in [("analytic", 2e-3), ("roofline", 1e-6)] {
+        let mut base = ComputeSpec::new(base_name).build(&ctx).unwrap();
+        let mut table = ComputeSpec::new("table")
+            .with("base", base_name)
+            .build(&ctx)
+            .unwrap();
+        for seed in SEEDS {
+            let mut rng = SimRng::new(seed, "table-tol");
+            let mut b = BatchDesc::new();
+            if rng.gen_bool(0.5) {
+                b.push(0, 16 + rng.uniform_int(0, 2048) as u32);
+            }
+            for _ in 0..rng.uniform_int(1, 96) {
+                b.push(rng.uniform_int(0, 4096) as u32, 1);
+            }
+            let t_base = base.iter_time(&b);
+            let t_table = table.iter_time(&b);
+            let rel = ((t_table - t_base) / t_base).abs();
+            assert!(
+                rel < tol,
+                "table-over-{base_name} drifted {rel} (base {t_base}, table {t_table}, seed {seed})"
+            );
+        }
     }
 }
