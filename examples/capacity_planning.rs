@@ -12,7 +12,10 @@ use tokensim::prelude::*;
 /// Max request rate keeping >=90% SLO attainment (bisection).
 fn max_goodput(build: &dyn Fn(f64) -> SimulationConfig) -> f64 {
     let attain = |qps: f64| {
-        let r = Simulation::from_config(&build(qps)).expect("valid config").run();
+        let r = Simulation::from_config(&build(qps))
+            .expect("valid config")
+            .run()
+            .expect("workload must complete");
         (r.slo_attainment(), r.slo_throughput())
     };
     let (mut lo, mut hi, mut best) = (0.0f64, 4.0f64, 0.0f64);

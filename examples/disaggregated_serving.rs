@@ -10,7 +10,10 @@
 use tokensim::prelude::*;
 
 fn simulate(name: &str, cfg: &SimulationConfig) {
-    let report = Simulation::from_config(cfg).expect("valid config").run();
+    let report = Simulation::from_config(cfg)
+        .expect("valid config")
+        .run()
+        .expect("workload must complete");
     let m = report.metrics();
     println!(
         "{name:<28} {:>7.2} req/s  p99 {:>7.3}s  ttft-p99 {:>6.3}s  slo {:>5.1}%",

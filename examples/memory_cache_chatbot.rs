@@ -38,7 +38,10 @@ fn main() {
         );
         cfg.compute = ComputeSpec::new("table");
         cfg.pool_cache = pool;
-        let report = Simulation::from_conversations(&cfg, &convs).expect("valid config").run();
+        let report = Simulation::from_conversations(&cfg, &convs)
+            .expect("valid config")
+            .run()
+            .expect("workload must complete");
         let m = report.metrics();
         println!("{name}:");
         println!(

@@ -22,7 +22,10 @@ fn main() {
     cfg.sample_period = 0.5;
 
     // 3. Run to completion.
-    let report = Simulation::from_config(&cfg).expect("valid config").run();
+    let report = Simulation::from_config(&cfg)
+        .expect("valid config")
+        .run()
+        .expect("workload must complete");
 
     // 4. Read the QoS metrics the paper's Figs 4-5 report.
     println!("{}", report.summary());

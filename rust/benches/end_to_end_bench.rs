@@ -16,6 +16,13 @@ use tokensim::hardware::HardwareSpec;
 use tokensim::model::ModelSpec;
 use tokensim::workload::WorkloadSpec;
 
+fn run(cfg: &SimulationConfig) -> tokensim::cluster::SimulationReport {
+    Simulation::from_config(cfg)
+        .expect("valid config")
+        .run()
+        .expect("workload must complete")
+}
+
 fn cfg(n: usize, compute: &ComputeSpec) -> SimulationConfig {
     let mut cfg = SimulationConfig::single_worker(
         ModelSpec::llama2_7b(),
@@ -32,7 +39,18 @@ fn main() {
     for name in ["analytic", "table", "roofline"] {
         let c = cfg(500, &ComputeSpec::new(name));
         bench(&format!("e2e/500_sharegpt_requests_{name}"), budget(), || {
-            sink(Simulation::from_config(&c).expect("valid config").run().records.len());
+            sink(run(&c).records.len());
+        });
+    }
+
+    // decode fast-forwarding off/on over a decode-heavy workload — the
+    // engine-level speedup `exp scale` quantifies, tracked per commit
+    for (label, ff) in [("off", false), ("on", true)] {
+        let mut c = cfg(500, &ComputeSpec::new("analytic"));
+        c.workload = WorkloadSpec::fixed(500, 4.0, 32, 256).into();
+        c.engine.fast_forward = ff;
+        bench(&format!("e2e/500_decode_heavy_fast_forward_{label}"), budget(), || {
+            sink(run(&c).records.len());
         });
     }
 
@@ -42,7 +60,7 @@ fn main() {
     {
         let c = cfg(200, &ComputeSpec::new("hlo"));
         bench("e2e/200_sharegpt_requests_hlo", budget(), || {
-            sink(Simulation::from_config(&c).expect("valid config").run().records.len());
+            sink(run(&c).records.len());
         });
     }
 
@@ -57,13 +75,13 @@ fn main() {
     );
     disagg.compute = ComputeSpec::new("table");
     bench("e2e/500_requests_disaggregated_2p6d", budget(), || {
-        sink(Simulation::from_config(&disagg).expect("valid config").run().records.len());
+        sink(run(&disagg).records.len());
     });
 
     // the headline scale: Fig 9's 50k-request workload, one shot
     let big = cfg(50_000, &ComputeSpec::new("table"));
     let t0 = Instant::now();
-    let report = Simulation::from_config(&big).expect("valid config").run();
+    let report = run(&big);
     let wall = t0.elapsed().as_secs_f64();
     let tokens: u64 = report.records.iter().map(|r| r.output_len as u64).sum();
     println!(

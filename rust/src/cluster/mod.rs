@@ -8,7 +8,7 @@ mod worker;
 pub use report::{SimulationReport, WorkerStats};
 pub use worker::{Worker, WorkerRole};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compute::{ComputeCtx, ComputeModel};
 use crate::config::SimulationConfig;
@@ -54,6 +54,9 @@ pub struct Simulation {
     /// cluster-level pool — location-transparent — is in charge)
     conv_home: Vec<Option<usize>>,
     finished: usize,
+    /// Decode fast-forwarding (`engine: fast_forward`, default on):
+    /// coalesce closed-batch decode iterations into one event.
+    fast_forward: bool,
 }
 
 impl Simulation {
@@ -254,11 +257,17 @@ impl Simulation {
             think_times,
             conv_home,
             finished: 0,
+            fast_forward: cfg.engine.fast_forward,
         })
     }
 
     /// Run to completion and produce the report.
-    pub fn run(mut self) -> SimulationReport {
+    ///
+    /// A drained event queue with unfinished requests (a scheduling /
+    /// memory deadlock) is reported as an `Err` carrying the per-worker
+    /// diagnostic — not a panic — so one pathological grid cell cannot
+    /// poison a whole [`parallel_sweep`](crate::experiments::parallel_sweep).
+    pub fn run(mut self) -> Result<SimulationReport> {
         let wall_start = std::time::Instant::now();
         while let Some(ev) = self.queue.pop() {
             match ev.payload {
@@ -286,7 +295,7 @@ impl Simulation {
                 .map(|r| format!("req {} phase {:?} prompt {} done {} gen {}/{}",
                     r.id, r.phase, r.prompt_len, r.prompt_done, r.generated, r.output_len))
                 .collect();
-            panic!(
+            bail!(
                 "simulation drained with {}/{} finished;{}\n  stuck: {:?}",
                 self.finished,
                 self.requests.len(),
@@ -295,7 +304,7 @@ impl Simulation {
             );
         }
         let now = self.queue.now();
-        SimulationReport::assemble(
+        Ok(SimulationReport::assemble(
             self.records,
             self.timeline,
             &self.workers,
@@ -304,7 +313,7 @@ impl Simulation {
             now,
             self.queue.processed(),
             wall_start.elapsed().as_secs_f64(),
-        )
+        ))
     }
 
     // ---- event handlers ------------------------------------------------
@@ -502,7 +511,7 @@ impl Simulation {
             oldest_wait: w.oldest_wait,
             preemption: w.preemption,
         };
-        let plan = w.local.form_batch(&mut ctx);
+        let mut plan = w.local.form_batch(&mut ctx);
         if std::env::var("TOKENSIM_TRACE").is_ok() {
             eprintln!(
                 "try_start w{wid} t={now:.4}: plan={} members, waiting={}, running={}, free={}",
@@ -577,9 +586,112 @@ impl Simulation {
         w.busy = true;
         w.iterations += 1;
         w.busy_time += dt;
+        let mut done_at = now + dt;
+
+        // ---- decode fast-forwarding ------------------------------------
+        // When the batch just formed is *closed* — an all-decode plan
+        // covering the whole running set, with no swap/fetch traffic —
+        // nothing can change this worker's next `form_batch` decision
+        // until (a) a member finishes, (b) an external event fires
+        // (arrival, transfer, sample tick, another worker's iteration:
+        // anything in the queue, since our own IterDone is not scheduled
+        // yet), or (c) per-token KV growth exhausts the pool. Waiting or
+        // parked-KV requests stay blocked through the window: admission
+        // depends only on the batch cap (constant), token budgets
+        // (constant) and free blocks (strictly shrinking). So instead of
+        // one heap event per decode iteration we replay the iterations
+        // up to the earliest boundary inline — identical per-iteration
+        // cost-model calls, token stamps and (delta-based, hence
+        // order-insensitive) memory growth — and schedule a single
+        // IterDone for the boundary iteration. Reports are byte-identical
+        // to the event-per-iteration run; only `events_processed` (a
+        // simulator-internal count) shrinks.
+        if self.fast_forward
+            && w.local.decode_fast_forwardable()
+            && !plan.has_prefill
+            && plan.preempted.is_empty()
+            && plan.swapped_out.is_empty()
+            && plan.swapped_in.is_empty()
+            && fetch_blocks == 0
+            && swap_blocks == 0
+            && plan.members.len() == w.running.len()
+            && plan.batch.new.iter().all(|&n| n == 1)
+            && plan
+                .members
+                .iter()
+                .all(|&rid| self.requests[rid].phase == Phase::Decode)
+        {
+            // boundary (a): iterations until the first completion
+            // (1-based; the iteration formed above is #1)
+            let k_fin = plan
+                .members
+                .iter()
+                .map(|&rid| {
+                    let r = &self.requests[rid];
+                    r.output_len - r.generated
+                })
+                .min()
+                .unwrap_or(1);
+            // boundary (c): iterations until decode growth would OOM
+            // (the un-coalesced run preempts at that formation — hand
+            // the boundary iteration to the normal path instead)
+            let ctxs: Vec<(RequestId, u32)> = plan
+                .members
+                .iter()
+                .map(|&rid| (rid, self.requests[rid].ctx_in_cache))
+                .collect();
+            let k_max = w.mem.decode_growth_headroom(&ctxs, k_fin).max(1);
+            // boundary (b): the earliest pending event; iteration k+1 is
+            // formed at iteration k's completion time, so coalescing is
+            // only safe strictly before it
+            let horizon = self.queue.peek_time().unwrap_or(f64::INFINITY);
+            let mut k = 1u32;
+            while k < k_max && done_at < horizon {
+                // apply the in-flight iteration's effects exactly as
+                // `on_iter_done` would at its completion time
+                for &rid in &plan.members {
+                    let r = &mut self.requests[rid];
+                    r.generated += 1;
+                    r.ctx_in_cache += 1;
+                    r.stamp_token(done_at);
+                }
+                // form the next all-decode iteration in place: same
+                // members, one more context token per slot
+                for c in plan.batch.ctx.iter_mut() {
+                    *c += 1;
+                }
+                let step = w.cost.iter_time(&plan.batch);
+                assert!(step > 0.0, "iteration with work must take time");
+                w.iterations += 1;
+                w.busy_time += step;
+                done_at += step;
+                k += 1;
+            }
+            if k > 1 {
+                // one bulk reservation replaces the k-1 per-iteration
+                // growth calls; reservations are delta-based, so the
+                // final allocator state is identical. A hard assert, not
+                // a debug one: a manager whose `reserve` is stricter
+                // than its `decode_growth_headroom` arithmetic must fail
+                // loudly here — in release builds a silent OutOfMemory
+                // would break the byte-identity contract instead
+                for &rid in &plan.members {
+                    let need = self.requests[rid].ctx_in_cache + 1;
+                    let grown = w.mem.reserve(rid, need);
+                    assert_eq!(
+                        grown,
+                        AllocOutcome::Ok,
+                        "manager '{}': bulk decode growth failed inside its own \
+                         decode_growth_headroom bound (req {rid}, {need} tokens)",
+                        w.mem.name()
+                    );
+                }
+            }
+        }
+
         w.current = Some(plan);
         self.queue
-            .schedule_in(dt, EventPayload::IterDone { worker: wid });
+            .schedule_at(done_at, EventPayload::IterDone { worker: wid });
     }
 
     fn on_iter_done(&mut self, wid: usize) {
@@ -632,11 +744,13 @@ impl Simulation {
             }
         }
 
+        // one order-preserving pass over `running` per iteration instead
+        // of one O(running) retain per departing request — at scale a
+        // batch finishing f requests paid O(f * running) here
+        self.workers[wid].remove_running(&finished_here);
+        self.workers[wid].remove_running(&resubmit);
         for rid in finished_here {
             self.finish_request(rid, wid, now);
-        }
-        for &rid in &resubmit {
-            self.workers[wid].running.retain(|&x| x != rid);
         }
         if !resubmit.is_empty() {
             self.dispatch(&[], &resubmit);
@@ -645,10 +759,13 @@ impl Simulation {
         self.try_start(wid);
     }
 
+    /// Post-completion bookkeeping. The caller has already removed
+    /// `rid` from the worker's running set (batched, one pass per
+    /// iteration — see [`Worker::remove_running`]).
     fn finish_request(&mut self, rid: RequestId, wid: usize, now: SimTime) {
         {
             let w = &mut self.workers[wid];
-            w.running.retain(|&x| x != rid);
+            debug_assert!(!w.running.contains(&rid), "caller removes from running");
             w.mem.release(rid);
         }
         let r = &mut self.requests[rid];
@@ -750,7 +867,7 @@ mod tests {
 
     #[test]
     fn runs_to_completion() {
-        let report = Simulation::from_config(&quick_cfg(50, 20.0)).unwrap().run();
+        let report = Simulation::from_config(&quick_cfg(50, 20.0)).unwrap().run().unwrap();
         assert_eq!(report.records.len(), 50);
         assert!(report.makespan > 0.0);
         for r in &report.records {
@@ -761,8 +878,8 @@ mod tests {
 
     #[test]
     fn deterministic_runs() {
-        let a = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run();
-        let b = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run();
+        let a = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run().unwrap();
+        let b = Simulation::from_config(&quick_cfg(30, 10.0)).unwrap().run().unwrap();
         assert_eq!(a.records, b.records);
     }
 
@@ -796,7 +913,7 @@ mod tests {
         );
         cfg.compute = ComputeSpec::new("analytic");
         cfg.cluster.workers[1].compute = Some(ComputeSpec::new("roofline"));
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(report.records.len(), 30);
         assert!(report.workers[0].compute.starts_with("analytic["));
         assert!(report.workers[1].compute.starts_with("roofline["));
@@ -806,8 +923,8 @@ mod tests {
 
     #[test]
     fn ttft_increases_under_overload() {
-        let light = Simulation::from_config(&quick_cfg(100, 2.0)).unwrap().run();
-        let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).unwrap().run();
+        let light = Simulation::from_config(&quick_cfg(100, 2.0)).unwrap().run().unwrap();
+        let heavy = Simulation::from_config(&quick_cfg(100, 500.0)).unwrap().run().unwrap();
         let l = crate::metrics::MetricSet::new(&light.records);
         let h = crate::metrics::MetricSet::new(&heavy.records);
         assert!(
@@ -829,7 +946,7 @@ mod tests {
             WorkloadSpec::fixed(40, 8.0, 64, 64),
         );
         cfg.compute = ComputeSpec::new("analytic");
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(report.records.len(), 40);
         // prefill worker must have run prefill iterations, decode worker
         // decode iterations
@@ -845,7 +962,7 @@ mod tests {
         cfg.pool_cache = Some(PoolCacheConfig::with_capacity(100_000));
         let convs = ConversationSpec::chatbot(40, 4.0, 64, 32).generate();
         let total = ConversationWorkload::total_rounds(&convs);
-        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap();
         assert_eq!(report.records.len(), total);
         // multi-round conversations must have produced pool hits
         assert!(report.pool_hits > 0, "expected pool hits");
@@ -863,7 +980,7 @@ mod tests {
             MemorySpec::new("prefix_cache").with("capacity_blocks", 100_000u64);
         let convs = ConversationSpec::chatbot(40, 4.0, 64, 32).generate();
         let total = ConversationWorkload::total_rounds(&convs);
-        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap();
         assert_eq!(report.records.len(), total);
         assert!(report.pool_hits > 0, "expected manager-layer pool hits");
         assert!(report.records.iter().any(|r| r.cached_prefix > 0));
@@ -894,7 +1011,7 @@ mod tests {
             mk(4, 4, 1.5),
             mk(5, 4, 100.0),
         ];
-        let report = Simulation::from_requests(&cfg, requests).unwrap().run();
+        let report = Simulation::from_requests(&cfg, requests).unwrap().run().unwrap();
         let e = report.records.iter().find(|r| r.id == 4).unwrap();
         assert!(
             e.ttft() >= max_linger,
@@ -916,7 +1033,7 @@ mod tests {
         let convs = ConversationSpec::chatbot(60, 6.0, 64, 32).generate();
         let total = ConversationWorkload::total_rounds(&convs);
         let follow_ups = (total - convs.len()) as u64;
-        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run();
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap();
         assert_eq!(report.records.len(), total);
         assert!(follow_ups > 0, "workload must have multi-round conversations");
         assert_eq!(
@@ -936,7 +1053,7 @@ mod tests {
     fn memory_sampling_produces_timeline() {
         let mut cfg = quick_cfg(30, 10.0);
         cfg.sample_period = 0.1;
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert!(!report.timeline.samples.is_empty());
         // token/byte granularity views are consistent with blocks
         for s in &report.timeline.samples {
@@ -950,7 +1067,8 @@ mod tests {
         // tiny memory: large prompts + long outputs force preemption
         let report = Simulation::from_config(&tight_cfg(MemorySpec::default()))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(report.records.len(), 20, "all must finish eventually");
         let m = crate::metrics::MetricSet::new(&report.records);
         assert!(m.total_preemptions() > 0, "expected preemptions");
@@ -964,10 +1082,12 @@ mod tests {
             MemorySpec::new("swap").with("preemption", "recompute"),
         ))
         .unwrap()
-        .run();
+        .run()
+        .unwrap();
         let swap = Simulation::from_config(&tight_cfg(MemorySpec::new("swap")))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(swap.records.len(), 20, "all must finish under swap");
         let (mr, ms) = (recompute.metrics(), swap.metrics());
         assert!(mr.total_preemptions() > 0, "workload must stress memory");
@@ -987,11 +1107,105 @@ mod tests {
     fn token_contiguous_never_preempts() {
         let report = Simulation::from_config(&tight_cfg(MemorySpec::new("token_contiguous")))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(report.records.len(), 20);
         let m = report.metrics();
         assert_eq!(m.total_preemptions(), 0, "final footprint is pre-reserved");
         assert_eq!(report.workers[0].manager, "token_contiguous");
         assert_eq!(report.workers[0].total_tokens, report.workers[0].total_blocks);
+    }
+
+    // ---- decode fast-forwarding -----------------------------------------
+
+    /// Decode-heavy single-worker config: short prompts, long outputs,
+    /// arrivals sparse enough that batches spend most iterations closed.
+    fn decode_heavy_cfg(n: usize, qps: f64) -> SimulationConfig {
+        let mut cfg = SimulationConfig::single_worker(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            WorkloadSpec::fixed(n, qps, 32, 128),
+        );
+        cfg.compute = ComputeSpec::new("analytic");
+        cfg
+    }
+
+    fn run_with_ff(mut cfg: SimulationConfig, ff: bool) -> SimulationReport {
+        cfg.engine.fast_forward = ff;
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
+    }
+
+    #[test]
+    fn fast_forward_report_is_byte_identical_and_events_collapse() {
+        let off = run_with_ff(decode_heavy_cfg(60, 2.0), false);
+        let on = run_with_ff(decode_heavy_cfg(60, 2.0), true);
+        assert_eq!(
+            off.to_json().to_string(),
+            on.to_json().to_string(),
+            "fast-forward must not change any simulated quantity"
+        );
+        assert!(
+            on.events_processed * 5 <= off.events_processed,
+            "decode-heavy run must coalesce >=5x fewer events: {} vs {}",
+            on.events_processed,
+            off.events_processed
+        );
+        // per-worker iteration counts stay *logical* (per iteration, not
+        // per event), so utilization math is unchanged
+        assert_eq!(off.workers[0].iterations, on.workers[0].iterations);
+        assert_eq!(off.workers[0].busy_time, on.workers[0].busy_time);
+    }
+
+    #[test]
+    fn fast_forward_is_identical_under_memory_pressure() {
+        // preemptions bound every fast-forward window (the OOM
+        // boundary): the coalesced run must hand each boundary iteration
+        // back to the event-by-event path and reproduce it exactly
+        let mk = |ff: bool| {
+            let mut cfg = tight_cfg(MemorySpec::default());
+            cfg.engine.fast_forward = ff;
+            Simulation::from_config(&cfg).unwrap().run().unwrap()
+        };
+        let (off, on) = (mk(false), mk(true));
+        assert_eq!(off.to_json().to_string(), on.to_json().to_string());
+        assert!(on.metrics().total_preemptions() > 0, "stress must preempt");
+    }
+
+    #[test]
+    fn fast_forward_is_identical_with_conversations_and_sampling() {
+        use crate::workload::ConversationSpec;
+        // sample ticks are external boundaries: the timeline (not part
+        // of the JSON) must also match sample for sample
+        let convs = ConversationSpec::chatbot(30, 4.0, 64, 32).generate();
+        let mk = |ff: bool| {
+            let mut cfg = quick_cfg(1, 1.0);
+            cfg.sample_period = 0.05;
+            cfg.cluster.workers[0].memory =
+                MemorySpec::new("prefix_cache").with("capacity_blocks", 100_000u64);
+            cfg.engine.fast_forward = ff;
+            Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap()
+        };
+        let (off, on) = (mk(false), mk(true));
+        assert_eq!(off.to_json().to_string(), on.to_json().to_string());
+        assert_eq!(off.timeline.samples, on.timeline.samples);
+        assert!(on.pool_hits > 0, "workload must exercise the cache layer");
+    }
+
+    #[test]
+    fn drained_deadlock_is_an_error_not_a_panic() {
+        // a prompt that can never fit the KV pool: admission fails
+        // forever, the arrival drains, and the queue empties unfinished —
+        // this must surface as a diagnosable Err (one poisoned sweep
+        // cell must not panic a whole parallel_sweep)
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.cluster.workers[0].hardware.mem_cap = 16e9; // tiny KV pool
+        cfg.workload = WorkloadSpec::fixed(1, 1.0, 100_000, 4).into();
+        let err = Simulation::from_config(&cfg)
+            .unwrap()
+            .run()
+            .expect_err("deadlocked drain must be an error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("simulation drained with 0/1 finished"), "{msg}");
+        assert!(msg.contains("worker 0"), "diagnostic must name workers: {msg}");
     }
 }

@@ -155,9 +155,14 @@ impl SimulationReport {
 
     /// Deterministic JSON rendering of the report (`tokensim run
     /// --json`). Contains every *simulated* quantity and deliberately
-    /// omits wall-clock fields, so two runs of the same config — at any
-    /// sweep thread count — must serialize byte-for-byte identically;
-    /// the CI determinism gate diffs exactly this output.
+    /// omits wall-clock fields **and** `events_processed` (how many
+    /// heap events the engine pushed is a simulator-internal measure:
+    /// decode fast-forwarding coalesces iterations into fewer events
+    /// without changing anything simulated — per-worker `iterations`
+    /// counts the logical iterations and stays in). Two runs of the
+    /// same config — at any sweep thread count, fast-forward on or
+    /// off — must serialize byte-for-byte identically; the CI
+    /// determinism gate diffs exactly this output.
     pub fn to_json(&self) -> Json {
         let records: Vec<Json> = self
             .records
@@ -208,7 +213,6 @@ impl SimulationReport {
             ("workers", Json::Arr(workers)),
             ("makespan", Json::num(self.makespan)),
             ("sim_end", Json::num(self.sim_end)),
-            ("events_processed", Json::num(self.events_processed as f64)),
             ("request_throughput", Json::num(m.request_throughput())),
             ("token_throughput", Json::num(m.token_throughput())),
             ("slo_attainment", Json::num(self.slo_attainment())),
@@ -221,6 +225,9 @@ impl SimulationReport {
     /// Pretty one-paragraph summary for CLI output.
     pub fn summary(&self) -> String {
         let m = self.metrics();
+        // one sort serves all three latency quantiles (at 1M records the
+        // old per-percentile collect-and-sort was measurable)
+        let lat = m.latency_percentiles(&[0.50, 0.99, 1.0]);
         format!(
             "{} requests in {:.2}s (sim) / {:.3}s (wall) | {:.2} req/s, {:.1} tok/s | \
              latency p50 {:.3}s p99 {:.3}s max {:.3}s | ttft p99 {:.3}s | \
@@ -230,9 +237,9 @@ impl SimulationReport {
             self.wall_time,
             m.request_throughput(),
             m.token_throughput(),
-            m.latency_percentile(0.50),
-            m.latency_percentile(0.99),
-            m.latency_percentile(1.0),
+            lat[0],
+            lat[1],
+            lat[2],
             m.ttft_percentile(0.99),
             100.0 * self.slo_attainment(),
             self.events_processed,
@@ -287,10 +294,12 @@ mod tests {
     }
 
     #[test]
-    fn json_rendering_ignores_wall_clock() {
-        // two runs of the same simulation differ only in wall_time; the
-        // JSON the determinism gate diffs must not see that
-        let mk = |wall: f64| {
+    fn json_rendering_ignores_wall_clock_and_event_counts() {
+        // runs of the same simulation may differ in wall_time and — with
+        // decode fast-forwarding on vs off — in how many heap events the
+        // engine processed; the JSON the determinism gate diffs must not
+        // see either
+        let mk = |events: u64, wall: f64| {
             SimulationReport::assemble(
                 vec![rec(0, 0.0, 2.0), rec(1, 1.0, 3.0)],
                 MemoryTimeline::default(),
@@ -298,14 +307,15 @@ mod tests {
                 &PoolCache::disabled(),
                 SloSpec::paper_default(),
                 3.0,
-                100,
+                events,
                 wall,
             )
         };
-        let a = mk(0.017).to_json().to_string();
-        let b = mk(12.9).to_json().to_string();
-        assert_eq!(a, b, "wall clock leaked into the JSON report");
+        let a = mk(100, 0.017).to_json().to_string();
+        let b = mk(7, 12.9).to_json().to_string();
+        assert_eq!(a, b, "wall clock or event count leaked into the JSON report");
         assert!(a.contains("\"records\""));
         assert!(!a.contains("wall"));
+        assert!(!a.contains("events_processed"));
     }
 }

@@ -154,6 +154,38 @@ pub struct ClusterConfig {
     pub scheduler: SchedulerConfig,
 }
 
+/// Event-engine tuning (`engine:` section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Decode fast-forwarding: when a worker's batch is *closed* (all
+    /// decodes, whole running set, no external event before its next
+    /// completion, KV growth within the pool) the driver coalesces the
+    /// iterations up to the next state-changing boundary into a single
+    /// event instead of one heap event per decode token. Reports are
+    /// byte-identical either way (the CI determinism gate diffs
+    /// `tokensim run --json` across both settings); the switch exists
+    /// for A/B measurement and as an escape hatch for out-of-tree
+    /// scheduler policies that violate the closed-batch contract
+    /// ([`LocalScheduler::decode_fast_forwardable`]). Default: on.
+    ///
+    /// [`LocalScheduler::decode_fast_forwardable`]: crate::scheduler::LocalScheduler::decode_fast_forwardable
+    pub fast_forward: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { fast_forward: true }
+    }
+}
+
+impl EngineConfig {
+    fn from_yaml(y: &Yaml) -> Result<Self> {
+        Ok(Self {
+            fast_forward: y.opt_bool("fast_forward", true),
+        })
+    }
+}
+
 /// Memory-pool cache section (Fig 14; disabled when absent).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolCacheConfig {
@@ -194,6 +226,8 @@ pub struct SimulationConfig {
     pub pool_cache: Option<PoolCacheConfig>,
     /// Memory-timeline sampling period (0 disables sampling).
     pub sample_period: f64,
+    /// Event-engine tuning (decode fast-forwarding; on by default).
+    pub engine: EngineConfig,
 }
 
 impl SimulationConfig {
@@ -218,6 +252,7 @@ impl SimulationConfig {
             slo: SloSpec::paper_default(),
             pool_cache: None,
             sample_period: 0.0,
+            engine: EngineConfig::default(),
         }
     }
 
@@ -246,6 +281,7 @@ impl SimulationConfig {
             slo: SloSpec::paper_default(),
             pool_cache: None,
             sample_period: 0.0,
+            engine: EngineConfig::default(),
         }
     }
 
@@ -360,6 +396,10 @@ impl SimulationConfig {
             slo,
             pool_cache,
             sample_period: y.opt_f64("sample_period", 0.0),
+            engine: match y.get("engine") {
+                Some(e) => EngineConfig::from_yaml(e)?,
+                None => EngineConfig::default(),
+            },
         })
     }
 
@@ -642,6 +682,22 @@ workload:
         assert_eq!(cfg.pool_cache.unwrap().capacity_blocks, 5000);
         assert_eq!(cfg.sample_period, 0.5);
         assert_eq!(cfg.compute, ComputeSpec::new("table"));
+    }
+
+    #[test]
+    fn engine_section_controls_fast_forward() {
+        let base = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        // absent section: fast-forwarding is on by default
+        let cfg = SimulationConfig::from_yaml_str(base).unwrap();
+        assert!(cfg.engine.fast_forward);
+        assert_eq!(cfg.engine, EngineConfig::default());
+        // explicit off switch
+        let off = format!("{base}engine:\n  fast_forward: false\n");
+        let cfg = SimulationConfig::from_yaml_str(&off).unwrap();
+        assert!(!cfg.engine.fast_forward);
+        // explicit on
+        let on = format!("{base}engine:\n  fast_forward: true\n");
+        assert!(SimulationConfig::from_yaml_str(&on).unwrap().engine.fast_forward);
     }
 
     #[test]

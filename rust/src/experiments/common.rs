@@ -7,6 +7,8 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use anyhow::{Context as _, Result};
+
 use crate::cluster::{Simulation, SimulationReport};
 use crate::compute::ComputeSpec;
 use crate::config::SimulationConfig;
@@ -151,18 +153,27 @@ where
 }
 
 /// Run TokenSim proper on a config (the simulator under evaluation).
-/// Experiment configs are code-authored, so a build failure is a bug.
-pub fn run_tokensim(cfg: &SimulationConfig) -> SimulationReport {
+/// Experiment configs are code-authored, so a *build* failure is a bug
+/// and still panics; a drained-deadlock at *run* time is propagated as
+/// an `Err` so a single pathological grid cell fails its experiment
+/// with a diagnostic instead of poisoning the whole
+/// [`parallel_sweep`] via an unwound panic.
+pub fn run_tokensim(cfg: &SimulationConfig) -> Result<SimulationReport> {
     Simulation::from_config(cfg)
         .expect("experiment config must build")
         .run()
+        .context("running TokenSim cell")
 }
 
 /// Run the oracle ("real system") on the same workload/cluster: same
 /// driver, oracle cost model, per-worker noise streams (the same
 /// [`worker_seed`](crate::compute::registry::worker_seed) mix the
 /// registry's `oracle` entry uses, so both paths draw identical noise).
-pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> SimulationReport {
+pub fn run_oracle(
+    cfg: &SimulationConfig,
+    params: &OracleParams,
+    seed: u64,
+) -> Result<SimulationReport> {
     let params = params.clone();
     let factory = move |model: &ModelSpec, hw: &HardwareSpec, worker: usize| {
         Box::new(OracleCost::new(
@@ -175,6 +186,7 @@ pub fn run_oracle(cfg: &SimulationConfig, params: &OracleParams, seed: u64) -> S
     Simulation::with_cost_factory(cfg, &factory)
         .expect("experiment config must build")
         .run()
+        .context("running oracle cell")
 }
 
 /// The validation setup of Figs 4/5/7: TokenSim is configured with
@@ -191,36 +203,37 @@ pub fn calibrated_config(cfg: &SimulationConfig, params: &OracleParams) -> Simul
 /// Binary-search the maximum request rate whose SLO attainment stays
 /// >= `target` (the paper's "maximum throughput without violating the
 /// SLO"). `build` maps a qps to a full simulation config. Returns
-/// (qps, goodput req/s) at the found operating point.
+/// (qps, goodput req/s) at the found operating point; a probe whose
+/// simulation deadlocks propagates its diagnostic.
 pub fn max_slo_throughput(
     build: &dyn Fn(f64) -> SimulationConfig,
     target_attainment: f64,
     qps_hi_start: f64,
-) -> (f64, f64) {
-    let attainment = |qps: f64| -> (f64, f64) {
-        let report = run_tokensim(&build(qps));
-        (report.slo_attainment(), report.slo_throughput())
+) -> Result<(f64, f64)> {
+    let attainment = |qps: f64| -> Result<(f64, f64)> {
+        let report = run_tokensim(&build(qps))?;
+        Ok((report.slo_attainment(), report.slo_throughput()))
     };
     // grow the bracket until attainment falls below target
     let mut lo = 0.0;
     let mut lo_good = 0.0;
     let mut hi = qps_hi_start.max(0.5);
-    let mut hi_res = attainment(hi);
+    let mut hi_res = attainment(hi)?;
     let mut grow = 0;
     while hi_res.0 >= target_attainment && grow < 8 {
         lo = hi;
         lo_good = hi_res.1;
         hi *= 2.0;
-        hi_res = attainment(hi);
+        hi_res = attainment(hi)?;
         grow += 1;
     }
     if hi_res.0 >= target_attainment {
-        return (hi, hi_res.1);
+        return Ok((hi, hi_res.1));
     }
     // bisect
     for _ in 0..5 {
         let mid = 0.5 * (lo + hi);
-        let (att, good) = attainment(mid);
+        let (att, good) = attainment(mid)?;
         if att >= target_attainment {
             lo = mid;
             lo_good = good;
@@ -228,7 +241,7 @@ pub fn max_slo_throughput(
             hi = mid;
         }
     }
-    (lo, lo_good)
+    Ok((lo, lo_good))
 }
 
 /// Geometric mean of |a/b - 1| error terms (the paper's error metric).
@@ -338,8 +351,9 @@ mod tests {
                 cfg
             })
             .collect();
-        let seq: Vec<SimulationReport> = cfgs.iter().map(run_tokensim).collect();
-        let par = parallel_sweep(&cfgs, run_tokensim);
+        let seq: Vec<SimulationReport> =
+            cfgs.iter().map(|c| run_tokensim(c).unwrap()).collect();
+        let par = parallel_sweep(&cfgs, |c| run_tokensim(c).unwrap());
         for (a, b) in seq.iter().zip(&par) {
             assert_eq!(a.records, b.records, "sweep must be bit-deterministic");
             assert_eq!(a.events_processed, b.events_processed);
@@ -373,11 +387,11 @@ mod tests {
             cfg.compute = ComputeSpec::new("analytic");
             cfg
         };
-        let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+        let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0).unwrap();
         assert!(qps > 0.0 && qps.is_finite());
         assert!(goodput > 0.0);
         // at the found point attainment holds; well beyond it, it fails
-        let report = run_tokensim(&build(qps * 8.0));
+        let report = run_tokensim(&build(qps * 8.0)).unwrap();
         assert!(report.slo_attainment() < 0.9 || qps * 8.0 > 1000.0);
     }
 }

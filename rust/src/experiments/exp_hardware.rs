@@ -123,12 +123,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         v
     };
 
-    let cells: Vec<Cell> = parallel_sweep(&jobs, |(compute, label, hw, np, nd, price)| {
+    let cells: Vec<Result<Cell>> = parallel_sweep(&jobs, |(compute, label, hw, np, nd, price)| {
         let build = |qps: f64| cfg(*np, hw, *nd, n_req, qps, compute);
-        let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0);
-        let report = run_tokensim(&build(qps));
+        let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0)?;
+        let report = run_tokensim(&build(qps))?;
         let (ttft_att, tbt_att) = split_attainment(&report, &report.slo);
-        Cell {
+        Ok(Cell {
             model_label: compute.name.clone(),
             config_label: label.clone(),
             price: *price,
@@ -136,8 +136,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             goodput,
             ttft_att,
             tbt_att,
-        }
+        })
     });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
 
     let mut out = String::from(
         "Hardware exploration — decode-hardware catalog x compute models x PD splits\n\
@@ -215,7 +216,7 @@ mod tests {
         let compute = ExpOpts::quick().compute;
         let search = |hw: HardwareSpec, price: f64| {
             let build = |qps: f64| cfg(1, &hw, 7, 100, qps, &compute);
-            let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+            let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0).unwrap();
             goodput / price
         };
         let a = search(HardwareSpec::a100_80g(), 8.0);

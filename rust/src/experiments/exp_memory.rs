@@ -13,7 +13,7 @@
 //! cache-on/off P99 gap and the pool hit-rate behaviour through the
 //! registry path.
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use crate::cluster::Simulation;
 use crate::config::SimulationConfig;
@@ -102,7 +102,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let reports = parallel_sweep(&grid, |&(manager, policy)| {
         let memory = MemorySpec::new(manager).with("preemption", policy);
         run_tokensim(&stress_cfg(n, qps, memory, &opts.compute))
+            .with_context(|| format!("memory cell {manager}/{policy}"))
     });
+    let reports = reports.into_iter().collect::<Result<Vec<_>>>()?;
     for (&(manager, policy), report) in grid.iter().zip(&reports) {
         let m = report.metrics();
         let swap = report.swap_totals();
@@ -133,7 +135,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         Simulation::from_conversations(&chatbot_cfg(memory.clone(), &opts.compute), &convs)
             .expect("experiment config must build")
             .run()
+            .with_context(|| format!("chatbot cell {}", memory.name))
     });
+    let reports = reports.into_iter().collect::<Result<Vec<_>>>()?;
     for (memory, report) in managers.iter().zip(&reports) {
         table.row(&[
             memory.name.clone(),
@@ -168,8 +172,10 @@ mod tests {
             20.0,
             MemorySpec::new("swap").with("preemption", "recompute"),
             &cost,
-        ));
-        let swap = run_tokensim(&stress_cfg(200, 20.0, MemorySpec::new("swap"), &cost));
+        ))
+        .unwrap();
+        let swap =
+            run_tokensim(&stress_cfg(200, 20.0, MemorySpec::new("swap"), &cost)).unwrap();
         let (mr, ms) = (recompute.metrics(), swap.metrics());
         assert!(mr.total_preemptions() > 0, "workload must stress memory");
         assert!(ms.total_swaps() > 0);
@@ -189,6 +195,7 @@ mod tests {
             Simulation::from_conversations(&chatbot_cfg(memory, &cost), &convs)
                 .unwrap()
                 .run()
+                .unwrap()
         };
         let off = run(MemorySpec::new("paged"));
         let on = run(MemorySpec::new("prefix_cache").with("capacity_blocks", 2_000_000u64));

@@ -1,0 +1,217 @@
+//! `tokensim exp scale` — the million-request engine benchmark behind
+//! the ROADMAP's "heavy traffic from millions of users" north star.
+//!
+//! Sweeps request counts (10k / 100k / 1M in full mode) over a
+//! decode-heavy workload with decode fast-forwarding off and on,
+//! reporting wall-clock seconds, heap events processed and events/sec
+//! for each cell — the first tracked perf baseline of the repo's BENCH
+//! trajectory. Each pair of runs is also cross-checked: the coalesced
+//! report must be byte-identical to the event-per-iteration one, so
+//! this experiment doubles as a determinism gate at scale.
+//!
+//! Like fig 6, the *output* of this experiment is wall-clock time, so
+//! rows run sequentially by default; setting `TOKENSIM_SWEEP_THREADS`
+//! explicitly opts into parallel rows (each row's off/on pair still
+//! shares one thread, preserving the within-row comparison).
+//!
+//! With `TOKENSIM_BENCH_JSON=<path>` set, every cell appends one JSON
+//! line in the bench-harness schema (`{"name", "iters", "mean_ns",
+//! "p50_ns", "p99_ns", "per_sec"}`), so CI folds the scale rows into
+//! the uploaded `BENCH_ci.json` artifact alongside the `cargo bench`
+//! cases.
+
+use std::io::Write as _;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cluster::{Simulation, SimulationReport};
+use crate::config::SimulationConfig;
+use crate::hardware::HardwareSpec;
+use crate::model::ModelSpec;
+use crate::workload::WorkloadSpec;
+
+use super::common::*;
+
+/// Decode-heavy workload: short prompts, long outputs, an arrival rate
+/// that keeps batches busy while leaving long closed-batch windows —
+/// the regime iteration-coalescing targets (and the regime a chatbot
+/// fleet actually serves: most tokens are decode tokens).
+fn cfg(n: usize, cost: &crate::compute::ComputeSpec) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        WorkloadSpec::fixed(n, 4.0, 32, 256),
+    );
+    cfg.compute = cost.clone();
+    cfg
+}
+
+struct CellResult {
+    wall: f64,
+    events: u64,
+    report: SimulationReport,
+}
+
+fn run_cell(n: usize, fast_forward: bool, opts: &ExpOpts) -> Result<CellResult> {
+    let mut cfg = cfg(n, &opts.compute);
+    cfg.engine.fast_forward = fast_forward;
+    // build first, time only the event loop: charging 1M-request
+    // workload generation to both rows would dilute the very off/on
+    // engine comparison this experiment exists to measure
+    let sim = Simulation::from_config(&cfg).expect("experiment config must build");
+    let t0 = std::time::Instant::now();
+    let report = sim
+        .run()
+        .with_context(|| format!("scale cell n={n} fast_forward={fast_forward}"))?;
+    Ok(CellResult {
+        wall: t0.elapsed().as_secs_f64(),
+        events: report.events_processed,
+        report,
+    })
+}
+
+/// Append one bench-artifact line per cell (no-op when
+/// `TOKENSIM_BENCH_JSON` is unset) — the same JSON-lines schema
+/// `benches/harness.rs` emits, so the CI artifact assembler needs no
+/// special case for the scale rows.
+fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64) {
+    let Ok(path) = std::env::var("TOKENSIM_BENCH_JSON") else {
+        return;
+    };
+    let ns = wall * 1e9;
+    let line = format!(
+        "{{\"name\":\"{name}\",\"iters\":1,\"mean_ns\":{ns:.1},\"p50_ns\":{ns:.1},\"p99_ns\":{ns:.1},\"per_sec\":{events_per_sec:.3}}}\n",
+    );
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| f.write_all(line.as_bytes()));
+    if let Err(e) = appended {
+        eprintln!("warning: TOKENSIM_BENCH_JSON={path}: {e}");
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Result<String> {
+    let counts: &[usize] = if opts.quick {
+        &[1_000, 5_000]
+    } else {
+        &[10_000, 100_000, 1_000_000]
+    };
+
+    let mut table = Table::new(&[
+        "requests",
+        "ff",
+        "wall (s)",
+        "events",
+        "events/sec",
+        "sim (s)",
+        "identical",
+    ]);
+
+    // each row measures its own wall clock: sequential by default,
+    // parallel only on explicit TOKENSIM_SWEEP_THREADS (fig 6 idiom)
+    let time_row = |&n: &usize| -> Result<(usize, CellResult, CellResult)> {
+        let off = run_cell(n, false, opts)?;
+        let on = run_cell(n, true, opts)?;
+        Ok((n, off, on))
+    };
+    let rows: Vec<Result<(usize, CellResult, CellResult)>> =
+        if std::env::var("TOKENSIM_SWEEP_THREADS").is_ok() {
+            parallel_sweep(counts, time_row)
+        } else {
+            counts.iter().map(time_row).collect()
+        };
+
+    let mut min_ratio = f64::INFINITY;
+    for row in rows {
+        let (n, off, on) = row?;
+        // the tentpole contract: coalescing must not change anything
+        // simulated — compare the deterministic reports (per-request
+        // records and per-worker stats always; the full JSON rendering
+        // too, except at 1M requests where the two ~100 MB strings are
+        // pure memory overhead on top of the structural comparison)
+        let identical = off.report.records == on.report.records
+            && off.report.workers == on.report.workers
+            && (n > 100_000
+                || off.report.to_json().to_string() == on.report.to_json().to_string());
+        ensure!(
+            identical,
+            "fast-forward diverged from the event-per-iteration run at n={n}"
+        );
+        for (label, cell) in [("off", &off), ("on", &on)] {
+            let eps = cell.events as f64 / cell.wall.max(1e-9);
+            table.row(&[
+                n.to_string(),
+                label.to_string(),
+                f3(cell.wall),
+                cell.events.to_string(),
+                format!("{eps:.0}"),
+                f1(cell.report.sim_end),
+                "yes".to_string(),
+            ]);
+            emit_bench_row(&format!("exp_scale/n={n}/ff={label}"), cell.wall, eps);
+        }
+        min_ratio = min_ratio.min(off.events as f64 / on.events.max(1) as f64);
+    }
+
+    // the acceptance bar is enforced here, not just in a unit test, so
+    // the CI smoke step fails if coalescing regresses on the defined
+    // quick workload even while reports stay byte-identical
+    if opts.quick {
+        ensure!(
+            min_ratio >= 5.0,
+            "fast-forward coalesced only {min_ratio:.1}x fewer events on the \
+             decode-heavy quick workload (acceptance bar: >=5x)"
+        );
+    }
+
+    let mut out = String::from(
+        "exp scale — engine throughput at fleet scale (decode-heavy workload;\n\
+         ff = decode fast-forwarding; 'identical' = byte-identical JSON reports)\n",
+    );
+    out.push_str(&table.finish());
+    out.push_str(&format!(
+        "\nevent coalescing: >= {min_ratio:.1}x fewer heap events with fast-forward on\n\
+         (closed decode batches advance to the next completion / external event /\n\
+         memory boundary in one event instead of one per generated token).\n",
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scale_run_coalesces_and_stays_identical() {
+        let out = run(&ExpOpts::quick()).unwrap();
+        // the acceptance bar: >=5x fewer processed events on the
+        // decode-heavy quick workload (the report prints the minimum
+        // off/on ratio across rows)
+        let line = out
+            .lines()
+            .find(|l| l.starts_with("event coalescing"))
+            .unwrap();
+        let ratio: f64 = line
+            .split(">= ")
+            .nth(1)
+            .unwrap()
+            .split('x')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(ratio >= 5.0, "expected >=5x event reduction, got {ratio}x");
+        assert!(out.contains("yes"), "identity column missing:\n{out}");
+    }
+
+    #[test]
+    fn cells_report_events_and_finish() {
+        let off = run_cell(300, false, &ExpOpts::quick()).unwrap();
+        let on = run_cell(300, true, &ExpOpts::quick()).unwrap();
+        assert_eq!(off.report.records.len(), 300);
+        assert_eq!(on.report.records.len(), 300);
+        assert!(on.events < off.events, "{} !< {}", on.events, off.events);
+    }
+}

@@ -91,6 +91,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         .map(|(_, spec)| cfg(spec.clone(), &opts.compute))
         .collect();
     let reports = parallel_sweep(&cfgs, run_tokensim);
+    let reports = reports.into_iter().collect::<Result<Vec<_>>>()?;
 
     let mut out = String::from(
         "Workload-generator comparison — one cluster (LLaMA2-7B/A100, continuous\n\
@@ -188,8 +189,8 @@ mod tests {
                 .map(|(_, spec)| cfg(spec.clone(), &opts.compute))
                 .unwrap()
         };
-        let synth = run_tokensim(&get("synthetic"));
-        let trace = run_tokensim(&get("trace"));
+        let synth = run_tokensim(&get("synthetic")).unwrap();
+        let trace = run_tokensim(&get("trace")).unwrap();
         assert_eq!(synth.records.len(), trace.records.len());
         let (a, b) = (
             synth.metrics().latency_percentile(0.9),

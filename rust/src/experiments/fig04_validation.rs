@@ -44,10 +44,10 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         base.compute = opts.compute.clone();
 
         // "real system": oracle at full fidelity
-        let real = run_oracle(&base, &params, 0xF16_4);
+        let real = run_oracle(&base, &params, 0xF16_4)?;
         // TokenSim configured with measured (calibrated) hardware
         let sim_cfg = calibrated_config(&base, &params);
-        let sim = run_tokensim(&sim_cfg);
+        let sim = run_tokensim(&sim_cfg)?;
 
         let (rm, sm) = (MetricSet::new(&real.records), MetricSet::new(&sim.records));
         let cells = [

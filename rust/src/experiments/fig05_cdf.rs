@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 
+use crate::cluster::SimulationReport;
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
 use crate::metrics::MetricSet;
@@ -56,18 +57,20 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mut out = String::from("Fig 5 — latency CDF alignment (dashed=vLLM ref, solid=TokenSim)\n");
     // every (qps, side) cell is an independent simulation: sweep the
     // oracle + calibrated-sim pairs across cores
-    let pairs = parallel_sweep(qps_list, |&qps| {
-        let workload = WorkloadSpec::sharegpt(n, qps);
-        let mut base = SimulationConfig::single_worker(
-            ModelSpec::llama2_7b(),
-            HardwareSpec::a100_80g(),
-            workload,
-        );
-        base.compute = opts.compute.clone();
-        let real = run_oracle(&base, &params, 0xF16_5);
-        let sim = run_tokensim(&calibrated_config(&base, &params));
-        (real, sim)
-    });
+    let pairs: Vec<Result<(SimulationReport, SimulationReport)>> =
+        parallel_sweep(qps_list, |&qps| {
+            let workload = WorkloadSpec::sharegpt(n, qps);
+            let mut base = SimulationConfig::single_worker(
+                ModelSpec::llama2_7b(),
+                HardwareSpec::a100_80g(),
+                workload,
+            );
+            base.compute = opts.compute.clone();
+            let real = run_oracle(&base, &params, 0xF16_5)?;
+            let sim = run_tokensim(&calibrated_config(&base, &params))?;
+            Ok((real, sim))
+        });
+    let pairs = pairs.into_iter().collect::<Result<Vec<_>>>()?;
     for (&qps, (real, sim)) in qps_list.iter().zip(&pairs) {
         let rm = MetricSet::new(&real.records);
         let sm = MetricSet::new(&sim.records);

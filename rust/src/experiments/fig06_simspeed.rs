@@ -51,7 +51,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let base = cfg(n, &opts.compute);
 
         let t0 = std::time::Instant::now();
-        let _ = run_tokensim(&base);
+        let _ = run_tokensim(&base).expect("fig6 workload must complete");
         let tokensim_wall = t0.elapsed().as_secs_f64();
 
         // Vidur: training happens once per run in the original; we time
@@ -74,7 +74,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         }
         let _ = Simulation::with_cost_factory(&base, &vidur_factory)
             .expect("experiment config must build")
-            .run();
+            .run()
+            .expect("fig6 workload must complete");
         let vidur_wall = t0.elapsed().as_secs_f64();
 
         let t0 = std::time::Instant::now();
@@ -83,7 +84,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         };
         let _ = Simulation::with_cost_factory(&base, &co_factory)
             .expect("experiment config must build")
-            .run();
+            .run()
+            .expect("fig6 workload must complete");
         let co_wall = t0.elapsed().as_secs_f64();
 
         (n, tokensim_wall, vidur_wall, pretrain_const, co_wall)

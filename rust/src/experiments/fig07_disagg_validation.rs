@@ -44,8 +44,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let mut pairs = Vec::new();
     for &n in counts {
         let base = cfg(n, &opts.compute);
-        let real = run_oracle(&base, &params, 0xD157);
-        let sim = run_tokensim(&calibrated_config(&base, &params));
+        let real = run_oracle(&base, &params, 0xD157)?;
+        let sim = run_tokensim(&calibrated_config(&base, &params))?;
         let (tr, ts) = (total_runtime(&real), total_runtime(&sim));
         pairs.push((ts, tr));
         table.row(&[

@@ -53,7 +53,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
 
     // sweep the (qps x cap) grid across cores; each cell runs its
     // static + continuous pair
-    let results = sweep_grid(rates, caps, |&qps, &(cap, _)| {
+    let results: Vec<Vec<Result<(f64, f64)>>> = sweep_grid(rates, caps, |&qps, &(cap, _)| {
         // static batching cap: 'inf' static means a huge fixed batch
         let static_policy = PolicySpec::new("static")
             .with("batch_size", cap.unwrap_or(512))
@@ -61,16 +61,17 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let cont_policy = PolicySpec::new("continuous")
             .with("max_batched_tokens", 8192u32)
             .with("max_batch_size", cap);
-        let s = run_tokensim(&cfg(n, qps, static_policy, &opts.compute));
-        let c = run_tokensim(&cfg(n, qps, cont_policy, &opts.compute));
-        (
+        let s = run_tokensim(&cfg(n, qps, static_policy, &opts.compute))?;
+        let c = run_tokensim(&cfg(n, qps, cont_policy, &opts.compute))?;
+        Ok((
             s.metrics().mean_normalized_latency(),
             c.metrics().mean_normalized_latency(),
-        )
+        ))
     });
-    for (&qps, row) in rates.iter().zip(&results) {
+    for (&qps, row) in rates.iter().zip(results) {
         let mut cells = vec![f1(qps)];
-        for &(s, c) in row {
+        for cell in row {
+            let (s, c) = cell?;
             cells.push(f3(s));
             cells.push(f3(c));
         }
@@ -104,7 +105,8 @@ mod tests {
                 .with("batch_size", 8u32)
                 .with("max_linger", 2.0),
             &opts.compute,
-        ));
+        ))
+        .unwrap();
         let c = run_tokensim(&cfg(
             n,
             qps,
@@ -112,7 +114,8 @@ mod tests {
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", 8u32),
             &opts.compute,
-        ));
+        ))
+        .unwrap();
         assert!(
             c.metrics().mean_normalized_latency() < s.metrics().mean_normalized_latency(),
             "continuous {} !< static {}",
@@ -131,7 +134,8 @@ mod tests {
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", 4u32),
             &opts.compute,
-        ));
+        ))
+        .unwrap();
         let cinf = run_tokensim(&cfg(
             200,
             10.0,
@@ -139,7 +143,8 @@ mod tests {
                 .with("max_batched_tokens", 8192u32)
                 .with("max_batch_size", Option::<u32>::None),
             &opts.compute,
-        ));
+        ))
+        .unwrap();
         assert!(
             cinf.metrics().mean_normalized_latency()
                 <= c8.metrics().mean_normalized_latency() * 1.05

@@ -63,11 +63,13 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let mut table = Table::new(&hdr);
         // independent (qps x ratio) cells: sweep across cores
         let goodputs = sweep_grid(rates, ratios, |&qps, &ratio| {
-            run_tokensim(&cfg(n, qps, ratio, slo, &opts.compute)).slo_throughput()
+            run_tokensim(&cfg(n, qps, ratio, slo, &opts.compute)).map(|r| r.slo_throughput())
         });
-        for (&qps, row) in rates.iter().zip(&goodputs) {
+        for (&qps, row) in rates.iter().zip(goodputs) {
             let mut cells = vec![f1(qps)];
-            cells.extend(row.iter().map(|&g| f3(g)));
+            for g in row {
+                cells.push(f3(g?));
+            }
             table.row(&cells);
         }
         out.push_str(&format!("\n{title}\n"));
@@ -88,8 +90,10 @@ mod tests {
     #[test]
     fn capping_ratio_reduces_preemptions() {
         let opts = ExpOpts::quick();
-        let full = run_tokensim(&cfg(250, 20.0, 1.0, SloSpec::paper_default(), &opts.compute));
-        let capped = run_tokensim(&cfg(250, 20.0, 0.7, SloSpec::paper_default(), &opts.compute));
+        let full =
+            run_tokensim(&cfg(250, 20.0, 1.0, SloSpec::paper_default(), &opts.compute)).unwrap();
+        let capped =
+            run_tokensim(&cfg(250, 20.0, 0.7, SloSpec::paper_default(), &opts.compute)).unwrap();
         assert!(
             capped.metrics().total_preemptions() <= full.metrics().total_preemptions(),
             "cap must not increase preemptions: {} vs {}",

@@ -43,16 +43,16 @@ pub(super) fn best_split(
     output_mean: u32,
     splits: &[(u32, u32)],
     cost: &crate::compute::ComputeSpec,
-) -> ((u32, u32), f64) {
+) -> Result<((u32, u32), f64)> {
     let mut best = ((0, 0), -1.0f64);
     for &(p, d) in splits {
         let build = |qps: f64| disagg_cfg(model, p, d, n_req, qps, input_mean, output_mean, cost);
-        let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
+        let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0)?;
         if goodput > best.1 {
             best = ((p, d), goodput);
         }
     }
-    best
+    Ok(best)
 }
 
 pub fn run(opts: &ExpOpts) -> Result<String> {
@@ -79,9 +79,10 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         let cells = sweep_grid(inputs, outputs, |&input, &output| {
             best_split(&model, n_req, input, output, splits, &opts.compute)
         });
-        for (&input, results) in inputs.iter().zip(&cells) {
+        for (&input, results) in inputs.iter().zip(cells) {
             let mut row = vec![input.to_string()];
-            for &((p, d), thr) in results {
+            for result in results {
+                let ((p, d), thr) = result?;
                 row.push(format!("P{p}D{d}@{thr:.1}"));
             }
             table.row(&row);
@@ -106,9 +107,9 @@ mod tests {
         let model = ModelSpec::llama2_7b();
         let splits = [(1u32, 7u32), (4, 4)];
         // decode-heavy workload: long outputs, short inputs
-        let ((p_long, _), _) = best_split(&model, 100, 64, 256, &splits, &cost);
+        let ((p_long, _), _) = best_split(&model, 100, 64, 256, &splits, &cost).unwrap();
         // prefill-heavy workload: long inputs, tiny outputs
-        let ((p_short, _), _) = best_split(&model, 100, 1024, 8, &splits, &cost);
+        let ((p_short, _), _) = best_split(&model, 100, 1024, 8, &splits, &cost).unwrap();
         assert!(p_long <= p_short, "long outputs got {p_long} prefill, short got {p_short}");
     }
 }

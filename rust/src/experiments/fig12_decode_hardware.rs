@@ -60,12 +60,11 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // every setup runs its own SLO-throughput search: sweep across cores
     let goodputs = parallel_sweep(&setups, |(_, hw, np, nd)| {
         let build = |qps: f64| cfg(*np, hw.clone(), *nd, n_req, qps, &opts.compute);
-        let (_, goodput) = max_slo_throughput(&build, 0.9, 4.0);
-        goodput
+        max_slo_throughput(&build, 0.9, 4.0).map(|(_, goodput)| goodput)
     });
     for ((label, hw, np, nd), goodput) in setups.iter().zip(goodputs) {
         let price = *np as f64 * a100.price + *nd as f64 * hw.price;
-        table.row(&[label.clone(), format!("{price:.2}"), f1(goodput)]);
+        table.row(&[label.clone(), format!("{price:.2}"), f1(goodput?)]);
     }
 
     let mut out = String::from(
@@ -90,8 +89,8 @@ mod tests {
         let opts = ExpOpts::quick();
         let build_g = |qps: f64| cfg(1, HardwareSpec::gddr6_aim(), 7, 120, qps, &opts.compute);
         let build_v = |qps: f64| cfg(1, HardwareSpec::v100_32g(), 7, 120, qps, &opts.compute);
-        let (_, g) = max_slo_throughput(&build_g, 0.9, 4.0);
-        let (_, v) = max_slo_throughput(&build_v, 0.9, 4.0);
+        let (_, g) = max_slo_throughput(&build_g, 0.9, 4.0).unwrap();
+        let (_, v) = max_slo_throughput(&build_v, 0.9, 4.0).unwrap();
         assert!(g > v, "G6-AiM decode ({g}) must beat V100 decode ({v})");
     }
 }

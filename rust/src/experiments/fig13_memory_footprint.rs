@@ -69,8 +69,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let n_req = opts.size(10_000, 400);
     let qps = n_req as f64 / 60.0;
 
-    let full = run_tokensim(&cfg(n_req, qps, 80e9, &opts.compute));
-    let half = run_tokensim(&cfg(n_req, qps, 40e9, &opts.compute));
+    let full = run_tokensim(&cfg(n_req, qps, 80e9, &opts.compute))?;
+    let half = run_tokensim(&cfg(n_req, qps, 40e9, &opts.compute))?;
 
     let mut out = String::from(
         "Fig 13 — memory-footprint heatmaps, window [5,65]s (.=idle @=full)\n\n",
@@ -100,7 +100,7 @@ mod tests {
     #[test]
     fn prefill_uses_less_memory_and_halving_is_free() {
         let opts = ExpOpts::quick();
-        let full = run_tokensim(&cfg(240, 4.0, 80e9, &opts.compute));
+        let full = run_tokensim(&cfg(240, 4.0, 80e9, &opts.compute)).unwrap();
         let (t0, t1) = WINDOW;
         let prefill_mean = full.timeline.mean_utilization(0, t0, t1);
         let decode_mean: f64 = (1..8)
@@ -112,7 +112,7 @@ mod tests {
             "prefill {prefill_mean} !< decode {decode_mean}"
         );
 
-        let half = run_tokensim(&cfg(240, 4.0, 40e9, &opts.compute));
+        let half = run_tokensim(&cfg(240, 4.0, 40e9, &opts.compute)).unwrap();
         let rel = (half.request_throughput() - full.request_throughput()).abs()
             / full.request_throughput();
         assert!(rel < 0.05, "halving prefill memory changed throughput by {rel}");

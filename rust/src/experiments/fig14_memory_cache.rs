@@ -36,12 +36,12 @@ pub(super) fn p99_latency(
     qps: f64,
     cache: bool,
     cost: &crate::compute::ComputeSpec,
-) -> f64 {
+) -> Result<f64> {
     let convs = ConversationSpec::chatbot(n_conv, qps, input_mean, output_mean).generate();
     let report = Simulation::from_conversations(&cfg(cache, cost), &convs)
         .expect("experiment config must build")
-        .run();
-    report.latency_percentile(0.99)
+        .run()?;
+    Ok(report.latency_percentile(0.99))
 }
 
 pub fn run(opts: &ExpOpts) -> Result<String> {
@@ -68,8 +68,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for &qps in rates {
         let mut cells = vec![f1(qps)];
         for &(input, output) in mixes {
-            cells.push(f3(p99_latency(input, output, n_conv, qps, false, &opts.compute)));
-            cells.push(f3(p99_latency(input, output, n_conv, qps, true, &opts.compute)));
+            cells.push(f3(p99_latency(input, output, n_conv, qps, false, &opts.compute)?));
+            cells.push(f3(p99_latency(input, output, n_conv, qps, true, &opts.compute)?));
         }
         table.row(&cells);
     }
@@ -93,8 +93,8 @@ mod tests {
     #[test]
     fn cache_reduces_p99_under_load() {
         let cost = ExpOpts::quick().compute;
-        let off = p99_latency(128, 64, 200, 10.0, false, &cost);
-        let on = p99_latency(128, 64, 200, 10.0, true, &cost);
+        let off = p99_latency(128, 64, 200, 10.0, false, &cost).unwrap();
+        let on = p99_latency(128, 64, 200, 10.0, true, &cost).unwrap();
         assert!(on < off, "cache must reduce P99: on={on} off={off}");
     }
 }

@@ -36,9 +36,9 @@ pub(super) fn max_thr(
     np: u32,
     n_req: usize,
     cost: &crate::compute::ComputeSpec,
-) -> f64 {
+) -> Result<f64> {
     let build = |qps: f64| cfg(prefill_hw.clone(), np, n_req, qps, cost);
-    max_slo_throughput(&build, 0.9, 4.0).1
+    Ok(max_slo_throughput(&build, 0.9, 4.0)?.1)
 }
 
 pub fn run(opts: &ExpOpts) -> Result<String> {
@@ -68,7 +68,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for (label, hw) in &variants {
         let mut cells = vec![label.clone()];
         for &np in splits {
-            cells.push(f1(max_thr(hw.clone(), np, n_req, &opts.compute)));
+            cells.push(f1(max_thr(hw.clone(), np, n_req, &opts.compute)?));
         }
         table.row(&cells);
     }
@@ -94,9 +94,9 @@ mod tests {
     fn prefill_compute_matters_bandwidth_does_not() {
         let cost = ExpOpts::quick().compute;
         let a100 = HardwareSpec::a100_80g();
-        let base = max_thr(a100.clone(), 1, 120, &cost);
-        let slow_t = max_thr(a100.scale_compute(0.25), 1, 120, &cost);
-        let slow_b = max_thr(a100.scale_bandwidth(0.25), 1, 120, &cost);
+        let base = max_thr(a100.clone(), 1, 120, &cost).unwrap();
+        let slow_t = max_thr(a100.scale_compute(0.25), 1, 120, &cost).unwrap();
+        let slow_b = max_thr(a100.scale_bandwidth(0.25), 1, 120, &cost).unwrap();
         assert!(
             slow_t < 0.8 * base,
             "1/4 compute should hurt: {slow_t} vs {base}"

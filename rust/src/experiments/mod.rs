@@ -11,6 +11,7 @@
 mod common;
 mod exp_hardware;
 mod exp_memory;
+mod exp_scale;
 mod exp_workloads;
 mod fig04_validation;
 mod fig05_cdf;
@@ -36,10 +37,11 @@ use anyhow::{bail, Result};
 /// compares memory managers x preemption policies, "workloads"
 /// compares workload generators and per-tenant service quality,
 /// "hardware" sweeps the hardware catalog x compute models x PD splits
-/// for the price-normalized frontier).
+/// for the price-normalized frontier, "scale" benchmarks the event
+/// engine at 10k–1M requests with decode fast-forwarding off/on).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies", "memory", "workloads", "hardware",
+    "fig14", "fig15", "policies", "memory", "workloads", "hardware", "scale",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -62,6 +64,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "memory" => exp_memory::run(opts),
         "workloads" => exp_workloads::run(opts),
         "hardware" => exp_hardware::run(opts),
+        "scale" => exp_scale::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

@@ -119,18 +119,20 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
     // independent (qps x policy) cells: sweep across cores
-    let results = sweep_grid(rates, &locals, |&qps, (_, spec)| {
-        let report = run_tokensim(&local_cfg(n, qps, spec.clone(), &opts.compute));
+    let results: Vec<Vec<Result<String>>> = sweep_grid(rates, &locals, |&qps, (_, spec)| {
+        let report = run_tokensim(&local_cfg(n, qps, spec.clone(), &opts.compute))?;
         let m = report.metrics();
-        format!(
+        Ok(format!(
             "{}|{}",
             f3(m.mean_normalized_latency()),
             f3(m.ttft_percentile(0.99))
-        )
+        ))
     });
-    for (&qps, row) in rates.iter().zip(&results) {
+    for (&qps, row) in rates.iter().zip(results) {
         let mut cells = vec![f1(qps)];
-        cells.extend(row.iter().cloned());
+        for cell in row {
+            cells.push(cell?);
+        }
         table.row(&cells);
     }
     out.push_str(&table.finish());
@@ -145,18 +147,20 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     headers.extend(globals.iter().map(|(label, _)| label.to_string()));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&hdr_refs);
-    let results = sweep_grid(cluster_qps, &globals, |&qps, (_, spec)| {
-        let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), &opts.compute));
+    let results: Vec<Vec<Result<String>>> = sweep_grid(cluster_qps, &globals, |&qps, (_, spec)| {
+        let report = run_tokensim(&cluster_cfg(n, qps, spec.clone(), &opts.compute))?;
         let m = report.metrics();
-        format!(
+        Ok(format!(
             "{}|{}",
             f3(m.mean_normalized_latency()),
             f3(m.ttft_percentile(0.99))
-        )
+        ))
     });
-    for (&qps, row) in cluster_qps.iter().zip(&results) {
+    for (&qps, row) in cluster_qps.iter().zip(results) {
         let mut cells = vec![f1(qps)];
-        cells.extend(row.iter().cloned());
+        for cell in row {
+            cells.push(cell?);
+        }
         table.row(&cells);
     }
     out.push_str(&table.finish());
@@ -180,7 +184,8 @@ mod tests {
         let spec = PolicySpec::new("chunked_prefill")
             .with("chunk_tokens", 256u32)
             .with("max_batch_size", 16u32);
-        let report = run_tokensim(&local_cfg(150, 8.0, spec, &ComputeSpec::new("analytic")));
+        let report =
+            run_tokensim(&local_cfg(150, 8.0, spec, &ComputeSpec::new("analytic"))).unwrap();
         assert_eq!(report.records.len(), 150);
     }
 
@@ -192,8 +197,9 @@ mod tests {
         let fifo = PolicySpec::new("continuous")
             .with("max_batched_tokens", 2048u32)
             .with("max_batch_size", 8u32);
-        let rs = run_tokensim(&local_cfg(250, 12.0, sjf, &ComputeSpec::new("analytic")));
-        let rf = run_tokensim(&local_cfg(250, 12.0, fifo, &ComputeSpec::new("analytic")));
+        let rs = run_tokensim(&local_cfg(250, 12.0, sjf, &ComputeSpec::new("analytic"))).unwrap();
+        let rf =
+            run_tokensim(&local_cfg(250, 12.0, fifo, &ComputeSpec::new("analytic"))).unwrap();
         assert_eq!(rs.records.len(), 250);
         // SJF must not be (much) worse than FIFO on mean normalized
         // latency — its entire reason to exist
@@ -211,7 +217,8 @@ mod tests {
             24.0,
             PolicySpec::new("power_of_two"),
             &ComputeSpec::new("analytic"),
-        ));
+        ))
+        .unwrap();
         assert_eq!(report.records.len(), 200);
         // all four workers must have seen work
         assert!(report.workers.iter().all(|w| w.iterations > 0));

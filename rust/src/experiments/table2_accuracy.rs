@@ -50,15 +50,15 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     for &n in counts {
         let base = cfg(n, qps, &opts.compute);
         // ground truth ("real hardware"): oracle, seed A
-        let real = run_oracle(&base, &params, 0x7AB1E_A);
+        let real = run_oracle(&base, &params, 0x7AB1E_A)?;
         let t_real = total_runtime(&real);
 
         // Local: the real system measured again (different noise seed)
-        let local = run_oracle(&base, &params, 0x7AB1E_B);
+        let local = run_oracle(&base, &params, 0x7AB1E_B)?;
         let t_local = total_runtime(&local);
 
         // TokenSim (calibrated, as in Figs 4/5)
-        let sim = run_tokensim(&calibrated_config(&base, &params));
+        let sim = run_tokensim(&calibrated_config(&base, &params))?;
         let t_tokensim = total_runtime(&sim);
 
         // Vidur-like: learned regression over oracle profiles
@@ -67,7 +67,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         };
         let vidur = Simulation::with_cost_factory(&base, &vidur_factory)
             .expect("experiment config must build")
-            .run();
+            .run()?;
         let t_vidur = total_runtime(&vidur);
 
         // LLMServingSim-like: co-simulation (short prompts, so exact)
@@ -76,7 +76,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         };
         let co = Simulation::with_cost_factory(&base, &co_factory)
             .expect("experiment config must build")
-            .run();
+            .run()?;
         let t_co = total_runtime(&co);
 
         let diff = |t: f64| format!("{:.3}", 100.0 * ((t - t_real) / t_real).abs());

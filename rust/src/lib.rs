@@ -42,7 +42,10 @@
 //! let hw = HardwareSpec::a100_80g();
 //! let workload = WorkloadSpec::sharegpt(2000, 30.0);
 //! let cfg = SimulationConfig::single_worker(model, hw, workload);
-//! let report = Simulation::from_config(&cfg).expect("valid config").run();
+//! let report = Simulation::from_config(&cfg)
+//!     .expect("valid config")
+//!     .run()
+//!     .expect("workload must complete");
 //! println!("p99 latency = {:.3}s", report.latency_percentile(0.99));
 //! ```
 

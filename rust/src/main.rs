@@ -23,8 +23,8 @@ fn usage() -> &'static str {
     "TokenSim — LLM inference system simulator (paper reproduction)\n\
      \n\
      USAGE:\n\
-       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>]\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
        tokensim list                 list experiments, policies, memory managers, workload generators, compute models, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n"
@@ -64,7 +64,17 @@ fn dispatch(args: &[String]) -> Result<()> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let config_path = flag_value(args, "--config").context("run requires --config <file>")?;
-    let cfg = SimulationConfig::from_yaml_file(config_path)?;
+    let mut cfg = SimulationConfig::from_yaml_file(config_path)?;
+    if let Some(v) = flag_value(args, "--fast-forward") {
+        // CLI override of the YAML `engine: fast_forward` switch — what
+        // the CI determinism gate uses to byte-diff both modes without
+        // editing the config
+        cfg.engine.fast_forward = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => bail!("--fast-forward expects on|off, got '{other}'"),
+        };
+    }
     println!(
         "model={} workers={} workload={}",
         cfg.model.name,
@@ -76,7 +86,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         tokensim::workload::save_trace(path, &requests)?;
         println!("workload trace saved to {path}");
     }
-    let report = Simulation::from_config(&cfg)?.run();
+    let report = Simulation::from_config(&cfg)?.run()?;
     println!("{}", report.summary());
     for w in &report.workers {
         println!(

@@ -188,6 +188,74 @@ pub trait MemoryManager: Send {
         self.can_admit_with_pending(tokens, 0)
     }
 
+    /// Bulk-step decode growth headroom: the largest `j <= max_steps`
+    /// such that growing **every** member from its current context
+    /// `ctx` to `ctx + j` tokens fits in the free pool — i.e. how many
+    /// consecutive single-token decode iterations the whole batch can
+    /// take before an allocation would fail and force a preemption.
+    ///
+    /// This is the memory-exhaustion boundary of the cluster driver's
+    /// decode fast-forward: the driver coalesces at most this many
+    /// iterations and replaces the per-iteration `reserve(req, ctx+1)`
+    /// growth calls with one bulk [`reserve`](Self::reserve) to the
+    /// final size, which is state-identical because reservations are
+    /// delta-based. Growth ignores admission caps and watermarks by
+    /// design (exactly like the per-iteration path, which goes through
+    /// raw `reserve`, not `can_admit`).
+    ///
+    /// `members` pairs each running request with its current KV context
+    /// in tokens. The caller guarantees every member already holds a
+    /// reservation covering `ctx + 1` (its in-flight iteration), so the
+    /// answer is at least 1 whenever `max_steps >= 1`. Managers that
+    /// pre-pay the final footprint (`token_contiguous`) need no blocks
+    /// for growth and report `max_steps` unchanged.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use tokensim::memory::{AllocOutcome, MemoryManager, PagedBlockManager};
+    ///
+    /// // 8 blocks of 16 tokens; one request holding 2 blocks (17 tokens
+    /// // reserved for its in-flight iteration)
+    /// let mut mem = PagedBlockManager::with_blocks(8, 16, 1024);
+    /// assert_eq!(mem.reserve(0, 17), AllocOutcome::Ok);
+    /// // 6 free blocks = 96 more tokens once the current block fills:
+    /// // ctx 16 can grow to 16 + j while ceil((16+j)/16) - 2 <= 6
+    /// assert_eq!(mem.decode_growth_headroom(&[(0, 16)], 1_000), 112);
+    /// // bounded by the caller's own limit
+    /// assert_eq!(mem.decode_growth_headroom(&[(0, 16)], 5), 5);
+    /// ```
+    fn decode_growth_headroom(&self, members: &[(RequestId, u32)], max_steps: u32) -> u32 {
+        if max_steps <= 1 {
+            return max_steps;
+        }
+        let fits = |j: u32| -> bool {
+            let mut delta = 0u64;
+            for &(req, ctx) in members {
+                delta += self
+                    .blocks_for_tokens(ctx.saturating_add(j))
+                    .saturating_sub(self.blocks_held(req));
+            }
+            delta <= self.free_blocks()
+        };
+        if fits(max_steps) {
+            return max_steps;
+        }
+        // fits is monotone decreasing in j and fits(1) holds (the
+        // caller already reserved ctx + 1): bisect for the largest
+        // feasible step count
+        let (mut lo, mut hi) = (1u32, max_steps);
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if fits(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
     /// Tokens to reserve when admitting request `r`. Paged managers
     /// reserve the (effective) prompt and grow per token; contiguous
     /// managers over-reserve the final footprint up front.
@@ -296,5 +364,36 @@ mod tests {
     #[test]
     fn default_preemption_is_recompute() {
         assert_eq!(PreemptionPolicy::default(), PreemptionPolicy::Recompute);
+    }
+
+    #[test]
+    fn growth_headroom_matches_step_by_step_reservation() {
+        // the bulk answer must equal what per-iteration reserve calls
+        // would discover the slow way, for a mixed-context batch
+        let mk = || {
+            let mut m = PagedBlockManager::with_blocks(12, 16, 1024);
+            assert_eq!(m.reserve(0, 40), AllocOutcome::Ok); // 3 blocks, ctx 39
+            assert_eq!(m.reserve(1, 18), AllocOutcome::Ok); // 2 blocks, ctx 17
+            m
+        };
+        let members = [(0usize, 39u32), (1usize, 17u32)];
+        let bulk = mk().decode_growth_headroom(&members, 10_000);
+        // replay: grow every member one token per step until a step fails
+        let mut m = mk();
+        let mut steps = 0u32;
+        'outer: loop {
+            for &(req, ctx) in &members {
+                if m.reserve(req, ctx + steps + 2) == AllocOutcome::OutOfMemory {
+                    break 'outer;
+                }
+            }
+            steps += 1;
+        }
+        assert_eq!(bulk, steps + 1, "bulk counts the already-reserved step");
+        assert!(bulk > 1);
+        // caller bound wins when smaller; degenerate bounds echo back
+        assert_eq!(mk().decode_growth_headroom(&members, 3), 3);
+        assert_eq!(mk().decode_growth_headroom(&members, 1), 1);
+        assert_eq!(mk().decode_growth_headroom(&members, 0), 0);
     }
 }

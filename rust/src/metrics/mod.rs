@@ -8,7 +8,7 @@
 mod percentile;
 mod timeline;
 
-pub use percentile::{cdf_points, percentile, Summary};
+pub use percentile::{cdf_points, percentile, percentile_of_sorted, percentiles, Summary};
 pub use timeline::{MemorySample, MemoryTimeline};
 
 
@@ -189,8 +189,23 @@ impl<'a> MetricSet<'a> {
         percentile(self.records.iter().map(|r| r.latency()), q)
     }
 
+    /// Several latency percentiles with a single collect-and-sort —
+    /// identical values to calling [`latency_percentile`] per `q`,
+    /// without re-sorting the record set each time (the per-report /
+    /// per-sweep-cell hot path).
+    ///
+    /// [`latency_percentile`]: MetricSet::latency_percentile
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        percentiles(self.records.iter().map(|r| r.latency()), qs)
+    }
+
     pub fn ttft_percentile(&self, q: f64) -> f64 {
         percentile(self.records.iter().map(|r| r.ttft()), q)
+    }
+
+    /// Several TTFT percentiles with a single collect-and-sort.
+    pub fn ttft_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        percentiles(self.records.iter().map(|r| r.ttft()), qs)
     }
 
     /// Percentile of the per-request worst inter-token gap (the TBT
@@ -278,11 +293,12 @@ impl<'a> MetricSet<'a> {
                 let attainment = slo.map(|s| {
                     recs.iter().filter(|r| s.satisfied(r)).count() as f64 / recs.len() as f64
                 });
+                let ttft = percentiles(recs.iter().map(|r| r.ttft()), &[0.50, 0.99]);
                 TenantSummary {
                     tenant: name.to_string(),
                     requests: recs.len(),
-                    ttft_p50: percentile(recs.iter().map(|r| r.ttft()), 0.50),
-                    ttft_p99: percentile(recs.iter().map(|r| r.ttft()), 0.99),
+                    ttft_p50: ttft[0],
+                    ttft_p99: ttft[1],
                     tbt_p99: percentile(recs.iter().map(|r| r.max_token_gap), 0.99),
                     slo_attainment: attainment,
                 }
@@ -393,6 +409,24 @@ mod tests {
         assert!(MetricSet::new(&[rec(0, 0.0, 1.0, 2.0, 5, 0.0)])
             .tenant_breakdown(&[])
             .is_empty());
+    }
+
+    #[test]
+    fn multi_percentile_paths_match_single_percentile_calls() {
+        let recs: Vec<RequestRecord> = (0..40)
+            .map(|i| {
+                let a = i as f64 * 0.13;
+                rec(i, a, a + 0.2 + (i % 7) as f64 * 0.05, a + 1.0 + (i % 5) as f64, 8, 0.01)
+            })
+            .collect();
+        let m = MetricSet::new(&recs);
+        let qs = [0.5, 0.9, 0.99, 1.0];
+        let lat = m.latency_percentiles(&qs);
+        let ttft = m.ttft_percentiles(&qs);
+        for (i, &q) in qs.iter().enumerate() {
+            assert_eq!(lat[i], m.latency_percentile(q), "latency q={q}");
+            assert_eq!(ttft[i], m.ttft_percentile(q), "ttft q={q}");
+        }
     }
 
     #[test]

@@ -4,20 +4,37 @@
 /// Returns 0.0 for an empty iterator.
 pub fn percentile(values: impl IntoIterator<Item = f64>, q: f64) -> f64 {
     let mut v: Vec<f64> = values.into_iter().collect();
-    if v.is_empty() {
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_of_sorted(&v, q)
+}
+
+/// [`percentile`] over an already-sorted slice (ascending). The
+/// single-sort building block for callers that extract several
+/// quantiles from the same values — sorting once and indexing is what
+/// keeps per-sweep-cell reporting off the O(n log n)-per-quantile path.
+pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
     let q = q.clamp(0.0, 1.0);
-    v.sort_by(|a, b| a.total_cmp(b));
-    let pos = q * (v.len() - 1) as f64;
+    let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
         let frac = pos - lo as f64;
-        v[lo] * (1.0 - frac) + v[hi] * frac
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
     }
+}
+
+/// Several percentiles of the same values with a single sort. Returns
+/// one entry per requested `q`, each identical to what
+/// [`percentile`] would return for that `q` alone.
+pub fn percentiles(values: impl IntoIterator<Item = f64>, qs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = values.into_iter().collect();
+    v.sort_by(|a, b| a.total_cmp(b));
+    qs.iter().map(|&q| percentile_of_sorted(&v, q)).collect()
 }
 
 /// Empirical CDF points: sorted `(value, fraction ≤ value)`.
@@ -54,13 +71,18 @@ impl Summary {
                 min: 0.0,
             };
         }
+        // one sorted copy serves every order statistic: the old path
+        // cloned and sorted the same slice once per percentile call,
+        // which sat on the per-sweep-cell reporting hot path
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Self {
             mean: values.iter().sum::<f64>() / values.len() as f64,
-            p50: percentile(values.iter().copied(), 0.50),
-            p90: percentile(values.iter().copied(), 0.90),
-            p99: percentile(values.iter().copied(), 0.99),
-            max: values.iter().copied().fold(f64::MIN, f64::max),
-            min: values.iter().copied().fold(f64::MAX, f64::min),
+            p50: percentile_of_sorted(&sorted, 0.50),
+            p90: percentile_of_sorted(&sorted, 0.90),
+            p99: percentile_of_sorted(&sorted, 0.99),
+            max: sorted[sorted.len() - 1],
+            min: sorted[0],
         }
     }
 }
@@ -99,6 +121,46 @@ mod tests {
             assert!(w[1].0 >= w[0].0);
             assert!(w[1].1 >= w[0].1);
         }
+    }
+
+    #[test]
+    fn sorted_helpers_match_the_sorting_path() {
+        let values = vec![9.0, -3.5, 0.0, 7.25, 2.0, 2.0, 11.0, -0.5];
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(
+                percentile(values.iter().copied(), q),
+                percentile_of_sorted(&sorted, q),
+                "q={q}"
+            );
+        }
+        let qs = [0.5, 0.9, 0.99];
+        let multi = percentiles(values.iter().copied(), &qs);
+        for (i, &q) in qs.iter().enumerate() {
+            assert_eq!(multi[i], percentile(values.iter().copied(), q));
+        }
+        assert_eq!(percentile_of_sorted(&[], 0.5), 0.0);
+        assert!(percentiles(std::iter::empty(), &qs).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn summary_single_sort_is_identical_to_per_quantile_sorts() {
+        // regression for the sort-once rewrite: every field must equal
+        // the old clone-and-sort-per-call path bit for bit
+        let values: Vec<f64> = (0..257)
+            .map(|i| ((i * 73 % 257) as f64 - 60.0) * 0.37)
+            .collect();
+        let s = Summary::of(&values);
+        assert_eq!(s.mean, values.iter().sum::<f64>() / values.len() as f64);
+        assert_eq!(s.p50, percentile(values.iter().copied(), 0.50));
+        assert_eq!(s.p90, percentile(values.iter().copied(), 0.90));
+        assert_eq!(s.p99, percentile(values.iter().copied(), 0.99));
+        assert_eq!(s.max, values.iter().copied().fold(f64::MIN, f64::max));
+        assert_eq!(s.min, values.iter().copied().fold(f64::MAX, f64::min));
+        // single element: every order statistic collapses onto it
+        let one = Summary::of(&[4.25]);
+        assert_eq!((one.min, one.p50, one.p99, one.max), (4.25, 4.25, 4.25, 4.25));
     }
 
     #[test]

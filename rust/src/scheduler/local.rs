@@ -122,6 +122,30 @@ pub trait LocalScheduler: Send {
     fn repoll_at(&self, _now: SimTime, _oldest_wait: Option<SimTime>) -> Option<SimTime> {
         None
     }
+
+    /// May the driver coalesce consecutive all-decode iterations of this
+    /// policy (decode fast-forwarding, `engine: fast_forward`)?
+    ///
+    /// The driver only fast-forwards a **closed batch**: an all-decode
+    /// plan covering the whole running set, while no external event
+    /// (arrival, transfer, sample tick) is scheduled before the next
+    /// completion and per-token KV growth stays within the pool. Inside
+    /// such a window the worker's queues are frozen and its memory can
+    /// only shrink, so `form_batch` is only skippable if it would have
+    /// reproduced the same decode batch at every boundary. That holds
+    /// for any policy whose decision is a pure function of the queues,
+    /// request phases and memory state — all built-ins qualify
+    /// (admission blocked by a batch cap, token budget or memory stays
+    /// blocked while nothing completes and free blocks only shrink;
+    /// [`StaticBatching`]'s linger clock only runs between batches,
+    /// never inside one).
+    ///
+    /// Override to `false` for a policy that admits on a timer or
+    /// mutates internal state across decode iterations — otherwise
+    /// fast-forwarded runs may diverge from event-by-event runs.
+    fn decode_fast_forwardable(&self) -> bool {
+        true
+    }
 }
 
 /// Admission ordering for [`PriorityAdmission`].

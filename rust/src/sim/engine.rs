@@ -53,10 +53,18 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; invert for earliest-first.
+        //
+        // `total_cmp`, not `partial_cmp(..).unwrap_or(Equal)`: the
+        // fields are `pub`, so a directly-constructed Event can carry a
+        // NaN timestamp that `schedule_at`'s finiteness assert never
+        // saw. Treating NaN as equal to everything is not a total
+        // order — BinaryHeap's internal invariants silently collapse
+        // and events pop in arbitrary order. Under `total_cmp` NaN is
+        // merely the largest value (sorted last), and ordering among
+        // finite timestamps is unchanged.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -188,6 +196,41 @@ mod tests {
         q.schedule_at(2.0, EventPayload::SampleTick);
         q.pop();
         q.schedule_at(1.0, EventPayload::SampleTick);
+    }
+
+    #[test]
+    fn ordering_is_total_even_for_nan_timestamps() {
+        // regression: Event fields are `pub`, so a NaN time can enter a
+        // heap without passing `schedule_at`'s finiteness assert; the
+        // old `partial_cmp(..).unwrap_or(Equal)` made NaN compare equal
+        // to everything, which is not a total order and silently broke
+        // heap invariants. Under `total_cmp`, NaN sorts after every
+        // finite time (max-heap inverted => popped last) and finite
+        // events keep their earliest-first FIFO order.
+        let ev = |time: f64, seq: u64| Event {
+            time,
+            seq,
+            payload: EventPayload::SampleTick,
+        };
+        let nan = ev(f64::NAN, 0);
+        let one = ev(1.0, 1);
+        let two = ev(2.0, 2);
+        // earliest-first => in the inverted order, smaller time is Greater
+        assert_eq!(one.cmp(&two), Ordering::Greater);
+        assert_eq!(two.cmp(&one), Ordering::Less);
+        // NaN is a totally-ordered extreme, not "equal to everything"
+        assert_eq!(nan.cmp(&one), Ordering::Less, "NaN pops last");
+        assert_eq!(one.cmp(&nan), Ordering::Greater);
+        assert_eq!(nan.cmp(&ev(f64::NAN, 9)), Ordering::Greater, "seq ties");
+        // antisymmetry + transitivity hold through a real heap: finite
+        // events drain earliest-first even with a NaN event present
+        let mut heap = std::collections::BinaryHeap::new();
+        for e in [nan, two, one] {
+            heap.push(e);
+        }
+        assert_eq!(heap.pop().unwrap().time, 1.0);
+        assert_eq!(heap.pop().unwrap().time, 2.0);
+        assert!(heap.pop().unwrap().time.is_nan());
     }
 
     #[test]

@@ -77,7 +77,7 @@ fn simulation_identical_under_all_cost_models() {
         // lossless enum -> registry-spec conversion keeps this call
         // site's pre-registry shape working
         cfg.compute = kind.into();
-        reports.push(Simulation::from_config(&cfg).unwrap().run());
+        reports.push(Simulation::from_config(&cfg).unwrap().run().unwrap());
     }
     let base = MetricSet::new(&reports[0].records).latency_percentile(0.99);
     for r in &reports[1..] {
@@ -91,7 +91,7 @@ fn simulation_identical_under_all_cost_models() {
 
 #[test]
 fn all_requests_complete_with_sane_timestamps() {
-    let report = Simulation::from_config(&base_cfg(300, 20.0)).unwrap().run();
+    let report = Simulation::from_config(&base_cfg(300, 20.0)).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 300);
     for r in &report.records {
         assert!(r.first_token >= r.arrival, "req {}", r.id);
@@ -106,7 +106,7 @@ fn saturation_appears_beyond_service_capacity() {
     let mut prev = 0.0;
     let mut plateaued = false;
     for qps in [2.0, 8.0, 32.0, 128.0, 512.0, 2048.0] {
-        let report = Simulation::from_config(&base_cfg(250, qps)).unwrap().run();
+        let report = Simulation::from_config(&base_cfg(250, qps)).unwrap().run().unwrap();
         let thr = report.request_throughput();
         if thr < prev * 1.05 {
             plateaued = true;
@@ -127,8 +127,8 @@ fn disaggregated_matches_unified_at_low_load_and_transfers_kv() {
     let mut disagg = SimulationConfig::disaggregated(model, hw.clone(), 1, hw, 1, workload);
     disagg.compute = ComputeSpec::new("analytic");
 
-    let ru = Simulation::from_config(&unified).unwrap().run();
-    let rd = Simulation::from_config(&disagg).unwrap().run();
+    let ru = Simulation::from_config(&unified).unwrap().run().unwrap();
+    let rd = Simulation::from_config(&disagg).unwrap().run().unwrap();
     assert_eq!(rd.records.len(), 60);
     // at 2 qps both configurations are unloaded; latencies comparable
     // (disagg pays the KV transfer, bounded by ~20%)
@@ -158,7 +158,7 @@ fn slow_interconnect_hurts_disaggregation() {
         );
         cfg.compute = ComputeSpec::new("analytic");
         cfg.cluster.scheduler.interconnect = link;
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let fast = mk(LinkSpec::nvlink());
     let slow = mk(LinkSpec::ethernet_100g());
@@ -191,7 +191,7 @@ workload:
   seed: 3
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 40);
 }
 
@@ -201,7 +201,7 @@ fn conversation_pool_cache_reduces_prefill_work() {
     let run = |pool: Option<PoolCacheConfig>| {
         let mut cfg = base_cfg(1, 1.0);
         cfg.pool_cache = pool;
-        Simulation::from_conversations(&cfg, &convs).unwrap().run()
+        Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap()
     };
     let off = run(None);
     let on = run(Some(PoolCacheConfig::with_capacity(1_000_000)));
@@ -230,7 +230,7 @@ fn static_batching_has_worse_tail_latency_under_load() {
     let mk = |policy: PolicySpec| {
         let mut cfg = base_cfg(250, 12.0);
         cfg.cluster.workers[0].local_scheduler = policy;
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let cont = mk(PolicySpec::new("continuous")
         .with("max_batched_tokens", 8192u32)
@@ -254,8 +254,8 @@ fn trace_replay_reproduces_generated_workload() {
     tokensim::workload::save_trace(&path, &requests).unwrap();
     let replayed = tokensim::workload::load_trace(&path).unwrap();
 
-    let direct = Simulation::from_config(&cfg).unwrap().run();
-    let replay = Simulation::from_requests(&cfg, replayed).unwrap().run();
+    let direct = Simulation::from_config(&cfg).unwrap().run().unwrap();
+    let replay = Simulation::from_requests(&cfg, replayed).unwrap().run().unwrap();
     let (a, b) = (
         MetricSet::new(&direct.records).latency_percentile(0.9),
         MetricSet::new(&replay.records).latency_percentile(0.9),
@@ -276,8 +276,8 @@ fn trace_generator_replays_a_saved_trace_end_to_end() {
 
     let mut replay_cfg = base.clone();
     replay_cfg.workload = WorkloadSpecV2::new("trace").with("path", path.to_str().unwrap());
-    let direct = Simulation::from_config(&base).unwrap().run();
-    let replay = Simulation::from_config(&replay_cfg).unwrap().run();
+    let direct = Simulation::from_config(&base).unwrap().run().unwrap();
+    let replay = Simulation::from_config(&replay_cfg).unwrap().run().unwrap();
     assert_eq!(direct.records.len(), replay.records.len());
     let (a, b) = (
         MetricSet::new(&direct.records).latency_percentile(0.9),
@@ -313,7 +313,7 @@ fn unsorted_trace_replays_with_consistent_ids() {
         assert_eq!(r.id, i, "ids must equal table positions");
         assert!(i == 0 || requests[i - 1].arrival <= r.arrival);
     }
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 10);
 }
 
@@ -326,9 +326,9 @@ fn parallel_sweep_is_bit_identical_to_sequential() {
         .collect();
     let seq: Vec<_> = cfgs
         .iter()
-        .map(|c| Simulation::from_config(c).unwrap().run())
+        .map(|c| Simulation::from_config(c).unwrap().run().unwrap())
         .collect();
-    let par = parallel_sweep(&cfgs, |c| Simulation::from_config(c).unwrap().run());
+    let par = parallel_sweep(&cfgs, |c| Simulation::from_config(c).unwrap().run().unwrap());
     assert_eq!(seq.len(), par.len());
     for (a, b) in seq.iter().zip(&par) {
         assert_eq!(a.records, b.records, "sweep must be bit-deterministic");
@@ -364,7 +364,7 @@ workload:
 "#;
     use tokensim::workload::WorkloadGenerator as _;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 90);
     assert!(report.records.iter().all(|r| r.tenant.is_some()));
     let slos = cfg.workload.build().unwrap().tenant_slos();
@@ -392,7 +392,7 @@ fn quarter_flops_decode_hardware_is_slower_end_to_end() {
             workload.clone(),
         );
         cfg.compute = ComputeSpec::new("analytic");
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let full = mk(HardwareSpec::a100_80g());
     let quarter = mk(HardwareSpec::a100_quarter_flops());
@@ -421,7 +421,7 @@ fn every_example_config_parses_and_runs() {
         }
         let cfg = SimulationConfig::from_yaml_file(&path)
             .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(
             report.records.len(),
             cfg.workload.generate().unwrap().len(),
@@ -431,6 +431,47 @@ fn every_example_config_parses_and_runs() {
         seen += 1;
     }
     assert!(seen >= 12, "expected the documented example configs, saw {seen}");
+}
+
+#[test]
+fn fast_forward_is_byte_identical_across_every_committed_config() {
+    // the decode fast-forward contract, pinned for every example config
+    // in configs/ — swap + prefix-cache + multi-tenant + hetero +
+    // bursty + trace-replay included: coalescing closed decode batches
+    // must leave the deterministic JSON report byte-identical (the CI
+    // determinism gate re-checks this through the CLI with
+    // `--fast-forward on|off`)
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    let mut seen = 0;
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("yaml") {
+            continue;
+        }
+        let mut cfg = SimulationConfig::from_yaml_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        cfg.engine.fast_forward = false;
+        let off = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        cfg.engine.fast_forward = true;
+        let on = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(
+            off.to_json().to_string(),
+            on.to_json().to_string(),
+            "{}: fast-forward changed the simulated report",
+            path.display()
+        );
+        assert!(
+            on.events_processed <= off.events_processed,
+            "{}: coalescing cannot add events",
+            path.display()
+        );
+        seen += 1;
+    }
+    assert!(seen >= 14, "expected all committed configs, saw {seen}");
 }
 
 #[test]
@@ -457,7 +498,7 @@ workload:
   seed: 5
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 80);
     // chunking splits long prefills: more iterations than requests with
     // room to spare (80 prefill chunks alone would need > 80)
@@ -477,7 +518,7 @@ fn chunked_prefill_caps_decode_stalls_under_long_prompts() {
         );
         cfg.compute = ComputeSpec::new("analytic");
         cfg.cluster.workers[0].local_scheduler = policy;
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let mono = mk(PolicySpec::new("continuous").with("max_batched_tokens", 8192u32));
     let chunked = mk(PolicySpec::new("chunked_prefill").with("chunk_tokens", 512u32));
@@ -520,7 +561,7 @@ workload:
   seed: 9
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 120);
 }
 
@@ -566,7 +607,7 @@ workload:
   seed: 11
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 30);
     let m = MetricSet::new(&report.records);
     assert!(m.total_swaps() > 0, "tight memory must force swaps");
@@ -582,10 +623,12 @@ fn swap_preemption_strictly_reduces_reprefilled_tokens() {
         MemorySpec::new("swap").with("preemption", "recompute"),
     ))
     .unwrap()
-    .run();
+    .run()
+    .unwrap();
     let swap = Simulation::from_config(&tight_memory_cfg(MemorySpec::new("swap")))
         .unwrap()
-        .run();
+        .run()
+        .unwrap();
     let (mr, ms) = (
         MetricSet::new(&recompute.records),
         MetricSet::new(&swap.records),
@@ -607,11 +650,13 @@ fn token_contiguous_over_reserves_and_never_preempts() {
     use tokensim::memory::MemorySpec;
     let paged = Simulation::from_config(&tight_memory_cfg(MemorySpec::default()))
         .unwrap()
-        .run();
+        .run()
+        .unwrap();
     let contiguous =
         Simulation::from_config(&tight_memory_cfg(MemorySpec::new("token_contiguous")))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
     assert_eq!(contiguous.records.len(), 30);
     assert_eq!(
         MetricSet::new(&contiguous.records).total_preemptions(),
@@ -631,7 +676,7 @@ fn prefix_cache_manager_reduces_ttft_like_the_cluster_pool() {
     let run = |memory: MemorySpec| {
         let mut cfg = base_cfg(1, 1.0);
         cfg.cluster.workers[0].memory = memory;
-        Simulation::from_conversations(&cfg, &convs).unwrap().run()
+        Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap()
     };
     let off = run(MemorySpec::default());
     let on = run(MemorySpec::new("prefix_cache").with("capacity_blocks", 1_000_000u64));
@@ -664,7 +709,7 @@ fn hetero_pd_config_runs_mixed_hardware_with_per_worker_compute() {
     assert_eq!(cfg.compute.name, "analytic");
     assert_eq!(cfg.cluster.workers[0].compute.as_ref().unwrap().name, "table");
     assert_eq!(cfg.cluster.workers[1].compute.as_ref().unwrap().name, "roofline");
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 60);
     assert_eq!(report.workers.len(), 4, "1 prefill + 3 decode");
     assert!(report.workers[0].compute.starts_with("table["));
@@ -685,7 +730,7 @@ fn compute_models_selected_from_yaml_change_predicted_latency() {
             "model: llama2-7b\n{compute_yaml}cluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 50\n  qps: 5.0\n  prompt_len:\n    fixed: 128\n  output_len:\n    fixed: 32\n  seed: 6\n"
         );
         let cfg = SimulationConfig::from_yaml_str(&yaml).unwrap();
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let analytic = mk("compute:\n  model: analytic\n");
     let roofline = mk("compute:\n  model: roofline\n");
@@ -710,7 +755,7 @@ fn oracle_as_registry_model_runs_noisy_but_deterministic() {
     let mk = || {
         let mut cfg = base_cfg(40, 6.0);
         cfg.compute = ComputeSpec::new("oracle").with("seed", 3u64);
-        Simulation::from_config(&cfg).unwrap().run()
+        Simulation::from_config(&cfg).unwrap().run().unwrap()
     };
     let a = mk();
     let b = mk();
@@ -741,7 +786,7 @@ workload:
   seed: 2
 "#;
     let cfg = SimulationConfig::from_yaml_str(yaml).unwrap();
-    let report = Simulation::from_config(&cfg).unwrap().run();
+    let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
     assert_eq!(report.records.len(), 160);
     // the two-choices rule must spread a 40 qps stream over all workers
     assert!(report.workers.iter().all(|w| w.iterations > 0));

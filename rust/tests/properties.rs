@@ -433,7 +433,7 @@ fn prop_every_request_finishes_exactly_once() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
         let n = cfg.workload.generate().unwrap().len();
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(report.records.len(), n, "seed {seed}");
         let mut ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
         ids.sort_unstable();
@@ -447,7 +447,7 @@ fn prop_causality_and_token_accounting() {
     for seed in SEEDS {
         let cfg = random_cfg(seed);
         let requests = cfg.workload.generate().unwrap();
-        let report = Simulation::from_config(&cfg).unwrap().run();
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
         for (rec, req) in report.records.iter().zip(&requests) {
             assert_eq!(rec.prompt_len, req.prompt_len, "seed {seed}");
             assert_eq!(rec.output_len, req.output_len, "seed {seed}");
@@ -465,10 +465,38 @@ fn prop_causality_and_token_accounting() {
 fn prop_runs_are_bit_deterministic() {
     for seed in SEEDS.step_by(5) {
         let cfg = random_cfg(seed);
-        let a = Simulation::from_config(&cfg).unwrap().run();
-        let b = Simulation::from_config(&cfg).unwrap().run();
+        let a = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        let b = Simulation::from_config(&cfg).unwrap().run().unwrap();
         assert_eq!(a.records, b.records, "seed {seed}");
         assert_eq!(a.events_processed, b.events_processed);
+    }
+}
+
+#[test]
+fn prop_fast_forward_is_invisible_in_reports() {
+    // the decode fast-forward contract at property scale: coalescing
+    // closed-batch decode iterations must not change ANY simulated
+    // quantity, across random workloads x memory managers x scheduler
+    // policies (preemption-heavy, multi-worker and disaggregated shapes
+    // included) — only the internal heap-event count may shrink
+    for seed in SEEDS.step_by(2) {
+        let mut cfg = random_cfg(seed);
+        cfg.engine.fast_forward = false;
+        let off = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        cfg.engine.fast_forward = true;
+        let on = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(
+            off.to_json().to_string(),
+            on.to_json().to_string(),
+            "seed {seed}: fast-forward changed the simulated report"
+        );
+        assert_eq!(off.records, on.records, "seed {seed}");
+        assert!(
+            on.events_processed <= off.events_processed,
+            "seed {seed}: coalescing cannot add events ({} vs {})",
+            on.events_processed,
+            off.events_processed
+        );
     }
 }
 
@@ -480,9 +508,9 @@ fn prop_higher_load_never_reduces_makespan() {
         let mut cfg = random_cfg(seed);
         // override the synthetic generator's params through the spec map
         cfg.workload = cfg.workload.clone().with("arrival", "uniform").with("qps", 2.0);
-        let slow = Simulation::from_config(&cfg).unwrap().run();
+        let slow = Simulation::from_config(&cfg).unwrap().run().unwrap();
         cfg.workload = cfg.workload.clone().with("qps", 2000.0);
-        let fast = Simulation::from_config(&cfg).unwrap().run();
+        let fast = Simulation::from_config(&cfg).unwrap().run().unwrap();
         // same total work, arrivals compressed => completion not later
         assert!(
             fast.sim_end <= slow.sim_end + 1e-6,
