@@ -14,7 +14,9 @@ use crate::compute::{ComputeCtx, ComputeModel};
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
 use crate::memory::{AllocOutcome, Granularity, PoolCache};
-use crate::metrics::{MemorySample, MemoryTimeline, RequestRecord, SloSpec};
+use crate::metrics::{
+    MemorySample, MemoryTimeline, MetricsMode, RecordStore, SloSpec, StreamingMetrics,
+};
 use crate::model::ModelSpec;
 use crate::network::{xfer_time_uniform, CommModel, Schedule};
 use crate::request::{Phase, Request, RequestId};
@@ -41,7 +43,7 @@ pub struct Simulation {
     pool_comm: CommModel,
     slo: SloSpec,
     rng: SimRng,
-    records: Vec<RequestRecord>,
+    records: RecordStore,
     timeline: MemoryTimeline,
     sample_period: f64,
     arrivals_remaining: usize,
@@ -238,6 +240,17 @@ impl Simulation {
             .build_global()
             .context("building global scheduler")?;
         let conv_home = vec![None; conversations.len()];
+        let records = match cfg.metrics.mode {
+            MetricsMode::Exact => RecordStore::exact(),
+            MetricsMode::Sketch => RecordStore::sketch(StreamingMetrics::new(
+                cfg.slo,
+                cfg.workload
+                    .build()
+                    .context("building workload generator for tenant SLOs")?
+                    .tenant_slos(),
+                cfg.metrics.sketch_error,
+            )),
+        };
         Ok(Self {
             queue,
             requests,
@@ -249,7 +262,7 @@ impl Simulation {
             pool_comm,
             slo: cfg.slo,
             rng: SimRng::new(cfg.workload.seed(), "driver"),
-            records: Vec::new(),
+            records,
             timeline: MemoryTimeline::default(),
             sample_period: cfg.sample_period,
             arrivals_remaining: arrivals,
@@ -272,7 +285,7 @@ impl Simulation {
         while let Some(ev) = self.queue.pop() {
             match ev.payload {
                 EventPayload::Arrival(rid) => self.on_arrival(rid),
-                EventPayload::IterDone { worker } => self.on_iter_done(worker),
+                EventPayload::IterDone { worker } => self.on_iter_done(worker)?,
                 EventPayload::TransferDone { worker, req } => self.on_transfer_done(worker, req),
                 EventPayload::Kick { worker } => self.try_start(worker),
                 EventPayload::SampleTick => self.on_sample_tick(),
@@ -694,7 +707,7 @@ impl Simulation {
             .schedule_at(done_at, EventPayload::IterDone { worker: wid });
     }
 
-    fn on_iter_done(&mut self, wid: usize) {
+    fn on_iter_done(&mut self, wid: usize) -> Result<()> {
         let now = self.queue.now();
         let plan = self.workers[wid]
             .current
@@ -750,19 +763,20 @@ impl Simulation {
         self.workers[wid].remove_running(&finished_here);
         self.workers[wid].remove_running(&resubmit);
         for rid in finished_here {
-            self.finish_request(rid, wid, now);
+            self.finish_request(rid, wid, now)?;
         }
         if !resubmit.is_empty() {
             self.dispatch(&[], &resubmit);
         }
         self.drain_pending_kv(wid);
         self.try_start(wid);
+        Ok(())
     }
 
     /// Post-completion bookkeeping. The caller has already removed
     /// `rid` from the worker's running set (batched, one pass per
     /// iteration — see [`Worker::remove_running`]).
-    fn finish_request(&mut self, rid: RequestId, wid: usize, now: SimTime) {
+    fn finish_request(&mut self, rid: RequestId, wid: usize, now: SimTime) -> Result<()> {
         {
             let w = &mut self.workers[wid];
             debug_assert!(!w.running.contains(&rid), "caller removes from running");
@@ -773,7 +787,7 @@ impl Simulation {
         r.finished_at = Some(now);
         self.finished += 1;
         self.global.on_complete(wid, r.final_kv_tokens() as u64);
-        self.records.push(RequestRecord::from_request(r));
+        self.records.push_request(r)?;
 
         // conversation bookkeeping: store KV in the pool (cluster-level
         // and/or the worker manager's prefix-cache layer), schedule the
@@ -805,6 +819,7 @@ impl Simulation {
                 self.conv_home[conv] = None;
             }
         }
+        Ok(())
     }
 
     fn on_sample_tick(&mut self) {

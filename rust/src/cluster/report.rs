@@ -1,7 +1,9 @@
 //! Simulation output: request records + timelines + worker statistics.
 
 use crate::memory::{Granularity, PoolCache, SwapStats};
-use crate::metrics::{MemoryTimeline, MetricSet, RequestRecord, SloSpec};
+use crate::metrics::{
+    MemoryTimeline, MetricSet, MetricsView, RecordStore, RequestRecord, SloSpec, StreamingMetrics,
+};
 use crate::util::json::Json;
 
 use super::worker::Worker;
@@ -32,7 +34,13 @@ pub struct WorkerStats {
 /// Everything a run produces.
 #[derive(Debug, Clone)]
 pub struct SimulationReport {
+    /// Every request record, id-ascending (exact metrics mode).
+    /// **Empty in sketch mode** — consume [`SimulationReport::view`]
+    /// instead of this field to stay mode-agnostic.
     pub records: Vec<RequestRecord>,
+    /// Streaming aggregates (sketch metrics mode; `None` in exact
+    /// mode).
+    pub stream: Option<StreamingMetrics>,
     pub timeline: MemoryTimeline,
     pub workers: Vec<WorkerStats>,
     pub slo: SloSpec,
@@ -53,7 +61,7 @@ pub struct SimulationReport {
 impl SimulationReport {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn assemble(
-        mut records: Vec<RequestRecord>,
+        store: impl Into<RecordStore>,
         timeline: MemoryTimeline,
         workers: &[Worker],
         pool: &PoolCache,
@@ -62,8 +70,12 @@ impl SimulationReport {
         events_processed: u64,
         wall_time: f64,
     ) -> Self {
-        records.sort_by_key(|r| r.id);
-        let makespan = MetricSet::new(&records).makespan();
+        let (records, stream) = store.into().into_parts();
+        let makespan = match &stream {
+            // min/max folds: identical to the exact computation
+            Some(s) => s.makespan(),
+            None => MetricSet::new(&records).makespan(),
+        };
         let worker_stats = workers
             .iter()
             .map(|w| WorkerStats {
@@ -95,6 +107,7 @@ impl SimulationReport {
         }
         Self {
             records,
+            stream,
             timeline,
             workers: worker_stats,
             slo,
@@ -108,28 +121,40 @@ impl SimulationReport {
         }
     }
 
+    /// Exact-record metrics. Experiments that inspect individual
+    /// records use this; it sees an empty set in sketch mode, so
+    /// mode-agnostic consumers should use [`SimulationReport::view`].
     pub fn metrics(&self) -> MetricSet<'_> {
         MetricSet::new(&self.records)
     }
 
+    /// Mode-agnostic metrics: exact records or streaming sketches,
+    /// behind one read API.
+    pub fn view(&self) -> MetricsView<'_> {
+        match &self.stream {
+            Some(s) => MetricsView::Sketch(s),
+            None => MetricsView::Exact(self.metrics()),
+        }
+    }
+
     pub fn latency_percentile(&self, q: f64) -> f64 {
-        self.metrics().latency_percentile(q)
+        self.view().latency_percentile(q)
     }
 
     pub fn request_throughput(&self) -> f64 {
-        self.metrics().request_throughput()
+        self.view().request_throughput()
     }
 
     pub fn token_throughput(&self) -> f64 {
-        self.metrics().token_throughput()
+        self.view().token_throughput()
     }
 
     pub fn slo_attainment(&self) -> f64 {
-        self.metrics().slo_attainment(&self.slo)
+        self.view().slo_attainment(&self.slo)
     }
 
     pub fn slo_throughput(&self) -> f64 {
-        self.metrics().slo_throughput(&self.slo)
+        self.view().slo_throughput(&self.slo)
     }
 
     /// Total swap-out/swap-in events across workers.
@@ -163,7 +188,14 @@ impl SimulationReport {
     /// same config — at any sweep thread count, fast-forward on or
     /// off — must serialize byte-for-byte identically; the CI
     /// determinism gate diffs exactly this output.
+    /// Sketch-mode reports serialize a fixed-size aggregate instead
+    /// (quantiles, throughputs, tenant summaries — no per-request
+    /// records); that output is equally deterministic across runs and
+    /// thread counts, just not byte-identical to exact mode.
     pub fn to_json(&self) -> Json {
+        if let Some(stream) = &self.stream {
+            return self.sketch_json(stream);
+        }
         let records: Vec<Json> = self
             .records
             .iter()
@@ -189,24 +221,7 @@ impl SimulationReport {
                 ])
             })
             .collect();
-        let workers: Vec<Json> = self
-            .workers
-            .iter()
-            .map(|w| {
-                Json::obj(vec![
-                    ("id", Json::num(w.id as f64)),
-                    ("hardware", Json::str(&w.hardware)),
-                    ("manager", Json::str(&w.manager)),
-                    ("compute", Json::str(&w.compute)),
-                    ("iterations", Json::num(w.iterations as f64)),
-                    ("busy_time", Json::num(w.busy_time)),
-                    ("preemption_frees", Json::num(w.preemption_frees as f64)),
-                    ("total_blocks", Json::num(w.total_blocks as f64)),
-                    ("swap_outs", Json::num(w.swap.swap_outs as f64)),
-                    ("swap_ins", Json::num(w.swap.swap_ins as f64)),
-                ])
-            })
-            .collect();
+        let workers = self.workers_json();
         let m = self.metrics();
         Json::obj(vec![
             ("records", Json::Arr(records)),
@@ -222,9 +237,88 @@ impl SimulationReport {
         ])
     }
 
+    fn workers_json(&self) -> Vec<Json> {
+        self.workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("id", Json::num(w.id as f64)),
+                    ("hardware", Json::str(&w.hardware)),
+                    ("manager", Json::str(&w.manager)),
+                    ("compute", Json::str(&w.compute)),
+                    ("iterations", Json::num(w.iterations as f64)),
+                    ("busy_time", Json::num(w.busy_time)),
+                    ("preemption_frees", Json::num(w.preemption_frees as f64)),
+                    ("total_blocks", Json::num(w.total_blocks as f64)),
+                    ("swap_outs", Json::num(w.swap.swap_outs as f64)),
+                    ("swap_ins", Json::num(w.swap.swap_ins as f64)),
+                ])
+            })
+            .collect()
+    }
+
+    /// The sketch-mode JSON aggregate (see [`SimulationReport::to_json`]).
+    fn sketch_json(&self, s: &StreamingMetrics) -> Json {
+        let quants = |f: &dyn Fn(f64) -> f64| {
+            Json::obj(vec![
+                ("p50", Json::num(f(0.50))),
+                ("p90", Json::num(f(0.90))),
+                ("p99", Json::num(f(0.99))),
+                ("p999", Json::num(f(0.999))),
+                ("max", Json::num(f(1.0))),
+            ])
+        };
+        let tenants: Vec<Json> = s
+            .tenant_breakdown()
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tenant", Json::str(&t.tenant)),
+                    ("requests", Json::num(t.requests as f64)),
+                    ("ttft_p50", Json::num(t.ttft_p50)),
+                    ("ttft_p99", Json::num(t.ttft_p99)),
+                    ("tbt_p99", Json::num(t.tbt_p99)),
+                    (
+                        "slo_attainment",
+                        t.slo_attainment.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("mode", Json::str("sketch")),
+            ("requests", Json::num(s.len() as f64)),
+            ("workers", Json::Arr(self.workers_json())),
+            ("makespan", Json::num(self.makespan)),
+            ("sim_end", Json::num(self.sim_end)),
+            ("request_throughput", Json::num(s.request_throughput())),
+            ("token_throughput", Json::num(s.token_throughput())),
+            ("slo_attainment", Json::num(s.slo_attainment())),
+            ("slo_throughput", Json::num(s.slo_throughput())),
+            (
+                "mean_normalized_latency",
+                Json::num(s.mean_normalized_latency()),
+            ),
+            ("latency", quants(&|q| s.latency_quantile(q))),
+            ("ttft", quants(&|q| s.ttft_quantile(q))),
+            ("tbt", quants(&|q| s.tbt_quantile(q))),
+            ("preemptions", Json::num(s.total_preemptions() as f64)),
+            ("swaps", Json::num(s.total_swaps() as f64)),
+            (
+                "recomputed_tokens",
+                Json::num(s.total_recomputed_tokens() as f64),
+            ),
+            ("sketch_relative_error", Json::num(s.relative_error())),
+            ("pool_hits", Json::num(self.pool_hits as f64)),
+            ("pool_misses", Json::num(self.pool_misses as f64)),
+            ("pool_evictions", Json::num(self.pool_evictions as f64)),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
+
     /// Pretty one-paragraph summary for CLI output.
     pub fn summary(&self) -> String {
-        let m = self.metrics();
+        let m = self.view();
         // one sort serves all three latency quantiles (at 1M records the
         // old per-percentile collect-and-sort was measurable)
         let lat = m.latency_percentiles(&[0.50, 0.99, 1.0]);
@@ -232,7 +326,7 @@ impl SimulationReport {
             "{} requests in {:.2}s (sim) / {:.3}s (wall) | {:.2} req/s, {:.1} tok/s | \
              latency p50 {:.3}s p99 {:.3}s max {:.3}s | ttft p99 {:.3}s | \
              slo attainment {:.1}% | {} events | {} preemptions ({} swaps)",
-            self.records.len(),
+            m.len(),
             self.makespan,
             self.wall_time,
             m.request_throughput(),
@@ -291,6 +385,40 @@ mod tests {
         assert!((report.slo_attainment() - 1.0).abs() < 1e-12);
         assert_eq!(report.swap_totals(), SwapStats::default());
         assert_eq!(report.pool_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn sketch_reports_keep_no_records_and_render_aggregates() {
+        let mk = || {
+            let mut store = RecordStore::sketch(StreamingMetrics::new(
+                SloSpec::paper_default(),
+                Vec::new(),
+                0.01,
+            ));
+            store.push(rec(0, 0.0, 2.0));
+            store.push(rec(1, 1.0, 3.0));
+            SimulationReport::assemble(
+                store,
+                MemoryTimeline::default(),
+                &[],
+                &PoolCache::disabled(),
+                SloSpec::paper_default(),
+                3.0,
+                100,
+                0.01,
+            )
+        };
+        let report = mk();
+        assert!(report.records.is_empty(), "sketch mode retains no records");
+        assert_eq!(report.view().len(), 2);
+        assert_eq!(report.makespan, 3.0, "makespan matches the exact fold");
+        assert!(report.summary().contains("2 requests"));
+        assert!((report.slo_attainment() - 1.0).abs() < 1e-12);
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"mode\""));
+        assert!(j.contains("sketch_relative_error"));
+        assert!(!j.contains("\"records\""), "no per-request array");
+        assert_eq!(j, mk().to_json().to_string(), "deterministic render");
     }
 
     #[test]

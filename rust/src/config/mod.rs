@@ -12,7 +12,7 @@ use anyhow::{bail, Context, Result};
 use crate::compute::ComputeSpec;
 use crate::hardware::{HardwareSpec, LinkSpec};
 use crate::memory::MemorySpec;
-use crate::metrics::SloSpec;
+use crate::metrics::{MetricsMode, SloSpec};
 use crate::model::ModelSpec;
 use crate::scheduler::PolicySpec;
 use crate::workload::WorkloadSpecV2;
@@ -186,6 +186,46 @@ impl EngineConfig {
     }
 }
 
+/// Metric-aggregation tuning (`metrics:` section).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsConfig {
+    /// `exact` (default) keeps every request record and reproduces
+    /// byte-identical reports; `sketch` folds records into fixed-size
+    /// quantile sketches at completion time (bounded memory, quantiles
+    /// within `sketch_error` relative error). The CI determinism gates
+    /// byte-diff exact-mode output only; sketch mode is deterministic
+    /// too, just not byte-identical to exact.
+    pub mode: MetricsMode,
+    /// Relative-error bound of sketch-mode quantiles (default 0.01,
+    /// i.e. ±1%). Ignored in exact mode.
+    pub sketch_error: f64,
+}
+
+impl Default for MetricsConfig {
+    fn default() -> Self {
+        Self {
+            mode: MetricsMode::Exact,
+            sketch_error: 0.01,
+        }
+    }
+}
+
+impl MetricsConfig {
+    fn from_yaml(y: &Yaml) -> Result<Self> {
+        let mode = match y.get("mode") {
+            Some(m) => MetricsMode::parse(
+                m.as_str().context("'mode' must be a string (exact|sketch)")?,
+            )?,
+            None => MetricsMode::Exact,
+        };
+        let sketch_error = y.opt_f64("sketch_error", 0.01);
+        if !(sketch_error > 0.0 && sketch_error < 0.5) {
+            bail!("'sketch_error' must be in (0, 0.5), got {sketch_error}");
+        }
+        Ok(Self { mode, sketch_error })
+    }
+}
+
 /// Memory-pool cache section (Fig 14; disabled when absent).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolCacheConfig {
@@ -228,6 +268,8 @@ pub struct SimulationConfig {
     pub sample_period: f64,
     /// Event-engine tuning (decode fast-forwarding; on by default).
     pub engine: EngineConfig,
+    /// Metric aggregation (exact records vs streaming sketches).
+    pub metrics: MetricsConfig,
 }
 
 impl SimulationConfig {
@@ -253,6 +295,7 @@ impl SimulationConfig {
             pool_cache: None,
             sample_period: 0.0,
             engine: EngineConfig::default(),
+            metrics: MetricsConfig::default(),
         }
     }
 
@@ -282,6 +325,7 @@ impl SimulationConfig {
             pool_cache: None,
             sample_period: 0.0,
             engine: EngineConfig::default(),
+            metrics: MetricsConfig::default(),
         }
     }
 
@@ -399,6 +443,10 @@ impl SimulationConfig {
             engine: match y.get("engine") {
                 Some(e) => EngineConfig::from_yaml(e)?,
                 None => EngineConfig::default(),
+            },
+            metrics: match y.get("metrics") {
+                Some(m) => MetricsConfig::from_yaml(m)?,
+                None => MetricsConfig::default(),
             },
         })
     }
@@ -744,5 +792,39 @@ compute:
         let typo = yaml.replace("model: quantum", "model: table\n  bse: analytic");
         let err = SimulationConfig::from_yaml_str(&typo).unwrap_err();
         assert!(format!("{err:#}").contains("unknown parameter 'bse'"), "{err:#}");
+    }
+
+    #[test]
+    fn metrics_section_parses_modes_and_rejects_bad_error_bounds() {
+        use crate::metrics::MetricsMode;
+        let base = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+
+        // absent section: exact mode, default error bound
+        let cfg = SimulationConfig::from_yaml_str(base).unwrap();
+        assert_eq!(cfg.metrics, MetricsConfig::default());
+        assert_eq!(cfg.metrics.mode, MetricsMode::Exact);
+        assert_eq!(cfg.metrics.sketch_error, 0.01);
+
+        // explicit sketch mode with a custom bound
+        let yaml = format!("{base}metrics:\n  mode: sketch\n  sketch_error: 0.02\n");
+        let cfg = SimulationConfig::from_yaml_str(&yaml).unwrap();
+        assert_eq!(cfg.metrics.mode, MetricsMode::Sketch);
+        assert_eq!(cfg.metrics.sketch_error, 0.02);
+
+        // mode alone: keeps the default bound
+        let yaml = format!("{base}metrics:\n  mode: exact\n");
+        let cfg = SimulationConfig::from_yaml_str(&yaml).unwrap();
+        assert_eq!(cfg.metrics.mode, MetricsMode::Exact);
+        assert_eq!(cfg.metrics.sketch_error, 0.01);
+
+        // unknown mode and out-of-range bounds are parse errors
+        let yaml = format!("{base}metrics:\n  mode: approximate\n");
+        let err = SimulationConfig::from_yaml_str(&yaml).unwrap_err();
+        assert!(format!("{err:#}").contains("approximate"), "{err:#}");
+        for bad in ["0.0", "0.5", "-0.1"] {
+            let yaml = format!("{base}metrics:\n  mode: sketch\n  sketch_error: {bad}\n");
+            let err = SimulationConfig::from_yaml_str(&yaml).unwrap_err();
+            assert!(format!("{err:#}").contains("sketch_error"), "{bad}: {err:#}");
+        }
     }
 }

@@ -9,6 +9,15 @@
 //! report must be byte-identical to the event-per-iteration one, so
 //! this experiment doubles as a determinism gate at scale.
 //!
+//! A second tier exercises **sketch metrics mode** (`metrics: mode:
+//! sketch`): one run re-executes the largest exact cell and asserts
+//! every reported quantile lands within the sketch's relative-error
+//! bound of the exact order statistics (plus bit-equality of the
+//! count/ratio aggregates), then a 10M-request cell (10k in `--quick`)
+//! runs with fast-forwarding on and fixed-size metric state — no
+//! O(requests) sample `Vec`s — reporting wall clock, events/sec and a
+//! peak-RSS estimate.
+//!
 //! Like fig 6, the *output* of this experiment is wall-clock time, so
 //! rows run sequentially by default; setting `TOKENSIM_SWEEP_THREADS`
 //! explicitly opts into parallel rows (each row's off/on pair still
@@ -16,9 +25,10 @@
 //!
 //! With `TOKENSIM_BENCH_JSON=<path>` set, every cell appends one JSON
 //! line in the bench-harness schema (`{"name", "iters", "mean_ns",
-//! "p50_ns", "p99_ns", "per_sec"}`), so CI folds the scale rows into
-//! the uploaded `BENCH_ci.json` artifact alongside the `cargo bench`
-//! cases.
+//! "p50_ns", "p99_ns", "per_sec"}` — sketch cells add
+//! `"peak_rss_bytes"`, which the artifact assembler tolerates), so CI
+//! folds the scale rows into the uploaded `BENCH_ci.json` artifact
+//! alongside the `cargo bench` cases.
 
 use std::io::Write as _;
 
@@ -27,6 +37,7 @@ use anyhow::{ensure, Context, Result};
 use crate::cluster::{Simulation, SimulationReport};
 use crate::config::SimulationConfig;
 use crate::hardware::HardwareSpec;
+use crate::metrics::MetricsMode;
 use crate::model::ModelSpec;
 use crate::workload::WorkloadSpec;
 
@@ -52,17 +63,20 @@ struct CellResult {
     report: SimulationReport,
 }
 
-fn run_cell(n: usize, fast_forward: bool, opts: &ExpOpts) -> Result<CellResult> {
+fn run_cell(n: usize, fast_forward: bool, sketch: bool, opts: &ExpOpts) -> Result<CellResult> {
     let mut cfg = cfg(n, &opts.compute);
     cfg.engine.fast_forward = fast_forward;
+    if sketch {
+        cfg.metrics.mode = MetricsMode::Sketch;
+    }
     // build first, time only the event loop: charging 1M-request
     // workload generation to both rows would dilute the very off/on
     // engine comparison this experiment exists to measure
     let sim = Simulation::from_config(&cfg).expect("experiment config must build");
     let t0 = std::time::Instant::now();
-    let report = sim
-        .run()
-        .with_context(|| format!("scale cell n={n} fast_forward={fast_forward}"))?;
+    let report = sim.run().with_context(|| {
+        format!("scale cell n={n} fast_forward={fast_forward} sketch={sketch}")
+    })?;
     Ok(CellResult {
         wall: t0.elapsed().as_secs_f64(),
         events: report.events_processed,
@@ -73,14 +87,18 @@ fn run_cell(n: usize, fast_forward: bool, opts: &ExpOpts) -> Result<CellResult> 
 /// Append one bench-artifact line per cell (no-op when
 /// `TOKENSIM_BENCH_JSON` is unset) — the same JSON-lines schema
 /// `benches/harness.rs` emits, so the CI artifact assembler needs no
-/// special case for the scale rows.
-fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64) {
+/// special case for the scale rows. Sketch cells append their
+/// peak-RSS estimate as an extra field.
+fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64, peak_rss: Option<u64>) {
     let Ok(path) = std::env::var("TOKENSIM_BENCH_JSON") else {
         return;
     };
     let ns = wall * 1e9;
+    let rss = peak_rss
+        .map(|b| format!(",\"peak_rss_bytes\":{b}"))
+        .unwrap_or_default();
     let line = format!(
-        "{{\"name\":\"{name}\",\"iters\":1,\"mean_ns\":{ns:.1},\"p50_ns\":{ns:.1},\"p99_ns\":{ns:.1},\"per_sec\":{events_per_sec:.3}}}\n",
+        "{{\"name\":\"{name}\",\"iters\":1,\"mean_ns\":{ns:.1},\"p50_ns\":{ns:.1},\"p99_ns\":{ns:.1},\"per_sec\":{events_per_sec:.3}{rss}}}\n",
     );
     let appended = std::fs::OpenOptions::new()
         .create(true)
@@ -92,12 +110,75 @@ fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64) {
     }
 }
 
+/// Assert `est` lies in the documented sketch error window around the
+/// exact order statistics: `sorted[floor(pos)] * (1 - eps) <= est <=
+/// sorted[ceil(pos)] * (1 + eps)` with `pos = q * (n - 1)`.
+fn check_window(sorted: &[f64], q: f64, est: f64, eps: f64) -> Result<()> {
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = sorted[pos.floor() as usize] * (1.0 - eps) - 1e-12;
+    let hi = sorted[pos.ceil() as usize] * (1.0 + eps) + 1e-12;
+    ensure!(
+        est >= lo && est <= hi,
+        "sketch quantile {est} outside [{lo}, {hi}] at q={q}"
+    );
+    Ok(())
+}
+
+/// The exact-vs-sketch acceptance check: same simulation, two metric
+/// modes. Counts, makespan, goodput and attainment must be equal bit
+/// for bit (they are counts, min/max folds and integer sums); every
+/// reported quantile must land in the sketch's error window.
+fn assert_sketch_matches_exact(exact: &SimulationReport, sketch: &SimulationReport) -> Result<()> {
+    ensure!(
+        sketch.records.is_empty(),
+        "sketch mode must not retain per-request records"
+    );
+    let stream = sketch
+        .stream
+        .as_ref()
+        .context("sketch report carries streaming metrics")?;
+    let eps = stream.relative_error();
+    ensure!(exact.records.len() == stream.len(), "request counts differ");
+    ensure!(exact.makespan == sketch.makespan, "makespan diverged");
+    ensure!(
+        exact.token_throughput() == sketch.token_throughput(),
+        "token throughput diverged"
+    );
+    ensure!(
+        exact.slo_attainment() == sketch.slo_attainment(),
+        "SLO attainment diverged"
+    );
+    ensure!(
+        exact.slo_throughput() == sketch.slo_throughput(),
+        "goodput diverged"
+    );
+    let mut lats: Vec<f64> = exact.records.iter().map(|r| r.latency()).collect();
+    let mut ttfts: Vec<f64> = exact.records.iter().map(|r| r.ttft()).collect();
+    let mut tbts: Vec<f64> = exact.records.iter().map(|r| r.max_token_gap).collect();
+    for v in [&mut lats, &mut ttfts, &mut tbts] {
+        v.sort_by(|a, b| a.total_cmp(b));
+    }
+    for q in [0.5, 0.9, 0.99, 0.999] {
+        check_window(&lats, q, stream.latency_quantile(q), eps)
+            .with_context(|| format!("latency vs exact p{}", q * 100.0))?;
+        check_window(&ttfts, q, stream.ttft_quantile(q), eps)
+            .with_context(|| format!("ttft vs exact p{}", q * 100.0))?;
+        check_window(&tbts, q, stream.tbt_quantile(q), eps)
+            .with_context(|| format!("tbt vs exact p{}", q * 100.0))?;
+    }
+    Ok(())
+}
+
 pub fn run(opts: &ExpOpts) -> Result<String> {
     let counts: &[usize] = if opts.quick {
         &[1_000, 5_000]
     } else {
         &[10_000, 100_000, 1_000_000]
     };
+    // the largest cell that keeps exact records around for comparison
+    let cmp_n: usize = if opts.quick { 5_000 } else { 100_000 };
+    // the bounded-memory tier: sketch mode only, fast-forward on
+    let big_n: usize = if opts.quick { 10_000 } else { 10_000_000 };
 
     let mut table = Table::new(&[
         "requests",
@@ -112,8 +193,8 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     // each row measures its own wall clock: sequential by default,
     // parallel only on explicit TOKENSIM_SWEEP_THREADS (fig 6 idiom)
     let time_row = |&n: &usize| -> Result<(usize, CellResult, CellResult)> {
-        let off = run_cell(n, false, opts)?;
-        let on = run_cell(n, true, opts)?;
+        let off = run_cell(n, false, false, opts)?;
+        let on = run_cell(n, true, false, opts)?;
         Ok((n, off, on))
     };
     let rows: Vec<Result<(usize, CellResult, CellResult)>> =
@@ -124,6 +205,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         };
 
     let mut min_ratio = f64::INFINITY;
+    let mut cmp_exact: Option<SimulationReport> = None;
     for row in rows {
         let (n, off, on) = row?;
         // the tentpole contract: coalescing must not change anything
@@ -150,9 +232,12 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
                 f1(cell.report.sim_end),
                 "yes".to_string(),
             ]);
-            emit_bench_row(&format!("exp_scale/n={n}/ff={label}"), cell.wall, eps);
+            emit_bench_row(&format!("exp_scale/n={n}/ff={label}"), cell.wall, eps, None);
         }
         min_ratio = min_ratio.min(off.events as f64 / on.events.max(1) as f64);
+        if n == cmp_n {
+            cmp_exact = Some(on.report);
+        }
     }
 
     // the acceptance bar is enforced here, not just in a unit test, so
@@ -166,6 +251,79 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         );
     }
 
+    // ---- sketch tier ---------------------------------------------------
+    let mut sk_table = Table::new(&[
+        "requests",
+        "wall (s)",
+        "events",
+        "events/sec",
+        "peak RSS (MB)",
+        "check",
+    ]);
+    let rss_mb = || {
+        crate::util::peak_rss_bytes()
+            .map(|b| format!("{:.0}", b as f64 / (1024.0 * 1024.0)))
+            .unwrap_or_else(|| "-".to_string())
+    };
+
+    let sk_cmp = run_cell(cmp_n, true, true, opts)?;
+    let exact = cmp_exact.context("comparison cell must have run")?;
+    assert_sketch_matches_exact(&exact, &sk_cmp.report)
+        .with_context(|| format!("sketch vs exact at n={cmp_n}"))?;
+    let sketch_eps = sk_cmp
+        .report
+        .stream
+        .as_ref()
+        .map(|s| s.relative_error())
+        .unwrap_or(0.0);
+    drop(exact); // 100k exact records are dead weight past this point
+    let cmp_eps = sk_cmp.events as f64 / sk_cmp.wall.max(1e-9);
+    sk_table.row(&[
+        cmp_n.to_string(),
+        f3(sk_cmp.wall),
+        sk_cmp.events.to_string(),
+        format!("{cmp_eps:.0}"),
+        rss_mb(),
+        format!("quantiles within ±{:.1}% of exact", 100.0 * sketch_eps),
+    ]);
+    emit_bench_row(
+        &format!("exp_scale/n={cmp_n}/sketch"),
+        sk_cmp.wall,
+        cmp_eps,
+        crate::util::peak_rss_bytes(),
+    );
+
+    let big = run_cell(big_n, true, true, opts)?;
+    ensure!(
+        big.report.records.is_empty(),
+        "bounded-memory tier must not accumulate records"
+    );
+    ensure!(
+        big.report.view().len() == big_n,
+        "bounded-memory tier lost requests"
+    );
+    let metric_bytes = big
+        .report
+        .stream
+        .as_ref()
+        .map(|s| s.memory_bytes())
+        .unwrap_or(0);
+    let big_eps = big.events as f64 / big.wall.max(1e-9);
+    sk_table.row(&[
+        big_n.to_string(),
+        f3(big.wall),
+        big.events.to_string(),
+        format!("{big_eps:.0}"),
+        rss_mb(),
+        format!("metric state {:.0} KiB (fixed)", metric_bytes as f64 / 1024.0),
+    ]);
+    emit_bench_row(
+        &format!("exp_scale/n={big_n}/sketch"),
+        big.wall,
+        big_eps,
+        crate::util::peak_rss_bytes(),
+    );
+
     let mut out = String::from(
         "exp scale — engine throughput at fleet scale (decode-heavy workload;\n\
          ff = decode fast-forwarding; 'identical' = byte-identical JSON reports)\n",
@@ -175,6 +333,14 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         "\nevent coalescing: >= {min_ratio:.1}x fewer heap events with fast-forward on\n\
          (closed decode batches advance to the next completion / external event /\n\
          memory boundary in one event instead of one per generated token).\n",
+    ));
+    out.push_str(&format!(
+        "\nsketch tier — streaming metrics, fast-forward on (peak RSS is the\n\
+         process high-water mark from /proc, cumulative across cells):\n{}\
+         \nsketch quantiles verified within ±{:.1}% relative error of the exact\n\
+         run at n={cmp_n}; counts, makespan, goodput and attainment equal bit-for-bit.\n",
+        sk_table.finish(),
+        100.0 * sketch_eps,
     ));
     Ok(out)
 }
@@ -204,14 +370,30 @@ mod tests {
             .unwrap();
         assert!(ratio >= 5.0, "expected >=5x event reduction, got {ratio}x");
         assert!(out.contains("yes"), "identity column missing:\n{out}");
+        assert!(out.contains("sketch tier"), "sketch tier missing:\n{out}");
+        assert!(
+            out.contains("verified within"),
+            "quantile check line missing:\n{out}"
+        );
     }
 
     #[test]
     fn cells_report_events_and_finish() {
-        let off = run_cell(300, false, &ExpOpts::quick()).unwrap();
-        let on = run_cell(300, true, &ExpOpts::quick()).unwrap();
+        let off = run_cell(300, false, false, &ExpOpts::quick()).unwrap();
+        let on = run_cell(300, true, false, &ExpOpts::quick()).unwrap();
         assert_eq!(off.report.records.len(), 300);
         assert_eq!(on.report.records.len(), 300);
         assert!(on.events < off.events, "{} !< {}", on.events, off.events);
+    }
+
+    #[test]
+    fn sketch_cell_bounds_memory_and_matches_exact() {
+        let exact = run_cell(400, true, false, &ExpOpts::quick()).unwrap();
+        let sketch = run_cell(400, true, true, &ExpOpts::quick()).unwrap();
+        assert_sketch_matches_exact(&exact.report, &sketch.report).unwrap();
+        assert!(sketch.report.records.is_empty());
+        assert_eq!(sketch.report.view().len(), 400);
+        let s = sketch.report.stream.as_ref().unwrap();
+        assert!(s.memory_bytes() < 1024 * 1024, "{}", s.memory_bytes());
     }
 }

@@ -23,7 +23,7 @@ fn usage() -> &'static str {
     "TokenSim — LLM inference system simulator (paper reproduction)\n\
      \n\
      USAGE:\n\
-       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>]\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--metrics <exact|sketch>]\n\
        tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
        tokensim list                 list experiments, policies, memory managers, workload generators, compute models, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
@@ -75,6 +75,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
             other => bail!("--fast-forward expects on|off, got '{other}'"),
         };
     }
+    if let Some(v) = flag_value(args, "--metrics") {
+        // CLI override of the YAML `metrics: mode:` key — exact keeps
+        // every record (byte-identical reports), sketch streams into
+        // fixed-size quantile sketches (bounded memory)
+        cfg.metrics.mode = tokensim::metrics::MetricsMode::parse(v)?;
+    }
     println!(
         "model={} workers={} workload={}",
         cfg.model.name,
@@ -109,7 +115,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
     // multi-tenant workloads: per-class TTFT/TBT + per-class SLOs
     let slos = cfg.workload.build()?.tenant_slos();
-    let m = report.metrics();
+    let m = report.view();
     let tenants = m.tenant_breakdown(&slos);
     if !tenants.is_empty() {
         println!("\nper-tenant breakdown:");

@@ -6,11 +6,16 @@
 //! TokenSim from single-batch simulators.
 
 mod percentile;
+mod sketch;
+mod stream;
 mod timeline;
 
 pub use percentile::{cdf_points, percentile, percentile_of_sorted, percentiles, Summary};
+pub use sketch::QuantileSketch;
+pub use stream::{MetricsMode, MetricsView, RecordStore, StreamingMetrics};
 pub use timeline::{MemorySample, MemoryTimeline};
 
+use anyhow::{Context, Result};
 
 use crate::request::Request;
 use crate::sim::SimTime;
@@ -39,9 +44,24 @@ pub struct RequestRecord {
 }
 
 impl RequestRecord {
-    /// Build from a finished request (panics if not finished).
-    pub fn from_request(r: &Request) -> Self {
-        Self {
+    /// Build from a finished request. Returns an error — not a panic —
+    /// when the request never produced a token or never finished, so a
+    /// corrupted completion fails its own experiment cell instead of
+    /// aborting a whole `parallel_sweep`.
+    pub fn try_from_request(r: &Request) -> Result<Self> {
+        let first_token = r.first_token.with_context(|| {
+            format!(
+                "request {} reached record construction without producing a token (phase {:?})",
+                r.id, r.phase
+            )
+        })?;
+        let finished = r.finished_at.with_context(|| {
+            format!(
+                "request {} reached record construction unfinished (phase {:?}, {}/{} output tokens)",
+                r.id, r.phase, r.generated, r.output_len
+            )
+        })?;
+        Ok(Self {
             id: r.id,
             conversation: r.conversation,
             round: r.round,
@@ -50,13 +70,13 @@ impl RequestRecord {
             output_len: r.output_len,
             cached_prefix: r.cached_prefix,
             arrival: r.arrival,
-            first_token: r.first_token.expect("request produced no token"),
-            finished: r.finished_at.expect("request not finished"),
+            first_token,
+            finished,
             max_token_gap: r.max_token_gap,
             preemptions: r.preemptions,
             swaps: r.swaps,
             recomputed_tokens: r.recomputed_tokens,
-        }
+        })
     }
 
     #[inline]
@@ -343,6 +363,19 @@ mod tests {
             swaps: 0,
             recomputed_tokens: 0,
         }
+    }
+
+    #[test]
+    fn try_from_request_rejects_unfinished_and_accepts_finished() {
+        let mut r = Request::new(3, 0, 0, 16, 4, 1.0);
+        let err = RequestRecord::try_from_request(&r).unwrap_err();
+        assert!(err.to_string().contains("without producing a token"), "{err}");
+        r.stamp_token(2.0);
+        let err = RequestRecord::try_from_request(&r).unwrap_err();
+        assert!(err.to_string().contains("unfinished"), "{err}");
+        r.finished_at = Some(3.0);
+        let rec = RequestRecord::try_from_request(&r).expect("finished request converts");
+        assert_eq!((rec.id, rec.first_token, rec.finished), (3, 2.0, 3.0));
     }
 
     #[test]

@@ -1,4 +1,11 @@
 //! Percentile / CDF extraction helpers.
+//!
+//! NaN handling (matching the PR 5 `Event::cmp` total-order fix): all
+//! sorting here uses [`f64::total_cmp`], which places NaNs after every
+//! finite value, so NaN inputs deterministically surface in the
+//! highest quantiles instead of poisoning the sort. A NaN *quantile
+//! argument* is treated as `q = 0` rather than relying on
+//! `clamp(NaN)`'s NaN propagation and a NaN-as-usize cast.
 
 /// Percentile with linear interpolation; `q` in `[0, 1]`.
 /// Returns 0.0 for an empty iterator.
@@ -12,11 +19,14 @@ pub fn percentile(values: impl IntoIterator<Item = f64>, q: f64) -> f64 {
 /// single-sort building block for callers that extract several
 /// quantiles from the same values — sorting once and indexing is what
 /// keeps per-sweep-cell reporting off the O(n log n)-per-quantile path.
+///
+/// `q` outside `[0, 1]` is clamped; a NaN `q` reads as 0. A
+/// single-element slice returns that element for every `q`.
 pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let q = q.clamp(0.0, 1.0);
+    let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -37,7 +47,9 @@ pub fn percentiles(values: impl IntoIterator<Item = f64>, qs: &[f64]) -> Vec<f64
     qs.iter().map(|&q| percentile_of_sorted(&v, q)).collect()
 }
 
-/// Empirical CDF points: sorted `(value, fraction ≤ value)`.
+/// Empirical CDF points: sorted `(value, fraction ≤ value)`. NaN
+/// values order last (total order), so they occupy the top fractions
+/// deterministically rather than scrambling the sort.
 pub fn cdf_points(values: impl IntoIterator<Item = f64>) -> Vec<(f64, f64)> {
     let mut v: Vec<f64> = values.into_iter().collect();
     v.sort_by(|a, b| a.total_cmp(b));
@@ -161,6 +173,31 @@ mod tests {
         // single element: every order statistic collapses onto it
         let one = Summary::of(&[4.25]);
         assert_eq!((one.min, one.p50, one.p99, one.max), (4.25, 4.25, 4.25, 4.25));
+    }
+
+    #[test]
+    fn nan_values_order_last_and_surface_in_high_quantiles() {
+        let v = vec![1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(v.clone(), 0.0), 1.0);
+        assert_eq!(percentile(v.clone(), 0.5), 2.0);
+        assert!(percentile(v, 1.0).is_nan(), "NaN sorts after every value");
+        let pts = cdf_points(vec![f64::NAN, 3.0]);
+        assert_eq!(pts[0].0, 3.0);
+        assert!(pts[1].0.is_nan());
+        assert_eq!(pts[1].1, 1.0);
+    }
+
+    #[test]
+    fn single_element_and_edge_quantile_args() {
+        // single-element slice: every q collapses onto the one value
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(percentile_of_sorted(&[7.5], q), 7.5, "q={q}");
+        }
+        // out-of-range q clamps; NaN q reads as q = 0
+        assert_eq!(percentile_of_sorted(&[1.0, 2.0], -3.0), 1.0);
+        assert_eq!(percentile_of_sorted(&[1.0, 2.0], 7.0), 2.0);
+        assert_eq!(percentile_of_sorted(&[1.0, 2.0], f64::NAN), 1.0);
+        assert_eq!(percentile_of_sorted(&[], f64::NAN), 0.0);
     }
 
     #[test]

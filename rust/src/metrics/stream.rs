@@ -1,0 +1,667 @@
+//! Streaming (sketch-mode) metric aggregation and the record store
+//! that feeds it.
+//!
+//! Exact mode keeps every [`RequestRecord`] and computes percentiles
+//! by sorting at report time — byte-identical outputs, O(requests)
+//! memory. Sketch mode folds each record into [`StreamingMetrics`] at
+//! completion time and drops it: fixed memory regardless of request
+//! count, quantiles within the [`QuantileSketch`] error bound, and
+//! everything else (counts, goodput, makespan, tenant sets, memory
+//! timelines) identical to exact mode because those are plain counts,
+//! min/max folds, and integer-valued sums that do not depend on
+//! accumulation order.
+
+use anyhow::Result;
+
+use super::{MetricSet, QuantileSketch, RequestRecord, SloSpec, TenantSummary};
+use crate::request::Request;
+
+/// How per-request metrics are aggregated (the `metrics: mode:` config
+/// key and `--metrics` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// Keep every record; reports are byte-identical and O(requests)
+    /// in memory. The default — all determinism gates run in this mode.
+    #[default]
+    Exact,
+    /// Fold records into fixed-size quantile sketches at completion
+    /// time; bounded memory, quantiles within the documented
+    /// relative-error bound.
+    Sketch,
+}
+
+impl MetricsMode {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(MetricsMode::Exact),
+            "sketch" => Ok(MetricsMode::Sketch),
+            other => anyhow::bail!("unknown metrics mode '{other}' (expected exact|sketch)"),
+        }
+    }
+}
+
+/// Per-tenant streaming aggregates (the sketch-mode counterpart of
+/// [`MetricSet::tenant_breakdown`] filtering).
+#[derive(Debug, Clone)]
+struct TenantAgg {
+    name: String,
+    /// Smallest request id seen: sorting tenants by this reproduces
+    /// exact mode's first-appearance-over-id-sorted-records order.
+    min_id: usize,
+    requests: u64,
+    slo: Option<SloSpec>,
+    slo_ok: u64,
+    ttft: QuantileSketch,
+    tbt: QuantileSketch,
+}
+
+/// Incrementally aggregated metrics, fed one [`RequestRecord`] at a
+/// time as requests complete. Mirrors the [`MetricSet`] surface that
+/// reporting paths consume, without retaining records.
+#[derive(Debug, Clone)]
+pub struct StreamingMetrics {
+    eps: f64,
+    slo: SloSpec,
+    /// Per-class SLOs captured at build time (exact mode receives them
+    /// as a `tenant_breakdown` argument instead).
+    tenant_slos: Vec<(String, SloSpec)>,
+    count: u64,
+    first_arrival: f64,
+    last_finished: f64,
+    output_tokens: u64,
+    norm_latency_sum: f64,
+    slo_ok: u64,
+    preemptions: u64,
+    swaps: u64,
+    recomputed_tokens: u64,
+    latency: QuantileSketch,
+    ttft: QuantileSketch,
+    tbt: QuantileSketch,
+    tenants: Vec<TenantAgg>,
+}
+
+impl StreamingMetrics {
+    pub fn new(slo: SloSpec, tenant_slos: Vec<(String, SloSpec)>, eps: f64) -> Self {
+        Self {
+            eps,
+            slo,
+            tenant_slos,
+            count: 0,
+            first_arrival: f64::INFINITY,
+            last_finished: 0.0,
+            output_tokens: 0,
+            norm_latency_sum: 0.0,
+            slo_ok: 0,
+            preemptions: 0,
+            swaps: 0,
+            recomputed_tokens: 0,
+            latency: QuantileSketch::new(eps),
+            ttft: QuantileSketch::new(eps),
+            tbt: QuantileSketch::new(eps),
+            tenants: Vec::new(),
+        }
+    }
+
+    /// Fold one finished request into the aggregates.
+    pub fn push(&mut self, rec: &RequestRecord) {
+        self.count += 1;
+        self.first_arrival = self.first_arrival.min(rec.arrival);
+        self.last_finished = self.last_finished.max(rec.finished);
+        self.output_tokens += rec.output_len as u64;
+        self.norm_latency_sum += rec.normalized_latency();
+        if self.slo.satisfied(rec) {
+            self.slo_ok += 1;
+        }
+        self.preemptions += rec.preemptions as u64;
+        self.swaps += rec.swaps as u64;
+        self.recomputed_tokens += rec.recomputed_tokens;
+        self.latency.add(rec.latency());
+        self.ttft.add(rec.ttft());
+        self.tbt.add(rec.max_token_gap);
+        if let Some(name) = rec.tenant.as_deref() {
+            let idx = match self.tenants.iter().position(|t| t.name == name) {
+                Some(i) => i,
+                None => {
+                    let slo = self
+                        .tenant_slos
+                        .iter()
+                        .find(|(n, _)| n == name)
+                        .map(|(_, s)| *s);
+                    self.tenants.push(TenantAgg {
+                        name: name.to_string(),
+                        min_id: rec.id,
+                        requests: 0,
+                        slo,
+                        slo_ok: 0,
+                        ttft: QuantileSketch::new(self.eps),
+                        tbt: QuantileSketch::new(self.eps),
+                    });
+                    self.tenants.len() - 1
+                }
+            };
+            let t = &mut self.tenants[idx];
+            t.min_id = t.min_id.min(rec.id);
+            t.requests += 1;
+            if let Some(s) = t.slo {
+                if s.satisfied(rec) {
+                    t.slo_ok += 1;
+                }
+            }
+            t.ttft.add(rec.ttft());
+            t.tbt.add(rec.max_token_gap);
+        }
+    }
+
+    /// The configured relative-error bound of every quantile reported.
+    pub fn relative_error(&self) -> f64 {
+        self.eps
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Makespan: first arrival to last completion. Min/max folds are
+    /// order-invariant, so this equals [`MetricSet::makespan`] exactly.
+    pub fn makespan(&self) -> f64 {
+        (self.last_finished - self.first_arrival).max(0.0)
+    }
+
+    pub fn request_throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.count as f64 / span
+    }
+
+    /// Output tokens/s. The token count is an integer sum, so this
+    /// equals the exact-mode value bit for bit.
+    pub fn token_throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.output_tokens as f64 / span
+    }
+
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        self.latency.quantile(q)
+    }
+
+    pub fn latency_quantiles(&self, qs: &[f64]) -> Vec<f64> {
+        qs.iter().map(|&q| self.latency.quantile(q)).collect()
+    }
+
+    pub fn ttft_quantile(&self, q: f64) -> f64 {
+        self.ttft.quantile(q)
+    }
+
+    pub fn tbt_quantile(&self, q: f64) -> f64 {
+        self.tbt.quantile(q)
+    }
+
+    /// Mean normalized latency (s/token). The only aggregate whose
+    /// floating-point rounding may differ from exact mode: the sum runs
+    /// in completion order rather than id order.
+    pub fn mean_normalized_latency(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.norm_latency_sum / self.count as f64
+    }
+
+    /// Approximate latency CDF: the sketch quantile at each percent
+    /// point, as `(latency, fraction)` pairs like
+    /// [`MetricSet::latency_cdf`] (101 points instead of one per
+    /// request).
+    pub fn latency_cdf(&self) -> Vec<(f64, f64)> {
+        (0..=100)
+            .map(|i| {
+                let q = i as f64 / 100.0;
+                (self.latency.quantile(q), q)
+            })
+            .collect()
+    }
+
+    /// Fraction of requests meeting the SLO captured at build time.
+    pub fn slo_attainment(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.slo_ok as f64 / self.count as f64
+    }
+
+    /// Goodput against the SLO captured at build time. A count ratio,
+    /// so it equals the exact-mode value bit for bit.
+    pub fn slo_throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.slo_ok as f64 / span
+    }
+
+    pub fn total_preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    pub fn total_swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    pub fn total_recomputed_tokens(&self) -> u64 {
+        self.recomputed_tokens
+    }
+
+    /// Per-tenant breakdown in the same order exact mode produces
+    /// (ascending minimum request id == first appearance over
+    /// id-sorted records). Quantiles carry the sketch error bound;
+    /// request counts and attainment ratios are exact.
+    pub fn tenant_breakdown(&self) -> Vec<TenantSummary> {
+        let mut idx: Vec<usize> = (0..self.tenants.len()).collect();
+        idx.sort_by_key(|&i| self.tenants[i].min_id);
+        idx.into_iter()
+            .map(|i| {
+                let t = &self.tenants[i];
+                TenantSummary {
+                    tenant: t.name.clone(),
+                    requests: t.requests as usize,
+                    ttft_p50: t.ttft.quantile(0.50),
+                    ttft_p99: t.ttft.quantile(0.99),
+                    tbt_p99: t.tbt.quantile(0.99),
+                    slo_attainment: t.slo.map(|_| t.slo_ok as f64 / t.requests as f64),
+                }
+            })
+            .collect()
+    }
+
+    /// Fixed sketch memory currently held (all sketches, including
+    /// per-tenant ones).
+    pub fn memory_bytes(&self) -> usize {
+        let base = self.latency.memory_bytes() + self.ttft.memory_bytes() + self.tbt.memory_bytes();
+        let tenants: usize = self
+            .tenants
+            .iter()
+            .map(|t| t.ttft.memory_bytes() + t.tbt.memory_bytes())
+            .sum();
+        base + tenants
+    }
+}
+
+/// Where completed requests go: an id-indexed slab of full records
+/// (exact mode) or a fixed-size streaming aggregate (sketch mode).
+#[derive(Debug, Clone)]
+pub enum RecordStore {
+    /// Id-indexed slab. Request ids are dense (they index the
+    /// simulation's request table), so `slab[id] = record` replaces the
+    /// old push-then-sort while producing the identical id-ascending
+    /// record vector.
+    Exact(Vec<Option<RequestRecord>>),
+    Sketch(Box<StreamingMetrics>),
+}
+
+impl RecordStore {
+    pub fn exact() -> Self {
+        RecordStore::Exact(Vec::new())
+    }
+
+    pub fn sketch(stream: StreamingMetrics) -> Self {
+        RecordStore::Sketch(Box::new(stream))
+    }
+
+    /// Store one completed record.
+    pub fn push(&mut self, rec: RequestRecord) {
+        match self {
+            RecordStore::Exact(slab) => {
+                let id = rec.id;
+                if id >= slab.len() {
+                    slab.resize_with(id + 1, || None);
+                }
+                debug_assert!(slab[id].is_none(), "request {id} completed twice");
+                slab[id] = Some(rec);
+            }
+            RecordStore::Sketch(s) => s.push(&rec),
+        }
+    }
+
+    /// Convert a finished request and store it — the completion hook.
+    /// Fails (instead of panicking) when the request never produced a
+    /// token or never finished, so a corrupted completion fails its
+    /// experiment cell rather than aborting a whole sweep.
+    pub fn push_request(&mut self, r: &Request) -> Result<()> {
+        self.push(RequestRecord::try_from_request(r)?);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            RecordStore::Exact(slab) => slab.iter().filter(|r| r.is_some()).count(),
+            RecordStore::Sketch(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tear down into the report representation: id-ascending records
+    /// (exact) or the streaming aggregate (sketch).
+    pub fn into_parts(self) -> (Vec<RequestRecord>, Option<StreamingMetrics>) {
+        match self {
+            RecordStore::Exact(slab) => (slab.into_iter().flatten().collect(), None),
+            RecordStore::Sketch(s) => (Vec::new(), Some(*s)),
+        }
+    }
+}
+
+impl From<Vec<RequestRecord>> for RecordStore {
+    /// Build an exact store from unordered records (test ergonomics).
+    fn from(records: Vec<RequestRecord>) -> Self {
+        let mut store = RecordStore::exact();
+        for r in records {
+            store.push(r);
+        }
+        store
+    }
+}
+
+/// A unified read API over exact records or streaming sketches, so the
+/// CLI and experiment reporting paths are mode-agnostic. In exact mode
+/// every method delegates to [`MetricSet`] and returns bit-identical
+/// values; in sketch mode quantile-valued methods carry the sketch
+/// error bound and `slo`-taking methods use the SLOs captured at build
+/// time (the argument is ignored — it exists so exact mode needs no
+/// stored SLO state).
+pub enum MetricsView<'a> {
+    Exact(MetricSet<'a>),
+    Sketch(&'a StreamingMetrics),
+}
+
+impl MetricsView<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            MetricsView::Exact(m) => m.len(),
+            MetricsView::Sketch(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn makespan(&self) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.makespan(),
+            MetricsView::Sketch(s) => s.makespan(),
+        }
+    }
+
+    pub fn request_throughput(&self) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.request_throughput(),
+            MetricsView::Sketch(s) => s.request_throughput(),
+        }
+    }
+
+    pub fn token_throughput(&self) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.token_throughput(),
+            MetricsView::Sketch(s) => s.token_throughput(),
+        }
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.latency_percentile(q),
+            MetricsView::Sketch(s) => s.latency_quantile(q),
+        }
+    }
+
+    pub fn latency_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        match self {
+            MetricsView::Exact(m) => m.latency_percentiles(qs),
+            MetricsView::Sketch(s) => s.latency_quantiles(qs),
+        }
+    }
+
+    pub fn ttft_percentile(&self, q: f64) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.ttft_percentile(q),
+            MetricsView::Sketch(s) => s.ttft_quantile(q),
+        }
+    }
+
+    pub fn tbt_percentile(&self, q: f64) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.tbt_percentile(q),
+            MetricsView::Sketch(s) => s.tbt_quantile(q),
+        }
+    }
+
+    pub fn mean_normalized_latency(&self) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.mean_normalized_latency(),
+            MetricsView::Sketch(s) => s.mean_normalized_latency(),
+        }
+    }
+
+    pub fn latency_cdf(&self) -> Vec<(f64, f64)> {
+        match self {
+            MetricsView::Exact(m) => m.latency_cdf(),
+            MetricsView::Sketch(s) => s.latency_cdf(),
+        }
+    }
+
+    /// Sketch mode scores against the SLO captured at build time and
+    /// ignores `slo` (both are the report's configured SLO in
+    /// practice).
+    pub fn slo_attainment(&self, slo: &SloSpec) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.slo_attainment(slo),
+            MetricsView::Sketch(s) => s.slo_attainment(),
+        }
+    }
+
+    /// See [`MetricsView::slo_attainment`] on the `slo` argument.
+    pub fn slo_throughput(&self, slo: &SloSpec) -> f64 {
+        match self {
+            MetricsView::Exact(m) => m.slo_throughput(slo),
+            MetricsView::Sketch(s) => s.slo_throughput(),
+        }
+    }
+
+    pub fn total_preemptions(&self) -> u64 {
+        match self {
+            MetricsView::Exact(m) => m.total_preemptions(),
+            MetricsView::Sketch(s) => s.total_preemptions(),
+        }
+    }
+
+    pub fn total_swaps(&self) -> u64 {
+        match self {
+            MetricsView::Exact(m) => m.total_swaps(),
+            MetricsView::Sketch(s) => s.total_swaps(),
+        }
+    }
+
+    pub fn total_recomputed_tokens(&self) -> u64 {
+        match self {
+            MetricsView::Exact(m) => m.total_recomputed_tokens(),
+            MetricsView::Sketch(s) => s.total_recomputed_tokens(),
+        }
+    }
+
+    /// Sketch mode uses the per-tenant SLOs captured at build time and
+    /// ignores `slos` (see the type-level note).
+    pub fn tenant_breakdown(&self, slos: &[(String, SloSpec)]) -> Vec<TenantSummary> {
+        match self {
+            MetricsView::Exact(m) => m.tenant_breakdown(slos),
+            MetricsView::Sketch(s) => s.tenant_breakdown(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, tenant: Option<&str>, arrival: f64, first: f64, fin: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            conversation: id,
+            round: 0,
+            tenant: tenant.map(|t| t.to_string()),
+            prompt_len: 32,
+            output_len: 8,
+            cached_prefix: 0,
+            arrival,
+            first_token: first,
+            finished: fin,
+            max_token_gap: 0.05,
+            preemptions: 1,
+            swaps: 0,
+            recomputed_tokens: 3,
+        }
+    }
+
+    fn records() -> Vec<RequestRecord> {
+        (0..50)
+            .map(|i| {
+                let tenant = if i % 3 == 0 { Some("chat") } else { Some("batch") };
+                let a = i as f64 * 0.1;
+                rec(i, tenant, a, a + 0.2 + (i % 5) as f64 * 0.03, a + 1.0 + (i % 7) as f64 * 0.2)
+            })
+            .collect()
+    }
+
+    fn stream_of(recs: &[RequestRecord]) -> StreamingMetrics {
+        let slos = vec![("chat".to_string(), SloSpec::paper_default())];
+        let mut s = StreamingMetrics::new(SloSpec::paper_default(), slos, 0.01);
+        for r in recs {
+            s.push(r);
+        }
+        s
+    }
+
+    #[test]
+    fn exact_invariant_aggregates_match_metric_set() {
+        let recs = records();
+        let s = stream_of(&recs);
+        let m = MetricSet::new(&recs);
+        assert_eq!(s.len(), m.len());
+        assert_eq!(s.makespan(), m.makespan());
+        assert_eq!(s.request_throughput(), m.request_throughput());
+        assert_eq!(s.token_throughput(), m.token_throughput());
+        let slo = SloSpec::paper_default();
+        assert_eq!(s.slo_attainment(), m.slo_attainment(&slo));
+        assert_eq!(s.slo_throughput(), m.slo_throughput(&slo));
+        assert_eq!(s.total_preemptions(), m.total_preemptions());
+        assert_eq!(s.total_swaps(), m.total_swaps());
+        assert_eq!(s.total_recomputed_tokens(), m.total_recomputed_tokens());
+    }
+
+    #[test]
+    fn streaming_quantiles_track_exact_within_bound() {
+        let recs = records();
+        let s = stream_of(&recs);
+        let eps = s.relative_error();
+        let mut lats: Vec<f64> = recs.iter().map(|r| r.latency()).collect();
+        lats.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.99] {
+            let est = s.latency_quantile(q);
+            let pos = q * (lats.len() - 1) as f64;
+            let lo = lats[pos.floor() as usize] * (1.0 - eps) - 1e-12;
+            let hi = lats[pos.ceil() as usize] * (1.0 + eps) + 1e-12;
+            assert!(est >= lo && est <= hi, "q={q}: {est} outside [{lo}, {hi}]");
+        }
+    }
+
+    #[test]
+    fn tenant_breakdown_matches_exact_order_counts_and_attainment() {
+        let recs = records();
+        let s = stream_of(&recs);
+        let slos = vec![("chat".to_string(), SloSpec::paper_default())];
+        let exact = MetricSet::new(&recs).tenant_breakdown(&slos);
+        let stream = s.tenant_breakdown();
+        assert_eq!(exact.len(), stream.len());
+        for (e, st) in exact.iter().zip(&stream) {
+            assert_eq!(e.tenant, st.tenant);
+            assert_eq!(e.requests, st.requests);
+            assert_eq!(e.slo_attainment, st.slo_attainment);
+        }
+    }
+
+    #[test]
+    fn exact_store_is_an_id_ordered_slab() {
+        let mut store = RecordStore::exact();
+        store.push(rec(2, None, 0.2, 0.5, 1.2));
+        store.push(rec(0, None, 0.0, 0.3, 1.0));
+        store.push(rec(1, None, 0.1, 0.4, 1.1));
+        assert_eq!(store.len(), 3);
+        let (records, stream) = store.into_parts();
+        assert!(stream.is_none());
+        let ids: Vec<usize> = records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sketch_store_retains_no_records() {
+        let mut store = RecordStore::sketch(StreamingMetrics::new(
+            SloSpec::paper_default(),
+            Vec::new(),
+            0.01,
+        ));
+        for r in records() {
+            store.push(r);
+        }
+        assert_eq!(store.len(), 50);
+        let (records, stream) = store.into_parts();
+        assert!(records.is_empty());
+        assert_eq!(stream.expect("sketch store yields a stream").len(), 50);
+    }
+
+    #[test]
+    fn push_request_propagates_unfinished_request_error() {
+        let mut store = RecordStore::exact();
+        let r = Request::new(7, 0, 0, 16, 4, 0.5);
+        let err = store.push_request(&r).expect_err("unfinished request");
+        assert!(err.to_string().contains("request 7"), "{err}");
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn sketch_cdf_is_monotone_and_spans_min_to_max() {
+        let recs = records();
+        let s = stream_of(&recs);
+        let cdf = s.latency_cdf();
+        assert_eq!(cdf.len(), 101);
+        assert_eq!(cdf[0].1, 0.0);
+        assert_eq!(cdf[100].1, 1.0);
+        for w in cdf.windows(2) {
+            assert!(w[1].0 >= w[0].0, "latency grid must be monotone");
+            assert!(w[1].1 > w[0].1);
+        }
+    }
+
+    #[test]
+    fn metrics_mode_parses_config_spellings() {
+        assert_eq!(MetricsMode::parse("exact").unwrap(), MetricsMode::Exact);
+        assert_eq!(MetricsMode::parse("sketch").unwrap(), MetricsMode::Sketch);
+        assert!(MetricsMode::parse("approximate").is_err());
+        assert_eq!(MetricsMode::default(), MetricsMode::Exact);
+    }
+
+    #[test]
+    fn bounded_memory_reporting() {
+        let s = stream_of(&records());
+        // 3 global + 2 tenants x 2 sketches, each ~19 KiB at eps=0.01
+        assert!(s.memory_bytes() > 0);
+        assert!(s.memory_bytes() < 1024 * 1024);
+    }
+}

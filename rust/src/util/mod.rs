@@ -31,6 +31,20 @@ macro_rules! assert_close {
     };
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux or when procfs is
+/// unavailable — callers report it as an estimate, never depend on it.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    // format: "VmHWM:    123456 kB"
+    let kb: u64 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())?;
+    Some(kb * 1024)
+}
+
 static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
 /// A unique scratch directory removed on drop (tempfile replacement).
@@ -73,6 +87,16 @@ mod tests {
         assert!(close(0.0, 0.0, 1e-9));
         assert!(close(1e12, 1e12 * (1.0 + 1e-10), 1e-9));
         assert!(!close(1.0, 1.1, 1e-3));
+    }
+
+    #[test]
+    fn peak_rss_is_plausible_on_linux() {
+        if let Some(bytes) = peak_rss_bytes() {
+            // a running test binary occupies at least a few pages and
+            // (sanity) fewer than 1 TiB
+            assert!(bytes > 4096, "{bytes}");
+            assert!(bytes < (1 << 40), "{bytes}");
+        }
     }
 
     #[test]

@@ -422,8 +422,10 @@ fn every_example_config_parses_and_runs() {
         let cfg = SimulationConfig::from_yaml_file(&path)
             .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
         let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        // view() rather than records.len(): metrics_sketch.yaml keeps
+        // no per-request records, only streaming aggregates
         assert_eq!(
-            report.records.len(),
+            report.view().len(),
             cfg.workload.generate().unwrap().len(),
             "{}",
             path.display()
@@ -790,4 +792,105 @@ workload:
     assert_eq!(report.records.len(), 160);
     // the two-choices rule must spread a 40 qps stream over all workers
     assert!(report.workers.iter().all(|w| w.iterations > 0));
+}
+
+/// Satellite of the streaming-metrics PR: sketch mode must change how
+/// metrics are *aggregated*, never what the simulator *does*. Running
+/// the committed multi-tenant config both ways, everything that comes
+/// out of the event loop (timeline samples, worker stats, makespan,
+/// counts, goodput) is identical, and the sketch quantiles sit inside
+/// the documented relative-error window of the exact order statistics.
+#[test]
+fn sketch_mode_matches_exact_on_multi_tenant_config() {
+    use tokensim::metrics::MetricsMode;
+    use tokensim::workload::WorkloadGenerator as _;
+
+    // `est` must fall in the rank window [floor(pos), ceil(pos)]
+    // widened by the sketch's relative error (plus float slack)
+    fn in_window(sorted: &[f64], q: f64, est: f64, eps: f64) -> bool {
+        let pos = q * (sorted.len() - 1) as f64;
+        let lo = sorted[pos.floor() as usize] * (1.0 - eps) - 1e-12;
+        let hi = sorted[pos.ceil() as usize] * (1.0 + eps) + 1e-12;
+        lo <= est && est <= hi
+    }
+
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs/multi_tenant.yaml");
+    let mut cfg = SimulationConfig::from_yaml_file(&path).unwrap();
+    cfg.sample_period = 0.25; // make the timeline-equality assert non-vacuous
+
+    let exact = Simulation::from_config(&cfg).unwrap().run().unwrap();
+    cfg.metrics.mode = MetricsMode::Sketch;
+    let sketch = Simulation::from_config(&cfg).unwrap().run().unwrap();
+
+    // the simulation itself is untouched by the metrics mode
+    assert!(!exact.timeline.samples.is_empty());
+    assert_eq!(exact.timeline.samples, sketch.timeline.samples);
+    assert_eq!(exact.workers, sketch.workers);
+    assert_eq!(exact.events_processed, sketch.events_processed);
+    assert_eq!(exact.makespan, sketch.makespan);
+    assert_eq!(exact.sim_end, sketch.sim_end);
+
+    // sketch mode drops per-request records but keeps every aggregate
+    assert!(!exact.records.is_empty());
+    assert!(sketch.records.is_empty());
+    let stream = sketch.stream.as_ref().expect("sketch mode keeps a stream");
+    assert_eq!(stream.len(), exact.records.len());
+    assert_eq!(sketch.view().len(), exact.records.len());
+
+    // count-ratio metrics are bit-equal: same numerators, denominators
+    assert_eq!(exact.request_throughput(), sketch.request_throughput());
+    assert_eq!(exact.token_throughput(), sketch.token_throughput());
+    assert_eq!(exact.slo_attainment(), sketch.slo_attainment());
+    assert_eq!(exact.slo_throughput(), sketch.slo_throughput());
+
+    // per-tenant parity: same tenants in the same order, same counts
+    // and attainment, quantiles within the error window
+    let slos = cfg.workload.build().unwrap().tenant_slos();
+    let eb = exact.metrics().tenant_breakdown(&slos);
+    let sb = sketch.view().tenant_breakdown(&slos);
+    let eps = stream.relative_error();
+    assert_eq!(eb.len(), sb.len());
+    assert!(eb.len() >= 2, "multi_tenant.yaml defines several tenants");
+    for (e, s) in eb.iter().zip(&sb) {
+        assert_eq!(e.tenant, s.tenant);
+        assert_eq!(e.requests, s.requests);
+        assert_eq!(e.slo_attainment, s.slo_attainment, "{}", e.tenant);
+        let mut ttfts: Vec<f64> = exact
+            .records
+            .iter()
+            .filter(|r| r.tenant.as_deref() == Some(e.tenant.as_str()))
+            .map(|r| r.ttft())
+            .collect();
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        for (q, est) in [(0.50, s.ttft_p50), (0.99, s.ttft_p99)] {
+            assert!(
+                in_window(&ttfts, q, est, eps),
+                "{} ttft p{} = {est}",
+                e.tenant,
+                q * 100.0
+            );
+        }
+        let mut tbts: Vec<f64> = exact
+            .records
+            .iter()
+            .filter(|r| r.tenant.as_deref() == Some(e.tenant.as_str()))
+            .map(|r| r.max_token_gap)
+            .collect();
+        tbts.sort_by(|a, b| a.total_cmp(b));
+        assert!(
+            in_window(&tbts, 0.99, s.tbt_p99, eps),
+            "{} tbt p99 = {}",
+            e.tenant,
+            s.tbt_p99
+        );
+    }
+
+    // whole-run latency quantiles within the window
+    let mut lats: Vec<f64> = exact.records.iter().map(|r| r.latency()).collect();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    for q in [0.5, 0.9, 0.99] {
+        let est = sketch.view().latency_percentile(q);
+        assert!(in_window(&lats, q, est, eps), "latency p{} = {est}", q * 100.0);
+    }
 }

@@ -658,3 +658,107 @@ fn prop_table_acceleration_stays_within_tolerance_of_its_base() {
         }
     }
 }
+
+// ---- streaming-quantile-sketch invariants ------------------------------
+
+/// The bound [`tokensim::metrics::QuantileSketch`] documents: the
+/// estimate for quantile `q` falls between the two order statistics
+/// bracketing rank `q * (n - 1)`, each relaxed by the sketch's
+/// relative error (1e-12 of float slack for near-zero values).
+fn sketch_estimate_in_window(sorted: &[f64], q: f64, est: f64, eps: f64) -> bool {
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = sorted[pos.floor() as usize] * (1.0 - eps) - 1e-12;
+    let hi = sorted[pos.ceil() as usize] * (1.0 + eps) + 1e-12;
+    lo <= est && est <= hi
+}
+
+#[test]
+fn prop_sketch_quantiles_track_exact_order_statistics() {
+    use tokensim::metrics::QuantileSketch;
+
+    // one stream shape per arm; all values non-negative, matching the
+    // latency/ttft/tbt domains the sketch serves in production
+    let shapes = ["uniform", "lognormal", "sorted", "reversed", "duplicate-heavy"];
+    for seed in 0..5u64 {
+        for name in shapes {
+            let mut rng = SimRng::new(seed, &format!("sketch-prop-{name}"));
+            let n = 1000 + rng.uniform_int(0, 3000) as usize;
+            let values: Vec<f64> = match name {
+                "uniform" => (0..n).map(|_| rng.uniform(0.001, 120.0)).collect(),
+                "lognormal" => (0..n).map(|_| rng.lognormal(0.0, 1.5)).collect(),
+                "sorted" => {
+                    let mut v: Vec<f64> = (0..n).map(|_| rng.lognormal(1.0, 0.8)).collect();
+                    v.sort_by(|a, b| a.total_cmp(b));
+                    v
+                }
+                "reversed" => {
+                    let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 40.0)).collect();
+                    v.sort_by(|a, b| b.total_cmp(a));
+                    v
+                }
+                // ~8 distinct values repeated; duplicates pile into the
+                // same bucket, which must not bias the rank walk
+                _ => {
+                    let pool: Vec<f64> = (0..8).map(|_| rng.uniform(0.01, 10.0)).collect();
+                    (0..n).map(|_| pool[rng.pick(pool.len())]).collect()
+                }
+            };
+            let mut sketch = tokensim_sketch_of(&values);
+            let eps = sketch.relative_error();
+            let mut sorted = values.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let est = sketch.quantile(q);
+                let exact = tokensim::metrics::percentile_of_sorted(&sorted, q);
+                assert!(
+                    sketch_estimate_in_window(&sorted, q, est, eps),
+                    "{name} seed {seed} n {n} q {q}: sketch {est} vs exact {exact}"
+                );
+            }
+            // extremes are tracked exactly, not bucket-approximated
+            assert_eq!(sketch.quantile(0.0), sorted[0], "{name} seed {seed}");
+            assert_eq!(sketch.quantile(1.0), sorted[n - 1], "{name} seed {seed}");
+            assert_eq!(sketch.count(), n as u64);
+            // feeding more data can only move counts, never epsilon
+            sketch.add(1.0);
+            assert_eq!(sketch.relative_error(), eps);
+            assert_eq!(QuantileSketch::new(eps).relative_error(), eps);
+        }
+    }
+}
+
+#[test]
+fn prop_sketch_merge_equals_sketch_of_concatenation() {
+    use tokensim::metrics::QuantileSketch;
+
+    for seed in 0..10u64 {
+        let mut rng = SimRng::new(seed, "sketch-merge");
+        let na = rng.uniform_int(0, 2000) as usize;
+        let nb = rng.uniform_int(1, 2000) as usize;
+        let a: Vec<f64> = (0..na).map(|_| rng.lognormal(0.5, 1.2)).collect();
+        let b: Vec<f64> = (0..nb).map(|_| rng.uniform(0.0, 300.0)).collect();
+
+        let mut left = QuantileSketch::new(0.01);
+        a.iter().for_each(|&v| left.add(v));
+        let mut right = QuantileSketch::new(0.01);
+        b.iter().for_each(|&v| right.add(v));
+        let mut both = QuantileSketch::new(0.01);
+        a.iter().chain(b.iter()).for_each(|&v| both.add(v));
+
+        left.merge(&right);
+        // merge is exact (elementwise bucket addition), so the merged
+        // sketch is *identical* to one fed the concatenated stream —
+        // not merely within epsilon
+        assert_eq!(left, both, "seed {seed} na {na} nb {nb}");
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(left.quantile(q), both.quantile(q), "seed {seed} q {q}");
+        }
+        assert_eq!(left.count(), (na + nb) as u64);
+    }
+}
+
+fn tokensim_sketch_of(values: &[f64]) -> tokensim::metrics::QuantileSketch {
+    let mut s = tokensim::metrics::QuantileSketch::new(0.01);
+    values.iter().for_each(|&v| s.add(v));
+    s
+}
