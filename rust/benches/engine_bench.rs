@@ -1,11 +1,33 @@
 //! L3 engine micro-benchmarks: event-queue throughput (the SimPy
-//! replacement this rust rewrite justifies) and RNG sampling.
+//! replacement this rust rewrite justifies), RNG sampling, and the
+//! decode-window costing paths (replay vs memoized vs affine).
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, budget, sink};
+use tokensim::cluster::Simulation;
+use tokensim::compute::ComputeSpec;
+use tokensim::config::{SimulationConfig, WindowCost};
+use tokensim::hardware::HardwareSpec;
+use tokensim::model::ModelSpec;
 use tokensim::sim::{EventPayload, EventQueue, SimRng};
+use tokensim::workload::WorkloadSpec;
+
+/// Decode-heavy single-worker config: 1k-iteration decode tails, so
+/// fast-forward coalesces long closed windows and the three window
+/// costing strategies diverge in cost-model call volume.
+fn window_cfg(compute: &ComputeSpec, window_cost: WindowCost) -> SimulationConfig {
+    let mut cfg = SimulationConfig::single_worker(
+        ModelSpec::llama2_7b(),
+        HardwareSpec::a100_80g(),
+        WorkloadSpec::fixed(32, 8.0, 32, 1_000),
+    );
+    cfg.compute = compute.clone();
+    cfg.engine.fast_forward = true;
+    cfg.engine.window_cost = window_cost;
+    cfg
+}
 
 fn main() {
     println!("== engine_bench ==");
@@ -53,4 +75,23 @@ fn main() {
         }
         sink(acc);
     });
+
+    // closed decode windows (~1k iterations each): per-iteration replay
+    // vs exact memoization vs the closed-form affine series — the PR-7
+    // hot-path comparison, tracked per commit via TOKENSIM_BENCH_JSON
+    let cases = [
+        ("replay", ComputeSpec::new("analytic"), WindowCost::Replay),
+        ("memo", ComputeSpec::new("memo").with("base", "analytic"), WindowCost::Replay),
+        ("affine", ComputeSpec::new("analytic"), WindowCost::Affine),
+    ];
+    for (label, compute, wc) in cases {
+        let cfg = window_cfg(&compute, wc);
+        bench(&format!("decode_window/1k_iters_{label}"), budget(), || {
+            let report = Simulation::from_config(&cfg)
+                .expect("valid config")
+                .run()
+                .expect("workload must complete");
+            sink(report.records.len());
+        });
+    }
 }

@@ -244,6 +244,16 @@ impl ComputeModel for VidurLike {
     fn setup_cost(&self) -> f64 {
         self.pretrain_cost
     }
+
+    fn aggregate_exact(&self) -> bool {
+        // the feature vector is (T, R, sqrt(A), S_active), all exact
+        // integer sums — equal aggregates give bit-equal predictions,
+        // so the memo layer may key on the aggregate tuple
+        true
+    }
+    // NOT decode_window_affine: regression trees are step functions of
+    // the features, so an endpoint-verified affine fit can still be
+    // wrong mid-window
 }
 
 #[cfg(test)]

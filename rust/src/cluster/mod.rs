@@ -5,13 +5,13 @@
 mod report;
 mod worker;
 
-pub use report::{SimulationReport, WorkerStats};
+pub use report::{strip_compute_identity, SimulationReport, WorkerStats};
 pub use worker::{Worker, WorkerRole};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::compute::{ComputeCtx, ComputeModel};
-use crate::config::SimulationConfig;
+use crate::config::{SimulationConfig, WindowCost};
 use crate::hardware::HardwareSpec;
 use crate::memory::{AllocOutcome, Granularity, PoolCache};
 use crate::metrics::{
@@ -27,6 +27,28 @@ use crate::workload::ConversationWorkload;
 /// Factory producing a per-worker cost model (lets the oracle and the
 /// baseline simulators reuse the driver with their own compute models).
 pub type CostFactory<'a> = dyn Fn(&ModelSpec, &HardwareSpec, usize) -> Box<dyn ComputeModel> + 'a;
+
+/// Minimum coalesced-window length (iterations) before the affine
+/// window-costing path engages: below this, the three real cost-model
+/// calls that fit and verify the series cost as much as replaying the
+/// window outright.
+const AFFINE_MIN_WINDOW: u32 = 8;
+
+/// Relative tolerance for the affine boundary-verification call. Sized
+/// for f32 model arithmetic (~1e-7 relative per call) amplified by
+/// extrapolating the fitted slope across the window; a roofline knee
+/// inside the window produces errors orders of magnitude larger, so a
+/// mismatch here reliably routes the window back to replay.
+const AFFINE_REL_TOL: f64 = 1e-4;
+
+/// Shift every context length of an in-place decode batch by `by`
+/// tokens: the affine window path jumps the composition forward to the
+/// window boundary (and back, when verification fails).
+fn advance_ctx(ctx: &mut [u32], by: i64) {
+    for c in ctx.iter_mut() {
+        *c = (*c as i64 + by) as u32;
+    }
+}
 
 /// A running simulation: construct from a config (or conversations),
 /// then [`Simulation::run`] to completion. Construction returns an
@@ -59,6 +81,11 @@ pub struct Simulation {
     /// Decode fast-forwarding (`engine: fast_forward`, default on):
     /// coalesce closed-batch decode iterations into one event.
     fast_forward: bool,
+    /// How coalesced windows are costed (`engine: window_cost`):
+    /// per-iteration model-call replay (bit-identical, the default) or
+    /// the closed-form affine series for models that declare
+    /// [`ComputeModel::decode_window_affine`].
+    window_cost: WindowCost,
 }
 
 impl Simulation {
@@ -271,6 +298,7 @@ impl Simulation {
             conv_home,
             finished: 0,
             fast_forward: cfg.engine.fast_forward,
+            window_cost: cfg.engine.window_cost,
         })
     }
 
@@ -659,28 +687,128 @@ impl Simulation {
             // only safe strictly before it
             let horizon = self.queue.peek_time().unwrap_or(f64::INFINITY);
             let mut k = 1u32;
-            while k < k_max && done_at < horizon {
-                // apply the in-flight iteration's effects exactly as
-                // `on_iter_done` would at its completion time
-                for &rid in &plan.members {
-                    let r = &mut self.requests[rid];
-                    r.generated += 1;
-                    r.ctx_in_cache += 1;
-                    r.stamp_token(done_at);
+            let mut replay = true;
+
+            // ---- closed-form affine window costing ---------------------
+            // Inside a closed window the composition only grows by one
+            // context token per slot per iteration, so for models that
+            // declare `decode_window_affine` the k-th coalesced step
+            // costs s1 + (k-1)·d. Two real calls fit the series and one
+            // more verifies it at the window boundary; everything else —
+            // boundary search, busy time, token stamps — is O(1)
+            // arithmetic per window (O(1) per member for stamps) instead
+            // of one model call per iteration. Counts and token totals
+            // stay bit-equal to replay; iteration *times* agree only to
+            // float tolerance, which is why `window_cost: replay` stays
+            // the default and the byte-diff gates run replay.
+            if self.window_cost == WindowCost::Affine
+                && w.cost.decode_window_affine()
+                && k_max >= AFFINE_MIN_WINDOW
+                && done_at < horizon
+            {
+                advance_ctx(&mut plan.batch.ctx, 1);
+                let s1 = w.cost.iter_time(&plan.batch);
+                advance_ctx(&mut plan.batch.ctx, 1);
+                let s2 = w.cost.iter_time(&plan.batch);
+                let d = s2 - s1;
+                let t1 = done_at;
+                // completion time of iteration kk under the series
+                let t_at = |kk: u32| -> f64 {
+                    let x = (kk - 1) as f64;
+                    t1 + x * s1 + d * x * (x - 1.0) * 0.5
+                };
+                // replay runs while k < k_max && t_k < horizon; the
+                // series is monotone (positive steps), so binary-search
+                // the horizon boundary instead of walking to it
+                let k_end = if t_at(k_max) < horizon {
+                    k_max
+                } else {
+                    let (mut lo, mut hi) = (1u32, k_max);
+                    while lo + 1 < hi {
+                        let mid = lo + (hi - lo) / 2;
+                        if t_at(mid) < horizon {
+                            lo = mid;
+                        } else {
+                            hi = mid;
+                        }
+                    }
+                    hi
+                };
+                let last_step = s1 + (k_end as f64 - 2.0) * d;
+                if k_end >= AFFINE_MIN_WINDOW && s1 > 0.0 && last_step > 0.0 {
+                    // one real call at the boundary composition checks
+                    // the extrapolation: the fitted slope is the window's
+                    // *initial* slope, so any knee or nonlinearity inside
+                    // the window surfaces as an endpoint mismatch
+                    advance_ctx(&mut plan.batch.ctx, k_end as i64 - 3);
+                    let s_check = w.cost.iter_time(&plan.batch);
+                    if ((s_check - last_step) / s_check).abs() <= AFFINE_REL_TOL {
+                        let n_steps = k_end - 1;
+                        let t_last = t_at(k_end - 1);
+                        let t_end = t_at(k_end);
+                        // collapse the per-iteration `stamp_token` calls:
+                        // mid-window gaps are the steps s_1..s_{K-2},
+                        // an affine run whose max sits at one end
+                        let gap_hi = s1.max(s1 + (k_end as f64 - 3.0) * d);
+                        for &rid in &plan.members {
+                            let r = &mut self.requests[rid];
+                            r.generated += n_steps;
+                            r.ctx_in_cache += n_steps;
+                            if r.first_token.is_none() {
+                                r.first_token = Some(t1);
+                            } else if let Some(prev) = r.last_token {
+                                let gap = t1 - prev;
+                                if gap > r.max_token_gap {
+                                    r.max_token_gap = gap;
+                                }
+                            }
+                            if gap_hi > r.max_token_gap {
+                                r.max_token_gap = gap_hi;
+                            }
+                            r.last_token = Some(t_last);
+                        }
+                        w.iterations += n_steps as u64;
+                        w.busy_time += t_end - t1;
+                        done_at = t_end;
+                        w.affine_windows += 1;
+                        w.window_calls_saved += (n_steps as u64).saturating_sub(3);
+                        k = k_end;
+                        replay = false;
+                    } else {
+                        // knee inside the window: rewind and replay
+                        advance_ctx(&mut plan.batch.ctx, -(k_end as i64 - 1));
+                    }
+                } else {
+                    // horizon-clipped below the engage threshold
+                    advance_ctx(&mut plan.batch.ctx, -2);
                 }
-                // form the next all-decode iteration in place: same
-                // members, one more context token per slot
-                for c in plan.batch.ctx.iter_mut() {
-                    *c += 1;
+            }
+
+            if replay {
+                while k < k_max && done_at < horizon {
+                    // apply the in-flight iteration's effects exactly as
+                    // `on_iter_done` would at its completion time
+                    for &rid in &plan.members {
+                        let r = &mut self.requests[rid];
+                        r.generated += 1;
+                        r.ctx_in_cache += 1;
+                        r.stamp_token(done_at);
+                    }
+                    // form the next all-decode iteration in place: same
+                    // members, one more context token per slot
+                    for c in plan.batch.ctx.iter_mut() {
+                        *c += 1;
+                    }
+                    let step = w.cost.iter_time(&plan.batch);
+                    assert!(step > 0.0, "iteration with work must take time");
+                    w.iterations += 1;
+                    w.busy_time += step;
+                    done_at += step;
+                    k += 1;
                 }
-                let step = w.cost.iter_time(&plan.batch);
-                assert!(step > 0.0, "iteration with work must take time");
-                w.iterations += 1;
-                w.busy_time += step;
-                done_at += step;
-                k += 1;
             }
             if k > 1 {
+                w.ff_windows += 1;
                 // one bulk reservation replaces the k-1 per-iteration
                 // growth calls; reservations are delta-based, so the
                 // final allocator state is identical. A hard assert, not

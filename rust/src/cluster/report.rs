@@ -1,5 +1,6 @@
 //! Simulation output: request records + timelines + worker statistics.
 
+use crate::compute::CacheStats;
 use crate::memory::{Granularity, PoolCache, SwapStats};
 use crate::metrics::{
     MemoryTimeline, MetricSet, MetricsView, RecordStore, RequestRecord, SloSpec, StreamingMetrics,
@@ -29,6 +30,48 @@ pub struct WorkerStats {
     pub total_bytes: u64,
     /// Host↔device swap traffic (zeros for managers without swap).
     pub swap: SwapStats,
+    /// Memoization hit/miss counters, when the worker's compute model
+    /// carries a cache layer (`None` otherwise). Decode fast-forwarding
+    /// *replays* the identical per-iteration call sequence, so these are
+    /// equal across `fast_forward on|off` and safe to serialize in the
+    /// byte-diffed JSON report.
+    pub cache: Option<CacheStats>,
+    /// Decode windows coalesced by fast-forwarding (window length > 1).
+    /// Engine-mode dependent (zero with `fast_forward: off`), so kept
+    /// **out** of the JSON report the determinism gates diff.
+    pub ff_windows: u64,
+    /// Coalesced windows costed by the closed-form affine series
+    /// (`engine: window_cost: affine`). Engine-mode dependent; not
+    /// serialized.
+    pub affine_windows: u64,
+    /// Cost-model calls the affine path avoided (window iterations
+    /// minus the three calls that fit + verify each series). Engine-mode
+    /// dependent; not serialized.
+    pub window_calls_saved: u64,
+}
+
+impl WorkerStats {
+    /// Equality over everything *simulated* — ignores the engine-mode
+    /// window counters (`ff_windows`, `affine_windows`,
+    /// `window_calls_saved`), which describe how the engine got there,
+    /// not what it simulated, and legitimately differ across
+    /// `fast_forward on|off`. The fast-forward identity gates compare
+    /// with this instead of derived `PartialEq`.
+    pub fn simulated_eq(&self, other: &Self) -> bool {
+        self.id == other.id
+            && self.hardware == other.hardware
+            && self.manager == other.manager
+            && self.compute == other.compute
+            && self.iterations == other.iterations
+            && self.busy_time == other.busy_time
+            && self.utilization == other.utilization
+            && self.preemption_frees == other.preemption_frees
+            && self.total_blocks == other.total_blocks
+            && self.total_tokens == other.total_tokens
+            && self.total_bytes == other.total_bytes
+            && self.swap == other.swap
+            && self.cache == other.cache
+    }
 }
 
 /// Everything a run produces.
@@ -95,6 +138,10 @@ impl SimulationReport {
                 total_tokens: w.mem.capacity(Granularity::Token),
                 total_bytes: w.mem.capacity(Granularity::Byte),
                 swap: w.mem.swap_stats(),
+                cache: w.cost.cache_stats(),
+                ff_windows: w.ff_windows,
+                affine_windows: w.affine_windows,
+                window_calls_saved: w.window_calls_saved,
             })
             .collect();
         let (mut pool_hits, mut pool_misses, mut pool_evictions) =
@@ -241,7 +288,7 @@ impl SimulationReport {
         self.workers
             .iter()
             .map(|w| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::num(w.id as f64)),
                     ("hardware", Json::str(&w.hardware)),
                     ("manager", Json::str(&w.manager)),
@@ -252,7 +299,16 @@ impl SimulationReport {
                     ("total_blocks", Json::num(w.total_blocks as f64)),
                     ("swap_outs", Json::num(w.swap.swap_outs as f64)),
                     ("swap_ins", Json::num(w.swap.swap_ins as f64)),
-                ])
+                ];
+                // memo counters only when a cache layer is present, and
+                // always last in the object (strip_compute_identity
+                // relies on the placement); ff/affine window counters
+                // are engine-mode dependent and never serialized
+                if let Some(cs) = &w.cache {
+                    fields.push(("cache_hits", Json::num(cs.hits as f64)));
+                    fields.push(("cache_misses", Json::num(cs.misses as f64)));
+                }
+                Json::obj(fields)
             })
             .collect()
     }
@@ -343,6 +399,34 @@ impl SimulationReport {
     }
 }
 
+/// Normalize a report JSON for compute-identity-insensitive comparison:
+/// blanks each worker's `"compute"` value and drops the memoization
+/// counter fields (`cache_hits`/`cache_misses`, which `workers_json`
+/// places last in each worker object). The memoized-vs-unmemoized
+/// regression gate byte-diffs *normalized* reports — memoization must
+/// change nothing about a simulation but the compute layer's own name
+/// and counters, and this helper is exactly that allowance.
+pub fn strip_compute_identity(json: &str) -> String {
+    let mut blanked = String::with_capacity(json.len());
+    let mut rest = json;
+    while let Some(i) = rest.find("\"compute\":\"") {
+        let vstart = i + "\"compute\":\"".len();
+        let vlen = rest[vstart..].find('"').expect("unterminated compute value");
+        blanked.push_str(&rest[..vstart]);
+        rest = &rest[vstart + vlen..]; // keep the closing quote
+    }
+    blanked.push_str(rest);
+    let mut out = String::with_capacity(blanked.len());
+    let mut rest = blanked.as_str();
+    while let Some(i) = rest.find(",\"cache_hits\":") {
+        let end = i + rest[i..].find('}').expect("unterminated worker object");
+        out.push_str(&rest[..i]);
+        rest = &rest[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +503,30 @@ mod tests {
         assert!(j.contains("sketch_relative_error"));
         assert!(!j.contains("\"records\""), "no per-request array");
         assert_eq!(j, mk().to_json().to_string(), "deterministic render");
+    }
+
+    #[test]
+    fn strip_compute_identity_removes_only_the_memo_layer_traces() {
+        let memoized = concat!(
+            r#"{"workers":[{"id":0,"compute":"memo[analytic[m/h]]","iterations":9,"#,
+            r#""swap_ins":0,"cache_hits":7,"cache_misses":2},"#,
+            r#"{"id":1,"compute":"memo[analytic[m/h]]","iterations":9,"#,
+            r#""swap_ins":1,"cache_hits":5,"cache_misses":4}],"makespan":1.5}"#
+        );
+        let plain = concat!(
+            r#"{"workers":[{"id":0,"compute":"analytic[m/h]","iterations":9,"#,
+            r#""swap_ins":0},"#,
+            r#"{"id":1,"compute":"analytic[m/h]","iterations":9,"#,
+            r#""swap_ins":1}],"makespan":1.5}"#
+        );
+        assert_eq!(strip_compute_identity(memoized), strip_compute_identity(plain));
+        let stripped = strip_compute_identity(memoized);
+        assert!(stripped.contains("\"compute\":\"\""));
+        assert!(!stripped.contains("cache_hits"));
+        assert!(stripped.contains("\"makespan\":1.5"), "payload intact");
+        // reports that were never memoized pass through unchanged apart
+        // from the blanked name
+        assert!(strip_compute_identity(plain).contains("\"iterations\":9"));
     }
 
     #[test]

@@ -53,6 +53,15 @@ pub struct Worker {
     // ---- statistics ----
     pub iterations: u64,
     pub busy_time: f64,
+    /// Decode windows coalesced by fast-forwarding (window length > 1).
+    /// Engine-mode dependent: kept out of the byte-diffed JSON report.
+    pub ff_windows: u64,
+    /// Coalesced windows costed by the closed-form affine series
+    /// (`engine: window_cost: affine`) instead of per-iteration replay.
+    pub affine_windows: u64,
+    /// Cost-model calls the affine series avoided (window iterations
+    /// minus the three real calls that fit and verify the series).
+    pub window_calls_saved: u64,
 }
 
 impl Worker {
@@ -86,6 +95,9 @@ impl Worker {
             linger_armed: false,
             iterations: 0,
             busy_time: 0.0,
+            ff_windows: 0,
+            affine_windows: 0,
+            window_calls_saved: 0,
         }
     }
 

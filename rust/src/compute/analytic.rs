@@ -1,9 +1,16 @@
 //! Pure-rust mirror of the L2/L1 cost artifact semantics.
 //!
-//! Formula-for-formula (and, where it matters, f32-for-f32) identical to
-//! `python/compile/kernels/ref.py`. The integration test-suite
-//! cross-validates this mirror against the loaded HLO artifact; keeping
-//! both lets unit tests and artifact-less builds run the full simulator.
+//! Formula-for-formula identical to `python/compile/kernels/ref.py`,
+//! with the same f32 precision — but the attention accumulators are
+//! computed from the *exact integer batch aggregates* rather than a
+//! per-slot f32 sum. The per-slot and aggregated forms are identical in
+//! exact arithmetic (every attention term is linear in `(T, A, S_all)`),
+//! and the aggregated form is what makes `iter_time` a bit-exact pure
+//! function of the aggregates ([`ComputeModel::aggregate_exact`]) so
+//! the memoization layer can key on them. The integration test-suite
+//! cross-validates this mirror against the loaded HLO artifact (~1e-4
+//! relative); keeping both lets unit tests and artifact-less builds run
+//! the full simulator.
 
 use super::{BatchDesc, ComputeModel, IterCost, NUM_OPS};
 use crate::hardware::HardwareSpec;
@@ -76,6 +83,35 @@ impl AnalyticCost {
 
     /// Full evaluation — mirror of `iter_cost_ref`.
     pub fn evaluate(&self, batch: &BatchDesc) -> IterCost {
+        let bw = self.hw[1];
+        let mut per_req = Vec::with_capacity(batch.len());
+        for i in 0..batch.len() {
+            let c = batch.ctx[i] as f32;
+            let n = batch.new[i] as f32;
+            let (f, b, _) = self.attn_descriptors(c, n);
+            per_req.push(self.roofline(f, b, bw) as f64);
+        }
+        let (op_times, iter_time) = self.core(batch.aggregates());
+        IterCost {
+            iter_time,
+            op_times,
+            per_req_attn: per_req,
+        }
+    }
+
+    /// Operator times + iteration latency from the exact integer batch
+    /// aggregates `(T, R, A, S_all, _)` — the allocation-free core both
+    /// [`Self::evaluate`] and the `iter_time` hot path share, which is
+    /// what makes the two bit-identical and the model aggregate-exact.
+    ///
+    /// Every attention accumulator of `ref.py` is linear in the
+    /// aggregates: `Σ 4·n·(c+n)·h/tp = 4·A·h/tp`,
+    /// `Σ n·(c+n)·heads/tp = A·heads/tp`, and the KV-gather bytes sum to
+    /// `(2·S_all·h_kv/eff + 2·T·h_kv + 2·T·h)·dtype/tp` — note `S_all`
+    /// over **all** slots, because `attn_cost_ref` charges resident-KV
+    /// gather traffic even for slots with `new == 0`.
+    fn core(&self, aggregates: (u64, u64, u64, u64, u64)) -> ([f64; NUM_OPS], f64) {
+        let (t_agg, r_agg, a_agg, s_all, _) = aggregates;
         let m = &self.model;
         let (h, layers, heads, kv_heads, ffn, vocab, dtype, tp) =
             (m[0], m[1], m[2], m[3], m[4], m[5], m[6], m[7]);
@@ -83,25 +119,16 @@ impl AnalyticCost {
         let iter_oh = self.hw[3];
         let net_bw = self.hw[4];
 
-        let mut t_sum = 0.0f32; // total new tokens
-        let mut r_sum = 0.0f32; // active requests
-        let mut attn_flops = 0.0f32;
-        let mut attn_bytes = 0.0f32;
-        let mut score_elems = 0.0f32;
-        let mut per_req = Vec::with_capacity(batch.len());
-        for i in 0..batch.len() {
-            let c = batch.ctx[i] as f32;
-            let n = batch.new[i] as f32;
-            let (f, b, s) = self.attn_descriptors(c, n);
-            attn_flops += f;
-            attn_bytes += b;
-            score_elems += s;
-            t_sum += n;
-            if n > 0.0 {
-                r_sum += 1.0;
-            }
-            per_req.push(self.roofline(f, b, bw) as f64);
-        }
+        let t_sum = t_agg as f32; // total new tokens
+        let r_sum = r_agg as f32; // active requests
+        let h_kv = h * (kv_heads / heads);
+        let attn_flops = 4.0 * (a_agg as f32) * h / tp;
+        let attn_bytes = (2.0 * (s_all as f32) * h_kv / ATTN_GATHER_EFF
+            + 2.0 * t_sum * h_kv
+            + 2.0 * t_sum * h)
+            * dtype
+            / tp;
+        let score_elems = (a_agg as f32) * heads / tp;
 
         let g = kv_heads / heads;
         let qkv_out = h * (1.0 + 2.0 * g);
@@ -154,17 +181,15 @@ impl AnalyticCost {
         } else {
             0.0
         };
-        IterCost {
-            iter_time,
-            op_times,
-            per_req_attn: per_req,
-        }
+        (op_times, iter_time)
     }
 }
 
 impl ComputeModel for AnalyticCost {
     fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
-        self.evaluate(batch).iter_time
+        // allocation-free fast path: same core as evaluate(), skipping
+        // the per-request diagnostics vector
+        self.core(batch.aggregates()).1
     }
 
     fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
@@ -177,6 +202,14 @@ impl ComputeModel for AnalyticCost {
 
     fn as_probe(&mut self) -> Option<&mut dyn super::CostProbe> {
         Some(self)
+    }
+
+    fn aggregate_exact(&self) -> bool {
+        true
+    }
+
+    fn decode_window_affine(&self) -> bool {
+        true
     }
 }
 
@@ -267,6 +300,27 @@ mod tests {
             assert!(t > prev);
             prev = t;
         }
+    }
+
+    #[test]
+    fn iter_time_is_aggregate_exact() {
+        let mut m = setup();
+        // two different compositions with identical (T, R, A, S) tuples
+        let mut b1 = BatchDesc::new();
+        b1.push(100, 1);
+        b1.push(300, 1);
+        let mut b2 = BatchDesc::new();
+        b2.push(200, 1);
+        b2.push(200, 1);
+        assert_eq!(b1.aggregates(), b2.aggregates());
+        assert_eq!(m.iter_time(&b1).to_bits(), m.iter_time(&b2).to_bits());
+        // the allocation-free fast path matches the full evaluation bit
+        // for bit (they share `core`)
+        assert_eq!(
+            m.iter_time(&b1).to_bits(),
+            m.evaluate(&b1).iter_time.to_bits()
+        );
+        assert!(m.aggregate_exact());
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Exact memoization layer for cost models.
+//!
+//! [`MemoizedCost`] wraps any [`ComputeModel`] and replays previously
+//! computed `iter_time` results instead of re-evaluating the base. The
+//! cache key depends on what the base guarantees:
+//!
+//! * **Aggregate keys** — when the base is
+//!   [aggregate-exact](ComputeModel::aggregate_exact), `iter_time` is a
+//!   bit-exact pure function of the five integer batch aggregates
+//!   `(T, R, A, S_all, S_active)`, so the key is that tuple. Decode
+//!   windows revisit the same aggregates constantly (every composition
+//!   of `m` decode slots with the same total context collapses to one
+//!   key), which is where the >100× call reductions come from.
+//! * **Composition keys** — otherwise the key is the full `(ctx, new)`
+//!   slot list. Still bit-safe for any *deterministic* base (the result
+//!   is a pure function of the key), but recurrences are rare.
+//!
+//! Either way the cached value is exactly the value the base returned,
+//! so a memoized run is **byte-identical** to an unmemoized one — the
+//! byte-diff determinism gates stay green with memoization on.
+//!
+//! The cache is capacity-capped; on overflow it is cleared outright.
+//! Because values are pure functions of keys, dropping entries can only
+//! cost recomputation, never change a result.
+//!
+//! Do **not** memoize stochastic models (the `oracle` noise model draws
+//! fresh RNG noise per call): caching would freeze one draw per key and
+//! silently change the distribution. The registry refuses `memo` over
+//! `oracle` for this reason.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::{BatchDesc, ComputeModel, CostProbe, IterCost};
+
+/// Cache-entry cap; the map is cleared when it would grow past this.
+/// At ~56 bytes/entry for aggregate keys this bounds the cache to a few
+/// tens of MiB, far below the simulator's request table at the scales
+/// where memoization matters.
+pub const MEMO_CAPACITY: usize = 1 << 20;
+
+/// FxHash-style deterministic hasher. No external crates, and —
+/// unlike `RandomState` — no per-process seed, though nothing observable
+/// depends on hash order (the map is only ever probed by key).
+#[derive(Default)]
+struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// Memoization hit/miss counters (see [`ComputeModel::cache_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `iter_time` calls answered from the cache.
+    pub hits: u64,
+    /// `iter_time` calls that evaluated the base model.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Total `iter_time` calls observed.
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of calls answered from the cache (0 when never called).
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+#[derive(Hash, PartialEq, Eq)]
+enum Key {
+    /// `(T, R, A, S_all, S_active)` — aggregate-exact bases only.
+    Agg(u64, u64, u64, u64, u64),
+    /// Packed `(ctx << 32) | new` per slot — the full composition.
+    Full(Box<[u64]>),
+}
+
+/// Caching layer over any deterministic [`ComputeModel`]; registered as
+/// the composable `memo` entry (`compute: {model: memo, base: …}`) and
+/// applied by default to the expensive built-ins (`hlo`, `vidur_like`,
+/// `llmservingsim_like`) unless `memoize: false`.
+pub struct MemoizedCost {
+    inner: Box<dyn ComputeModel>,
+    name: String,
+    map: HashMap<Key, f64, BuildHasherDefault<FxHasher>>,
+    capacity: usize,
+    /// Key on aggregates (base is aggregate-exact) vs full composition.
+    agg_keys: bool,
+    hits: u64,
+    misses: u64,
+}
+
+impl MemoizedCost {
+    pub fn new(inner: Box<dyn ComputeModel>) -> Self {
+        Self::with_capacity_limit(inner, MEMO_CAPACITY)
+    }
+
+    /// As [`Self::new`] with an explicit cache-entry cap (tests).
+    pub fn with_capacity_limit(inner: Box<dyn ComputeModel>, capacity: usize) -> Self {
+        assert!(capacity > 0, "memo capacity must be >= 1");
+        let name = format!("memo[{}]", inner.name());
+        let agg_keys = inner.aggregate_exact();
+        Self {
+            inner,
+            name,
+            map: HashMap::default(),
+            capacity,
+            agg_keys,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn key_for(&self, batch: &BatchDesc) -> Key {
+        if self.agg_keys {
+            let (t, r, a, s_all, s_active) = batch.aggregates();
+            Key::Agg(t, r, a, s_all, s_active)
+        } else {
+            Key::Full(
+                batch
+                    .ctx
+                    .iter()
+                    .zip(&batch.new)
+                    .map(|(&c, &n)| ((c as u64) << 32) | n as u64)
+                    .collect(),
+            )
+        }
+    }
+}
+
+impl ComputeModel for MemoizedCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        let key = self.key_for(batch);
+        if let Some(&t) = self.map.get(&key) {
+            self.hits += 1;
+            return t;
+        }
+        let t = self.inner.iter_time(batch);
+        self.misses += 1;
+        if self.map.len() >= self.capacity {
+            // values are pure functions of keys: clearing only costs
+            // recomputation, never correctness
+            self.map.clear();
+        }
+        self.map.insert(key, t);
+        t
+    }
+
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        // per-request detail is not cached; delegate so diagnostics stay
+        // exact (callers of iter_cost are off the hot path)
+        self.inner.iter_cost(batch)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn setup_cost(&self) -> f64 {
+        self.inner.setup_cost()
+    }
+
+    fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
+        self.inner.as_probe()
+    }
+
+    fn aggregate_exact(&self) -> bool {
+        self.inner.aggregate_exact()
+    }
+
+    fn decode_window_affine(&self) -> bool {
+        self.inner.decode_window_affine()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::AnalyticCost;
+    use crate::hardware::HardwareSpec;
+    use crate::model::ModelSpec;
+
+    fn analytic() -> Box<dyn ComputeModel> {
+        Box::new(AnalyticCost::new(
+            &ModelSpec::llama2_7b(),
+            &HardwareSpec::a100_80g(),
+        ))
+    }
+
+    fn decode_batch(slots: &[(u32, u32)]) -> BatchDesc {
+        let mut b = BatchDesc::new();
+        for &(c, n) in slots {
+            b.push(c, n);
+        }
+        b
+    }
+
+    /// A deterministic model that is NOT aggregate-exact: charges per
+    /// slot non-linearly, and counts base evaluations.
+    struct SlotQuadratic {
+        calls: u64,
+    }
+
+    impl ComputeModel for SlotQuadratic {
+        fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+            self.calls += 1;
+            batch
+                .ctx
+                .iter()
+                .zip(&batch.new)
+                .map(|(&c, &n)| (c as f64 + 1.0).sqrt() * n as f64)
+                .sum::<f64>()
+                .max(1e-9)
+        }
+        fn name(&self) -> &str {
+            "slot-quadratic"
+        }
+    }
+
+    #[test]
+    fn repeat_batches_hit_and_are_bit_equal() {
+        let mut m = MemoizedCost::new(analytic());
+        let b = decode_batch(&[(100, 1), (200, 1)]);
+        let t0 = m.iter_time(&b);
+        let t1 = m.iter_time(&b);
+        assert_eq!(t0.to_bits(), t1.to_bits());
+        let stats = m.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_keys_collapse_equal_aggregate_compositions() {
+        let mut m = MemoizedCost::new(analytic());
+        assert!(m.aggregate_exact());
+        let b1 = decode_batch(&[(100, 1), (300, 1)]);
+        let b2 = decode_batch(&[(200, 1), (200, 1)]);
+        assert_eq!(b1.aggregates(), b2.aggregates());
+        let t1 = m.iter_time(&b1);
+        let t2 = m.iter_time(&b2);
+        assert_eq!(t1.to_bits(), t2.to_bits());
+        let stats = m.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 1), "b2 was a hit");
+    }
+
+    #[test]
+    fn composition_keys_distinguish_equal_aggregates() {
+        let mut m = MemoizedCost::new(Box::new(SlotQuadratic { calls: 0 }));
+        assert!(!m.aggregate_exact());
+        let b1 = decode_batch(&[(100, 1), (300, 1)]);
+        let b2 = decode_batch(&[(200, 1), (200, 1)]);
+        assert_eq!(b1.aggregates(), b2.aggregates());
+        let t1 = m.iter_time(&b1);
+        let t2 = m.iter_time(&b2);
+        assert_ne!(
+            t1.to_bits(),
+            t2.to_bits(),
+            "slot-nonlinear model must not be collapsed by aggregates"
+        );
+        // but an exact repeat is still served from cache
+        let t1b = m.iter_time(&b1);
+        assert_eq!(t1.to_bits(), t1b.to_bits());
+        let stats = m.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 2));
+    }
+
+    #[test]
+    fn capacity_overflow_clears_but_stays_correct() {
+        let mut m = MemoizedCost::with_capacity_limit(analytic(), 4);
+        let mut reference = MemoizedCost::new(analytic());
+        for round in 0..3 {
+            for ctx in [10u32, 20, 30, 40, 50, 60] {
+                let b = decode_batch(&[(ctx, 1)]);
+                let t = m.iter_time(&b);
+                let r = reference.iter_time(&b);
+                assert_eq!(t.to_bits(), r.to_bits(), "round {round} ctx {ctx}");
+            }
+        }
+        let stats = m.cache_stats().unwrap();
+        assert_eq!(stats.total(), 18);
+        assert!(stats.misses > 6, "clears force some re-misses");
+    }
+
+    #[test]
+    fn name_and_delegation() {
+        let mut m = MemoizedCost::new(analytic());
+        assert!(m.name().starts_with("memo[analytic["));
+        assert_eq!(m.setup_cost(), 0.0);
+        assert!(m.decode_window_affine());
+        assert!(m.as_probe().is_some(), "probe reaches through the layer");
+        // iter_cost delegates: per-request detail intact
+        let b = decode_batch(&[(64, 1), (128, 1)]);
+        let cost = m.iter_cost(&b);
+        assert_eq!(cost.per_req_attn.len(), 2);
+        assert_eq!(cost.iter_time.to_bits(), m.iter_time(&b).to_bits());
+    }
+}

@@ -7,15 +7,22 @@
 //!
 //! * [`HloCost`] — the three-layer hot path: executes the AOT-compiled
 //!   JAX/Pallas cost artifact through PJRT ([`crate::runtime`]).
-//! * [`AnalyticCost`] — bit-compatible pure-rust mirror of the artifact
-//!   semantics (`python/compile/kernels/ref.py`); the fallback when
-//!   artifacts are absent and the cross-validation comparator.
+//! * [`AnalyticCost`] — pure-rust mirror of the artifact semantics
+//!   (`python/compile/kernels/ref.py`, same formulas and f32 precision,
+//!   accumulated over exact integer batch aggregates); the fallback
+//!   when artifacts are absent and the cross-validation comparator.
 //! * [`TableCost`] — coefficient table extracted by probing another
 //!   model at startup; the §Perf optimization of the hot path,
 //!   registered as a composable layer (`table` over any probe-able
 //!   base).
 //! * [`RooflineCost`] — a single `max(FLOPs/peak, bytes/bw)` per
 //!   iteration; the cheap-and-cheerful reference point.
+//! * [`MemoizedCost`] — a composable caching layer (`memo` over any
+//!   base, or `memoize: true` on the expensive built-ins): replays
+//!   previously computed `iter_time` results bit-for-bit, keyed on the
+//!   exact batch aggregates when the base is
+//!   [aggregate-exact](ComputeModel::aggregate_exact) and on the full
+//!   batch composition otherwise.
 //! * Oracle / baseline models live in [`crate::oracle`] and
 //!   [`crate::baselines`] and are registered here as `oracle`,
 //!   `vidur_like` and `llmservingsim_like`.
@@ -26,12 +33,14 @@
 
 pub(crate) mod analytic;
 mod hlo;
+mod memo;
 pub mod registry;
 mod roofline;
 mod table;
 
 pub use analytic::{AnalyticCost, ATTN_GATHER_EFF};
 pub use hlo::HloCost;
+pub use memo::{CacheStats, MemoizedCost};
 pub use registry::{
     build_compute, compute_models, register_compute, ComputeCtx, ComputeEntry, ComputeSpec,
     COMPUTE_MODELS,
@@ -96,6 +105,53 @@ impl BatchDesc {
             .map(|(&c, &n)| n as u64 * (c as u64 + n as u64))
             .sum()
     }
+
+    /// Sum of `ctx + new` over **all** slots, including inactive
+    /// (`new == 0`) ones. Inactive slots still pin KV residency, so
+    /// models that charge KV-gather traffic per resident token (the
+    /// analytic mirror) depend on this aggregate rather than the
+    /// active-only sum.
+    pub fn total_tokens(&self) -> u64 {
+        self.ctx
+            .iter()
+            .zip(&self.new)
+            .map(|(&c, &n)| c as u64 + n as u64)
+            .sum()
+    }
+
+    /// Sum of `ctx + new` over the active (`new > 0`) slots — the `S`
+    /// aggregate the probe/table layer fits against.
+    pub fn active_tokens(&self) -> u64 {
+        self.ctx
+            .iter()
+            .zip(&self.new)
+            .filter(|&(_, &n)| n > 0)
+            .map(|(&c, &n)| c as u64 + n as u64)
+            .sum()
+    }
+
+    /// The five exact integer aggregates `(T, R, A, S_all, S_active)`
+    /// that fully determine `iter_time` for
+    /// [aggregate-exact](ComputeModel::aggregate_exact) models — the
+    /// memoization key.
+    pub fn aggregates(&self) -> (u64, u64, u64, u64, u64) {
+        let mut t = 0u64;
+        let mut r = 0u64;
+        let mut a = 0u64;
+        let mut s_all = 0u64;
+        let mut s_active = 0u64;
+        for (&c, &n) in self.ctx.iter().zip(&self.new) {
+            let total = c as u64 + n as u64;
+            t += n as u64;
+            s_all += total;
+            if n > 0 {
+                r += 1;
+                a += n as u64 * total;
+                s_active += total;
+            }
+        }
+        (t, r, a, s_all, s_active)
+    }
 }
 
 /// Full result of a cost-model evaluation.
@@ -136,6 +192,40 @@ pub trait ComputeModel {
     /// batch aggregates return `Some(self)` so the `table` accelerator
     /// layer can extract their coefficients. Default: not probe-able.
     fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
+        None
+    }
+
+    /// Is `iter_time` a *bit-exact* pure function of the five integer
+    /// batch aggregates `(T, R, A, S_all, S_active)` (see
+    /// [`BatchDesc::aggregates`])? When true, [`MemoizedCost`] may key
+    /// its cache on the aggregate tuple — two batch compositions with
+    /// equal aggregates are guaranteed the same result — which is what
+    /// makes memoization pay off in decode windows. When false (the
+    /// default, and the safe answer for any model with per-slot
+    /// non-linear terms or external evaluation), memoization falls back
+    /// to keying on the full `(ctx, new)` composition, which is still
+    /// bit-safe but rarely recurs.
+    fn aggregate_exact(&self) -> bool {
+        false
+    }
+
+    /// May the engine cost a *closed decode window* (see
+    /// `engine: {window_cost: affine}`) from two probe calls, treating
+    /// `iter_time` as affine in the window step? Only meaningful for
+    /// stateless models that are (piecewise-)affine in the batch
+    /// aggregates; stochastic models (oracle) and learned/tiled models
+    /// (vidur_like, llmservingsim_like) must answer `false`. The engine
+    /// additionally *verifies* the affine extrapolation against a real
+    /// model call at the window boundary and falls back to per-step
+    /// replay when a roofline knee breaks linearity.
+    fn decode_window_affine(&self) -> bool {
+        false
+    }
+
+    /// Memoization statistics, when this model (or a wrapper layer)
+    /// caches results. Surfaced per worker in `WorkerStats` and
+    /// `tokensim run --json`.
+    fn cache_stats(&self) -> Option<CacheStats> {
         None
     }
 }
@@ -210,6 +300,19 @@ mod tests {
         assert_eq!(b.active_requests(), 2);
         assert_eq!(b.attn_work(), 101 + 2500);
         assert!(!b.is_empty());
+        assert_eq!(b.total_tokens(), 101 + 50);
+        assert_eq!(b.active_tokens(), 101 + 50);
+        assert_eq!(b.aggregates(), (51, 2, 101 + 2500, 151, 151));
+    }
+
+    #[test]
+    fn inactive_slots_count_toward_total_tokens_only() {
+        let mut b = BatchDesc::new();
+        b.push(100, 1); // active decode slot
+        b.push(40, 0); // resident but inactive (e.g. chunked prefill)
+        assert_eq!(b.total_tokens(), 141);
+        assert_eq!(b.active_tokens(), 101);
+        assert_eq!(b.aggregates(), (1, 1, 101, 141, 101));
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //! probes any base model exposing
 //! [`ComputeModel::as_probe`](super::ComputeModel::as_probe) and
 //! replaces its hot path with the extracted coefficient table.
+//!
+//! `memo` is the second composable layer: `compute: {model: memo,
+//! base: …}` wraps any deterministic base in [`MemoizedCost`], and the
+//! expensive built-ins (`hlo`, `vidur_like`, `llmservingsim_like`) are
+//! wrapped **by default** — opt out with `memoize: false`. The
+//! stochastic `oracle` is never wrapped (caching would freeze its noise
+//! draws).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -30,7 +37,8 @@ use crate::model::ModelSpec;
 use crate::oracle::{OracleCost, OracleParams};
 
 use super::{
-    warn_once, AnalyticCost, ComputeModel, CostModelKind, HloCost, RooflineCost, TableCost,
+    warn_once, AnalyticCost, ComputeModel, CostModelKind, HloCost, MemoizedCost, RooflineCost,
+    TableCost,
 };
 
 /// Context a compute model is built against: the served model, the
@@ -197,6 +205,15 @@ fn opt_f64_strict(p: &Yaml, key: &str, default: f64) -> Result<f64> {
     }
 }
 
+fn opt_bool_strict(p: &Yaml, key: &str, default: bool) -> Result<bool> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .with_context(|| format!("'{key}' must be a boolean")),
+    }
+}
+
 /// Per-worker seed mix, shared with the experiment harness's oracle
 /// cost factory so registry-built and factory-built oracle workers
 /// draw identical noise streams.
@@ -299,6 +316,42 @@ fn build_table(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
     Ok(Box::new(table))
 }
 
+fn build_memo(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
+    let base_name = match p.get("base") {
+        None => "hlo",
+        Some(v) => v
+            .as_str()
+            .context("'base' must be a string (a compute-model name)")?,
+    };
+    // resolve like `table`: runtime-registered models shadow built-ins.
+    // The raw entry builder is invoked directly, so a default-memoized
+    // base ('hlo', …) is not wrapped twice.
+    let build: DynBuild = match find_extra(base_name) {
+        Some(build) => build,
+        None => {
+            let entry = find_builtin(base_name).with_context(|| {
+                format!(
+                    "unknown memo base '{base_name}' (any deterministic compute model; \
+                     runtime-registered models also accepted)"
+                )
+            })?;
+            if entry.name == "memo" {
+                bail!("'memo' cannot layer over itself");
+            }
+            if entry.name == "oracle" {
+                bail!(
+                    "'memo' cannot cache the stochastic 'oracle' model: caching would freeze \
+                     one noise draw per batch key and change the modeled distribution"
+                );
+            }
+            Arc::new(entry.build)
+        }
+    };
+    let base = (*build)(&Yaml::Map(Default::default()), ctx)
+        .with_context(|| format!("building memo base '{base_name}'"))?;
+    Ok(Box::new(MemoizedCost::new(base)))
+}
+
 fn build_oracle(p: &Yaml, ctx: &ComputeCtx) -> Result<Box<dyn ComputeModel>> {
     let mut params = match p.get("preset") {
         None => OracleParams::vllm(),
@@ -337,13 +390,13 @@ pub const COMPUTE_MODELS: &[ComputeEntry] = &[
         name: "hlo",
         aliases: &["pjrt", "artifact"],
         summary: "PJRT-executed AOT cost artifact (falls back to analytic when absent)",
-        params: &[],
+        params: &["memoize"],
         build: build_hlo,
     },
     ComputeEntry {
         name: "analytic",
         aliases: &["mirror", "ref"],
-        summary: "pure-rust mirror of the artifact semantics (bit-compatible)",
+        summary: "pure-rust mirror of the artifact semantics (aggregate-exact)",
         params: &[],
         build: build_analytic,
     },
@@ -353,6 +406,13 @@ pub const COMPUTE_MODELS: &[ComputeEntry] = &[
         summary: "coefficient table extracted from a probe-able base model (perf path)",
         params: &["base"],
         build: build_table,
+    },
+    ComputeEntry {
+        name: "memo",
+        aliases: &["memoized", "cache"],
+        summary: "bit-exact memoization layer over any deterministic base model",
+        params: &["base"],
+        build: build_memo,
     },
     ComputeEntry {
         name: "roofline",
@@ -372,17 +432,23 @@ pub const COMPUTE_MODELS: &[ComputeEntry] = &[
         name: "vidur_like",
         aliases: &["vidur", "forest"],
         summary: "Vidur-style learned regression (oracle-profiled random forest, ~400s setup)",
-        params: &["samples", "seed"],
+        params: &["samples", "seed", "memoize"],
         build: build_vidur_like,
     },
     ComputeEntry {
         name: "llmservingsim_like",
         aliases: &["llmservingsim", "cosim"],
         summary: "LLMServingSim-style tile-walking co-simulation (slow, short prompts only)",
-        params: &[],
+        params: &["memoize"],
         build: build_llmservingsim_like,
     },
 ];
+
+/// Built-ins expensive enough that [`MemoizedCost`] wraps them by
+/// default (`memoize: false` opts out). Applied in [`build_compute`] —
+/// *after* the entry builder — so composed layers (`table`/`memo` bases)
+/// resolve the raw model and never double-wrap.
+const MEMOIZE_BY_DEFAULT: &[&str] = &["hlo", "vidur_like", "llmservingsim_like"];
 
 // ---------------------------------------------------------------------------
 // Runtime registration (library users; built-ins live in the table)
@@ -516,8 +582,14 @@ pub fn build_compute(spec: &ComputeSpec, ctx: &ComputeCtx) -> Result<Box<dyn Com
         )
     })?;
     check_param_keys(spec, entry.params)?;
-    (entry.build)(&spec.params, ctx)
-        .with_context(|| format!("building compute model '{}'", spec.name))
+    let built = (entry.build)(&spec.params, ctx)
+        .with_context(|| format!("building compute model '{}'", spec.name))?;
+    let wrap = MEMOIZE_BY_DEFAULT.contains(&entry.name)
+        && opt_bool_strict(&spec.params, "memoize", true)?;
+    if wrap {
+        return Ok(Box::new(MemoizedCost::new(built)));
+    }
+    Ok(built)
 }
 
 /// All registered compute models as `(name, summary, accepted-params)`,
@@ -584,7 +656,7 @@ mod tests {
         for (alias, expect_prefix) in [
             ("Mirror", "analytic["),
             ("NAPKIN", "roofline["),
-            ("cosim", "llmservingsim-like["),
+            ("cosim", "memo[llmservingsim-like["),
             ("reference", "oracle"),
         ] {
             let m = ComputeSpec::new(alias).build(&ctx).unwrap();
@@ -662,6 +734,83 @@ mod tests {
             let tb = base.iter_time(&batch);
             assert!(((tt - tb) / tb).abs() < 1e-6, "{tt} vs {tb}");
         }
+    }
+
+    #[test]
+    fn expensive_builtins_are_memoized_by_default() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        // hlo (-> analytic fallback here) is wrapped unless opted out
+        let wrapped = ComputeSpec::new("hlo").build(&ctx).unwrap();
+        assert!(wrapped.name().starts_with("memo["), "{}", wrapped.name());
+        assert!(wrapped.cache_stats().is_some());
+        let raw = ComputeSpec::new("hlo")
+            .with("memoize", false)
+            .build(&ctx)
+            .unwrap();
+        assert!(!raw.name().starts_with("memo["), "{}", raw.name());
+        assert!(raw.cache_stats().is_none());
+        // cheap models stay unwrapped
+        let analytic = ComputeSpec::new("analytic").build(&ctx).unwrap();
+        assert!(analytic.cache_stats().is_none());
+        // malformed opt-out is an error, not a silent default
+        let err = ComputeSpec::new("hlo")
+            .with("memoize", "yes")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("must be a boolean"), "{err:#}");
+    }
+
+    #[test]
+    fn memo_layers_and_matches_its_base_bit_for_bit() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        let mut memo = ComputeSpec::new("memo")
+            .with("base", "analytic")
+            .build(&ctx)
+            .unwrap();
+        assert!(memo.name().starts_with("memo[analytic["), "{}", memo.name());
+        let mut base = ComputeSpec::new("analytic").build(&ctx).unwrap();
+        for batch in [decode(16, 512), decode(16, 512), decode(200, 2048)] {
+            assert_eq!(
+                memo.iter_time(&batch).to_bits(),
+                base.iter_time(&batch).to_bits()
+            );
+        }
+        let stats = memo.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 2));
+    }
+
+    #[test]
+    fn memo_rejects_unsafe_compositions() {
+        let err = ComputeSpec::new("memo")
+            .with("base", "memo")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cannot layer over itself"));
+        let err = ComputeSpec::new("memo")
+            .with("base", "oracle")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("stochastic"), "{err:#}");
+        let err = ComputeSpec::new("memo")
+            .with("base", "quantum")
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown memo base"), "{err:#}");
+    }
+
+    #[test]
+    fn memo_base_resolution_never_double_wraps() {
+        let (model, hw) = ctx_parts();
+        let ctx = ComputeCtx::new(&model, &hw);
+        // hlo is memoized by default, but `memo over hlo` resolves the
+        // raw entry builder: exactly one layer
+        let m = ComputeSpec::new("memo")
+            .with("base", "hlo")
+            .build(&ctx)
+            .unwrap();
+        assert!(!m.name().contains("memo[memo["), "{}", m.name());
     }
 
     #[test]

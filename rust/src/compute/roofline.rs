@@ -114,6 +114,18 @@ impl ComputeModel for RooflineCost {
     fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
         Some(self)
     }
+
+    fn aggregate_exact(&self) -> bool {
+        // totals() is computed from exact integer aggregate sums
+        true
+    }
+
+    fn decode_window_affine(&self) -> bool {
+        // max(FLOPs/peak, bytes/bw) is piecewise affine in the window
+        // step; the engine verifies the window stays on one side of the
+        // knee and replays otherwise
+        true
+    }
 }
 
 impl CostProbe for RooflineCost {

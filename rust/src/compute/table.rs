@@ -286,6 +286,18 @@ impl ComputeModel for TableCost {
     fn name(&self) -> &str {
         &self.name
     }
+
+    fn aggregate_exact(&self) -> bool {
+        // every op_time is a function of the (t, r, a, s) aggregates,
+        // themselves exact integer sums in f64
+        true
+    }
+
+    fn decode_window_affine(&self) -> bool {
+        // piecewise affine in the window step (roofline max + the
+        // work-guard); the engine verifies linearity across the window
+        true
+    }
 }
 
 // ---- probe implementations -------------------------------------------

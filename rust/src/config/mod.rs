@@ -154,6 +154,37 @@ pub struct ClusterConfig {
     pub scheduler: SchedulerConfig,
 }
 
+/// How a fast-forwarded decode window is costed (`engine:
+/// {window_cost: …}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WindowCost {
+    /// Replay one cost-model call per coalesced iteration — bit-exact,
+    /// byte-identical to the event-per-iteration engine. Default.
+    #[default]
+    Replay,
+    /// Fit the window's iteration times as an affine series from two
+    /// model calls, verify the extrapolation at the window boundary
+    /// with one more call, and stamp the boundaries arithmetically —
+    /// O(1) model calls per window. Counts and token totals stay
+    /// bit-equal to replay; per-iteration times agree only to float
+    /// tolerance, so reports are *approximately* (not byte-)identical.
+    /// Requires a model opting in via
+    /// [`ComputeModel::decode_window_affine`]; others replay.
+    ///
+    /// [`ComputeModel::decode_window_affine`]: crate::compute::ComputeModel::decode_window_affine
+    Affine,
+}
+
+impl WindowCost {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "replay" => Ok(Self::Replay),
+            "affine" => Ok(Self::Affine),
+            other => bail!("unknown window_cost '{other}' (known: replay, affine)"),
+        }
+    }
+}
+
 /// Event-engine tuning (`engine:` section).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
@@ -170,18 +201,33 @@ pub struct EngineConfig {
     ///
     /// [`LocalScheduler::decode_fast_forwardable`]: crate::scheduler::LocalScheduler::decode_fast_forwardable
     pub fast_forward: bool,
+    /// How coalesced decode windows are costed: `replay` (bit-exact,
+    /// default) or `affine` (O(1) model calls per window, float-level
+    /// agreement). Only consulted when `fast_forward` is on.
+    pub window_cost: WindowCost,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { fast_forward: true }
+        Self {
+            fast_forward: true,
+            window_cost: WindowCost::default(),
+        }
     }
 }
 
 impl EngineConfig {
     fn from_yaml(y: &Yaml) -> Result<Self> {
+        let window_cost = match y.get("window_cost") {
+            None => WindowCost::default(),
+            Some(v) => WindowCost::parse(
+                v.as_str()
+                    .context("'window_cost' must be a string (replay|affine)")?,
+            )?,
+        };
         Ok(Self {
             fast_forward: y.opt_bool("fast_forward", true),
+            window_cost,
         })
     }
 }
@@ -746,6 +792,25 @@ workload:
         // explicit on
         let on = format!("{base}engine:\n  fast_forward: true\n");
         assert!(SimulationConfig::from_yaml_str(&on).unwrap().engine.fast_forward);
+    }
+
+    #[test]
+    fn engine_section_controls_window_cost() {
+        let base = "model: tiny\ncluster:\n  workers:\n    - hardware: A100\nworkload:\n  num_requests: 1\n  qps: 1.0\n  prompt_len:\n    fixed: 8\n  output_len:\n    fixed: 8\n";
+        // absent: bit-exact replay
+        let cfg = SimulationConfig::from_yaml_str(base).unwrap();
+        assert_eq!(cfg.engine.window_cost, WindowCost::Replay);
+        let affine = format!("{base}engine:\n  window_cost: affine\n");
+        let cfg = SimulationConfig::from_yaml_str(&affine).unwrap();
+        assert_eq!(cfg.engine.window_cost, WindowCost::Affine);
+        assert!(cfg.engine.fast_forward, "other engine keys keep defaults");
+        // malformed values fail at parse time, not mid-simulation
+        let bad = format!("{base}engine:\n  window_cost: oracle\n");
+        let err = SimulationConfig::from_yaml_str(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown window_cost"), "{err:#}");
+        let worse = format!("{base}engine:\n  window_cost: 3\n");
+        let err = SimulationConfig::from_yaml_str(&worse).unwrap_err();
+        assert!(format!("{err:#}").contains("must be a string"), "{err:#}");
     }
 
     #[test]

@@ -4,13 +4,18 @@
 //! pays ~400 s of pre-training before every run) and the
 //! LLMServingSim-like co-simulator (structurally slow; 10-token cap),
 //! over the Table-II workloads.
+//!
+//! Two extra labeled series show the engine's cost-model layers on the
+//! same workload: TokenSim with the `memo` caching layer, and with
+//! `engine: window_cost: affine`. Rows stay sequential by default so
+//! every wall-clock cell is measured on an otherwise idle process.
 
 use anyhow::Result;
 
 use crate::baselines::{LlmServingSimLike, VidurLike};
 use crate::cluster::Simulation;
-use crate::compute::ComputeModel;
-use crate::config::SimulationConfig;
+use crate::compute::{ComputeModel, ComputeSpec};
+use crate::config::{SimulationConfig, WindowCost};
 use crate::hardware::HardwareSpec;
 use crate::model::ModelSpec;
 use crate::workload::WorkloadSpec;
@@ -40,7 +45,21 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         "Vidur run(s)",
         "Vidur +pretrain(s)",
         "LLMServingSim(s)",
+        "TokenSim+memo(s)",
+        "TokenSim+affine(s)",
     ]);
+
+    // the engine-layer series run the same workload as the plain
+    // TokenSim column: `memo` wraps the experiment's cost model in the
+    // exact-key cache (aggregate-exact models only; anything else is
+    // already memoized by default or incompatible), `affine` switches
+    // the decode-window costing to the closed-form series
+    let memo_spec = match opts.compute.name.as_str() {
+        "analytic" | "roofline" | "table" => {
+            ComputeSpec::new("memo").with("base", opts.compute.name.as_str())
+        }
+        _ => opts.compute.clone(),
+    };
 
     // this figure's OUTPUT is wall-clock seconds, so rows default to
     // the sequential path (concurrent rows would inflate each other's
@@ -88,21 +107,33 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
             .expect("fig6 workload must complete");
         let co_wall = t0.elapsed().as_secs_f64();
 
-        (n, tokensim_wall, vidur_wall, pretrain_const, co_wall)
+        let t0 = std::time::Instant::now();
+        let _ = run_tokensim(&cfg(n, &memo_spec)).expect("fig6 workload must complete");
+        let memo_wall = t0.elapsed().as_secs_f64();
+
+        let t0 = std::time::Instant::now();
+        let mut affine = cfg(n, &opts.compute);
+        affine.engine.window_cost = WindowCost::Affine;
+        let _ = run_tokensim(&affine).expect("fig6 workload must complete");
+        let affine_wall = t0.elapsed().as_secs_f64();
+
+        (n, tokensim_wall, vidur_wall, pretrain_const, co_wall, memo_wall, affine_wall)
     };
-    let rows: Vec<(usize, f64, f64, f64, f64)> =
+    let rows: Vec<(usize, f64, f64, f64, f64, f64, f64)> =
         if std::env::var("TOKENSIM_SWEEP_THREADS").is_ok() {
             parallel_sweep(counts, time_row)
         } else {
             counts.iter().map(time_row).collect()
         };
-    for (n, tokensim_wall, vidur_wall, pretrain_const, co_wall) in rows {
+    for (n, tokensim_wall, vidur_wall, pretrain_const, co_wall, memo_wall, affine_wall) in rows {
         table.row(&[
             n.to_string(),
             format!("{tokensim_wall:.3}"),
             format!("{vidur_wall:.3}"),
             format!("{:.1}", vidur_wall + pretrain_const),
             format!("{co_wall:.3}"),
+            format!("{memo_wall:.3}"),
+            format!("{affine_wall:.3}"),
         ]);
     }
 
@@ -113,7 +144,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     out.push_str(&table.finish());
     out.push_str(
         "\nshape target: TokenSim comparable to Vidur's post-training run time but\n\
-         without the pre-training; LLMServingSim slowest per simulated token.\n",
+         without the pre-training; LLMServingSim slowest per simulated token.\n\
+         TokenSim+memo / TokenSim+affine are the same engine with the cost-model\n\
+         cache and the closed-form window costing enabled (sequential timing).\n",
     );
     Ok(out)
 }
@@ -140,5 +173,10 @@ mod tests {
             co > tokensim,
             "co-simulation must be slower: {co} vs {tokensim}"
         );
+        // the engine-layer series are appended after the baselines
+        assert!(out.contains("TokenSim+memo(s)"), "memo column missing");
+        assert!(out.contains("TokenSim+affine(s)"), "affine column missing");
+        assert_eq!(cells.len(), 6, "expected six timing columns");
+        assert!(cells[4] > 0.0 && cells[5] > 0.0, "engine series not timed");
     }
 }

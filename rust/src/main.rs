@@ -23,7 +23,7 @@ fn usage() -> &'static str {
     "TokenSim — LLM inference system simulator (paper reproduction)\n\
      \n\
      USAGE:\n\
-       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--metrics <exact|sketch>]\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--window-cost <replay|affine>] [--metrics <exact|sketch>]\n\
        tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
        tokensim list                 list experiments, policies, memory managers, workload generators, compute models, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
@@ -74,6 +74,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
             "off" | "false" => false,
             other => bail!("--fast-forward expects on|off, got '{other}'"),
         };
+    }
+    if let Some(v) = flag_value(args, "--window-cost") {
+        // CLI override of the YAML `engine: window_cost:` key — replay
+        // re-calls the cost model per coalesced iteration (bit-identical
+        // to event-per-iteration), affine fits a closed-form series for
+        // models that support it
+        cfg.engine.window_cost = tokensim::config::WindowCost::parse(v)?;
     }
     if let Some(v) = flag_value(args, "--metrics") {
         // CLI override of the YAML `metrics: mode:` key — exact keeps

@@ -31,10 +31,15 @@ macro_rules! assert_close {
     };
 }
 
-/// Peak resident-set size of this process in bytes (`VmHWM` from
-/// `/proc/self/status`). `None` off Linux or when procfs is
-/// unavailable — callers report it as an estimate, never depend on it.
+/// Peak resident-set size of this process in bytes. Primary source is
+/// `VmHWM` from `/proc/self/status`; where procfs is unavailable (e.g.
+/// macOS) falls back to `getrusage(RUSAGE_SELF)`. `None` only when both
+/// fail — callers report it as an estimate, never depend on it.
 pub fn peak_rss_bytes() -> Option<u64> {
+    peak_rss_procfs().or_else(peak_rss_getrusage)
+}
+
+fn peak_rss_procfs() -> Option<u64> {
     let status = std::fs::read_to_string("/proc/self/status").ok()?;
     let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
     // format: "VmHWM:    123456 kB"
@@ -43,6 +48,44 @@ pub fn peak_rss_bytes() -> Option<u64> {
         .nth(1)
         .and_then(|v| v.parse().ok())?;
     Some(kb * 1024)
+}
+
+/// `getrusage(RUSAGE_SELF).ru_maxrss` via a raw libc binding (the libc
+/// crate is unavailable offline). The layout below matches `struct
+/// rusage` on both Linux and macOS 64-bit: two `timeval`s followed by
+/// 14 long integers, of which `ru_maxrss` is the first.
+pub fn peak_rss_getrusage() -> Option<u64> {
+    #[repr(C)]
+    struct Timeval {
+        tv_sec: i64,
+        tv_usec: i64,
+    }
+    #[repr(C)]
+    struct Rusage {
+        ru_utime: Timeval,
+        ru_stime: Timeval,
+        ru_maxrss: i64,
+        _pad: [i64; 13],
+    }
+    extern "C" {
+        fn getrusage(who: i32, usage: *mut Rusage) -> i32;
+    }
+    const RUSAGE_SELF: i32 = 0;
+    let mut usage = Rusage {
+        ru_utime: Timeval { tv_sec: 0, tv_usec: 0 },
+        ru_stime: Timeval { tv_sec: 0, tv_usec: 0 },
+        ru_maxrss: 0,
+        _pad: [0; 13],
+    };
+    // SAFETY: `usage` is a valid, writable struct of the platform's
+    // rusage size (we over-reserve trailing longs via `_pad`).
+    let rc = unsafe { getrusage(RUSAGE_SELF, &mut usage) };
+    if rc != 0 || usage.ru_maxrss <= 0 {
+        return None;
+    }
+    // Linux reports ru_maxrss in KiB, macOS in bytes.
+    let scale = if cfg!(target_os = "macos") { 1 } else { 1024 };
+    Some(usage.ru_maxrss as u64 * scale)
 }
 
 static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
@@ -96,6 +139,27 @@ mod tests {
             // (sanity) fewer than 1 TiB
             assert!(bytes > 4096, "{bytes}");
             assert!(bytes < (1 << 40), "{bytes}");
+        }
+    }
+
+    #[test]
+    fn getrusage_fallback_agrees_with_procfs() {
+        let rusage = peak_rss_getrusage();
+        if cfg!(target_os = "linux") {
+            // both sources must work on Linux and measure the same
+            // process high-water mark — within 2× covers procfs/kernel
+            // accounting differences (huge pages, sampling granularity)
+            let proc_bytes = peak_rss_procfs().expect("procfs available on Linux");
+            let ru_bytes = rusage.expect("getrusage available on Linux");
+            assert!(ru_bytes > 4096, "{ru_bytes}");
+            let (lo, hi) = (proc_bytes.min(ru_bytes), proc_bytes.max(ru_bytes));
+            assert!(
+                hi <= lo.saturating_mul(2),
+                "procfs {proc_bytes} vs getrusage {ru_bytes} disagree by >2x"
+            );
+        } else if let Some(ru_bytes) = rusage {
+            assert!(ru_bytes > 4096, "{ru_bytes}");
+            assert!(ru_bytes < (1 << 40), "{ru_bytes}");
         }
     }
 

@@ -626,6 +626,34 @@ fn prop_every_registered_compute_model_charges_nothing_for_empty_batches() {
 }
 
 #[test]
+fn prop_every_registered_compute_model_repeats_bit_for_bit() {
+    // the memoization contract only holds if repeated evaluation of the
+    // same batch is bit-equal on EVERY registered model (the `memo`
+    // layer itself is in the sweep: a hit must reproduce the miss);
+    // mixed query orders exercise any internal caches between repeats
+    for (name, mut m) in registered_models_under_test() {
+        let mut probes: Vec<BatchDesc> = Vec::new();
+        for n in [1usize, 7, 32, 128] {
+            probes.push(decode_batch(n, 777));
+        }
+        let mut mixed = BatchDesc::new();
+        mixed.push(0, 300);
+        for i in 0..15 {
+            mixed.push(64 + i * 37, 1);
+        }
+        probes.push(mixed);
+        let first: Vec<u64> = probes.iter().map(|b| m.iter_time(b).to_bits()).collect();
+        for (b, &bits) in probes.iter().zip(&first).rev() {
+            assert_eq!(
+                m.iter_time(b).to_bits(),
+                bits,
+                "{name}: repeated iter_time on the same batch not bit-equal"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_table_acceleration_stays_within_tolerance_of_its_base() {
     // the `table` layer is a perf path, not a different model: across a
     // randomized batch sweep its prediction must stay within solver

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff a fresh BENCH_ci.json against the
+committed BENCH_baseline.json.
+
+Every bench harness in rust/benches/ (plus `tokensim exp scale`) emits
+one JSON row per case when TOKENSIM_BENCH_JSON is set; CI assembles
+those lines into BENCH_ci.json. This script compares the `per_sec`
+throughput of each row against the committed baseline:
+
+  * current row missing from the baseline  -> STALE baseline, hard fail
+    (the bench set changed; re-baseline as described below)
+  * current `per_sec` below baseline by more than the threshold
+    (default 25%)                          -> REGRESSION, fail
+  * current `per_sec` above baseline by more than the threshold
+                                           -> FASTER, warn (consider
+    re-baselining so the gate keeps teeth)
+  * baseline row absent from the current run -> SKIPPED, warn only
+    (environment-conditional benches, e.g. the PJRT-artifact cases)
+
+A markdown report is printed and, when GITHUB_STEP_SUMMARY is set,
+appended to the job summary.
+
+Re-baselining
+-------------
+Download the BENCH_ci artifact from a trusted green run on the target
+runner class and regenerate the committed file:
+
+    python3 scripts/bench_gate.py --rebaseline --current BENCH_ci.json
+
+While the baseline's `meta.bootstrap` flag is true (numbers were
+estimated or measured off the CI runner class), throughput deviations
+are reported but do not fail the job; only stale-baseline coverage
+errors do. Re-baselining from a real CI artifact clears the flag and
+arms the full gate.
+
+Usage:
+    python3 scripts/bench_gate.py [--baseline BENCH_baseline.json]
+        [--current BENCH_ci.json] [--threshold 0.25]
+    python3 scripts/bench_gate.py --rebaseline [--current BENCH_ci.json]
+        [--baseline BENCH_baseline.json]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path):
+    """Return (meta, {name: row}) from a bench JSON file.
+
+    Accepts both shapes: the CI artifact (a bare array of rows) and the
+    committed baseline ({"meta": {...}, "rows": [...]}).
+    """
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        meta, rows = data.get("meta", {}), data.get("rows", [])
+    else:
+        meta, rows = {}, data
+    by_name = {}
+    for row in rows:
+        name = row.get("name")
+        if not name:
+            raise SystemExit(f"{path}: bench row without a name: {row}")
+        if name in by_name:
+            raise SystemExit(f"{path}: duplicate bench row '{name}'")
+        by_name[name] = row
+    return meta, by_name
+
+
+def rebaseline(args):
+    _, current = load_rows(args.current)
+    out = {
+        "meta": {
+            "source": os.path.basename(args.current),
+            "threshold": args.threshold,
+            "bootstrap": False,
+            "note": (
+                "committed perf baseline; regenerate with "
+                "scripts/bench_gate.py --rebaseline from a trusted CI run"
+            ),
+        },
+        "rows": [current[name] for name in sorted(current)],
+    }
+    with open(args.baseline, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.baseline} with {len(current)} rows (bootstrap off)")
+    return 0
+
+
+def emit_summary(lines):
+    text = "\n".join(lines) + "\n"
+    print(text)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(text)
+
+
+def check(args):
+    base_meta, baseline = load_rows(args.baseline)
+    _, current = load_rows(args.current)
+    threshold = args.threshold
+    bootstrap = bool(base_meta.get("bootstrap"))
+
+    stale = sorted(set(current) - set(baseline))
+    skipped = sorted(set(baseline) - set(current))
+    regressions, faster, table = [], [], []
+    for name in sorted(set(baseline) & set(current)):
+        b, c = baseline[name]["per_sec"], current[name]["per_sec"]
+        ratio = c / b if b else float("inf")
+        if ratio < 1.0 - threshold:
+            status = "REGRESSION"
+            regressions.append(name)
+        elif ratio > 1.0 + threshold:
+            status = "faster"
+            faster.append(name)
+        else:
+            status = "ok"
+        table.append(f"| `{name}` | {b:.3f} | {c:.3f} | {ratio:.2f}x | {status} |")
+
+    lines = ["## Bench gate", ""]
+    lines.append(
+        f"threshold ±{threshold:.0%} on `per_sec` vs `{args.baseline}`"
+        + (" — **bootstrap baseline: deviations warn only**" if bootstrap else "")
+    )
+    lines += ["", "| bench | baseline/s | current/s | ratio | status |", "|---|---|---|---|---|"]
+    lines += table
+    if skipped:
+        lines += ["", f"skipped (not in this run): {', '.join(f'`{n}`' for n in skipped)}"]
+    if stale:
+        lines += [
+            "",
+            "**STALE BASELINE** — rows with no committed reference: "
+            + ", ".join(f"`{n}`" for n in stale),
+            "",
+            "Re-baseline: `python3 scripts/bench_gate.py --rebaseline --current BENCH_ci.json`",
+        ]
+    if faster:
+        lines += [
+            "",
+            f">{threshold:.0%} faster (consider re-baselining): "
+            + ", ".join(f"`{n}`" for n in faster),
+        ]
+    emit_summary(lines)
+
+    if stale:
+        print(f"FAIL: {len(stale)} bench row(s) missing from the baseline", file=sys.stderr)
+        return 1
+    if regressions and not bootstrap:
+        print(f"FAIL: {len(regressions)} bench regression(s): {regressions}", file=sys.stderr)
+        return 1
+    if regressions:
+        print(f"WARN (bootstrap baseline): {len(regressions)} deviation(s): {regressions}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--current", default="BENCH_ci.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("BENCH_GATE_THRESHOLD", "0.25")),
+        help="relative per_sec band (0.25 = ±25%%)",
+    )
+    ap.add_argument("--rebaseline", action="store_true")
+    args = ap.parse_args()
+    sys.exit(rebaseline(args) if args.rebaseline else check(args))
+
+
+if __name__ == "__main__":
+    main()
