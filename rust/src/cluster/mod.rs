@@ -13,6 +13,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::compute::{ComputeCtx, ComputeModel};
 use crate::config::{SimulationConfig, WindowCost};
 use crate::hardware::HardwareSpec;
+use crate::lint::AuditViolation;
 use crate::memory::{AllocOutcome, Granularity, PoolCache};
 use crate::metrics::{
     MemorySample, MemoryTimeline, MetricsMode, RecordStore, SloSpec, StreamingMetrics,
@@ -47,6 +48,15 @@ const AFFINE_REL_TOL: f64 = 1e-4;
 fn advance_ctx(ctx: &mut [u32], by: i64) {
     for c in ctx.iter_mut() {
         *c = (*c as i64 + by) as u32;
+    }
+}
+
+/// Record an audit violation in `slot` (first violation wins) — for
+/// checks that run where an error cannot propagate directly; the run
+/// loop surfaces the slot at the next event boundary.
+fn record_violation(slot: &mut Option<AuditViolation>, code: &'static str, msg: String) {
+    if slot.is_none() {
+        *slot = Some(AuditViolation::new(code, msg));
     }
 }
 
@@ -86,6 +96,14 @@ pub struct Simulation {
     /// the closed-form affine series for models that declare
     /// [`ComputeModel::decode_window_affine`].
     window_cost: WindowCost,
+    /// Invariant-audit mode (`engine: audit`, default off): re-check
+    /// the conservation laws of [`crate::lint::AUDIT_CHECKS`] at event
+    /// boundaries and fail the run on the first violation. Every check
+    /// is read-only, so audited reports stay byte-identical.
+    audit: bool,
+    /// First violation recorded by an audit check that runs where an
+    /// error cannot propagate directly (deep inside a handler).
+    audit_violation: Option<AuditViolation>,
 }
 
 impl Simulation {
@@ -244,6 +262,7 @@ impl Simulation {
         };
 
         let mut queue = EventQueue::new();
+        queue.set_audit(cfg.engine.audit);
         if conversations.is_empty() {
             for r in &requests {
                 queue.schedule_at(r.arrival, EventPayload::Arrival(r.id));
@@ -299,6 +318,8 @@ impl Simulation {
             finished: 0,
             fast_forward: cfg.engine.fast_forward,
             window_cost: cfg.engine.window_cost,
+            audit: cfg.engine.audit,
+            audit_violation: None,
         })
     }
 
@@ -317,6 +338,9 @@ impl Simulation {
                 EventPayload::TransferDone { worker, req } => self.on_transfer_done(worker, req),
                 EventPayload::Kick { worker } => self.try_start(worker),
                 EventPayload::SampleTick => self.on_sample_tick(),
+            }
+            if self.audit {
+                self.audit_event_boundary()?;
             }
         }
         if self.finished != self.requests.len() {
@@ -344,6 +368,19 @@ impl Simulation {
                 stuck
             );
         }
+        if self.audit {
+            // A002/A006: a fully-finished run must leave every worker
+            // empty with a self-consistent allocator, and the record
+            // store must hold exactly one record per finished request
+            for w in &self.workers {
+                if let Err(msg) = w.audit_drained() {
+                    return AuditViolation::err("A002", msg);
+                }
+            }
+            if let Err(msg) = self.records.audit_check(self.finished) {
+                return AuditViolation::err("A006", msg);
+            }
+        }
         let now = self.queue.now();
         Ok(SimulationReport::assemble(
             self.records,
@@ -355,6 +392,19 @@ impl Simulation {
             self.queue.processed(),
             wall_start.elapsed().as_secs_f64(),
         ))
+    }
+
+    /// Audit mode: surface any violation recorded while handling the
+    /// last event — the queue's monotonicity check (A003) or a deferred
+    /// handler-side check (see [`record_violation`]).
+    fn audit_event_boundary(&mut self) -> Result<()> {
+        if let Some(msg) = self.queue.take_violation() {
+            return AuditViolation::err("A003", msg);
+        }
+        if let Some(v) = self.audit_violation.take() {
+            return Err(anyhow::Error::new(v));
+        }
+        Ok(())
     }
 
     // ---- event handlers ------------------------------------------------
@@ -827,6 +877,49 @@ impl Simulation {
                         w.mem.name()
                     );
                 }
+                if self.audit {
+                    // A004: the coalesced window must land exactly on
+                    // its boundary — every member advanced k-1 tokens
+                    // and nobody overshot its output budget or a window
+                    // bound
+                    if k > k_fin || k > k_max {
+                        record_violation(
+                            &mut self.audit_violation,
+                            "A004",
+                            format!(
+                                "worker {wid}: window of {k} iterations exceeds its \
+                                 boundary (completion at {k_fin}, memory at {k_max})"
+                            ),
+                        );
+                    }
+                    for &(rid, pre) in &ctxs {
+                        let r = &self.requests[rid];
+                        if r.ctx_in_cache != pre + (k - 1) || r.generated > r.output_len {
+                            record_violation(
+                                &mut self.audit_violation,
+                                "A004",
+                                format!(
+                                    "worker {wid}: request {rid} left a {k}-iteration \
+                                     window at ctx {} (entered at {pre}), {}/{} tokens \
+                                     generated",
+                                    r.ctx_in_cache, r.generated, r.output_len
+                                ),
+                            );
+                        }
+                    }
+                    // A002: bulk growth left the allocator consistent
+                    if !w.mem.check_invariants() {
+                        record_violation(
+                            &mut self.audit_violation,
+                            "A002",
+                            format!(
+                                "worker {wid}: manager '{}' failed its invariant \
+                                 check after bulk decode growth",
+                                w.mem.name()
+                            ),
+                        );
+                    }
+                }
             }
         }
 
@@ -842,12 +935,53 @@ impl Simulation {
             .take()
             .expect("IterDone without a batch");
         self.workers[wid].busy = false;
+        if self.audit
+            && (plan.batch.new.len() != plan.members.len()
+                || plan.batch.ctx.len() != plan.members.len())
+        {
+            // A005: one batch slot per member, in slot order
+            return AuditViolation::err(
+                "A005",
+                format!(
+                    "worker {wid}: batch geometry mismatch ({} members, {} ctx slots, \
+                     {} new-token slots)",
+                    plan.members.len(),
+                    plan.batch.ctx.len(),
+                    plan.batch.new.len()
+                ),
+            );
+        }
 
         let mut finished_here: Vec<RequestId> = Vec::new();
         let mut resubmit: Vec<RequestId> = Vec::new();
         for (slot, &rid) in plan.members.iter().enumerate() {
             let new_tokens = plan.batch.new[slot];
             let r = &mut self.requests[rid];
+            if self.audit {
+                // A005: slot composition matches the request's phase —
+                // decode slots carry exactly one new token, prefill
+                // chunks stay inside the (effective) prompt
+                let ok = match r.phase {
+                    Phase::Prefill => {
+                        new_tokens >= 1 && r.prompt_done + new_tokens <= r.effective_prompt_len()
+                    }
+                    Phase::Decode => new_tokens == 1,
+                    _ => true,
+                };
+                if !ok {
+                    record_violation(
+                        &mut self.audit_violation,
+                        "A005",
+                        format!(
+                            "worker {wid}: slot {slot} carries {new_tokens} new tokens \
+                             for request {rid} in phase {:?} (prompt {}/{})",
+                            r.phase,
+                            r.prompt_done,
+                            r.effective_prompt_len()
+                        ),
+                    );
+                }
+            }
             match r.phase {
                 Phase::Prefill => {
                     r.prompt_done += new_tokens;
@@ -905,10 +1039,52 @@ impl Simulation {
     /// `rid` from the worker's running set (batched, one pass per
     /// iteration — see [`Worker::remove_running`]).
     fn finish_request(&mut self, rid: RequestId, wid: usize, now: SimTime) -> Result<()> {
+        if self.audit {
+            // A001: token conservation — a finishing request emitted
+            // exactly its output budget over a fully-processed prompt,
+            // with ordered emission stamps
+            let r = &self.requests[rid];
+            if r.generated != r.output_len || r.prompt_done < r.prompt_len {
+                return AuditViolation::err(
+                    "A001",
+                    format!(
+                        "request {rid}: finished with {}/{} output tokens over \
+                         prompt {}/{}",
+                        r.generated, r.output_len, r.prompt_done, r.prompt_len
+                    ),
+                );
+            }
+            let ordered = matches!(
+                (r.first_token, r.last_token),
+                (Some(first), Some(last)) if r.arrival <= first && first <= last && last <= now
+            );
+            if !ordered {
+                return AuditViolation::err(
+                    "A001",
+                    format!(
+                        "request {rid}: token stamps ({:?}, {:?}) out of order \
+                         (arrival {}, finish {now})",
+                        r.first_token, r.last_token, r.arrival
+                    ),
+                );
+            }
+        }
         {
             let w = &mut self.workers[wid];
             debug_assert!(!w.running.contains(&rid), "caller removes from running");
             w.mem.release(rid);
+            if self.audit && w.mem.blocks_held(rid) != 0 {
+                // A002: release must return every device block
+                return AuditViolation::err(
+                    "A002",
+                    format!(
+                        "worker {wid}: manager '{}' still holds {} blocks for \
+                         finished request {rid}",
+                        w.mem.name(),
+                        w.mem.blocks_held(rid)
+                    ),
+                );
+            }
         }
         let r = &mut self.requests[rid];
         r.phase = Phase::Finished;
@@ -1350,5 +1526,65 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("simulation drained with 0/1 finished"), "{msg}");
         assert!(msg.contains("worker 0"), "diagnostic must name workers: {msg}");
+    }
+
+    // ---- invariant-audit mode (engine: audit) ---------------------------
+
+    #[test]
+    fn audited_run_is_byte_identical() {
+        let mk = |audit: bool| {
+            let mut cfg = decode_heavy_cfg(60, 2.0);
+            cfg.engine.audit = audit;
+            Simulation::from_config(&cfg).unwrap().run().unwrap()
+        };
+        let (plain, audited) = (mk(false), mk(true));
+        assert_eq!(
+            plain.to_json().to_string(),
+            audited.to_json().to_string(),
+            "audit checks are read-only and must not change the report"
+        );
+    }
+
+    #[test]
+    fn audit_passes_under_preemption_pressure() {
+        // preemption, swap traffic and contiguous over-reservation all
+        // exercise the A001/A002/A004/A005 checks on non-trivial paths
+        for memory in ["paged", "swap", "token_contiguous"] {
+            let mut cfg = tight_cfg(MemorySpec::new(memory));
+            cfg.engine.audit = true;
+            let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+            assert_eq!(report.records.len(), 20, "{memory}: all must finish");
+        }
+    }
+
+    #[test]
+    fn audit_passes_with_conversations_and_prefix_cache() {
+        use crate::workload::ConversationSpec;
+        // the prefix layer legitimately retains conversation KV between
+        // rounds; the drain-time A002 check must account for that
+        let convs = ConversationSpec::chatbot(30, 4.0, 64, 32).generate();
+        let mut cfg = quick_cfg(1, 1.0);
+        cfg.cluster.workers[0].memory =
+            MemorySpec::new("prefix_cache").with("capacity_blocks", 100_000u64);
+        cfg.engine.audit = true;
+        let report = Simulation::from_conversations(&cfg, &convs).unwrap().run().unwrap();
+        assert_eq!(report.records.len(), ConversationWorkload::total_rounds(&convs));
+        assert!(report.pool_hits > 0, "workload must exercise the cache layer");
+    }
+
+    #[test]
+    fn audit_passes_across_a_disaggregated_handoff() {
+        let mut cfg = SimulationConfig::disaggregated(
+            ModelSpec::llama2_7b(),
+            HardwareSpec::a100_80g(),
+            1,
+            HardwareSpec::a100_80g(),
+            1,
+            WorkloadSpec::fixed(40, 8.0, 64, 64),
+        );
+        cfg.compute = ComputeSpec::new("analytic");
+        cfg.engine.audit = true;
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        assert_eq!(report.records.len(), 40);
     }
 }

@@ -134,6 +134,45 @@ impl Worker {
         }
     }
 
+    /// Audit-mode drain check ([`crate::lint::AUDIT_CHECKS`] A002): at
+    /// the end of a fully-finished run this worker must hold no queued
+    /// or running work, and its allocator must be self-consistent and —
+    /// absent a prefix-cache layer, which legitimately retains
+    /// conversation KV — empty.
+    pub fn audit_drained(&self) -> Result<(), String> {
+        if !self.waiting.is_empty() || !self.running.is_empty() || !self.pending_kv.is_empty() {
+            return Err(format!(
+                "worker {}: drained with waiting={:?} running={:?} pending_kv={:?}",
+                self.id, self.waiting, self.running, self.pending_kv
+            ));
+        }
+        if self.busy || self.current.is_some() {
+            return Err(format!(
+                "worker {}: drained while an iteration is in flight",
+                self.id
+            ));
+        }
+        if !self.mem.check_invariants() {
+            return Err(format!(
+                "worker {}: manager '{}' failed its invariant check at drain",
+                self.id,
+                self.mem.name()
+            ));
+        }
+        if !self.mem.has_prefix_layer()
+            && (self.mem.live_requests() != 0 || self.mem.used_blocks() != 0)
+        {
+            return Err(format!(
+                "worker {}: manager '{}' drained with {} live requests and {} blocks in use",
+                self.id,
+                self.mem.name(),
+                self.mem.live_requests(),
+                self.mem.used_blocks()
+            ));
+        }
+        Ok(())
+    }
+
     /// Read-only view for the global scheduler.
     pub fn view(&self, requests: &[Request]) -> WorkerView {
         let queued_tokens: u64 = self
@@ -210,6 +249,19 @@ mod tests {
         let gone: Vec<RequestId> = (0..40).filter(|r| r % 3 == 0).collect();
         w.remove_running(&gone);
         assert_eq!(w.running, (0..40).filter(|r| r % 3 != 0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn audit_drained_flags_leftover_work() {
+        let mut w = worker(true, true);
+        assert_eq!(w.audit_drained(), Ok(()));
+        w.waiting.push_back(3);
+        let msg = w.audit_drained().unwrap_err();
+        assert!(msg.contains("waiting=[3]"), "{msg}");
+        w.waiting.clear();
+        w.busy = true;
+        let msg = w.audit_drained().unwrap_err();
+        assert!(msg.contains("in flight"), "{msg}");
     }
 
     #[test]

@@ -205,6 +205,18 @@ pub struct EngineConfig {
     /// default) or `affine` (O(1) model calls per window, float-level
     /// agreement). Only consulted when `fast_forward` is on.
     pub window_cost: WindowCost,
+    /// Invariant-audit sanitizer mode (`tokensim run --audit`): the
+    /// driver re-checks conservation laws at event boundaries — token
+    /// conservation, block/byte accounting at drain, event-time
+    /// monotonicity, fast-forward window boundaries, batch composition
+    /// (the `A…` codes of [`crate::lint::AUDIT_CHECKS`]) — and a
+    /// violated invariant fails the run with a structured
+    /// [`crate::lint::AuditViolation`] instead of silently corrupting
+    /// the report. Reports are byte-identical with the mode on or off
+    /// (every check is read-only); the cost is bounded per event, so
+    /// leaving it on roughly doubles per-event bookkeeping but never
+    /// changes complexity. Default: off.
+    pub audit: bool,
 }
 
 impl Default for EngineConfig {
@@ -212,6 +224,7 @@ impl Default for EngineConfig {
         Self {
             fast_forward: true,
             window_cost: WindowCost::default(),
+            audit: false,
         }
     }
 }
@@ -228,6 +241,7 @@ impl EngineConfig {
         Ok(Self {
             fast_forward: y.opt_bool("fast_forward", true),
             window_cost,
+            audit: y.opt_bool("audit", false),
         })
     }
 }

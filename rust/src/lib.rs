@@ -55,6 +55,7 @@ pub mod compute;
 pub mod config;
 pub mod experiments;
 pub mod hardware;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -1,0 +1,949 @@
+//! Static config analysis (`tokensim lint`) and the shared diagnostic
+//! vocabulary of the engine's `audit` sanitizer mode.
+//!
+//! The four registries (scheduler, memory, workload, compute) plus the
+//! engine/metrics mode switches span a configuration cross-product far
+//! larger than what per-section YAML validation can police: a config
+//! can parse cleanly and still be guaranteed to deadlock (a prompt that
+//! never fits the KV pool), silently never engage a feature (a chunked
+//! prefill whose chunk exceeds every prompt), or report numbers that
+//! cannot mean what they claim (an SLO below the compute model's
+//! physical per-iteration floor). [`lint_file`] cross-validates a
+//! [`SimulationConfig`] against the registries *without running it* and
+//! reports typed diagnostics; docs/LINTS.md is the rule catalog.
+//!
+//! The same vocabulary names the engine's runtime conservation checks
+//! (`engine: audit: true` / `tokensim run --audit`): each violated
+//! invariant surfaces as an `anyhow` error carrying an
+//! [`AuditViolation`] with an `A…` code from [`AUDIT_CHECKS`].
+//!
+//! Out-of-tree subsystems register their own rules with
+//! [`register_lint_rule`], mirroring the registries' `register_*`
+//! hooks.
+
+mod rules;
+
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Context;
+
+use crate::config::yaml::Yaml;
+use crate::config::SimulationConfig;
+use crate::request::Request;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+/// Diagnostic severity. `Error` fails `tokensim lint`; `Warn` fails
+/// under `--deny-warnings`; `Info` never fails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One typed finding: a stable code (see docs/LINTS.md), a severity, a
+/// message naming the offending section/value, and an optional fix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: String,
+    pub severity: Severity,
+    pub message: String,
+    pub fix: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(code: &str, severity: Severity, message: impl Into<String>) -> Self {
+        Self {
+            code: code.to_string(),
+            severity,
+            message: message.into(),
+            fix: None,
+        }
+    }
+
+    pub fn error(code: &str, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Error, message)
+    }
+
+    pub fn warn(code: &str, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Warn, message)
+    }
+
+    pub fn info(code: &str, message: impl Into<String>) -> Self {
+        Self::new(code, Severity::Info, message)
+    }
+
+    pub fn with_fix(mut self, fix: impl Into<String>) -> Self {
+        self.fix = Some(fix.into());
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("code", Json::str(self.code.clone())),
+            ("severity", Json::str(self.severity.to_string())),
+            ("message", Json::str(self.message.clone())),
+        ];
+        if let Some(fix) = &self.fix {
+            pairs.push(("fix", Json::str(fix.clone())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A violated engine invariant (`engine: audit: true`), carried inside
+/// the `anyhow` error chain so callers can downcast for the structured
+/// code instead of string-matching the rendered message.
+#[derive(Debug, Clone)]
+pub struct AuditViolation {
+    /// An `A…` code from [`AUDIT_CHECKS`].
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl AuditViolation {
+    pub fn new(code: &'static str, message: impl Into<String>) -> Self {
+        Self {
+            code,
+            message: message.into(),
+        }
+    }
+
+    /// Shorthand for `Err(anyhow::Error::new(AuditViolation::new(..)))`.
+    pub fn err<T>(code: &'static str, message: impl Into<String>) -> anyhow::Result<T> {
+        Err(anyhow::Error::new(Self::new(code, message)))
+    }
+}
+
+impl fmt::Display for AuditViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "audit violation [{}]: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for AuditViolation {}
+
+// ---------------------------------------------------------------------------
+// Rule catalog
+// ---------------------------------------------------------------------------
+
+/// Catalog entry: stable code, fixed severity, one-line summary (shown
+/// by `tokensim list`; docs/LINTS.md carries the rationale + fixes).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+/// The built-in lint rules, in code order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        code: "E001",
+        severity: Severity::Error,
+        summary: "config does not parse/build (YAML syntax, unknown preset, malformed value)",
+    },
+    RuleInfo {
+        code: "E010",
+        severity: Severity::Error,
+        summary: "unknown scheduler policy (local or global), with did-you-mean",
+    },
+    RuleInfo {
+        code: "E011",
+        severity: Severity::Error,
+        summary: "unknown memory manager, with did-you-mean",
+    },
+    RuleInfo {
+        code: "E012",
+        severity: Severity::Error,
+        summary: "unknown workload generator, with did-you-mean",
+    },
+    RuleInfo {
+        code: "E013",
+        severity: Severity::Error,
+        summary: "unknown compute model, with did-you-mean",
+    },
+    RuleInfo {
+        code: "E014",
+        severity: Severity::Error,
+        summary: "unknown parameter key for a registry entry or engine/metrics section",
+    },
+    RuleInfo {
+        code: "E020",
+        severity: Severity::Error,
+        summary: "table/memo compute layer over an incompatible base model",
+    },
+    RuleInfo {
+        code: "E030",
+        severity: Severity::Error,
+        summary: "worst-case request KV cannot fit any decode-capable worker's pool (deadlock)",
+    },
+    RuleInfo {
+        code: "E031",
+        severity: Severity::Error,
+        summary: "worst-case prompt exceeds every prefill worker's batch-token cap (deadlock)",
+    },
+    RuleInfo {
+        code: "W032",
+        severity: Severity::Warn,
+        summary: "chunked-prefill chunk size >= largest prompt: chunking never engages",
+    },
+    RuleInfo {
+        code: "E033",
+        severity: Severity::Error,
+        summary: "swap manager that can never swap (zero swap space or dead host link)",
+    },
+    RuleInfo {
+        code: "W040",
+        severity: Severity::Warn,
+        summary: "window_cost: affine but no worker's compute model is affine-capable",
+    },
+    RuleInfo {
+        code: "W041",
+        severity: Severity::Warn,
+        summary: "window_cost: affine with fast_forward: off is never consulted",
+    },
+    RuleInfo {
+        code: "I042",
+        severity: Severity::Info,
+        summary: "sketch-mode metrics: quantiles are approximate, byte-diff gates do not apply",
+    },
+    RuleInfo {
+        code: "E050",
+        severity: Severity::Error,
+        summary: "SLO target below the compute model's per-iteration floor (unattainable)",
+    },
+];
+
+/// The engine's audit-mode invariants (`engine: audit: true`), named
+/// with the same code scheme so `tokensim list` shows one vocabulary.
+pub const AUDIT_CHECKS: &[RuleInfo] = &[
+    RuleInfo {
+        code: "A001",
+        severity: Severity::Error,
+        summary: "token conservation: generated == output_len and stamps monotone at finish",
+    },
+    RuleInfo {
+        code: "A002",
+        severity: Severity::Error,
+        summary: "block/byte accounting: allocator self-consistent, empty at drain",
+    },
+    RuleInfo {
+        code: "A003",
+        severity: Severity::Error,
+        summary: "event-time monotonicity: no event pops earlier than the clock",
+    },
+    RuleInfo {
+        code: "A004",
+        severity: Severity::Error,
+        summary: "fast-forward window boundary: coalesced endpoint state equals replay's",
+    },
+    RuleInfo {
+        code: "A005",
+        severity: Severity::Error,
+        summary: "batch composition: slot phases/token counts consistent at IterDone",
+    },
+    RuleInfo {
+        code: "A006",
+        severity: Severity::Error,
+        summary: "metrics record consistency: completion stamps ordered, records == finished",
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime rule registration (library users; built-ins live in RULES)
+// ---------------------------------------------------------------------------
+
+/// Everything a registered rule may inspect: the raw YAML, the parsed
+/// config, and the generated workload (empty when generation failed —
+/// an `E001` is already reported in that case).
+pub struct LintCtx<'a> {
+    pub yaml: &'a Yaml,
+    pub cfg: &'a SimulationConfig,
+    pub requests: &'a [Request],
+}
+
+type DynCheck = Box<dyn Fn(&LintCtx) -> Vec<Diagnostic> + Send + Sync>;
+
+struct DynRule {
+    code: String,
+    severity: Severity,
+    summary: String,
+    check: DynCheck,
+}
+
+fn extra_rules() -> &'static Mutex<Vec<DynRule>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynRule>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register an out-of-tree lint rule. `check` runs on every
+/// successfully parsed config, after the built-in semantic rules;
+/// returned diagnostics are appended to the report. Mirrors the
+/// registries' `register_*` hooks so a subsystem that registers a
+/// policy can ship its configuration rules alongside it.
+pub fn register_lint_rule(
+    code: &str,
+    severity: Severity,
+    summary: &str,
+    check: impl Fn(&LintCtx) -> Vec<Diagnostic> + Send + Sync + 'static,
+) {
+    extra_rules().lock().unwrap().push(DynRule {
+        code: code.to_string(),
+        severity,
+        summary: summary.to_string(),
+        check: Box::new(check),
+    });
+}
+
+/// Every selectable rule — built-ins plus runtime registrations — as
+/// `(code, severity, summary)`, for `tokensim list`.
+pub fn lint_rules() -> Vec<(String, Severity, String)> {
+    let mut out: Vec<(String, Severity, String)> = RULES
+        .iter()
+        .map(|r| (r.code.to_string(), r.severity, r.summary.to_string()))
+        .collect();
+    for r in extra_rules().lock().unwrap().iter() {
+        out.push((r.code.clone(), r.severity, r.summary.clone()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Did-you-mean
+// ---------------------------------------------------------------------------
+
+/// The closest candidate within an edit-distance budget (2, or a third
+/// of the input for long names) — `None` when nothing is plausibly a
+/// typo of `input`.
+pub fn did_you_mean<'a>(
+    input: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+) -> Option<&'a str> {
+    let budget = 2.max(input.len() / 3);
+    candidates
+        .into_iter()
+        .map(|c| (levenshtein(&input.to_ascii_lowercase(), &c.to_ascii_lowercase()), c))
+        .filter(|&(d, _)| d <= budget)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// Lint findings for one config file.
+#[derive(Debug)]
+pub struct LintReport {
+    /// The path (or label) the config came from.
+    pub path: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn errors(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// Does this report pass? Errors always fail; warnings fail under
+    /// `deny_warnings`; infos never fail.
+    pub fn passes(&self, deny_warnings: bool) -> bool {
+        self.errors() == 0 && (!deny_warnings || self.warnings() == 0)
+    }
+
+    /// Machine-readable form (`tokensim lint --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(self.path.clone())),
+            ("errors", Json::num(self.errors() as f64)),
+            ("warnings", Json::num(self.warnings() as f64)),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable lines (one per diagnostic, indent for fixes).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!(
+                "{}: {}[{}] {}\n",
+                self.path, d.severity, d.code, d.message
+            ));
+            if let Some(fix) = &d.fix {
+                out.push_str(&format!("  fix: {fix}\n"));
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+/// Lint a config file. IO errors surface as an `E001` diagnostic, not
+/// a process error, so a multi-file invocation reports every file.
+pub fn lint_file(path: &str) -> LintReport {
+    match std::fs::read_to_string(path) {
+        Ok(text) => lint_text(path, &text),
+        Err(e) => LintReport {
+            path: path.to_string(),
+            diagnostics: vec![Diagnostic::error("E001", format!("cannot read file: {e}"))],
+        },
+    }
+}
+
+/// Lint config text. `label` names the source in the report (a path
+/// for [`lint_file`], any tag for in-memory configs).
+pub fn lint_text(label: &str, text: &str) -> LintReport {
+    let mut diagnostics = Vec::new();
+    let yaml = match Yaml::parse(text) {
+        Ok(y) => y,
+        Err(e) => {
+            diagnostics.push(Diagnostic::error("E001", format!("YAML parse error: {e:#}")));
+            return LintReport {
+                path: label.to_string(),
+                diagnostics,
+            };
+        }
+    };
+
+    // Pass 1 — structural: classify every unknown-name / unknown-key /
+    // bad-layering error per section, with did-you-mean, instead of
+    // stopping at the first like `SimulationConfig::from_yaml` must.
+    structural(&yaml, &mut diagnostics);
+
+    // Pass 2 — the real parse. Anything pass 1 could not classify
+    // (missing required keys, bad presets, malformed scalars) lands
+    // here as the E001 catch-all; when pass 1 already produced errors
+    // the parse failure is the same root cause, so skip the duplicate.
+    let cfg = match SimulationConfig::from_yaml(&yaml) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            if !diagnostics.iter().any(|d| d.severity == Severity::Error) {
+                diagnostics.push(Diagnostic::error("E001", format!("{e:#}")));
+            }
+            return LintReport {
+                path: label.to_string(),
+                diagnostics,
+            };
+        }
+    };
+
+    // Pass 3 — semantic cross-validation over the parsed config and
+    // its generated workload.
+    let requests = match cfg.workload.generate().context("generating workload") {
+        Ok(r) => r,
+        Err(e) => {
+            diagnostics.push(Diagnostic::error("E001", format!("{e:#}")));
+            Vec::new()
+        }
+    };
+    let ctx = LintCtx {
+        yaml: &yaml,
+        cfg: &cfg,
+        requests: &requests,
+    };
+    if !diagnostics.iter().any(|d| d.severity == Severity::Error) {
+        rules::run(&ctx, &mut diagnostics);
+        for rule in extra_rules().lock().unwrap().iter() {
+            diagnostics.extend((rule.check)(&ctx));
+        }
+    }
+    LintReport {
+        path: label.to_string(),
+        diagnostics,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: structural classification
+// ---------------------------------------------------------------------------
+
+/// Which registry a spec came from (drives code + did-you-mean pool).
+#[derive(Clone, Copy)]
+enum Section {
+    LocalPolicy,
+    GlobalPolicy,
+    Memory,
+    Workload,
+    Compute,
+}
+
+impl Section {
+    fn unknown_name_code(self) -> &'static str {
+        match self {
+            Section::LocalPolicy | Section::GlobalPolicy => "E010",
+            Section::Memory => "E011",
+            Section::Workload => "E012",
+            Section::Compute => "E013",
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            Section::LocalPolicy => "local scheduler policy",
+            Section::GlobalPolicy => "global scheduler policy",
+            Section::Memory => "memory manager",
+            Section::Workload => "workload generator",
+            Section::Compute => "compute model",
+        }
+    }
+
+    /// Every name + alias selectable from this section.
+    fn known_names(self) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        match self {
+            Section::LocalPolicy => {
+                for e in crate::scheduler::LOCAL_POLICIES {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
+            Section::GlobalPolicy => {
+                for e in crate::scheduler::GLOBAL_POLICIES {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
+            Section::Memory => {
+                for e in crate::memory::MEMORY_MANAGERS {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
+            Section::Workload => {
+                for e in crate::workload::WORKLOAD_GENERATORS {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
+            Section::Compute => {
+                for e in crate::compute::COMPUTE_MODELS {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
+        }
+        out
+    }
+
+    /// The accepted parameter keys of the entry `name` selects.
+    fn params_of(self, name: &str) -> Option<&'static [&'static str]> {
+        let matches = |n: &str, aliases: &[&str]| {
+            name.eq_ignore_ascii_case(n) || aliases.iter().any(|a| name.eq_ignore_ascii_case(a))
+        };
+        match self {
+            Section::LocalPolicy => crate::scheduler::LOCAL_POLICIES
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
+            Section::GlobalPolicy => crate::scheduler::GLOBAL_POLICIES
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
+            Section::Memory => crate::memory::MEMORY_MANAGERS
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
+            Section::Workload => crate::workload::WORKLOAD_GENERATORS
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
+            Section::Compute => crate::compute::COMPUTE_MODELS
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
+        }
+    }
+}
+
+/// Classify a registry validation error into a typed diagnostic.
+fn classify(section: Section, name: &str, err: &anyhow::Error, out: &mut Vec<Diagnostic>) {
+    let msg = format!("{err:#}");
+    if msg.contains(&format!("unknown {}", section.label())) {
+        let mut d = Diagnostic::error(
+            section.unknown_name_code(),
+            format!("unknown {} '{name}'", section.label()),
+        );
+        if let Some(sugg) = did_you_mean(name, section.known_names()) {
+            d = d.with_fix(format!("did you mean '{sugg}'?"));
+        }
+        out.push(d);
+        return;
+    }
+    if msg.contains("unknown parameter") || msg.contains("unknown tenant parameter") {
+        let bad_key = msg.split('\'').nth(1).unwrap_or("").to_string();
+        let mut d = Diagnostic::error("E014", format!("{} '{name}': {msg}", section.label()));
+        if let Some(params) = section.params_of(name) {
+            if let Some(sugg) = did_you_mean(&bad_key, params.iter().copied()) {
+                d = d.with_fix(format!("did you mean '{sugg}'?"));
+            }
+        }
+        out.push(d);
+        return;
+    }
+    // table/memo layering refusals from the compute registry
+    if matches!(section, Section::Compute)
+        && (msg.contains("table base")
+            || msg.contains("memo base")
+            || msg.contains("cannot layer")
+            || msg.contains("cannot cache")
+            || msg.contains("linear-probe hook"))
+    {
+        out.push(
+            Diagnostic::error("E020", format!("compute model '{name}': {msg}")).with_fix(
+                "layer 'table' only over probe-able bases (hlo, analytic, roofline) and \
+                 'memo' over any deterministic non-memo base",
+            ),
+        );
+        return;
+    }
+    // anything else (malformed values, missing required keys): the
+    // catch-all, still attributed to its section
+    out.push(Diagnostic::error(
+        "E001",
+        format!("in {} '{name}': {msg}", section.label()),
+    ));
+}
+
+/// Keys the `engine:` section consults; anything else is dead weight
+/// that `EngineConfig::from_yaml` silently ignores.
+const ENGINE_KEYS: &[&str] = &["fast_forward", "window_cost", "audit"];
+/// Keys the `metrics:` section consults.
+const METRICS_KEYS: &[&str] = &["mode", "sketch_error"];
+
+fn check_section_keys(y: &Yaml, section: &str, known: &[&str], out: &mut Vec<Diagnostic>) {
+    let Some(map) = y.as_map() else { return };
+    for key in map.keys() {
+        if !known.contains(&key.as_str()) {
+            let mut d = Diagnostic::error(
+                "E014",
+                format!(
+                    "unknown key '{key}' in '{section}:' section (accepted: {})",
+                    known.join(", ")
+                ),
+            );
+            if let Some(sugg) = did_you_mean(key, known.iter().copied()) {
+                d = d.with_fix(format!("did you mean '{sugg}'?"));
+            }
+            out.push(d);
+        }
+    }
+}
+
+fn check_policy(y: &Yaml, section: Section, out: &mut Vec<Diagnostic>) {
+    let spec = match crate::scheduler::PolicySpec::from_yaml(y) {
+        Ok(s) => s,
+        Err(_) => return, // missing 'policy:' key — pass 2's E001
+    };
+    let built = match section {
+        Section::LocalPolicy => spec.build_local().map(|_| ()),
+        _ => spec.build_global().map(|_| ()),
+    };
+    if let Err(e) = built {
+        classify(section, &spec.name, &e, out);
+    }
+}
+
+fn structural(y: &Yaml, out: &mut Vec<Diagnostic>) {
+    if let Some(workers) = y
+        .get("cluster")
+        .and_then(|c| c.get("workers"))
+        .and_then(Yaml::as_list)
+    {
+        for w in workers {
+            if let Some(ls) = w.get("local_scheduler") {
+                check_policy(ls, Section::LocalPolicy, out);
+            }
+            if let Some(m) = w.get("memory") {
+                if let Ok(spec) = crate::memory::MemorySpec::from_yaml(m) {
+                    if let Err(e) = spec.validate() {
+                        classify(Section::Memory, &spec.name, &e, out);
+                    }
+                }
+            }
+            if let Some(c) = w.get("compute") {
+                if let Ok(spec) = crate::compute::ComputeSpec::from_yaml(c) {
+                    if let Err(e) = spec.validate() {
+                        classify(Section::Compute, &spec.name, &e, out);
+                    }
+                }
+            }
+        }
+    }
+    if let Some(g) = y
+        .get("cluster")
+        .and_then(|c| c.get("scheduler"))
+        .and_then(|s| s.get("global"))
+    {
+        check_policy(g, Section::GlobalPolicy, out);
+    }
+    if let Some(wl) = y.get("workload") {
+        if let Ok(spec) = crate::workload::WorkloadSpecV2::from_yaml(wl) {
+            if let Err(e) = spec.validate() {
+                classify(Section::Workload, &spec.name, &e, out);
+            }
+        }
+    }
+    // top-level compute selection (either spelling)
+    let compute_spec = match (y.get("compute"), y.get("cost_model")) {
+        (Some(c), _) => crate::compute::ComputeSpec::from_yaml(c).ok(),
+        (None, Some(k)) => k.as_str().map(crate::compute::ComputeSpec::new),
+        (None, None) => None,
+    };
+    if let Some(spec) = compute_spec {
+        if let Err(e) = spec.validate() {
+            classify(Section::Compute, &spec.name, &e, out);
+        }
+    }
+    if let Some(e) = y.get("engine") {
+        check_section_keys(e, "engine", ENGINE_KEYS, out);
+    }
+    if let Some(m) = y.get("metrics") {
+        check_section_keys(m, "metrics", METRICS_KEYS, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BASE: &str = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+workload:
+  num_requests: 5
+  qps: 10.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 8
+  seed: 1
+"#;
+
+    fn codes(report: &LintReport) -> Vec<&str> {
+        report.diagnostics.iter().map(|d| d.code.as_str()).collect()
+    }
+
+    #[test]
+    fn clean_config_has_no_diagnostics() {
+        let r = lint_text("base", BASE);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        assert!(r.passes(true));
+    }
+
+    #[test]
+    fn yaml_syntax_error_is_e001() {
+        let r = lint_text("bad", "model: [unclosed");
+        assert_eq!(codes(&r), vec!["E001"]);
+        assert!(!r.passes(false));
+    }
+
+    #[test]
+    fn unknown_policy_is_e010_with_suggestion() {
+        let text = BASE.replace(
+            "    - hardware: A100",
+            "    - hardware: A100\n      local_scheduler:\n        policy: continuos",
+        );
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E010"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("continuous"));
+    }
+
+    #[test]
+    fn unknown_global_policy_is_e010() {
+        let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+  scheduler:
+    global:
+      policy: round_robbin
+workload:
+  num_requests: 5
+  qps: 10.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 8
+  seed: 1
+"#;
+        let r = lint_text("t", yaml);
+        assert_eq!(codes(&r), vec!["E010"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("round_robin"));
+    }
+
+    #[test]
+    fn unknown_memory_manager_is_e011() {
+        let text = BASE.replace(
+            "    - hardware: A100",
+            "    - hardware: A100\n      memory:\n        manager: pagd",
+        );
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E011"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("paged"));
+    }
+
+    #[test]
+    fn unknown_workload_generator_is_e012() {
+        let text = BASE.replace("  num_requests: 5", "  generator: burstty\n  num_requests: 5");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E012"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("bursty"));
+    }
+
+    #[test]
+    fn unknown_compute_model_is_e013() {
+        let text = BASE.replace("cost_model: analytic", "cost_model: analytics");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E013"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("analytic"));
+    }
+
+    #[test]
+    fn unknown_parameter_is_e014_with_suggestion() {
+        let text = BASE.replace(
+            "    - hardware: A100",
+            "    - hardware: A100\n      local_scheduler:\n        policy: continuous\n        max_batched_tokns: 512",
+        );
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E014"]);
+        assert!(
+            r.diagnostics[0].fix.as_deref().unwrap().contains("max_batched_tokens"),
+            "{:?}",
+            r.diagnostics[0]
+        );
+    }
+
+    #[test]
+    fn unknown_engine_key_is_e014() {
+        let text = format!("{BASE}engine:\n  fast_forwrad: true\n");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E014"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("fast_forward"));
+    }
+
+    #[test]
+    fn memo_over_oracle_is_e020() {
+        let text = BASE.replace(
+            "cost_model: analytic",
+            "compute:\n  model: memo\n  base: oracle",
+        );
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E020"]);
+    }
+
+    #[test]
+    fn multiple_findings_in_one_file_are_all_reported() {
+        let yaml = r#"
+model: llama2-7b
+cost_model: analytics
+cluster:
+  workers:
+    - hardware: A100
+      memory:
+        manager: pagd
+workload:
+  num_requests: 5
+  qps: 10.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 8
+  seed: 1
+"#;
+        let r = lint_text("t", yaml);
+        let mut c = codes(&r);
+        c.sort();
+        assert_eq!(c, vec!["E011", "E013"]);
+    }
+
+    #[test]
+    fn json_output_round_trips() {
+        let r = lint_text("bad.yaml", "model: [broken");
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("path").and_then(Json::as_str), Some("bad.yaml"));
+        assert_eq!(parsed.get("errors").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn did_you_mean_respects_budget() {
+        assert_eq!(did_you_mean("continuos", ["continuous", "static"]), Some("continuous"));
+        assert_eq!(did_you_mean("zzzzzz", ["continuous", "static"]), None);
+    }
+
+    #[test]
+    fn registered_rules_appear_in_listing_and_run() {
+        // the rule keys off a marker so parallel tests linting other
+        // configs in this process never see it fire
+        register_lint_rule("X900", Severity::Warn, "test rule", |ctx| {
+            if ctx.yaml.get("x900_marker").is_some() {
+                vec![Diagnostic::warn("X900", "marker present")]
+            } else {
+                Vec::new()
+            }
+        });
+        assert!(lint_rules().iter().any(|(c, _, _)| c == "X900"));
+        let r = lint_text("t", &format!("{BASE}x900_marker: true\n"));
+        assert!(codes(&r).contains(&"X900"), "{:?}", r.diagnostics);
+        // registered warns fail only under --deny-warnings
+        assert!(r.passes(false) && !r.passes(true));
+    }
+
+    #[test]
+    fn rule_catalog_codes_are_unique_and_sorted() {
+        let mut codes: Vec<&str> = RULES.iter().chain(AUDIT_CHECKS).map(|r| r.code).collect();
+        let n = codes.len();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), n, "duplicate rule codes");
+    }
+}

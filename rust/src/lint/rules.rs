@@ -1,0 +1,574 @@
+//! The built-in semantic lint rules: cross-section feasibility checks
+//! over a successfully parsed config and its generated workload.
+//!
+//! Every rule here is *static* — it sizes pools, reads registry
+//! parameters and (for the SLO floor) makes O(1) cost-model calls, but
+//! never steps the event engine. Rationale and example fixes for each
+//! code live in docs/LINTS.md.
+
+use crate::compute::{BatchDesc, ComputeCtx, ComputeSpec};
+use crate::config::yaml::Yaml;
+use crate::config::{WindowCost, WorkerConfig};
+use crate::memory::PreemptionPolicy;
+use crate::metrics::MetricsMode;
+use crate::scheduler::PolicySpec;
+
+use super::{Diagnostic, LintCtx};
+
+/// Run every built-in semantic rule, appending findings to `out`.
+pub(crate) fn run(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    pool_capacity(ctx, out); // E030
+    token_budget(ctx, out); // E031, W032
+    swap_viability(ctx, out); // E033
+    affine_window(ctx, out); // W040, W041
+    sketch_metrics(ctx, out); // I042
+    slo_floor(ctx, out); // E050
+}
+
+/// Canonical registry name for a possibly-aliased selection, `None`
+/// for runtime-registered entries the static tables do not know.
+fn canonical_local(name: &str) -> Option<&'static str> {
+    crate::scheduler::LOCAL_POLICIES
+        .iter()
+        .find(|e| {
+            name.eq_ignore_ascii_case(e.name)
+                || e.aliases.iter().any(|a| name.eq_ignore_ascii_case(a))
+        })
+        .map(|e| e.name)
+}
+
+fn canonical_memory(name: &str) -> Option<&'static str> {
+    crate::memory::MEMORY_MANAGERS
+        .iter()
+        .find(|e| {
+            name.eq_ignore_ascii_case(e.name)
+                || e.aliases.iter().any(|a| name.eq_ignore_ascii_case(a))
+        })
+        .map(|e| e.name)
+}
+
+fn canonical_compute(name: &str) -> Option<&'static str> {
+    crate::compute::COMPUTE_MODELS
+        .iter()
+        .find(|e| {
+            name.eq_ignore_ascii_case(e.name)
+                || e.aliases.iter().any(|a| name.eq_ignore_ascii_case(a))
+        })
+        .map(|e| e.name)
+}
+
+/// The compute spec worker `wc` actually runs (per-worker override
+/// beats the cluster-wide selection).
+fn compute_of<'a>(ctx: &'a LintCtx, wc: &'a WorkerConfig) -> &'a ComputeSpec {
+    wc.compute.as_ref().unwrap_or(&ctx.cfg.compute)
+}
+
+// ---------------------------------------------------------------------------
+// E030: worst-case request KV vs every decode-capable pool
+// ---------------------------------------------------------------------------
+
+/// The scheduler admits, preempts and retries — but no amount of
+/// scheduling fits a request whose *final* KV footprint exceeds the
+/// whole pool. When that holds on every decode-capable worker the run
+/// is a guaranteed drain-deadlock; catching it here saves the full
+/// sweep the deadlock would otherwise burn.
+fn pool_capacity(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    let Some(worst) = ctx.requests.iter().map(|r| r.final_kv_tokens()).max() else {
+        return;
+    };
+    let mut sized: Vec<(usize, u64, u64)> = Vec::new(); // (worker idx, need, have)
+    for (i, wc) in ctx.cfg.cluster.workers.iter().enumerate() {
+        if !wc.run_decode {
+            continue;
+        }
+        let Ok(mem) = wc.memory.build(&ctx.cfg.model, wc.hardware.mem_cap) else {
+            return; // build errors already surfaced in pass 1/2
+        };
+        sized.push((i, mem.blocks_for_tokens(worst), mem.total_blocks()));
+    }
+    if sized.is_empty() || sized.iter().any(|&(_, need, have)| need <= have) {
+        return;
+    }
+    let detail: Vec<String> = sized
+        .iter()
+        .map(|(i, need, have)| format!("worker {i}: {need} blocks needed, {have} in pool"))
+        .collect();
+    out.push(
+        Diagnostic::error(
+            "E030",
+            format!(
+                "the workload's largest request ({worst} KV tokens) cannot fit any \
+                 decode-capable worker's KV pool — guaranteed scheduling deadlock \
+                 ({})",
+                detail.join("; ")
+            ),
+        )
+        .with_fix(
+            "shrink the workload's max context, raise hardware mem_cap / memory \
+             gpu_utilization, or use larger devices",
+        ),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// E031 / W032: prompt length vs the batch-token budget
+// ---------------------------------------------------------------------------
+
+/// The admission token budget this local policy enforces per batch,
+/// `None` when the policy can serve arbitrarily long prompts (chunked
+/// prefill splits them; static batching has no token cap; unknown =
+/// runtime-registered policies are given the benefit of the doubt).
+fn policy_token_cap(spec: &PolicySpec) -> Option<u32> {
+    match canonical_local(&spec.name)? {
+        "continuous" | "priority" | "sjf" => Some(spec.params.opt_u32("max_batched_tokens", 8192)),
+        _ => None,
+    }
+}
+
+/// A prompt larger than `max_batched_tokens` is *never* admitted by the
+/// token-budget policies (the budget is per batch and prefills do not
+/// split): if every prefill-capable worker enforces a cap below the
+/// workload's largest prompt, that request deadlocks the drain.
+///
+/// The companion W032 flags the opposite mismatch: a chunked-prefill
+/// chunk at least as large as every prompt never actually chunks.
+fn token_budget(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    let Some(worst_prompt) = ctx.requests.iter().map(|r| r.prompt_len).max() else {
+        return;
+    };
+    let mut caps: Vec<(usize, u32)> = Vec::new();
+    let mut any_uncapped = false;
+    for (i, wc) in ctx.cfg.cluster.workers.iter().enumerate() {
+        if !wc.run_prefill {
+            continue;
+        }
+        match policy_token_cap(&wc.local_scheduler) {
+            Some(cap) if cap < worst_prompt => caps.push((i, cap)),
+            _ => any_uncapped = true,
+        }
+        if canonical_local(&wc.local_scheduler.name) == Some("chunked_prefill") {
+            let chunk = chunk_tokens(&wc.local_scheduler);
+            if chunk >= worst_prompt {
+                out.push(
+                    Diagnostic::warn(
+                        "W032",
+                        format!(
+                            "worker {i}: chunked_prefill chunk_tokens ({chunk}) >= the \
+                             workload's largest prompt ({worst_prompt}); chunking never \
+                             engages and the policy degrades to plain continuous batching"
+                        ),
+                    )
+                    .with_fix("lower chunk_tokens below typical prompt lengths (e.g. 256-512)"),
+                );
+            }
+        }
+    }
+    if !any_uncapped && !caps.is_empty() {
+        let detail: Vec<String> = caps
+            .iter()
+            .map(|(i, cap)| format!("worker {i}: max_batched_tokens {cap}"))
+            .collect();
+        out.push(
+            Diagnostic::error(
+                "E031",
+                format!(
+                    "the workload's largest prompt ({worst_prompt} tokens) exceeds the \
+                     batch-token budget of every prefill-capable worker ({}); such a \
+                     prompt is never admitted — guaranteed scheduling deadlock",
+                    detail.join("; ")
+                ),
+            )
+            .with_fix(
+                "raise max_batched_tokens above the largest prompt, or switch the policy \
+                 to chunked_prefill",
+            ),
+        );
+    }
+}
+
+fn chunk_tokens(spec: &PolicySpec) -> u32 {
+    spec.params
+        .get("chunk_tokens")
+        .or_else(|| spec.params.get("chunk_size"))
+        .and_then(Yaml::as_u32)
+        .unwrap_or(512)
+}
+
+// ---------------------------------------------------------------------------
+// E033: swap manager that can never swap
+// ---------------------------------------------------------------------------
+
+/// Swap preemption with zero host swap space silently degrades to
+/// recompute; a host link without bandwidth makes every swap take
+/// forever (or divide by zero). Both are contradictions worth failing
+/// on rather than quietly mis-measuring.
+fn swap_viability(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    for (i, wc) in ctx.cfg.cluster.workers.iter().enumerate() {
+        if canonical_memory(&wc.memory.name) != Some("swap") {
+            continue;
+        }
+        let swap_blocks = wc.memory.params.get("swap_blocks").and_then(Yaml::as_u64);
+        if swap_blocks == Some(0) && wc.memory.preemption().ok() == Some(PreemptionPolicy::Swap) {
+            out.push(
+                Diagnostic::error(
+                    "E033",
+                    format!(
+                        "worker {i}: swap manager with 'swap_blocks: 0' under swap \
+                         preemption — every preemption silently degrades to recompute"
+                    ),
+                )
+                .with_fix(
+                    "give the manager host swap space (swap_blocks > 0) or select \
+                     'preemption: recompute' explicitly",
+                ),
+            );
+            continue;
+        }
+        if let Ok(mem) = wc.memory.build(&ctx.cfg.model, wc.hardware.mem_cap) {
+            match mem.swap_link() {
+                Some(link) if link.bandwidth > 0.0 => {}
+                Some(link) => out.push(
+                    Diagnostic::error(
+                        "E033",
+                        format!(
+                            "worker {i}: swap manager's host link '{}' has no bandwidth \
+                             ({} B/s) — swap traffic can never complete",
+                            link.name, link.bandwidth
+                        ),
+                    )
+                    .with_fix("configure 'link:' with a positive bandwidth (e.g. HostBus)"),
+                ),
+                None => out.push(
+                    Diagnostic::error(
+                        "E033",
+                        format!(
+                            "worker {i}: swap manager exposes no host link — swap traffic \
+                             cannot be charged"
+                        ),
+                    )
+                    .with_fix("configure 'link:' with a host-bus link preset"),
+                ),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// W040 / W041: affine window costing that can never engage
+// ---------------------------------------------------------------------------
+
+/// Is this compute selection affine-capable (declares
+/// [`decode_window_affine`](crate::compute::ComputeModel::decode_window_affine))?
+/// Decided statically from the registry name: analytic / roofline /
+/// table are; memo forwards its base; everything else (including
+/// runtime registrations) is assumed not to be.
+fn affine_capable(spec: &ComputeSpec) -> bool {
+    match canonical_compute(&spec.name) {
+        Some("analytic") | Some("roofline") | Some("table") => true,
+        Some("memo") => {
+            let base = spec.params.get("base").and_then(Yaml::as_str).unwrap_or("hlo");
+            matches!(
+                canonical_compute(base),
+                Some("analytic") | Some("roofline") | Some("table")
+            )
+        }
+        _ => false,
+    }
+}
+
+fn affine_window(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.cfg.engine.window_cost != WindowCost::Affine {
+        return;
+    }
+    if !ctx.cfg.engine.fast_forward {
+        out.push(
+            Diagnostic::warn(
+                "W041",
+                "'window_cost: affine' with 'fast_forward: false' — window costing is \
+                 only consulted inside fast-forwarded decode windows, so the setting \
+                 never engages",
+            )
+            .with_fix("enable fast_forward, or drop window_cost back to replay"),
+        );
+        return;
+    }
+    let names: Vec<String> = ctx
+        .cfg
+        .cluster
+        .workers
+        .iter()
+        .map(|wc| compute_of(ctx, wc).name.clone())
+        .collect();
+    if ctx
+        .cfg
+        .cluster
+        .workers
+        .iter()
+        .any(|wc| affine_capable(compute_of(ctx, wc)))
+    {
+        return;
+    }
+    out.push(
+        Diagnostic::warn(
+            "W040",
+            format!(
+                "'window_cost: affine' but no worker's compute model ({}) declares an \
+                 affine decode window — every window silently falls back to replay",
+                names.join(", ")
+            ),
+        )
+        .with_fix(
+            "select an affine-capable model (analytic, roofline, table) or drop \
+             window_cost back to replay",
+        ),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// I042: sketch-mode metrics
+// ---------------------------------------------------------------------------
+
+/// Not a defect — a documented trade-off the reader of the report must
+/// know about, surfaced so CI configs that byte-diff reports are not
+/// pointed at sketch output by accident.
+fn sketch_metrics(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    if ctx.cfg.metrics.mode == MetricsMode::Sketch {
+        out.push(Diagnostic::info(
+            "I042",
+            format!(
+                "metrics mode 'sketch': quantiles are approximations within ±{} relative \
+                 error and reports are not byte-comparable to exact-mode output",
+                ctx.cfg.metrics.sketch_error
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E050: SLO below the physical per-iteration floor
+// ---------------------------------------------------------------------------
+
+/// Models cheap enough to build and probe statically. `hlo` falls back
+/// to the analytic mirror when artifacts are absent, so it stays cheap
+/// either way; the trained/co-simulated models are skipped — building
+/// them costs minutes, which a linter must never do.
+fn floor_probeable(spec: &ComputeSpec) -> bool {
+    matches!(
+        canonical_compute(&spec.name),
+        Some("hlo") | Some("analytic") | Some("roofline")
+    )
+}
+
+/// An SLO below the cost model's single-request iteration time cannot
+/// be attained by any schedule: the decode floor bounds TPOT, the
+/// single-prompt prefill time bounds TTFT (both at zero queueing).
+/// `slo_attainment` would simply report 0% after the sweep burned its
+/// budget — fail at lint time instead.
+fn slo_floor(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    let (Some(min_prompt), true) = (
+        ctx.requests.iter().map(|r| r.prompt_len).min(),
+        ctx.cfg.slo.ttft.is_some() || ctx.cfg.slo.mtpot.is_some(),
+    ) else {
+        return;
+    };
+    // best case over workers: the floor the *fastest* capable worker sets
+    let mut decode_floor: Option<f64> = None;
+    let mut prefill_floor: Option<f64> = None;
+    for wc in &ctx.cfg.cluster.workers {
+        let spec = compute_of(ctx, wc);
+        if !floor_probeable(spec) {
+            continue;
+        }
+        let Ok(mut model) = spec.build(&ComputeCtx {
+            model: &ctx.cfg.model,
+            hw: &wc.hardware,
+            artifacts_dir: &ctx.cfg.artifacts_dir,
+            worker: 0,
+        }) else {
+            continue;
+        };
+        if wc.run_decode {
+            let mut b = BatchDesc::new();
+            b.push(min_prompt, 1);
+            let t = model.iter_time(&b);
+            decode_floor = Some(decode_floor.map_or(t, |f: f64| f.min(t)));
+        }
+        if wc.run_prefill {
+            let mut b = BatchDesc::new();
+            b.push(0, min_prompt);
+            let t = model.iter_time(&b);
+            prefill_floor = Some(prefill_floor.map_or(t, |f: f64| f.min(t)));
+        }
+    }
+    if let (Some(slo), Some(floor)) = (ctx.cfg.slo.mtpot, decode_floor) {
+        if slo < floor {
+            out.push(
+                Diagnostic::error(
+                    "E050",
+                    format!(
+                        "SLO mtpot {slo}s is below the compute model's single-request \
+                         decode iteration floor ({floor:.6}s) — 0% attainment is \
+                         guaranteed before the first request is served"
+                    ),
+                )
+                .with_fix("raise the mtpot SLO above the per-iteration floor"),
+            );
+        }
+    }
+    if let (Some(slo), Some(floor)) = (ctx.cfg.slo.ttft, prefill_floor) {
+        if slo < floor {
+            out.push(
+                Diagnostic::error(
+                    "E050",
+                    format!(
+                        "SLO ttft {slo}s is below the compute model's zero-queue prefill \
+                         floor for the smallest prompt ({floor:.6}s) — 0% attainment is \
+                         guaranteed"
+                    ),
+                )
+                .with_fix("raise the ttft SLO above the prefill floor"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint_text;
+
+    fn base_with(workload: &str, extra: &str) -> String {
+        format!(
+            r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+{extra}workload:
+{workload}"#
+        )
+    }
+
+    const SMALL_WL: &str = "  num_requests: 5\n  qps: 10.0\n  prompt_len:\n    fixed: 64\n  output_len:\n    fixed: 8\n  seed: 1\n";
+
+    fn codes(text: &str) -> Vec<String> {
+        lint_text("t", text)
+            .diagnostics
+            .iter()
+            .map(|d| d.code.clone())
+            .collect()
+    }
+
+    #[test]
+    fn pool_capacity_deadlock_is_e030() {
+        let yaml = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware:
+        name: tiny
+        peak_flops: 312e12
+        mem_bw: 2.0e12
+        mem_cap: 16e9
+workload:
+  num_requests: 1
+  qps: 1.0
+  prompt_len:
+    fixed: 100000
+  output_len:
+    fixed: 4
+  seed: 1
+"#;
+        let c = codes(yaml);
+        assert!(c.contains(&"E030".to_string()), "{c:?}");
+    }
+
+    #[test]
+    fn token_cap_deadlock_is_e031() {
+        let extra = "      local_scheduler:\n        policy: continuous\n        max_batched_tokens: 64\n";
+        let wl = "  num_requests: 2\n  qps: 1.0\n  prompt_len:\n    fixed: 1000\n  output_len:\n    fixed: 4\n  seed: 1\n";
+        let c = codes(&base_with(wl, extra));
+        assert_eq!(c, vec!["E031"]);
+    }
+
+    #[test]
+    fn chunked_prefill_lifts_e031() {
+        let extra = "      local_scheduler:\n        policy: chunked_prefill\n        chunk_tokens: 64\n";
+        let wl = "  num_requests: 2\n  qps: 1.0\n  prompt_len:\n    fixed: 1000\n  output_len:\n    fixed: 4\n  seed: 1\n";
+        let c = codes(&base_with(wl, extra));
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn oversized_chunk_is_w032() {
+        let extra = "      local_scheduler:\n        policy: chunked_prefill\n        chunk_tokens: 8192\n";
+        let c = codes(&base_with(SMALL_WL, extra));
+        assert_eq!(c, vec!["W032"]);
+    }
+
+    #[test]
+    fn zero_swap_space_is_e033() {
+        let extra = "      memory:\n        manager: swap\n        swap_blocks: 0\n";
+        let c = codes(&base_with(SMALL_WL, extra));
+        assert_eq!(c, vec!["E033"]);
+    }
+
+    #[test]
+    fn healthy_swap_config_is_clean() {
+        let extra = "      memory:\n        manager: swap\n        swap_blocks: 1000\n";
+        let c = codes(&base_with(SMALL_WL, extra));
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn non_affine_model_under_affine_window_is_w040() {
+        let yaml = format!(
+            "{}engine:\n  window_cost: affine\n",
+            base_with(SMALL_WL, "").replace("cost_model: analytic", "cost_model: oracle")
+        );
+        let c = codes(&yaml);
+        assert_eq!(c, vec!["W040"]);
+    }
+
+    #[test]
+    fn affine_without_fast_forward_is_w041() {
+        let yaml = format!(
+            "{}engine:\n  fast_forward: false\n  window_cost: affine\n",
+            base_with(SMALL_WL, "")
+        );
+        let c = codes(&yaml);
+        assert_eq!(c, vec!["W041"]);
+    }
+
+    #[test]
+    fn affine_capable_model_is_clean() {
+        let yaml = format!("{}engine:\n  window_cost: affine\n", base_with(SMALL_WL, ""));
+        let c = codes(&yaml);
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn sketch_metrics_is_info_only() {
+        let yaml = format!("{}metrics:\n  mode: sketch\n", base_with(SMALL_WL, ""));
+        let r = lint_text("t", &yaml);
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].code, "I042");
+        // info never fails, even under --deny-warnings
+        assert!(r.passes(true));
+    }
+
+    #[test]
+    fn unattainable_slo_is_e050() {
+        let yaml = format!("{}slo:\n  mtpot: 0.0000001\n", base_with(SMALL_WL, ""));
+        let c = codes(&yaml);
+        assert_eq!(c, vec!["E050"]);
+    }
+
+    #[test]
+    fn paper_default_slos_are_attainable() {
+        let yaml = format!("{}slo:\n  ttft: 15.0\n  mtpot: 0.3\n", base_with(SMALL_WL, ""));
+        let c = codes(&yaml);
+        assert!(c.is_empty(), "{c:?}");
+    }
+}

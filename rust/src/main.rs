@@ -23,11 +23,16 @@ fn usage() -> &'static str {
     "TokenSim — LLM inference system simulator (paper reproduction)\n\
      \n\
      USAGE:\n\
-       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--window-cost <replay|affine>] [--metrics <exact|sketch>]\n\
+       tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--window-cost <replay|affine>] [--metrics <exact|sketch>] [--audit]\n\
+       tokensim lint <file.yaml>... [--json] [--deny-warnings]\n\
        tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
-       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, presets\n\
+       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, lint rules, engine knobs, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
-       tokensim help\n"
+       tokensim help\n\
+     \n\
+     `lint` statically cross-validates configs against the registries\n\
+     (capacity, token budgets, swap links, SLO floors) without running;\n\
+     `run --audit` re-checks engine conservation laws at every event.\n"
 }
 
 fn main() -> ExitCode {
@@ -48,21 +53,79 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+/// Flags a command accepts: (name, takes-a-value).
+type FlagSpec = &'static [(&'static str, bool)];
+
+const RUN_FLAGS: FlagSpec = &[
+    ("--config", true),
+    ("--save-trace", true),
+    ("--json", true),
+    ("--cdf", false),
+    ("--fast-forward", true),
+    ("--window-cost", true),
+    ("--metrics", true),
+    ("--audit", false),
+];
+const LINT_FLAGS: FlagSpec = &[("--json", false), ("--deny-warnings", false)];
+const EXP_FLAGS: FlagSpec = &[("--quick", false), ("--out-dir", true), ("--cost-model", true)];
+
+/// Strict argument validation: every `--flag` must be known to `cmd`,
+/// value-taking flags must carry a value, and positional arguments are
+/// only allowed where the command defines them. Unknown flags fail with
+/// a did-you-mean hint instead of being silently ignored.
+fn check_flags(cmd: &str, args: &[String], flags: FlagSpec, positionals: bool) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some(&(name, takes_value)) = flags.iter().find(|(n, _)| *n == a) {
+            if takes_value {
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => i += 1,
+                    _ => bail!("{cmd}: flag {name} requires a value"),
+                }
+            }
+        } else if a.starts_with("--") {
+            let known = flags.iter().map(|&(n, _)| n);
+            let hint = tokensim::lint::did_you_mean(a, known.clone())
+                .map(|n| format!(" (did you mean '{n}'?)"))
+                .unwrap_or_default();
+            bail!(
+                "{cmd}: unknown flag '{a}'{hint}; accepted: {}",
+                known.collect::<Vec<_>>().join(", ")
+            );
+        } else if !positionals {
+            bail!("{cmd}: unexpected argument '{a}'");
+        }
+        i += 1;
+    }
+    Ok(())
+}
+
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
+        Some("lint") => cmd_lint(args),
         Some("exp") => cmd_exp(args),
-        Some("list") => cmd_list(),
-        Some("validate-artifacts") => cmd_validate_artifacts(),
+        Some("list") => cmd_list(args),
+        Some("validate-artifacts") => cmd_validate_artifacts(args),
         Some("help") | None => {
             println!("{}", usage());
             Ok(())
         }
-        Some(other) => bail!("unknown command '{other}'\n\n{}", usage()),
+        Some(other) => {
+            let hint = tokensim::lint::did_you_mean(
+                other,
+                ["run", "lint", "exp", "list", "validate-artifacts", "help"],
+            )
+            .map(|c| format!(" (did you mean '{c}'?)"))
+            .unwrap_or_default();
+            bail!("unknown command '{other}'{hint}\n\n{}", usage())
+        }
     }
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
+    check_flags("run", &args[1..], RUN_FLAGS, false)?;
     let config_path = flag_value(args, "--config").context("run requires --config <file>")?;
     let mut cfg = SimulationConfig::from_yaml_file(config_path)?;
     if let Some(v) = flag_value(args, "--fast-forward") {
@@ -87,6 +150,13 @@ fn cmd_run(args: &[String]) -> Result<()> {
         // every record (byte-identical reports), sketch streams into
         // fixed-size quantile sketches (bounded memory)
         cfg.metrics.mode = tokensim::metrics::MetricsMode::parse(v)?;
+    }
+    if args.iter().any(|a| a == "--audit") {
+        // CLI override of the YAML `engine: audit:` switch — re-check
+        // conservation-law invariants at event boundaries. Checks are
+        // read-only (reports stay byte-identical); a violation fails
+        // the run carrying its A-code diagnostic
+        cfg.engine.audit = true;
     }
     println!(
         "model={} workers={} workload={}",
@@ -146,7 +216,44 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &[String]) -> Result<()> {
+    check_flags("lint", &args[1..], LINT_FLAGS, true)?;
+    let json = args.iter().any(|a| a == "--json");
+    let deny = args.iter().any(|a| a == "--deny-warnings");
+    let files: Vec<&str> = args[1..]
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .map(|a| a.as_str())
+        .collect();
+    anyhow::ensure!(
+        !files.is_empty(),
+        "lint requires at least one <config.yaml> \
+         (usage: tokensim lint <file>... [--json] [--deny-warnings])"
+    );
+    let reports: Vec<_> = files.iter().map(|p| tokensim::lint::lint_file(p)).collect();
+    let failed = reports.iter().filter(|r| !r.passes(deny)).count();
+    if json {
+        let arr = tokensim::util::json::Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        println!("{}", arr.to_string());
+    } else {
+        for r in &reports {
+            print!("{}", r.render());
+        }
+        let findings: usize = reports.iter().map(|r| r.diagnostics.len()).sum();
+        println!(
+            "{} config(s) linted, {findings} finding(s), {failed} failing{}",
+            reports.len(),
+            if deny { " (warnings denied)" } else { "" }
+        );
+    }
+    if failed > 0 {
+        bail!("{failed} of {} config(s) failed lint", reports.len());
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &[String]) -> Result<()> {
+    check_flags("exp", &args[1..], EXP_FLAGS, true)?;
     let id = args.get(1).context("exp requires an experiment id")?;
     let mut opts = if args.iter().any(|a| a == "--quick") {
         ExpOpts::quick()
@@ -176,7 +283,8 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list() -> Result<()> {
+fn cmd_list(args: &[String]) -> Result<()> {
+    check_flags("list", &args[1..], &[], false)?;
     println!("experiments: {}", experiments::ALL.join(", "));
     println!("\nlocal scheduler policies (worker `local_scheduler: policy:`):");
     for (name, summary) in tokensim::scheduler::local_policies() {
@@ -201,13 +309,30 @@ fn cmd_list() -> Result<()> {
         println!("  {name:<18} {summary}");
         println!("  {:<18}   params: {params}", "");
     }
+    println!("\nlint rules (`tokensim lint <config.yaml>`):");
+    for (code, severity, summary) in tokensim::lint::lint_rules() {
+        let sev = severity.to_string();
+        println!("  {code:<6} {sev:<5} {summary}");
+    }
+    println!("\nengine audit checks (`engine: audit: true` / `run --audit`):");
+    for c in tokensim::lint::AUDIT_CHECKS {
+        println!("  {:<6} {}", c.code, c.summary);
+    }
+    println!("\nengine knobs (`engine:`):");
+    println!("  fast_forward <bool>      coalesce closed decode batches (default true)");
+    println!("  window_cost <replay|affine>  how coalesced windows are costed");
+    println!("  audit <bool>             invariant re-checking at event boundaries");
+    println!("\nmetrics knobs (`metrics:`):");
+    println!("  mode <exact|sketch>      per-request records vs streaming sketches");
+    println!("  sketch_error <f64>       sketch relative-error target (default 0.01)");
     println!("\nmodel presets: llama2-7b, llama2-13b, opt-13b, tiny");
     println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");
     println!("link presets: NVLink, PCIe, Ethernet-100G, HostBus, PoolFabric");
     Ok(())
 }
 
-fn cmd_validate_artifacts() -> Result<()> {
+fn cmd_validate_artifacts(args: &[String]) -> Result<()> {
+    check_flags("validate-artifacts", &args[1..], &[], false)?;
     let dir = tokensim::runtime::default_artifacts_dir();
     println!("artifacts dir: {}", dir.display());
     let manifest = tokensim::runtime::Manifest::load(&dir)?;

@@ -350,6 +350,32 @@ impl RecordStore {
         self.len() == 0
     }
 
+    /// Audit-mode consistency check ([`crate::lint::AUDIT_CHECKS`]
+    /// A006): the store holds exactly `finished` completions, and (in
+    /// exact mode, where per-record data survives) every record carries
+    /// ordered timestamps. Read-only — audited reports stay
+    /// byte-identical.
+    pub fn audit_check(&self, finished: usize) -> Result<(), String> {
+        if self.len() != finished {
+            return Err(format!(
+                "record store holds {} records for {finished} finished requests",
+                self.len()
+            ));
+        }
+        if let RecordStore::Exact(slab) = self {
+            for rec in slab.iter().flatten() {
+                if !(rec.arrival <= rec.first_token && rec.first_token <= rec.finished) {
+                    return Err(format!(
+                        "record {}: timestamps out of order (arrival {}, first token {}, \
+                         finished {})",
+                        rec.id, rec.arrival, rec.first_token, rec.finished
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Tear down into the report representation: id-ascending records
     /// (exact) or the streaming aggregate (sketch).
     pub fn into_parts(self) -> (Vec<RequestRecord>, Option<StreamingMetrics>) {
@@ -547,6 +573,23 @@ mod tests {
             s.push(r);
         }
         s
+    }
+
+    #[test]
+    fn audit_check_flags_count_mismatch_and_bad_stamps() {
+        let mut store = RecordStore::exact();
+        store.push(rec(0, None, 1.0, 1.5, 2.0));
+        assert_eq!(store.audit_check(1), Ok(()));
+        let err = store.audit_check(2).unwrap_err();
+        assert!(err.contains("1 records for 2 finished"), "{err}");
+        // a first token stamped before arrival is a consistency breach
+        store.push(rec(1, None, 5.0, 4.0, 6.0));
+        let err = store.audit_check(2).unwrap_err();
+        assert!(err.contains("timestamps out of order"), "{err}");
+        // sketch mode retains only aggregates: the count check remains
+        let sketch = RecordStore::sketch(stream_of(&records()));
+        assert_eq!(sketch.audit_check(50), Ok(()));
+        assert!(sketch.audit_check(49).is_err());
     }
 
     #[test]

@@ -76,6 +76,10 @@ pub struct EventQueue {
     now: SimTime,
     next_seq: u64,
     processed: u64,
+    /// Audit mode: record (instead of merely debug-asserting) a
+    /// monotonicity violation for the driver to surface.
+    audit: bool,
+    violation: Option<String>,
 }
 
 impl EventQueue {
@@ -136,9 +140,27 @@ impl EventQueue {
     pub fn pop(&mut self) -> Option<Event> {
         let ev = self.heap.pop()?;
         debug_assert!(ev.time >= self.now);
+        if self.audit && ev.time < self.now && self.violation.is_none() {
+            self.violation = Some(format!(
+                "event {:?} pops at t={} with the clock already at t={}",
+                ev.payload, ev.time, self.now
+            ));
+        }
         self.now = ev.time;
         self.processed += 1;
         Some(ev)
+    }
+
+    /// Enable audit mode: a time-ordering violation is recorded for
+    /// [`take_violation`](Self::take_violation) instead of only being a
+    /// debug assertion. Release builds otherwise skip the check.
+    pub fn set_audit(&mut self, audit: bool) {
+        self.audit = audit;
+    }
+
+    /// Take the recorded monotonicity violation, if any (audit mode).
+    pub fn take_violation(&mut self) -> Option<String> {
+        self.violation.take()
     }
 
     /// Peek at the next event time without advancing.

@@ -935,3 +935,137 @@ fn sketch_mode_matches_exact_on_multi_tenant_config() {
         assert!(in_window(&lats, q, est, eps), "latency p{} = {est}", q * 100.0);
     }
 }
+
+// ---------------------------------------------------------------------------
+// CLI: lint subcommand, fixtures, strict flags, list, --audit
+// ---------------------------------------------------------------------------
+
+fn tokensim_cmd(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_tokensim"))
+        .args(args)
+        .output()
+        .expect("spawn tokensim")
+}
+
+/// Every committed example config must lint clean even with warnings
+/// denied — the same gate CI runs.
+#[test]
+fn committed_configs_lint_clean_under_deny_warnings() {
+    let mut files: Vec<String> = std::fs::read_dir("../configs")
+        .expect("configs dir")
+        .filter_map(|e| {
+            let p = e.unwrap().path();
+            (p.extension().and_then(|x| x.to_str()) == Some("yaml"))
+                .then(|| p.to_str().unwrap().to_string())
+        })
+        .collect();
+    files.sort();
+    assert!(files.len() >= 10, "expected the committed config suite, got {files:?}");
+    let mut args = vec!["lint"];
+    args.extend(files.iter().map(String::as_str));
+    args.push("--deny-warnings");
+    let out = tokensim_cmd(&args);
+    assert!(
+        out.status.success(),
+        "committed configs must lint clean:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Each `configs/fixtures/bad_*.yaml` declares its expected diagnostic
+/// in a `# expect: <CODE>` header; lint must fail it (warnings denied)
+/// and the JSON report must carry that code exactly once.
+#[test]
+fn lint_fixtures_fail_with_their_expected_code() {
+    let mut fixtures: Vec<std::path::PathBuf> = std::fs::read_dir("../configs/fixtures")
+        .expect("fixtures dir")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("yaml"))
+        .collect();
+    fixtures.sort();
+    assert!(fixtures.len() >= 10, "expected the fixture suite, got {fixtures:?}");
+    for f in &fixtures {
+        let path = f.to_str().unwrap();
+        let text = std::fs::read_to_string(f).unwrap();
+        let expect = text
+            .lines()
+            .next()
+            .and_then(|l| l.strip_prefix("# expect: "))
+            .unwrap_or_else(|| panic!("{path}: missing '# expect: <CODE>' header"))
+            .trim();
+        let out = tokensim_cmd(&["lint", path, "--deny-warnings", "--json"]);
+        assert!(!out.status.success(), "{path}: lint unexpectedly passed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let needle = format!("\"code\":\"{expect}\"");
+        assert_eq!(
+            stdout.matches(&needle).count(),
+            1,
+            "{path}: expected exactly one {expect} diagnostic in {stdout}"
+        );
+    }
+}
+
+/// Unknown flags and commands are hard errors with did-you-mean hints,
+/// not silently ignored arguments.
+#[test]
+fn unknown_flags_and_commands_are_rejected_with_hints() {
+    let out = tokensim_cmd(&["run", "--confg", "x.yaml"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown flag '--confg'"), "{err}");
+    assert!(err.contains("did you mean '--config'?"), "{err}");
+
+    let out = tokensim_cmd(&["lnt", "../configs/static.yaml"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("did you mean 'lint'?"), "{err}");
+
+    let out = tokensim_cmd(&["run", "--config"]);
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("requires a value"), "{err}");
+
+    let out = tokensim_cmd(&["lint"]);
+    assert!(!out.status.success(), "lint with no files must fail");
+}
+
+#[test]
+fn list_enumerates_lint_rules_and_engine_knobs() {
+    let out = tokensim_cmd(&["list"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for needle in [
+        "E001",
+        "E030",
+        "W040",
+        "I042",
+        "E050",
+        "A001",
+        "A006",
+        "fast_forward",
+        "window_cost",
+        "audit",
+        "sketch_error",
+    ] {
+        assert!(stdout.contains(needle), "list output missing {needle}:\n{stdout}");
+    }
+}
+
+/// `--audit` re-checks every engine invariant but must not perturb the
+/// simulation: the JSON report diffs byte-for-byte against a plain run.
+#[test]
+fn run_with_audit_flag_is_byte_identical_to_plain_run() {
+    let dir = tokensim::util::TempDir::new().unwrap();
+    let plain = dir.path().join("plain.json");
+    let audited = dir.path().join("audited.json");
+    let cfg = "../configs/continuous.yaml";
+    let out = tokensim_cmd(&["run", "--config", cfg, "--json", plain.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out =
+        tokensim_cmd(&["run", "--config", cfg, "--json", audited.to_str().unwrap(), "--audit"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let a = std::fs::read(&plain).unwrap();
+    let b = std::fs::read(&audited).unwrap();
+    assert!(!a.is_empty() && a == b, "audit mode changed the report bytes");
+}

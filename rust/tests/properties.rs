@@ -501,6 +501,33 @@ fn prop_fast_forward_is_invisible_in_reports() {
 }
 
 #[test]
+fn prop_audit_mode_finds_no_violations_and_is_invisible_in_reports() {
+    // the invariant-audit contract at property scale: `engine: audit`
+    // re-checks conservation laws at every event boundary (token
+    // accounting, block release, window boundaries, batch geometry,
+    // record consistency) across random workloads x memory managers x
+    // scheduler policies — every check must hold, and because the
+    // checks are read-only the report must diff byte-for-byte against
+    // the same seed with auditing off
+    for seed in SEEDS.step_by(2) {
+        let mut cfg = random_cfg(seed);
+        cfg.engine.audit = false;
+        let plain = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        cfg.engine.audit = true;
+        let audited = Simulation::from_config(&cfg)
+            .unwrap()
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: audit violation: {e:#}"));
+        assert_eq!(
+            plain.to_json().to_string(),
+            audited.to_json().to_string(),
+            "seed {seed}: audit mode changed the simulated report"
+        );
+        assert_eq!(plain.records, audited.records, "seed {seed}");
+    }
+}
+
+#[test]
 fn prop_higher_load_never_reduces_makespan() {
     // for a fixed request set, raising qps compresses arrivals; the
     // system cannot finish *later* at lower load than at absurd load

@@ -102,6 +102,11 @@ def emit_summary(lines):
 def check(args):
     base_meta, baseline = load_rows(args.baseline)
     _, current = load_rows(args.current)
+    if not current:
+        # every skipped row "warns only", so an empty current run would
+        # otherwise sail through the gate having measured nothing
+        print(f"FAIL: {args.current} has no bench rows", file=sys.stderr)
+        return 1
     threshold = args.threshold
     bootstrap = bool(base_meta.get("bootstrap"))
 

@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Unit tests for scripts/bench_gate.py (stdlib only).
+
+Run directly (CI does) or through unittest discovery:
+
+    python3 scripts/test_bench_gate.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+from argparse import Namespace
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_gate
+
+
+def write_json(path, data):
+    with open(path, "w") as f:
+        json.dump(data, f)
+
+
+def baseline(rows, bootstrap=False):
+    return {"meta": {"bootstrap": bootstrap}, "rows": rows}
+
+
+def row(name, per_sec):
+    return {"name": name, "per_sec": per_sec}
+
+
+class BenchGateTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.base_path = os.path.join(self.dir.name, "baseline.json")
+        self.cur_path = os.path.join(self.dir.name, "current.json")
+        # keep the gate's markdown out of a real job summary
+        os.environ.pop("GITHUB_STEP_SUMMARY", None)
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def gate(self, threshold=0.25):
+        return bench_gate.check(
+            Namespace(baseline=self.base_path, current=self.cur_path, threshold=threshold)
+        )
+
+    def test_matching_rows_pass(self):
+        write_json(self.base_path, baseline([row("a", 100.0), row("b", 50.0)]))
+        write_json(self.cur_path, [row("a", 101.0), row("b", 49.0)])
+        self.assertEqual(self.gate(), 0)
+
+    def test_regression_beyond_band_fails(self):
+        write_json(self.base_path, baseline([row("a", 100.0)]))
+        write_json(self.cur_path, [row("a", 74.0)])  # 0.74x, band floor is 0.75x
+        self.assertEqual(self.gate(), 1)
+
+    def test_band_edges_are_inclusive(self):
+        # exactly ±25% sits inside the band (strict comparisons)
+        write_json(self.base_path, baseline([row("slow", 100.0), row("fast", 100.0)]))
+        write_json(self.cur_path, [row("slow", 75.0), row("fast", 125.0)])
+        self.assertEqual(self.gate(), 0)
+
+    def test_bootstrap_baseline_downgrades_regressions_to_warnings(self):
+        write_json(self.base_path, baseline([row("a", 100.0)], bootstrap=True))
+        write_json(self.cur_path, [row("a", 10.0)])
+        self.assertEqual(self.gate(), 0)
+
+    def test_stale_row_fails_even_under_bootstrap(self):
+        write_json(self.base_path, baseline([row("a", 100.0)], bootstrap=True))
+        write_json(self.cur_path, [row("a", 100.0), row("new_bench", 5.0)])
+        self.assertEqual(self.gate(), 1)
+
+    def test_skipped_rows_warn_only(self):
+        write_json(self.base_path, baseline([row("a", 100.0), row("env_only", 9.0)]))
+        write_json(self.cur_path, [row("a", 100.0)])
+        self.assertEqual(self.gate(), 0)
+
+    def test_empty_current_fails(self):
+        write_json(self.base_path, baseline([row("a", 100.0)]))
+        write_json(self.cur_path, [])
+        self.assertEqual(self.gate(), 1)
+
+    def test_faster_rows_pass(self):
+        write_json(self.base_path, baseline([row("a", 100.0)]))
+        write_json(self.cur_path, [row("a", 1000.0)])
+        self.assertEqual(self.gate(), 0)
+
+    def test_duplicate_row_is_rejected(self):
+        write_json(self.base_path, baseline([row("a", 100.0)]))
+        write_json(self.cur_path, [row("a", 1.0), row("a", 2.0)])
+        with self.assertRaises(SystemExit):
+            self.gate()
+
+    def test_rebaseline_writes_sorted_rows_with_bootstrap_off(self):
+        write_json(self.cur_path, [row("b", 2.0), row("a", 1.0)])
+        rc = bench_gate.rebaseline(
+            Namespace(baseline=self.base_path, current=self.cur_path, threshold=0.25)
+        )
+        self.assertEqual(rc, 0)
+        with open(self.base_path) as f:
+            out = json.load(f)
+        self.assertIs(out["meta"]["bootstrap"], False)
+        self.assertEqual([r["name"] for r in out["rows"]], ["a", "b"])
+
+
+if __name__ == "__main__":
+    unittest.main()
