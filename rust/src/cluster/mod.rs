@@ -19,7 +19,7 @@ use crate::metrics::{
     MemorySample, MemoryTimeline, MetricsMode, RecordStore, SloSpec, StreamingMetrics,
 };
 use crate::model::ModelSpec;
-use crate::network::{xfer_time_uniform, CommModel, Schedule};
+use crate::network::{Endpoint, NetCtx, NetworkModel};
 use crate::request::{Phase, Request, RequestId};
 use crate::scheduler::{GlobalScheduler, LocalSchedCtx, WorkerView};
 use crate::sim::{EventPayload, EventQueue, SimRng, SimTime};
@@ -70,9 +70,13 @@ pub struct Simulation {
     workers: Vec<Worker>,
     model: ModelSpec,
     global: Box<dyn GlobalScheduler>,
-    comm: CommModel,
+    /// The network topology every KV movement is charged through:
+    /// migration (`Worker→Worker`), swap (`Host↔Worker`) and pool
+    /// fetches (`Pool→Worker`). Selected by `network: {topology: …}`;
+    /// the default `flat` prices exactly like the three pre-registry
+    /// [`crate::network::CommModel`] fields it replaced.
+    net: Box<dyn NetworkModel>,
     pool: PoolCache,
-    pool_comm: CommModel,
     slo: SloSpec,
     rng: SimRng,
     records: RecordStore,
@@ -248,18 +252,20 @@ impl Simulation {
             "cluster must be able to run both phases"
         );
 
-        let link = cfg.cluster.scheduler.interconnect.clone();
-        let comm = CommModel::analytic(link, Schedule::Overlapped);
-        let (pool, pool_comm) = match &cfg.pool_cache {
+        let (pool, pool_link) = match &cfg.pool_cache {
             Some(pc) => (
                 PoolCache::new(pc.capacity_blocks, cfg.cluster.workers[0].memory.block_size()),
-                CommModel::analytic(pc.link.clone(), Schedule::Sequential),
+                pc.link.clone(),
             ),
-            None => (
-                PoolCache::disabled(),
-                CommModel::analytic(crate::hardware::LinkSpec::pool_fabric(), Schedule::Sequential),
-            ),
+            None => (PoolCache::disabled(), crate::hardware::LinkSpec::pool_fabric()),
         };
+        let net_ctx = NetCtx {
+            n_workers: workers.len(),
+            interconnect: cfg.cluster.scheduler.interconnect.clone(),
+            pool_link,
+            swap_links: workers.iter().map(|w| w.mem.swap_link().cloned()).collect(),
+        };
+        let net = cfg.network.build(&net_ctx).context("building network model")?;
 
         let mut queue = EventQueue::new();
         queue.set_audit(cfg.engine.audit);
@@ -303,9 +309,8 @@ impl Simulation {
             workers,
             model,
             global,
-            comm,
+            net,
             pool,
-            pool_comm,
             slo: cfg.slo,
             rng: SimRng::new(cfg.workload.seed(), "driver"),
             records,
@@ -395,11 +400,15 @@ impl Simulation {
     }
 
     /// Audit mode: surface any violation recorded while handling the
-    /// last event — the queue's monotonicity check (A003) or a deferred
+    /// last event — the queue's monotonicity check (A003), the network
+    /// model's link-occupancy conservation check (A007) or a deferred
     /// handler-side check (see [`record_violation`]).
     fn audit_event_boundary(&mut self) -> Result<()> {
         if let Some(msg) = self.queue.take_violation() {
             return AuditViolation::err("A003", msg);
+        }
+        if let Err(msg) = self.net.audit_ledger(self.queue.now()) {
+            return AuditViolation::err("A007", msg);
         }
         if let Some(v) = self.audit_violation.take() {
             return Err(anyhow::Error::new(v));
@@ -472,13 +481,49 @@ impl Simulation {
         if !unrouted.is_empty() || !resubmitted.is_empty() {
             let views: Vec<WorkerView> =
                 self.workers.iter().map(|w| w.view(&self.requests)).collect();
-            decisions.extend(self.global.dispatch(
-                &unrouted,
-                resubmitted,
-                &views,
-                &self.requests,
-                &mut self.rng,
-            ));
+            if self.net.replica_groups() > 1 && !resubmitted.is_empty() {
+                // topology-aware hand-off placement: keep each KV
+                // migration inside its source's replica group (island,
+                // leaf) when a decode-capable worker exists there, so
+                // the transfer stays off the contended bridge / uplink;
+                // the global policy still picks *among* the group's
+                // members. A group with no decode worker falls back to
+                // the whole cluster.
+                decisions.extend(self.global.dispatch(
+                    &unrouted,
+                    &[],
+                    &views,
+                    &self.requests,
+                    &mut self.rng,
+                ));
+                for &rid in resubmitted {
+                    let src = self.requests[rid].worker.expect("resubmit without owner");
+                    let group = self.net.group_of(src);
+                    let local: Vec<WorkerView> = views
+                        .iter()
+                        .filter(|v| v.run_decode && self.net.group_of(v.id) == group)
+                        .cloned()
+                        .collect();
+                    let candidates = if local.is_empty() { &views } else { &local };
+                    decisions.extend(self.global.dispatch(
+                        &[],
+                        &[rid],
+                        candidates,
+                        &self.requests,
+                        &mut self.rng,
+                    ));
+                }
+            } else {
+                // single replica group: the exact pre-registry dispatch
+                // call (one RNG draw sequence, byte-identical schedules)
+                decisions.extend(self.global.dispatch(
+                    &unrouted,
+                    resubmitted,
+                    &views,
+                    &self.requests,
+                    &mut self.rng,
+                ));
+            }
         }
         let now = self.queue.now();
         for (rid, wid) in decisions {
@@ -493,10 +538,16 @@ impl Simulation {
                     let m = &self.workers[src].mem;
                     m.blocks_for_tokens(self.requests[rid].ctx_in_cache)
                 };
-                let t = self.comm.kv_transfer_time(blocks, self.workers[src].mem.block_bytes());
+                let xfer = self.net.transfer(
+                    Endpoint::Worker(src),
+                    Endpoint::Worker(wid),
+                    blocks,
+                    self.workers[src].mem.block_bytes(),
+                    now,
+                );
                 self.requests[rid].phase = Phase::Transferring;
-                self.queue
-                    .schedule_in(t, EventPayload::TransferDone { worker: wid, req: rid });
+                let done = EventPayload::TransferDone { worker: wid, req: rid };
+                self.queue.schedule_at(xfer.finish, done);
             } else {
                 // worker-level prefix-cache lookup (the prefix_cache
                 // manager layers the pool under the worker's allocator);
@@ -531,6 +582,10 @@ impl Simulation {
     }
 
     fn on_transfer_done(&mut self, wid: usize, rid: RequestId) {
+        // a transfer completing is the natural point to drop finished
+        // entries from the network model's occupancy ledger (contended
+        // models also self-advance on every priced transfer)
+        self.net.advance(self.queue.now());
         // KV arrives at the decode worker; free it on the source
         let src = self.requests[rid].worker.expect("transfer without owner");
         self.workers[src].mem.release(rid);
@@ -662,16 +717,27 @@ impl Simulation {
         };
         if fetch_blocks > 0 {
             dt += if self.pool.enabled() {
-                self.pool_comm.kv_transfer_time(fetch_blocks, w.mem.block_bytes())
+                let x = self.net.transfer(
+                    Endpoint::Pool,
+                    Endpoint::Worker(wid),
+                    fetch_blocks,
+                    w.mem.block_bytes(),
+                    now,
+                );
+                x.elapsed_from(now)
             } else {
                 w.mem.prefix_fetch_time(fetch_blocks)
             };
         }
-        if swap_blocks > 0 {
-            if let Some(link) = w.mem.swap_link() {
-                dt += xfer_time_uniform(swap_blocks, w.mem.block_bytes(), link)
-                    .of(Schedule::Sequential);
-            }
+        if swap_blocks > 0 && w.mem.swap_link().is_some() {
+            let x = self.net.transfer(
+                Endpoint::Host(wid),
+                Endpoint::Worker(wid),
+                swap_blocks,
+                w.mem.block_bytes(),
+                now,
+            );
+            dt += x.elapsed_from(now);
         }
         assert!(dt > 0.0, "iteration with work must take time");
         w.busy = true;

@@ -14,6 +14,7 @@ use crate::hardware::{HardwareSpec, LinkSpec};
 use crate::memory::MemorySpec;
 use crate::metrics::{MetricsMode, SloSpec};
 use crate::model::ModelSpec;
+use crate::network::NetworkSpec;
 use crate::scheduler::PolicySpec;
 use crate::workload::WorkloadSpecV2;
 
@@ -330,6 +331,10 @@ pub struct SimulationConfig {
     pub engine: EngineConfig,
     /// Metric aggregation (exact records vs streaming sketches).
     pub metrics: MetricsConfig,
+    /// Network topology selection (see [`crate::network::registry`] and
+    /// docs/CONFIG.md). An absent `network:` section selects `flat`,
+    /// which prices transfers exactly like the pre-registry driver.
+    pub network: NetworkSpec,
 }
 
 impl SimulationConfig {
@@ -356,6 +361,7 @@ impl SimulationConfig {
             sample_period: 0.0,
             engine: EngineConfig::default(),
             metrics: MetricsConfig::default(),
+            network: NetworkSpec::default(),
         }
     }
 
@@ -386,6 +392,7 @@ impl SimulationConfig {
             sample_period: 0.0,
             engine: EngineConfig::default(),
             metrics: MetricsConfig::default(),
+            network: NetworkSpec::default(),
         }
     }
 
@@ -487,6 +494,17 @@ impl SimulationConfig {
         // bad parameters
         compute.validate().context("in 'compute'")?;
 
+        // the `network:` section selects from the topology registry; an
+        // absent section is the pre-registry flat single-link pricing
+        let network = match y.get("network") {
+            Some(n) => {
+                let spec = NetworkSpec::from_yaml(n)?;
+                spec.validate().context("in 'network'")?;
+                spec
+            }
+            None => NetworkSpec::default(),
+        };
+
         Ok(Self {
             model,
             cluster: ClusterConfig { workers, scheduler },
@@ -508,6 +526,7 @@ impl SimulationConfig {
                 Some(m) => MetricsConfig::from_yaml(m)?,
                 None => MetricsConfig::default(),
             },
+            network,
         })
     }
 

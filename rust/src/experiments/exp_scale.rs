@@ -139,7 +139,7 @@ fn rel_close(a: f64, b: f64, tol: f64) -> bool {
 /// `benches/harness.rs` emits, so the CI artifact assembler needs no
 /// special case for the scale rows. Sketch cells append their
 /// peak-RSS estimate as an extra field.
-fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64, peak_rss: Option<u64>) {
+pub(super) fn emit_bench_row(name: &str, wall: f64, events_per_sec: f64, peak_rss: Option<u64>) {
     let Ok(path) = std::env::var("TOKENSIM_BENCH_JSON") else {
         return;
     };

@@ -11,6 +11,7 @@
 mod common;
 mod exp_hardware;
 mod exp_memory;
+mod exp_network;
 mod exp_scale;
 mod exp_workloads;
 mod fig04_validation;
@@ -38,10 +39,12 @@ use anyhow::{bail, Result};
 /// compares workload generators and per-tenant service quality,
 /// "hardware" sweeps the hardware catalog x compute models x PD splits
 /// for the price-normalized frontier, "scale" benchmarks the event
-/// engine at 10k–1M requests with decode fast-forwarding off/on).
+/// engine at 10k–1M requests with decode fast-forwarding off/on,
+/// "network" sweeps communication topologies x PD splits x replica
+/// counts for the contention-aware frontier).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies", "memory", "workloads", "hardware", "scale",
+    "fig14", "fig15", "policies", "memory", "workloads", "hardware", "scale", "network",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -65,6 +68,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "workloads" => exp_workloads::run(opts),
         "hardware" => exp_hardware::run(opts),
         "scale" => exp_scale::run(opts),
+        "network" => exp_network::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

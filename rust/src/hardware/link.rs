@@ -1,7 +1,17 @@
 //! Interconnect link specifications for the communication model.
-
+//!
+//! All link presets live in one [`LINK_CATALOG`] table — the single
+//! source of truth for names, aliases and parameters — read by
+//! [`LinkSpec::by_name`], the network-topology registry
+//! (`crate::network::registry`), the linter's did-you-mean hints and
+//! `tokensim list`.
 
 /// Named link presets matching the paper's hardware config (Fig 2a).
+///
+/// Pre-catalog enum kept for source compatibility; new code should
+/// select links by name through [`LinkSpec::by_name`] / the
+/// [`LINK_CATALOG`] table instead. Converts losslessly via
+/// `LinkSpec::from(kind)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LinkKind {
     Nvlink,
@@ -26,6 +36,63 @@ pub struct LinkSpec {
     pub buffer_depth: u32,
 }
 
+/// One row of the link-preset catalog: canonical name, accepted
+/// aliases (matched case-insensitively, like the registry tables), a
+/// one-line summary and the preset constructor.
+pub struct LinkCatalogEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub build: fn() -> LinkSpec,
+}
+
+/// The link-preset catalog. `by_name`, the network registry, lint
+/// did-you-mean hints and `tokensim list` all read this table, so a
+/// new preset is one row here.
+pub const LINK_CATALOG: &[LinkCatalogEntry] = &[
+    LinkCatalogEntry {
+        name: "NVLink",
+        aliases: &[],
+        summary: "intra-node GPU interconnect (600 GB/s, 5 us)",
+        build: LinkSpec::nvlink,
+    },
+    LinkCatalogEntry {
+        name: "PCIe",
+        aliases: &["pcie_gen4_x16"],
+        summary: "PCIe gen4 x16 (32 GB/s, 10 us)",
+        build: LinkSpec::pcie_gen4_x16,
+    },
+    LinkCatalogEntry {
+        name: "InfiniBand",
+        aliases: &["ib", "hdr200"],
+        summary: "inter-node HDR fabric (25 GB/s, 2 us)",
+        build: LinkSpec::infiniband,
+    },
+    LinkCatalogEntry {
+        name: "Ethernet-100G",
+        aliases: &["ethernet", "eth100g"],
+        summary: "shared 100G segment (12.5 GB/s, 50 us)",
+        build: LinkSpec::ethernet_100g,
+    },
+    LinkCatalogEntry {
+        name: "HostBus",
+        aliases: &["host-bus", "host_bus"],
+        summary: "host DRAM <-> device swap path (24 GB/s, 8 us)",
+        build: LinkSpec::host_bus,
+    },
+    LinkCatalogEntry {
+        name: "PoolFabric",
+        aliases: &["pool-fabric", "pool_fabric"],
+        summary: "MemServe-style pool retrieval (800 ns/block)",
+        build: LinkSpec::pool_fabric,
+    },
+];
+
+/// Canonical names of every catalogued link preset (listing order).
+pub fn link_preset_names() -> Vec<&'static str> {
+    LINK_CATALOG.iter().map(|e| e.name).collect()
+}
+
 impl LinkSpec {
     pub fn nvlink() -> Self {
         Self {
@@ -42,6 +109,17 @@ impl LinkSpec {
             bandwidth: 32e9,
             latency: 10e-6,
             buffer_depth: 4,
+        }
+    }
+
+    /// Inter-node HDR InfiniBand (200 Gb/s per port): the default
+    /// inter-island / uplink fabric of the topology models.
+    pub fn infiniband() -> Self {
+        Self {
+            name: "InfiniBand".into(),
+            bandwidth: 25e9,
+            latency: 2e-6,
+            buffer_depth: 8,
         }
     }
 
@@ -75,24 +153,19 @@ impl LinkSpec {
     }
 
     pub fn of_kind(kind: LinkKind) -> Self {
-        match kind {
-            LinkKind::Nvlink => Self::nvlink(),
-            LinkKind::Pcie => Self::pcie_gen4_x16(),
-            LinkKind::Ethernet100G => Self::ethernet_100g(),
-            LinkKind::HostBus => Self::host_bus(),
-            LinkKind::PoolFabric => Self::pool_fabric(),
-        }
+        kind.into()
     }
 
+    /// Look a preset up in [`LINK_CATALOG`] by canonical name or alias,
+    /// case-insensitively.
     pub fn by_name(name: &str) -> Option<Self> {
-        match name {
-            "NVLink" | "nvlink" => Some(Self::nvlink()),
-            "PCIe" | "pcie" => Some(Self::pcie_gen4_x16()),
-            "Ethernet-100G" | "ethernet-100g" => Some(Self::ethernet_100g()),
-            "HostBus" | "host-bus" => Some(Self::host_bus()),
-            "PoolFabric" | "pool-fabric" => Some(Self::pool_fabric()),
-            _ => None,
-        }
+        LINK_CATALOG
+            .iter()
+            .find(|e| {
+                e.name.eq_ignore_ascii_case(name)
+                    || e.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+            })
+            .map(|e| (e.build)())
     }
 
     /// The float32 vector consumed by the xfer-cost artifact.
@@ -113,6 +186,18 @@ impl LinkSpec {
     }
 }
 
+impl From<LinkKind> for LinkSpec {
+    fn from(kind: LinkKind) -> Self {
+        match kind {
+            LinkKind::Nvlink => Self::nvlink(),
+            LinkKind::Pcie => Self::pcie_gen4_x16(),
+            LinkKind::Ethernet100G => Self::ethernet_100g(),
+            LinkKind::HostBus => Self::host_bus(),
+            LinkKind::PoolFabric => Self::pool_fabric(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,7 +205,8 @@ mod tests {
     #[test]
     fn preset_ordering() {
         assert!(LinkSpec::nvlink().bandwidth > LinkSpec::pcie_gen4_x16().bandwidth);
-        assert!(LinkSpec::pcie_gen4_x16().bandwidth > LinkSpec::ethernet_100g().bandwidth);
+        assert!(LinkSpec::pcie_gen4_x16().bandwidth > LinkSpec::infiniband().bandwidth);
+        assert!(LinkSpec::infiniband().bandwidth > LinkSpec::ethernet_100g().bandwidth);
     }
 
     #[test]
@@ -138,9 +224,35 @@ mod tests {
             (LinkKind::Nvlink, "NVLink"),
             (LinkKind::Pcie, "PCIe"),
             (LinkKind::Ethernet100G, "Ethernet-100G"),
+            (LinkKind::HostBus, "HostBus"),
+            (LinkKind::PoolFabric, "PoolFabric"),
         ] {
             assert_eq!(LinkSpec::of_kind(kind), LinkSpec::by_name(name).unwrap());
+            assert_eq!(LinkSpec::from(kind), LinkSpec::by_name(name).unwrap());
         }
+    }
+
+    #[test]
+    fn catalog_resolves_every_name_alias_and_case() {
+        for entry in LINK_CATALOG {
+            let canon = (entry.build)();
+            assert_eq!(canon.name, entry.name, "preset name matches catalog row");
+            assert_eq!(LinkSpec::by_name(entry.name).unwrap(), canon);
+            assert_eq!(
+                LinkSpec::by_name(&entry.name.to_lowercase()).unwrap(),
+                canon,
+                "{}: case-insensitive",
+                entry.name
+            );
+            for alias in entry.aliases {
+                assert_eq!(LinkSpec::by_name(alias).unwrap(), canon, "alias {alias}");
+            }
+        }
+        // the pre-catalog spellings stay accepted
+        for name in ["nvlink", "pcie", "ethernet-100g", "host-bus", "pool-fabric"] {
+            assert!(LinkSpec::by_name(name).is_some(), "{name}");
+        }
+        assert!(LinkSpec::by_name("no-such-link").is_none());
     }
 
     #[test]

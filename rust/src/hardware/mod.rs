@@ -9,4 +9,4 @@ mod catalog;
 mod link;
 
 pub use catalog::HardwareSpec;
-pub use link::{LinkKind, LinkSpec};
+pub use link::{link_preset_names, LinkCatalogEntry, LinkKind, LinkSpec, LINK_CATALOG};

@@ -14,9 +14,11 @@
 //! management (paged / contiguous / host-swap / cross-request prefix
 //! cache, with recompute or swap preemption), pluggable workload
 //! generators (synthetic / trace replay / bursty / multi-tenant /
-//! long-context), a communication model for KV movement, and QoS
-//! metrics (latency percentiles / CDFs, TTFT / mTPOT SLO attainment,
-//! per-tenant breakdowns, memory timelines).
+//! long-context), pluggable network topologies for KV movement (flat /
+//! NVLink islands / fat-tree / shared ethernet, with per-link
+//! bandwidth contention), and QoS metrics (latency percentiles / CDFs,
+//! TTFT / mTPOT SLO attainment, per-tenant breakdowns, memory
+//! timelines).
 //!
 //! ## Architecture (three layers)
 //!
@@ -82,6 +84,7 @@ pub mod prelude {
     };
     pub use crate::metrics::{RequestRecord, SloSpec};
     pub use crate::model::ModelSpec;
+    pub use crate::network::{NetworkModel, NetworkSpec};
     pub use crate::scheduler::{GlobalScheduler, LocalScheduler, PolicySpec};
     pub use crate::sim::SimTime;
     pub use crate::workload::{

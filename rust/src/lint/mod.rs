@@ -228,6 +228,21 @@ pub const RULES: &[RuleInfo] = &[
         severity: Severity::Error,
         summary: "SLO target below the compute model's per-iteration floor (unattainable)",
     },
+    RuleInfo {
+        code: "E060",
+        severity: Severity::Error,
+        summary: "unknown network topology, with did-you-mean",
+    },
+    RuleInfo {
+        code: "E061",
+        severity: Severity::Error,
+        summary: "unknown link preset in a network parameter, with did-you-mean",
+    },
+    RuleInfo {
+        code: "W062",
+        severity: Severity::Warn,
+        summary: "network topology shape vs worker count: inter-group link never exercised",
+    },
 ];
 
 /// The engine's audit-mode invariants (`engine: audit: true`), named
@@ -262,6 +277,11 @@ pub const AUDIT_CHECKS: &[RuleInfo] = &[
         code: "A006",
         severity: Severity::Error,
         summary: "metrics record consistency: completion stamps ordered, records == finished",
+    },
+    RuleInfo {
+        code: "A007",
+        severity: Severity::Error,
+        summary: "link-occupancy conservation: transfers well-formed, busy-time released on time",
     },
 ];
 
@@ -510,6 +530,7 @@ enum Section {
     Memory,
     Workload,
     Compute,
+    Network,
 }
 
 impl Section {
@@ -519,6 +540,7 @@ impl Section {
             Section::Memory => "E011",
             Section::Workload => "E012",
             Section::Compute => "E013",
+            Section::Network => "E060",
         }
     }
 
@@ -529,6 +551,7 @@ impl Section {
             Section::Memory => "memory manager",
             Section::Workload => "workload generator",
             Section::Compute => "compute model",
+            Section::Network => "network topology",
         }
     }
 
@@ -566,6 +589,12 @@ impl Section {
                     out.extend(e.aliases);
                 }
             }
+            Section::Network => {
+                for e in crate::network::NETWORK_TOPOLOGIES {
+                    out.push(e.name);
+                    out.extend(e.aliases);
+                }
+            }
         }
         out
     }
@@ -596,6 +625,10 @@ impl Section {
                 .iter()
                 .find(|e| matches(e.name, e.aliases))
                 .map(|e| e.params),
+            Section::Network => crate::network::NETWORK_TOPOLOGIES
+                .iter()
+                .find(|e| matches(e.name, e.aliases))
+                .map(|e| e.params),
         }
     }
 }
@@ -609,6 +642,22 @@ fn classify(section: Section, name: &str, err: &anyhow::Error, out: &mut Vec<Dia
             format!("unknown {} '{name}'", section.label()),
         );
         if let Some(sugg) = did_you_mean(name, section.known_names()) {
+            d = d.with_fix(format!("did you mean '{sugg}'?"));
+        }
+        out.push(d);
+        return;
+    }
+    // a link-typed network parameter naming a preset outside the
+    // hardware catalog (the did-you-mean pool is the catalog itself)
+    if matches!(section, Section::Network) && msg.contains("unknown link preset") {
+        let bad = msg.split('\'').nth(1).unwrap_or("").to_string();
+        let mut d = Diagnostic::error("E061", format!("{} '{name}': {msg}", section.label()));
+        let mut pool: Vec<&'static str> = Vec::new();
+        for e in crate::hardware::LINK_CATALOG {
+            pool.push(e.name);
+            pool.extend(e.aliases);
+        }
+        if let Some(sugg) = did_you_mean(&bad, pool) {
             d = d.with_fix(format!("did you mean '{sugg}'?"));
         }
         out.push(d);
@@ -739,6 +788,13 @@ fn structural(y: &Yaml, out: &mut Vec<Diagnostic>) {
             classify(Section::Compute, &spec.name, &e, out);
         }
     }
+    if let Some(n) = y.get("network") {
+        if let Ok(spec) = crate::network::NetworkSpec::from_yaml(n) {
+            if let Err(e) = spec.validate() {
+                classify(Section::Network, &spec.name, &e, out);
+            }
+        }
+    }
     if let Some(e) = y.get("engine") {
         check_section_keys(e, "engine", ENGINE_KEYS, out);
     }
@@ -846,6 +902,30 @@ workload:
         let r = lint_text("t", &text);
         assert_eq!(codes(&r), vec!["E013"]);
         assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("analytic"));
+    }
+
+    #[test]
+    fn unknown_network_topology_is_e060() {
+        let text = format!("{BASE}network:\n  topology: nvlink_iland\n");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E060"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("nvlink_island"));
+    }
+
+    #[test]
+    fn unknown_network_link_is_e061() {
+        let text = format!("{BASE}network:\n  topology: ethernet\n  link: ethrnet\n");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E061"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("ethernet"));
+    }
+
+    #[test]
+    fn unknown_network_parameter_is_e014() {
+        let text = format!("{BASE}network:\n  topology: nvlink_island\n  island_sz: 2\n");
+        let r = lint_text("t", &text);
+        assert_eq!(codes(&r), vec!["E014"]);
+        assert!(r.diagnostics[0].fix.as_deref().unwrap().contains("island_size"));
     }
 
     #[test]

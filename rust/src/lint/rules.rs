@@ -9,8 +9,10 @@
 use crate::compute::{BatchDesc, ComputeCtx, ComputeSpec};
 use crate::config::yaml::Yaml;
 use crate::config::{WindowCost, WorkerConfig};
+use crate::hardware::LinkSpec;
 use crate::memory::PreemptionPolicy;
 use crate::metrics::MetricsMode;
+use crate::network::NetCtx;
 use crate::scheduler::PolicySpec;
 
 use super::{Diagnostic, LintCtx};
@@ -23,6 +25,7 @@ pub(crate) fn run(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     affine_window(ctx, out); // W040, W041
     sketch_metrics(ctx, out); // I042
     slo_floor(ctx, out); // E050
+    network_shape(ctx, out); // W062
 }
 
 /// Canonical registry name for a possibly-aliased selection, `None`
@@ -432,6 +435,54 @@ fn slo_floor(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// W062: network topology shape vs worker count
+// ---------------------------------------------------------------------------
+
+/// A grouped topology (NVLink islands / fat-tree leaves) sized so every
+/// worker lands in one group prices all traffic on the intra-group
+/// link: the inter-group bridge/uplink the selection implies is never
+/// exercised, and the run silently measures a flat fabric. Ragged
+/// groups are flagged too — topology-aware replica routing assumes
+/// same-shaped groups.
+fn network_shape(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    let n = ctx.cfg.total_workers() as usize;
+    let Ok(model) = ctx.cfg.network.build(&NetCtx::uniform(n, LinkSpec::nvlink())) else {
+        return; // unknown topology / bad params: pass 1 already reported it
+    };
+    let groups = model.replica_groups();
+    if groups <= 1 {
+        if matches!(model.name(), "nvlink_island" | "fat_tree") {
+            out.push(
+                Diagnostic::warn(
+                    "W062",
+                    format!(
+                        "network topology '{}' places all {n} workers in a single \
+                         island/leaf — the inter-group link is never exercised and the \
+                         topology degrades to 'flat'",
+                        model.name()
+                    ),
+                )
+                .with_fix("shrink island_size/arity below the worker count, or select 'flat'"),
+            );
+        }
+        return;
+    }
+    if n % groups != 0 {
+        out.push(
+            Diagnostic::warn(
+                "W062",
+                format!(
+                    "network topology '{}' splits {n} workers into {groups} uneven \
+                     groups — the ragged last group skews topology-aware replica routing",
+                    model.name()
+                ),
+            )
+            .with_fix("size the cluster to a multiple of the island/leaf size"),
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::lint_text;
@@ -568,6 +619,36 @@ workload:
     #[test]
     fn paper_default_slos_are_attainable() {
         let yaml = format!("{}slo:\n  ttft: 15.0\n  mtpot: 0.3\n", base_with(SMALL_WL, ""));
+        let c = codes(&yaml);
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn single_island_topology_is_w062() {
+        let yaml = format!(
+            "{}network:\n  topology: nvlink_island\n  island_size: 8\n",
+            base_with(SMALL_WL, "")
+        );
+        let c = codes(&yaml);
+        assert_eq!(c, vec!["W062"]);
+    }
+
+    #[test]
+    fn ragged_islands_are_w062() {
+        let yaml = format!(
+            "{}network:\n  topology: nvlink_island\n  island_size: 2\n",
+            base_with(SMALL_WL, "    - hardware: A100\n    - hardware: A100\n")
+        );
+        let c = codes(&yaml);
+        assert_eq!(c, vec!["W062"]);
+    }
+
+    #[test]
+    fn well_shaped_island_topology_is_clean() {
+        let yaml = format!(
+            "{}network:\n  topology: nvlink_island\n  island_size: 1\n",
+            base_with(SMALL_WL, "    - hardware: A100\n")
+        );
         let c = codes(&yaml);
         assert!(c.is_empty(), "{c:?}");
     }

@@ -25,8 +25,8 @@ fn usage() -> &'static str {
      USAGE:\n\
        tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--window-cost <replay|affine>] [--metrics <exact|sketch>] [--audit]\n\
        tokensim lint <file.yaml>... [--json] [--deny-warnings]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
-       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, lint rules, engine knobs, presets\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|network|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
+       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, network topologies, lint rules, engine knobs, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n\
      \n\
@@ -309,6 +309,11 @@ fn cmd_list(args: &[String]) -> Result<()> {
         println!("  {name:<18} {summary}");
         println!("  {:<18}   params: {params}", "");
     }
+    println!("\nnetwork topologies (`network: topology:`):");
+    for (name, summary, params) in tokensim::network::network_topologies() {
+        println!("  {name:<16} {summary}");
+        println!("  {:<16}   params: {params}", "");
+    }
     println!("\nlint rules (`tokensim lint <config.yaml>`):");
     for (code, severity, summary) in tokensim::lint::lint_rules() {
         let sev = severity.to_string();
@@ -327,7 +332,15 @@ fn cmd_list(args: &[String]) -> Result<()> {
     println!("  sketch_error <f64>       sketch relative-error target (default 0.01)");
     println!("\nmodel presets: llama2-7b, llama2-13b, opt-13b, tiny");
     println!("hardware presets: A100, V100, G6-AiM, A100-1/4T");
-    println!("link presets: NVLink, PCIe, Ethernet-100G, HostBus, PoolFabric");
+    println!("\nlink presets (catalog-driven; accepted by every `*_link:` key):");
+    for e in tokensim::hardware::LINK_CATALOG {
+        let aliases = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", e.aliases.join(", "))
+        };
+        println!("  {:<16} {}{aliases}", e.name, e.summary);
+    }
     Ok(())
 }
 

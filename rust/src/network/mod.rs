@@ -1,18 +1,136 @@
-//! Communication model: KV-cache movement between workers, hosts and
-//! the memory pool.
+//! Network subsystem: KV-cache movement between workers, hosts and
+//! the memory pool — the fifth pluggable registry.
 //!
 //! Mirrors the paper's §III-B communication component: "takes cache
 //! location, data size and memory bandwidth as arguments and returns
 //! the time to transfer the data", with sequential and overlapped
-//! (preload-buffer) schedules. The semantics are defined by the
-//! `xfer_cost` artifact (L2/L1); [`CommModel`] evaluates either through
-//! the artifact (validation path) or the bit-compatible rust mirror
-//! (default on the hot path — transfers are far rarer than iterations).
+//! (preload-buffer) schedules. [`CommModel`] is the original flat
+//! point-to-point model (artifact-backed on the validation path);
+//! [`NetworkModel`] generalizes it to whole topologies selected by
+//! name through [`NetworkSpec`] (`network: {topology: …}` in YAML):
+//! `flat` (the default, byte-identical to `CommModel` pricing),
+//! `nvlink_island`, `fat_tree` and `ethernet`, each charging per-link
+//! bandwidth contention through a busy-until occupancy ledger
+//! ([`LinkLedger`]). Out-of-tree topologies plug in via
+//! [`register_network`].
+
+pub mod registry;
+pub mod topology;
+
+pub use registry::{
+    build_network, network_topologies, register_network, NetCtx, NetworkEntry, NetworkSpec,
+    NETWORK_TOPOLOGIES,
+};
+pub use topology::{EthernetNetwork, FatTreeNetwork, FlatNetwork, LinkLedger, NvlinkIslandNetwork};
 
 use anyhow::Result;
 
 use crate::hardware::LinkSpec;
 use crate::runtime::{CompiledArtifact, Manifest};
+
+/// One end of a KV transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// A worker's device memory.
+    Worker(usize),
+    /// Host DRAM attached to a worker (the swap path).
+    Host(usize),
+    /// The shared cross-request memory pool.
+    Pool,
+}
+
+/// A priced transfer: when it starts (after queueing behind earlier
+/// traffic on its links), when it finishes, the on-wire time, and the
+/// links it crossed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    /// When the transfer acquires its links (`>= now` at the call).
+    pub start: f64,
+    /// When the last byte lands (`start + duration`).
+    pub finish: f64,
+    /// On-wire time, excluding queueing delay.
+    pub duration: f64,
+    /// Names of the links crossed, in path order.
+    pub path: Vec<String>,
+}
+
+impl Transfer {
+    /// A zero-byte transfer: free, crosses nothing.
+    pub fn instant(now: f64) -> Self {
+        Self {
+            start: now,
+            finish: now,
+            duration: 0.0,
+            path: Vec::new(),
+        }
+    }
+
+    /// Wall-clock cost seen by a caller blocking from `now`: queueing
+    /// delay plus on-wire time. Exactly `duration` when uncontended.
+    pub fn elapsed_from(&self, now: f64) -> f64 {
+        (self.start - now) + self.duration
+    }
+}
+
+/// The transfer schedule a src/dst class pair uses: worker-to-worker
+/// KV migration pipelines through the preload buffer (overlapped);
+/// swap and pool traffic moves sequentially — matching the three
+/// pre-registry `CommModel` fields of the cluster driver.
+pub fn class_schedule(src: Endpoint, dst: Endpoint) -> Schedule {
+    match (src, dst) {
+        (Endpoint::Worker(_), Endpoint::Worker(_)) => Schedule::Overlapped,
+        _ => Schedule::Sequential,
+    }
+}
+
+/// A cluster-wide communication topology.
+///
+/// The cluster driver holds one `Box<dyn NetworkModel>` and charges
+/// every KV movement through it: prefill→decode migration
+/// (`Worker→Worker`), swap preempt/restore (`Host↔Worker`) and pool
+/// fetches (`Pool→Worker`). Implementations price each transfer and
+/// may additionally track per-link occupancy so concurrent transfers
+/// queue against each other.
+pub trait NetworkModel: Send {
+    /// Registry name of the topology.
+    fn name(&self) -> &str;
+
+    /// Price a transfer of `n_blocks` KV blocks of `block_bytes` bytes
+    /// each from `src` to `dst`, claiming link occupancy from `now`.
+    fn transfer(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        n_blocks: u64,
+        block_bytes: u64,
+        now: f64,
+    ) -> Transfer;
+
+    /// Release hook: drop in-flight bookkeeping for transfers that
+    /// finished by `now`. Contended models also self-advance on every
+    /// [`NetworkModel::transfer`], so calling this is an optimization,
+    /// not a correctness requirement.
+    fn advance(&mut self, _now: f64) {}
+
+    /// Audit hook (check A007): link-occupancy conservation — no
+    /// transfer finishes before it starts, busy-time is never
+    /// double-released. Read-only; must not perturb pricing.
+    fn audit_ledger(&self, _now: f64) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Number of replica groups the topology partitions workers into
+    /// (islands, leaves, …). `1` means no partitioning: the global
+    /// scheduler dispatches exactly as it did pre-registry.
+    fn replica_groups(&self) -> usize {
+        1
+    }
+
+    /// The replica group a worker belongs to.
+    fn group_of(&self, _worker: usize) -> usize {
+        0
+    }
+}
 
 /// Transfer schedule selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

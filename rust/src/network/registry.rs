@@ -1,0 +1,469 @@
+//! String-keyed network-topology registry — the network counterpart
+//! of [`crate::scheduler::registry`] and the other three registries.
+//!
+//! A topology is selected by name — from YAML (`network: {topology:
+//! nvlink_island}`) or programmatically via [`NetworkSpec`] — and
+//! built from its parameter map against a [`NetCtx`] describing the
+//! fleet. The cluster driver only ever sees `Box<dyn NetworkModel>`,
+//! so adding a topology never touches `cluster/mod.rs`: implement the
+//! trait, then either add a [`NetworkEntry`] to the built-in table or
+//! call [`register_network`] at startup.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::yaml::Yaml;
+use crate::hardware::LinkSpec;
+
+use super::topology::{EthernetNetwork, FatTreeNetwork, FlatNetwork, NvlinkIslandNetwork};
+use super::NetworkModel;
+
+/// The fleet a topology is built against: worker count plus the link
+/// presets the pre-registry driver wired directly — the scheduler
+/// interconnect, the pool fabric, and each worker's swap link (if its
+/// memory manager has one). `flat` reproduces exactly these; the
+/// contended topologies use them as per-hop defaults.
+#[derive(Debug, Clone)]
+pub struct NetCtx {
+    pub n_workers: usize,
+    /// The `cluster: scheduler: interconnect:` link.
+    pub interconnect: LinkSpec,
+    /// The pool-cache link (`pool_cache: link:`, or the PoolFabric
+    /// preset when no pool is configured).
+    pub pool_link: LinkSpec,
+    /// Per-worker host swap link, `None` for managers that never swap.
+    pub swap_links: Vec<Option<LinkSpec>>,
+}
+
+impl NetCtx {
+    /// A uniform fleet over one interconnect: pool on the default
+    /// fabric, no swap links. What [`NetworkSpec::validate`] and most
+    /// tests build against.
+    pub fn uniform(n_workers: usize, interconnect: LinkSpec) -> Self {
+        Self {
+            n_workers,
+            interconnect,
+            pool_link: LinkSpec::pool_fabric(),
+            swap_links: vec![None; n_workers],
+        }
+    }
+}
+
+/// A declarative, cloneable network-topology selection: a registry
+/// name plus a parameter map (the YAML subtree, or a programmatically
+/// built map). This is what configs store — the built
+/// `Box<dyn NetworkModel>` carries a mutable occupancy ledger and is
+/// neither cloneable nor comparable.
+///
+/// # Examples
+///
+/// ```
+/// use tokensim::hardware::LinkSpec;
+/// use tokensim::network::{NetCtx, NetworkSpec};
+///
+/// let spec = NetworkSpec::new("nvlink_island").with("island_size", 2u64);
+/// let net = spec.build(&NetCtx::uniform(4, LinkSpec::nvlink())).unwrap();
+/// assert_eq!(net.name(), "nvlink_island");
+/// assert_eq!(net.replica_groups(), 2);
+///
+/// // unknown names are errors listing the known topologies
+/// assert!(NetworkSpec::new("torus")
+///     .build(&NetCtx::uniform(2, LinkSpec::nvlink()))
+///     .is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    /// Registry name (case-insensitive; aliases accepted).
+    pub name: String,
+    /// Topology parameters (a [`Yaml::Map`]).
+    pub params: Yaml,
+}
+
+impl Default for NetworkSpec {
+    /// The default topology: `flat`, byte-identical to the
+    /// pre-registry single-link pricing.
+    fn default() -> Self {
+        Self::new("flat")
+    }
+}
+
+impl NetworkSpec {
+    /// A spec with no parameters (registry defaults apply).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            params: Yaml::Map(Default::default()),
+        }
+    }
+
+    /// Builder-style parameter.
+    pub fn with(mut self, key: &str, value: impl Into<Yaml>) -> Self {
+        if let Yaml::Map(m) = &mut self.params {
+            m.insert(key.to_string(), value.into());
+        }
+        self
+    }
+
+    /// Parse from a YAML map of the form `{topology: <name>, <params>…}`.
+    /// A missing `topology` key selects `flat` (configs without a
+    /// `network:` section keep their pre-registry behavior).
+    pub fn from_yaml(y: &Yaml) -> Result<Self> {
+        let name = match y.get("topology") {
+            None => "flat".to_string(),
+            Some(v) => v
+                .as_str()
+                .context("'topology' must be a string (a network-topology name)")?
+                .to_string(),
+        };
+        Ok(Self {
+            name,
+            params: y.clone(),
+        })
+    }
+
+    /// Build the topology this spec names over the given fleet.
+    pub fn build(&self, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+        build_network(self, ctx)
+    }
+
+    /// Check the spec without a real fleet: unknown topology names,
+    /// unknown link presets, typo'd parameter keys and malformed
+    /// values are errors at parse time, not mid-simulation.
+    pub fn validate(&self) -> Result<()> {
+        self.build(&NetCtx::uniform(4, LinkSpec::nvlink())).map(|_| ())
+    }
+
+    /// Whether this spec selects the default flat topology (under any
+    /// alias) — the only one with no shape to check.
+    pub fn is_flat(&self) -> bool {
+        NETWORK_TOPOLOGIES
+            .iter()
+            .find(|e| matches_name(&self.name, e.name, e.aliases))
+            .is_some_and(|e| e.name == "flat")
+    }
+}
+
+/// A built-in network topology: name, aliases, summary, parameter
+/// keys, constructor.
+pub struct NetworkEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// One-line description (shown by `tokensim list`).
+    pub summary: &'static str,
+    /// Accepted parameter keys — anything else in the spec is an error
+    /// (catches typo'd keys at parse time).
+    pub params: &'static [&'static str],
+    pub build: fn(&Yaml, &NetCtx) -> Result<Box<dyn NetworkModel>>,
+}
+
+// Strict optional accessors, as in the other registries: a *missing*
+// key takes the default, a present-and-malformed value is an error.
+
+fn opt_usize_strict(p: &Yaml, key: &str, default: usize) -> Result<usize> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .map(|n| n as usize)
+            .with_context(|| format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+fn link_param(p: &Yaml, key: &str, default: LinkSpec) -> Result<LinkSpec> {
+    match p.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let name = v
+                .as_str()
+                .with_context(|| format!("'{key}' must be a link preset name"))?;
+            LinkSpec::by_name(name).with_context(|| format!("unknown link preset '{name}'"))
+        }
+    }
+}
+
+fn build_flat(_p: &Yaml, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+    Ok(Box::new(FlatNetwork::new(ctx)))
+}
+
+fn build_nvlink_island(p: &Yaml, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+    let island_size = opt_usize_strict(p, "island_size", 4)?;
+    if island_size == 0 {
+        bail!("'island_size' must be >= 1");
+    }
+    let intra = link_param(p, "intra_link", ctx.interconnect.clone())?;
+    let inter = link_param(p, "inter_link", LinkSpec::infiniband())?;
+    Ok(Box::new(NvlinkIslandNetwork::new(ctx, island_size, intra, inter)))
+}
+
+fn build_fat_tree(p: &Yaml, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+    let arity = opt_usize_strict(p, "arity", 4)?;
+    if arity == 0 {
+        bail!("'arity' must be >= 1");
+    }
+    let access = link_param(p, "access_link", ctx.interconnect.clone())?;
+    let uplink = link_param(p, "uplink", LinkSpec::infiniband())?;
+    Ok(Box::new(FatTreeNetwork::new(ctx, arity, access, uplink)))
+}
+
+fn build_ethernet(p: &Yaml, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+    let segment = link_param(p, "link", LinkSpec::ethernet_100g())?;
+    Ok(Box::new(EthernetNetwork::new(ctx, segment)))
+}
+
+/// Built-in network topologies.
+pub const NETWORK_TOPOLOGIES: &[NetworkEntry] = &[
+    NetworkEntry {
+        name: "flat",
+        aliases: &["uniform", "single_link"],
+        summary: "one uncontended all-to-all link (the pre-registry CommModel; default)",
+        params: &[],
+        build: build_flat,
+    },
+    NetworkEntry {
+        name: "nvlink_island",
+        aliases: &["island", "dgx"],
+        summary: "full-bandwidth islands bridged by a slower inter-island link",
+        params: &["island_size", "intra_link", "inter_link"],
+        build: build_nvlink_island,
+    },
+    NetworkEntry {
+        name: "fat_tree",
+        aliases: &["fattree", "clos"],
+        summary: "k-ary leaf/spine tree; cross-leaf transfers share per-uplink bandwidth",
+        params: &["arity", "access_link", "uplink"],
+        build: build_fat_tree,
+    },
+    NetworkEntry {
+        name: "ethernet",
+        aliases: &["shared", "lan"],
+        summary: "one shared segment every worker-to-worker and pool transfer contends on",
+        params: &["link"],
+        build: build_ethernet,
+    },
+];
+
+// ---------------------------------------------------------------------------
+// Runtime registration (library users; built-ins live in the table)
+// ---------------------------------------------------------------------------
+
+struct DynNetworkEntry {
+    name: String,
+    summary: String,
+    #[allow(clippy::type_complexity)]
+    build: Box<dyn Fn(&Yaml, &NetCtx) -> Result<Box<dyn NetworkModel>> + Send + Sync>,
+}
+
+fn extra_networks() -> &'static Mutex<Vec<DynNetworkEntry>> {
+    static EXTRA: OnceLock<Mutex<Vec<DynNetworkEntry>>> = OnceLock::new();
+    EXTRA.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a network topology at runtime. Registered names take
+/// precedence over built-ins, so a library user can also shadow a
+/// built-in topology.
+///
+/// # Examples
+///
+/// A "bring your own fabric" flow — here just a reparameterized
+/// built-in, but any [`NetworkModel`] implementation works the same:
+///
+/// ```
+/// use tokensim::hardware::LinkSpec;
+/// use tokensim::network::{register_network, Endpoint, FlatNetwork, NetCtx, NetworkSpec};
+///
+/// register_network("copper", "flat over PCIe (demo)", |_params, ctx| {
+///     let mut slow = ctx.clone();
+///     slow.interconnect = LinkSpec::pcie_gen4_x16();
+///     Ok(Box::new(FlatNetwork::new(&slow)))
+/// });
+///
+/// let mut net = NetworkSpec::new("copper")
+///     .build(&NetCtx::uniform(2, LinkSpec::nvlink()))
+///     .unwrap();
+/// let t = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 8, 1 << 20, 0.0);
+/// let mut fast = NetworkSpec::new("flat")
+///     .build(&NetCtx::uniform(2, LinkSpec::nvlink()))
+///     .unwrap();
+/// let t0 = fast.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 8, 1 << 20, 0.0);
+/// assert!(t.finish > t0.finish);
+/// ```
+pub fn register_network(
+    name: &str,
+    summary: &str,
+    build: impl Fn(&Yaml, &NetCtx) -> Result<Box<dyn NetworkModel>> + Send + Sync + 'static,
+) {
+    extra_networks().lock().unwrap().push(DynNetworkEntry {
+        name: name.to_string(),
+        summary: summary.to_string(),
+        build: Box::new(build),
+    });
+}
+
+fn matches_name(candidate: &str, name: &str, aliases: &[&str]) -> bool {
+    candidate.eq_ignore_ascii_case(name)
+        || aliases.iter().any(|a| candidate.eq_ignore_ascii_case(a))
+}
+
+/// Reject typo'd parameter keys for built-in topologies ("topology"
+/// itself is the selector key YAML specs carry). Runtime-registered
+/// topologies validate their own params in their builder.
+fn check_param_keys(spec: &NetworkSpec, known: &[&str]) -> Result<()> {
+    if let Yaml::Map(m) = &spec.params {
+        for key in m.keys() {
+            if key != "topology" && !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown parameter '{key}' for network topology '{}' (accepted: {})",
+                    spec.name,
+                    if known.is_empty() {
+                        "none".to_string()
+                    } else {
+                        known.join(", ")
+                    }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Build a network topology from a spec. Unknown names list the known
+/// topologies in the error.
+pub fn build_network(spec: &NetworkSpec, ctx: &NetCtx) -> Result<Box<dyn NetworkModel>> {
+    {
+        let extras = extra_networks().lock().unwrap();
+        if let Some(e) = extras
+            .iter()
+            .rev()
+            .find(|e| spec.name.eq_ignore_ascii_case(&e.name))
+        {
+            return (e.build)(&spec.params, ctx)
+                .with_context(|| format!("building network topology '{}'", spec.name));
+        }
+    }
+    let entry = NETWORK_TOPOLOGIES
+        .iter()
+        .find(|e| matches_name(&spec.name, e.name, e.aliases))
+        .with_context(|| {
+            format!(
+                "unknown network topology '{}' (known: {})",
+                spec.name,
+                network_topologies()
+                    .iter()
+                    .map(|(n, _, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+    check_param_keys(spec, entry.params)?;
+    (entry.build)(&spec.params, ctx)
+        .with_context(|| format!("building network topology '{}'", spec.name))
+}
+
+/// All registered topologies as `(name, summary, accepted-params)`,
+/// built-ins first.
+pub fn network_topologies() -> Vec<(String, String, String)> {
+    let mut out: Vec<(String, String, String)> = NETWORK_TOPOLOGIES
+        .iter()
+        .map(|e| {
+            (
+                e.name.to_string(),
+                e.summary.to_string(),
+                if e.params.is_empty() {
+                    "(none)".to_string()
+                } else {
+                    e.params.join(", ")
+                },
+            )
+        })
+        .collect();
+    for e in extra_networks().lock().unwrap().iter() {
+        out.push((
+            e.name.clone(),
+            e.summary.clone(),
+            "(topology-defined)".to_string(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::Endpoint;
+
+    fn ctx() -> NetCtx {
+        NetCtx::uniform(4, LinkSpec::nvlink())
+    }
+
+    #[test]
+    fn builds_every_builtin_topology_with_defaults() {
+        for e in NETWORK_TOPOLOGIES {
+            let mut net = NetworkSpec::new(e.name)
+                .build(&ctx())
+                .unwrap_or_else(|err| panic!("{}: {err:#}", e.name));
+            assert_eq!(net.name(), e.name);
+            let t = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 4, 1 << 20, 0.0);
+            assert!(t.finish > 0.0, "{}", e.name);
+            assert!(net.audit_ledger(t.finish).is_ok(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        for (alias, canonical) in [
+            ("UNIFORM", "flat"),
+            ("island", "nvlink_island"),
+            ("DGX", "nvlink_island"),
+            ("clos", "fat_tree"),
+            ("lan", "ethernet"),
+        ] {
+            let net = NetworkSpec::new(alias).build(&ctx()).unwrap();
+            assert_eq!(net.name(), canonical, "{alias}");
+        }
+    }
+
+    #[test]
+    fn unknown_topology_is_error_listing_known() {
+        let err = NetworkSpec::new("torus").build(&ctx()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown network topology 'torus'"), "{msg}");
+        assert!(msg.contains("flat") && msg.contains("fat_tree"), "{msg}");
+    }
+
+    #[test]
+    fn typod_params_are_errors() {
+        let err = NetworkSpec::new("nvlink_island")
+            .with("island_sz", 2u64)
+            .build(&ctx())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown parameter 'island_sz'"));
+        let bad_link = NetworkSpec::new("ethernet").with("link", "warp-pipe");
+        let err = bad_link.build(&ctx()).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown link preset 'warp-pipe'"));
+        let zero = NetworkSpec::new("nvlink_island").with("island_size", 0u64);
+        assert!(zero.build(&ctx()).is_err());
+    }
+
+    #[test]
+    fn from_yaml_defaults_to_flat() {
+        let y = Yaml::Map(Default::default());
+        let spec = NetworkSpec::from_yaml(&y).unwrap();
+        assert_eq!(spec.name, "flat");
+        assert!(spec.is_flat());
+        assert!(spec.validate().is_ok());
+        assert!(!NetworkSpec::new("ethernet").is_flat());
+        assert!(NetworkSpec::new("single_link").is_flat());
+    }
+
+    #[test]
+    fn runtime_registration_shadows_builtins() {
+        register_network("test_shadow_eth", "shadow test", |_p, ctx| {
+            Ok(Box::new(FlatNetwork::new(ctx)))
+        });
+        let net = NetworkSpec::new("test_shadow_eth").build(&ctx()).unwrap();
+        assert_eq!(net.name(), "flat");
+        let names: Vec<String> = network_topologies().into_iter().map(|(n, _, _)| n).collect();
+        assert!(names.contains(&"test_shadow_eth".to_string()));
+    }
+}

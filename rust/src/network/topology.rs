@@ -1,0 +1,774 @@
+//! Built-in network topologies and the busy-until occupancy ledger.
+//!
+//! [`FlatNetwork`] reproduces the pre-registry `CommModel` pricing
+//! exactly (no contention, per-class schedules); the other three
+//! charge per-link bandwidth contention through [`LinkLedger`]: a
+//! transfer's start is pushed past the busy-until horizon of every
+//! link on its path, so concurrent KV migrations, swap traffic and
+//! pool fetches queue against each other instead of being priced
+//! independently.
+
+use crate::hardware::LinkSpec;
+
+use super::registry::NetCtx;
+use super::{class_schedule, xfer_time_uniform, Endpoint, NetworkModel, Schedule, Transfer};
+
+/// Busy-until occupancy ledger over a set of named links.
+///
+/// Claiming a path serializes the transfer behind whatever is already
+/// occupying any link on it; the claim then extends every path link's
+/// busy horizon to the transfer's finish. [`LinkLedger::audit`] is the
+/// A007 invariant check: no transfer finishes before it starts, busy
+/// horizons only move forward, and every claimed transfer is released
+/// exactly once (by [`LinkLedger::advance`], after its finish).
+pub struct LinkLedger {
+    names: Vec<String>,
+    busy_until: Vec<f64>,
+    /// `(start, finish)` of claims not yet released by `advance`.
+    in_flight: Vec<(f64, f64)>,
+    claimed: u64,
+    released: u64,
+    violation: Option<String>,
+}
+
+impl LinkLedger {
+    pub fn new(names: Vec<String>) -> Self {
+        let n = names.len();
+        Self {
+            names,
+            busy_until: vec![0.0; n],
+            in_flight: Vec::new(),
+            claimed: 0,
+            released: 0,
+            violation: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// The time link `id` is occupied through.
+    pub fn busy_until(&self, id: usize) -> f64 {
+        self.busy_until[id]
+    }
+
+    /// Claims not yet released by [`LinkLedger::advance`].
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Occupy every link on `path` for `duration` seconds, starting no
+    /// earlier than `now` and no earlier than any link's busy horizon.
+    /// Returns `(start, finish)`.
+    pub fn claim(&mut self, path: &[usize], duration: f64, now: f64) -> (f64, f64) {
+        let mut start = now;
+        for &id in path {
+            if self.busy_until[id] > start {
+                start = self.busy_until[id];
+            }
+        }
+        let finish = start + duration;
+        if (finish < start || finish.is_nan()) && self.violation.is_none() {
+            // negative or NaN duration: record for A007 rather than panic
+            self.violation = Some(format!(
+                "transfer would finish at {finish:e} before its start at {start:e}"
+            ));
+        }
+        for &id in path {
+            if finish < self.busy_until[id] {
+                if self.violation.is_none() {
+                    self.violation = Some(format!(
+                        "link '{}' busy horizon would rewind from {:e} to {finish:e}",
+                        self.names[id],
+                        self.busy_until[id]
+                    ));
+                }
+            } else {
+                self.busy_until[id] = finish;
+            }
+        }
+        self.claimed += 1;
+        self.in_flight.push((start, finish));
+        (start, finish)
+    }
+
+    /// Release claims whose finish is at or before `now`.
+    pub fn advance(&mut self, now: f64) {
+        let before = self.in_flight.len();
+        self.in_flight.retain(|&(_, f)| f > now);
+        self.released += (before - self.in_flight.len()) as u64;
+    }
+
+    /// A007: link-occupancy conservation.
+    pub fn audit(&self, _now: f64) -> Result<(), String> {
+        if let Some(v) = &self.violation {
+            return Err(v.clone());
+        }
+        for &(s, f) in &self.in_flight {
+            if f < s {
+                return Err(format!("in-flight transfer finishes at {f:e} before start {s:e}"));
+            }
+        }
+        for (name, &b) in self.names.iter().zip(&self.busy_until) {
+            if !b.is_finite() || b < 0.0 {
+                return Err(format!("link '{name}' busy horizon {b:e} is not a valid time"));
+            }
+        }
+        if self.claimed != self.released + self.in_flight.len() as u64 {
+            return Err(format!(
+                "claim/release imbalance: {} claimed, {} released, {} in flight",
+                self.claimed,
+                self.released,
+                self.in_flight.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The effective point-to-point link of a multi-hop path: bottleneck
+/// bandwidth, accumulated latency, narrowest preload depth.
+pub fn path_link<'a>(links: impl IntoIterator<Item = &'a LinkSpec>) -> LinkSpec {
+    let mut bandwidth = f64::INFINITY;
+    let mut latency = 0.0;
+    let mut buffer_depth = u32::MAX;
+    for l in links {
+        bandwidth = bandwidth.min(l.bandwidth);
+        latency += l.latency;
+        buffer_depth = buffer_depth.min(l.buffer_depth);
+    }
+    LinkSpec {
+        name: "path".into(),
+        bandwidth,
+        latency,
+        buffer_depth: if buffer_depth == u32::MAX { 1 } else { buffer_depth },
+    }
+}
+
+/// Shared plumbing of the contended topologies: the link specs plus
+/// the occupancy ledger over them.
+struct Fabric {
+    specs: Vec<LinkSpec>,
+    ledger: LinkLedger,
+}
+
+impl Fabric {
+    fn new(specs: Vec<LinkSpec>) -> Self {
+        let names = specs.iter().map(|s| s.name.clone()).collect();
+        Self {
+            ledger: LinkLedger::new(names),
+            specs,
+        }
+    }
+
+    fn claim(
+        &mut self,
+        path: &[usize],
+        n_blocks: u64,
+        block_bytes: u64,
+        schedule: Schedule,
+        now: f64,
+    ) -> Transfer {
+        self.ledger.advance(now);
+        if n_blocks == 0 || path.is_empty() {
+            return Transfer::instant(now);
+        }
+        let eff = path_link(path.iter().map(|&i| &self.specs[i]));
+        let duration = xfer_time_uniform(n_blocks, block_bytes, &eff).of(schedule);
+        let (start, finish) = self.ledger.claim(path, duration, now);
+        Transfer {
+            start,
+            finish,
+            duration,
+            path: path.iter().map(|&i| self.specs[i].name.clone()).collect(),
+        }
+    }
+}
+
+fn named(name: String, spec: &LinkSpec) -> LinkSpec {
+    LinkSpec {
+        name,
+        ..spec.clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat
+// ---------------------------------------------------------------------------
+
+/// The pre-registry model: one uncontended link between every worker
+/// pair, the pool fabric for pool fetches, per-worker host links for
+/// swap. Pricing is byte-identical to the three `CommModel` fields the
+/// cluster driver used to hold.
+pub struct FlatNetwork {
+    interconnect: LinkSpec,
+    pool_link: LinkSpec,
+    swap_links: Vec<Option<LinkSpec>>,
+}
+
+impl FlatNetwork {
+    pub fn new(ctx: &NetCtx) -> Self {
+        Self {
+            interconnect: ctx.interconnect.clone(),
+            pool_link: ctx.pool_link.clone(),
+            swap_links: ctx.swap_links.clone(),
+        }
+    }
+}
+
+impl NetworkModel for FlatNetwork {
+    fn name(&self) -> &str {
+        "flat"
+    }
+
+    fn transfer(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        n_blocks: u64,
+        block_bytes: u64,
+        now: f64,
+    ) -> Transfer {
+        if n_blocks == 0 {
+            return Transfer::instant(now);
+        }
+        let (link, schedule) = match (src, dst) {
+            (Endpoint::Worker(_), Endpoint::Worker(_)) => {
+                (Some(&self.interconnect), Schedule::Overlapped)
+            }
+            (Endpoint::Host(w), _) | (_, Endpoint::Host(w)) => {
+                (self.swap_links[w].as_ref(), Schedule::Sequential)
+            }
+            (Endpoint::Pool, _) | (_, Endpoint::Pool) => {
+                (Some(&self.pool_link), Schedule::Sequential)
+            }
+        };
+        let Some(link) = link else {
+            return Transfer::instant(now);
+        };
+        let duration = xfer_time_uniform(n_blocks, block_bytes, link).of(schedule);
+        Transfer {
+            start: now,
+            finish: now + duration,
+            duration,
+            path: vec![link.name.clone()],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// nvlink_island
+// ---------------------------------------------------------------------------
+
+/// Full-bandwidth islands of `island_size` workers each (a shared
+/// intra-island bus), bridged by one slower inter-island link. Islands
+/// are the replica groups.
+pub struct NvlinkIslandNetwork {
+    island_size: usize,
+    islands: usize,
+    swap_present: Vec<bool>,
+    fabric: Fabric,
+}
+
+impl NvlinkIslandNetwork {
+    pub fn new(ctx: &NetCtx, island_size: usize, intra: LinkSpec, inter: LinkSpec) -> Self {
+        let island_size = island_size.max(1);
+        let islands = ctx.n_workers.div_ceil(island_size).max(1);
+        let mut specs = Vec::with_capacity(islands + 2 + ctx.n_workers);
+        for i in 0..islands {
+            specs.push(named(format!("island{i}.bus"), &intra));
+        }
+        specs.push(named("bridge".into(), &inter));
+        specs.push(named("pool".into(), &ctx.pool_link));
+        for (w, l) in ctx.swap_links.iter().enumerate() {
+            let base = l.clone().unwrap_or_else(LinkSpec::host_bus);
+            specs.push(named(format!("worker{w}.host"), &base));
+        }
+        Self {
+            island_size,
+            islands,
+            swap_present: ctx.swap_links.iter().map(|l| l.is_some()).collect(),
+            fabric: Fabric::new(specs),
+        }
+    }
+
+    fn island_of(&self, w: usize) -> usize {
+        (w / self.island_size).min(self.islands - 1)
+    }
+
+    fn bus(&self, island: usize) -> usize {
+        island
+    }
+
+    fn bridge(&self) -> usize {
+        self.islands
+    }
+
+    fn pool(&self) -> usize {
+        self.islands + 1
+    }
+
+    fn host(&self, w: usize) -> usize {
+        self.islands + 2 + w
+    }
+}
+
+impl NetworkModel for NvlinkIslandNetwork {
+    fn name(&self) -> &str {
+        "nvlink_island"
+    }
+
+    fn transfer(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        n_blocks: u64,
+        block_bytes: u64,
+        now: f64,
+    ) -> Transfer {
+        let schedule = class_schedule(src, dst);
+        match (src, dst) {
+            (Endpoint::Worker(a), Endpoint::Worker(b)) => {
+                let (ia, ib) = (self.island_of(a), self.island_of(b));
+                if ia == ib {
+                    let path = [self.bus(ia)];
+                    self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+                } else {
+                    let path = [self.bus(ia), self.bridge(), self.bus(ib)];
+                    self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+                }
+            }
+            (Endpoint::Host(h), _) | (_, Endpoint::Host(h)) => {
+                if !self.swap_present[h] {
+                    return Transfer::instant(now);
+                }
+                let path = [self.host(h)];
+                self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Worker(w)) | (Endpoint::Worker(w), Endpoint::Pool) => {
+                let path = [self.pool(), self.bus(self.island_of(w))];
+                self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Pool) => Transfer::instant(now),
+        }
+    }
+
+    fn advance(&mut self, now: f64) {
+        self.fabric.ledger.advance(now);
+    }
+
+    fn audit_ledger(&self, now: f64) -> Result<(), String> {
+        self.fabric.ledger.audit(now)
+    }
+
+    fn replica_groups(&self) -> usize {
+        self.islands
+    }
+
+    fn group_of(&self, worker: usize) -> usize {
+        self.island_of(worker)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fat_tree
+// ---------------------------------------------------------------------------
+
+/// A k-ary leaf/spine tree: every worker hangs off its own access
+/// link, `arity` workers share a leaf, and each leaf reaches the spine
+/// over one uplink whose bandwidth all of its cross-leaf transfers
+/// share. Leaves are the replica groups.
+pub struct FatTreeNetwork {
+    arity: usize,
+    n_workers: usize,
+    leaves: usize,
+    swap_present: Vec<bool>,
+    fabric: Fabric,
+}
+
+impl FatTreeNetwork {
+    pub fn new(ctx: &NetCtx, arity: usize, access: LinkSpec, uplink: LinkSpec) -> Self {
+        let arity = arity.max(1);
+        let leaves = ctx.n_workers.div_ceil(arity).max(1);
+        let mut specs = Vec::with_capacity(2 * ctx.n_workers + leaves + 1);
+        for w in 0..ctx.n_workers {
+            specs.push(named(format!("worker{w}.access"), &access));
+        }
+        for l in 0..leaves {
+            specs.push(named(format!("leaf{l}.uplink"), &uplink));
+        }
+        specs.push(named("pool".into(), &ctx.pool_link));
+        for (w, l) in ctx.swap_links.iter().enumerate() {
+            let base = l.clone().unwrap_or_else(LinkSpec::host_bus);
+            specs.push(named(format!("worker{w}.host"), &base));
+        }
+        Self {
+            arity,
+            n_workers: ctx.n_workers,
+            leaves,
+            swap_present: ctx.swap_links.iter().map(|l| l.is_some()).collect(),
+            fabric: Fabric::new(specs),
+        }
+    }
+
+    fn leaf_of(&self, w: usize) -> usize {
+        (w / self.arity).min(self.leaves - 1)
+    }
+
+    fn access(&self, w: usize) -> usize {
+        w
+    }
+
+    fn uplink(&self, leaf: usize) -> usize {
+        self.n_workers + leaf
+    }
+
+    fn pool(&self) -> usize {
+        self.n_workers + self.leaves
+    }
+
+    fn host(&self, w: usize) -> usize {
+        self.n_workers + self.leaves + 1 + w
+    }
+}
+
+impl NetworkModel for FatTreeNetwork {
+    fn name(&self) -> &str {
+        "fat_tree"
+    }
+
+    fn transfer(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        n_blocks: u64,
+        block_bytes: u64,
+        now: f64,
+    ) -> Transfer {
+        let schedule = class_schedule(src, dst);
+        match (src, dst) {
+            (Endpoint::Worker(a), Endpoint::Worker(b)) => {
+                let (la, lb) = (self.leaf_of(a), self.leaf_of(b));
+                if a == b {
+                    let path = [self.access(a)];
+                    self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+                } else if la == lb {
+                    let path = [self.access(a), self.access(b)];
+                    self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+                } else {
+                    let path = [
+                        self.access(a),
+                        self.uplink(la),
+                        self.uplink(lb),
+                        self.access(b),
+                    ];
+                    self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+                }
+            }
+            (Endpoint::Host(h), _) | (_, Endpoint::Host(h)) => {
+                if !self.swap_present[h] {
+                    return Transfer::instant(now);
+                }
+                let path = [self.host(h)];
+                self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Worker(w)) | (Endpoint::Worker(w), Endpoint::Pool) => {
+                let path = [self.pool(), self.uplink(self.leaf_of(w)), self.access(w)];
+                self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Pool) => Transfer::instant(now),
+        }
+    }
+
+    fn advance(&mut self, now: f64) {
+        self.fabric.ledger.advance(now);
+    }
+
+    fn audit_ledger(&self, now: f64) -> Result<(), String> {
+        self.fabric.ledger.audit(now)
+    }
+
+    fn replica_groups(&self) -> usize {
+        self.leaves
+    }
+
+    fn group_of(&self, worker: usize) -> usize {
+        self.leaf_of(worker)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ethernet
+// ---------------------------------------------------------------------------
+
+/// One shared segment: every worker-to-worker and pool transfer in the
+/// cluster contends on the same link. Swap stays on per-worker host
+/// buses (it never crosses the wire).
+pub struct EthernetNetwork {
+    swap_present: Vec<bool>,
+    fabric: Fabric,
+}
+
+impl EthernetNetwork {
+    pub fn new(ctx: &NetCtx, segment: LinkSpec) -> Self {
+        let mut specs = Vec::with_capacity(2 + ctx.n_workers);
+        specs.push(named("segment".into(), &segment));
+        specs.push(named("pool".into(), &ctx.pool_link));
+        for (w, l) in ctx.swap_links.iter().enumerate() {
+            let base = l.clone().unwrap_or_else(LinkSpec::host_bus);
+            specs.push(named(format!("worker{w}.host"), &base));
+        }
+        Self {
+            swap_present: ctx.swap_links.iter().map(|l| l.is_some()).collect(),
+            fabric: Fabric::new(specs),
+        }
+    }
+
+    fn host(&self, w: usize) -> usize {
+        2 + w
+    }
+}
+
+impl NetworkModel for EthernetNetwork {
+    fn name(&self) -> &str {
+        "ethernet"
+    }
+
+    fn transfer(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        n_blocks: u64,
+        block_bytes: u64,
+        now: f64,
+    ) -> Transfer {
+        let schedule = class_schedule(src, dst);
+        match (src, dst) {
+            (Endpoint::Worker(_), Endpoint::Worker(_)) => {
+                self.fabric.claim(&[0], n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Host(h), _) | (_, Endpoint::Host(h)) => {
+                if !self.swap_present[h] {
+                    return Transfer::instant(now);
+                }
+                let path = [self.host(h)];
+                self.fabric.claim(&path, n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Worker(_)) | (Endpoint::Worker(_), Endpoint::Pool) => {
+                self.fabric.claim(&[1, 0], n_blocks, block_bytes, schedule, now)
+            }
+            (Endpoint::Pool, Endpoint::Pool) => Transfer::instant(now),
+        }
+    }
+
+    fn advance(&mut self, now: f64) {
+        self.fabric.ledger.advance(now);
+    }
+
+    fn audit_ledger(&self, now: f64) -> Result<(), String> {
+        self.fabric.ledger.audit(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::CommModel;
+
+    fn ctx(n: usize) -> NetCtx {
+        NetCtx {
+            n_workers: n,
+            interconnect: LinkSpec::nvlink(),
+            pool_link: LinkSpec::pool_fabric(),
+            swap_links: (0..n).map(|_| Some(LinkSpec::host_bus())).collect(),
+        }
+    }
+
+    const BB: u64 = 8 << 20; // llama2-7b 16-token block
+
+    #[test]
+    fn flat_matches_comm_model_per_class() {
+        let c = ctx(4);
+        let mut net = FlatNetwork::new(&c);
+        let comm = CommModel::analytic(LinkSpec::nvlink(), Schedule::Overlapped);
+        let pool = CommModel::analytic(LinkSpec::pool_fabric(), Schedule::Sequential);
+        for n in [0u64, 1, 7, 129] {
+            let t = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), n, BB, 3.0);
+            assert_eq!(t.elapsed_from(3.0), comm.kv_transfer_time(n, BB), "n={n}");
+            assert_eq!(t.finish, 3.0 + comm.kv_transfer_time(n, BB), "n={n}");
+            let p = net.transfer(Endpoint::Pool, Endpoint::Worker(2), n, BB, 3.0);
+            assert_eq!(p.elapsed_from(3.0), pool.kv_transfer_time(n, BB), "n={n}");
+        }
+        // swap is priced sequentially over the per-worker host link
+        let s = net.transfer(Endpoint::Host(1), Endpoint::Worker(1), 10, BB, 0.0);
+        let want = xfer_time_uniform(10, BB, &LinkSpec::host_bus()).of(Schedule::Sequential);
+        assert_eq!(s.elapsed_from(0.0), want);
+    }
+
+    #[test]
+    fn flat_without_swap_link_is_free() {
+        let mut c = ctx(2);
+        c.swap_links = vec![None, None];
+        let mut net = FlatNetwork::new(&c);
+        let t = net.transfer(Endpoint::Host(0), Endpoint::Worker(0), 10, BB, 1.0);
+        assert_eq!(t.finish, 1.0);
+        assert!(t.path.is_empty());
+    }
+
+    fn island2(c: &NetCtx) -> NvlinkIslandNetwork {
+        NvlinkIslandNetwork::new(c, 2, LinkSpec::nvlink(), LinkSpec::infiniband())
+    }
+
+    #[test]
+    fn island_paths_and_bandwidth() {
+        let c = ctx(4);
+        let mut net = island2(&c);
+        assert_eq!(net.replica_groups(), 2);
+        assert_eq!(net.group_of(1), 0);
+        assert_eq!(net.group_of(2), 1);
+        // same island: one bus hop at full NVLink bandwidth
+        let intra = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 16, BB, 0.0);
+        assert_eq!(intra.path, vec!["island0.bus"]);
+        let want = xfer_time_uniform(16, BB, &LinkSpec::nvlink()).of(Schedule::Overlapped);
+        assert_eq!(intra.duration, want);
+        // cross island: bus -> bridge -> bus, bottlenecked by the bridge
+        let mut fresh = island2(&c);
+        let inter = fresh.transfer(Endpoint::Worker(0), Endpoint::Worker(2), 16, BB, 0.0);
+        assert_eq!(inter.path, vec!["island0.bus", "bridge", "island1.bus"]);
+        assert!(inter.duration > intra.duration);
+        let eff = path_link([&LinkSpec::nvlink(), &LinkSpec::infiniband(), &LinkSpec::nvlink()]);
+        assert_eq!(eff.bandwidth, LinkSpec::infiniband().bandwidth);
+        assert_eq!(inter.duration, xfer_time_uniform(16, BB, &eff).of(Schedule::Overlapped));
+    }
+
+    #[test]
+    fn fat_tree_paths() {
+        let c = ctx(4);
+        let mut net = FatTreeNetwork::new(&c, 2, LinkSpec::nvlink(), LinkSpec::infiniband());
+        assert_eq!(net.replica_groups(), 2);
+        let same = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 8, BB, 0.0);
+        assert_eq!(same.path, vec!["worker0.access", "worker1.access"]);
+        let cross = net.transfer(Endpoint::Worker(0), Endpoint::Worker(3), 8, BB, 100.0);
+        let hops = vec!["worker0.access", "leaf0.uplink", "leaf1.uplink", "worker3.access"];
+        assert_eq!(cross.path, hops);
+        assert!(cross.duration > same.duration, "uplink is the bottleneck");
+        let pooled = net.transfer(Endpoint::Pool, Endpoint::Worker(2), 8, BB, 200.0);
+        assert_eq!(pooled.path, vec!["pool", "leaf1.uplink", "worker2.access"]);
+    }
+
+    #[test]
+    fn ethernet_contention_queues_transfers() {
+        let c = ctx(4);
+        let mut net = EthernetNetwork::new(&c, LinkSpec::ethernet_100g());
+        let a = net.transfer(Endpoint::Worker(0), Endpoint::Worker(1), 64, BB, 0.0);
+        assert_eq!(a.start, 0.0);
+        assert!(a.finish > 0.0);
+        // second transfer on the shared segment queues behind the first
+        let b = net.transfer(Endpoint::Worker(2), Endpoint::Worker(3), 64, BB, 0.0);
+        assert_eq!(b.start, a.finish);
+        assert_eq!(b.finish, a.finish + b.duration);
+        // swap rides the per-worker host bus, not the segment
+        let s = net.transfer(Endpoint::Host(0), Endpoint::Worker(0), 4, BB, 0.0);
+        assert_eq!(s.start, 0.0);
+        // after the wire drains, new transfers start immediately again
+        let late = net.transfer(Endpoint::Worker(0), Endpoint::Worker(2), 1, BB, b.finish + 1.0);
+        assert_eq!(late.start, b.finish + 1.0);
+        assert!(net.audit_ledger(late.finish).is_ok());
+    }
+
+    #[test]
+    fn contention_never_decreases_finish_time() {
+        // property: against every contended topology, a transfer priced
+        // with prior traffic on the ledger finishes no earlier than the
+        // same transfer against an idle network.
+        fn build_topo(name: &str) -> Box<dyn NetworkModel> {
+            let c = NetCtx {
+                n_workers: 8,
+                interconnect: LinkSpec::nvlink(),
+                pool_link: LinkSpec::pool_fabric(),
+                swap_links: (0..8).map(|_| Some(LinkSpec::host_bus())).collect(),
+            };
+            match name {
+                "nvlink_island" => Box::new(NvlinkIslandNetwork::new(
+                    &c,
+                    4,
+                    LinkSpec::nvlink(),
+                    LinkSpec::infiniband(),
+                )),
+                "fat_tree" => Box::new(FatTreeNetwork::new(
+                    &c,
+                    2,
+                    LinkSpec::nvlink(),
+                    LinkSpec::infiniband(),
+                )),
+                _ => Box::new(EthernetNetwork::new(&c, LinkSpec::ethernet_100g())),
+            }
+        }
+        for name in ["nvlink_island", "fat_tree", "ethernet"] {
+            // deterministic LCG over (src, dst, size, gap)
+            let mut state = 0x2545F4914F6CDD1Du64;
+            let mut rng = move |m: u64| {
+                state = state.wrapping_mul(6364136223846793005);
+                state = state.wrapping_add(1442695040888963407);
+                (state >> 33) % m
+            };
+            let mut net = build_topo(name);
+            let mut now = 0.0f64;
+            for step in 0..400 {
+                let src = rng(8) as usize;
+                let dst = rng(8) as usize;
+                let n = rng(64) + 1;
+                let ep = |w: usize, kind: u64| match kind {
+                    0 => Endpoint::Worker(w),
+                    1 => Endpoint::Host(w),
+                    _ => Endpoint::Pool,
+                };
+                let (s, d) = (ep(src, rng(3)), ep(dst, rng(3)));
+                let t = net.transfer(s, d, n, BB, now);
+                let mut idle = build_topo(name);
+                let t0 = idle.transfer(s, d, n, BB, now);
+                assert!(t.start >= now, "{name} step {step}");
+                assert!(
+                    t.finish >= t0.finish,
+                    "{name} step {step}: contended {} < idle {}",
+                    t.finish,
+                    t0.finish
+                );
+                assert_eq!(t.duration, t0.duration, "{name} step {step}");
+                assert!(net.audit_ledger(now).is_ok(), "{name} step {step}");
+                now += rng(1000) as f64 * 1e-5;
+            }
+        }
+    }
+
+    #[test]
+    fn ledger_audit_catches_negative_duration() {
+        let mut l = LinkLedger::new(vec!["x".into()]);
+        l.claim(&[0], 1.0, 0.0);
+        assert!(l.audit(0.0).is_ok());
+        l.claim(&[0], -1.0, 2.0);
+        assert!(l.audit(2.0).is_err());
+    }
+
+    #[test]
+    fn ledger_releases_each_claim_once() {
+        let mut l = LinkLedger::new(vec!["a".into(), "b".into()]);
+        l.claim(&[0], 1.0, 0.0);
+        l.claim(&[0, 1], 2.0, 0.0);
+        assert_eq!(l.in_flight(), 2);
+        l.advance(0.5);
+        assert_eq!(l.in_flight(), 2, "nothing finished yet");
+        l.advance(1.0);
+        assert_eq!(l.in_flight(), 1);
+        l.advance(100.0);
+        assert_eq!(l.in_flight(), 0);
+        l.advance(200.0);
+        assert!(l.audit(200.0).is_ok());
+        assert_eq!(l.busy_until(1), 3.0, "second claim queued behind the first");
+    }
+}

@@ -432,7 +432,7 @@ fn every_example_config_parses_and_runs() {
         );
         seen += 1;
     }
-    assert!(seen >= 12, "expected the documented example configs, saw {seen}");
+    assert!(seen >= 14, "expected the documented example configs, saw {seen}");
 }
 
 #[test]
@@ -477,7 +477,51 @@ fn fast_forward_is_byte_identical_across_every_committed_config() {
         );
         seen += 1;
     }
-    assert!(seen >= 15, "expected all committed configs, saw {seen}");
+    assert!(seen >= 17, "expected all committed configs, saw {seen}");
+}
+
+#[test]
+fn explicit_flat_network_is_byte_identical_to_default() {
+    // acceptance gate for the network registry: selecting `flat`
+    // explicitly (here under its `single_link` alias, which also pins
+    // alias resolution) must reproduce the default pricing byte-for-byte
+    // on every config that never chose a topology, with fast-forward
+    // off and on
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    let mut seen = 0;
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("yaml") {
+            continue;
+        }
+        let probe = SimulationConfig::from_yaml_file(&path).unwrap();
+        if !probe.network.is_flat() {
+            continue; // the topology demos legitimately price links differently
+        }
+        for ff in [false, true] {
+            let run = |explicit: bool| {
+                let mut cfg = SimulationConfig::from_yaml_file(&path).unwrap();
+                cfg.engine.fast_forward = ff;
+                if explicit {
+                    cfg.network = tokensim::network::NetworkSpec::new("single_link");
+                }
+                let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+                report.to_json().to_string()
+            };
+            assert_eq!(
+                run(false),
+                run(true),
+                "{}: explicit flat (ff={ff}) changed the report",
+                path.display()
+            );
+        }
+        seen += 1;
+    }
+    assert!(seen >= 15, "expected the flat-default config suite, saw {seen}");
 }
 
 #[test]
@@ -960,7 +1004,7 @@ fn committed_configs_lint_clean_under_deny_warnings() {
         })
         .collect();
     files.sort();
-    assert!(files.len() >= 10, "expected the committed config suite, got {files:?}");
+    assert!(files.len() >= 12, "expected the committed config suite, got {files:?}");
     let mut args = vec!["lint"];
     args.extend(files.iter().map(String::as_str));
     args.push("--deny-warnings");
@@ -984,7 +1028,7 @@ fn lint_fixtures_fail_with_their_expected_code() {
         .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("yaml"))
         .collect();
     fixtures.sort();
-    assert!(fixtures.len() >= 10, "expected the fixture suite, got {fixtures:?}");
+    assert!(fixtures.len() >= 12, "expected the fixture suite, got {fixtures:?}");
     for f in &fixtures {
         let path = f.to_str().unwrap();
         let text = std::fs::read_to_string(f).unwrap();
@@ -1041,12 +1085,19 @@ fn list_enumerates_lint_rules_and_engine_knobs() {
         "W040",
         "I042",
         "E050",
+        "E060",
+        "W062",
         "A001",
         "A006",
+        "A007",
         "fast_forward",
         "window_cost",
         "audit",
         "sketch_error",
+        "network topologies",
+        "nvlink_island",
+        "fat_tree",
+        "link presets",
     ] {
         assert!(stdout.contains(needle), "list output missing {needle}:\n{stdout}");
     }
