@@ -230,6 +230,61 @@ pub trait ComputeModel {
     }
 }
 
+/// A transparent wrapper counting every [`ComputeModel::iter_time`]
+/// call made through it — the probe hook `tokensim analyze` uses to
+/// *prove* it stays static: the analyzer asserts O(1) probe calls per
+/// worker config and zero simulation steps.
+pub struct CountingCost {
+    inner: Box<dyn ComputeModel>,
+    calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl CountingCost {
+    /// Wrap `inner`, bumping `calls` on every `iter_time` evaluation.
+    pub fn new(
+        inner: Box<dyn ComputeModel>,
+        calls: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    ) -> Self {
+        Self { inner, calls }
+    }
+}
+
+impl ComputeModel for CountingCost {
+    fn iter_time(&mut self, batch: &BatchDesc) -> f64 {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.iter_time(batch)
+    }
+
+    fn iter_cost(&mut self, batch: &BatchDesc) -> IterCost {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.iter_cost(batch)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn setup_cost(&self) -> f64 {
+        self.inner.setup_cost()
+    }
+
+    fn as_probe(&mut self) -> Option<&mut dyn CostProbe> {
+        self.inner.as_probe()
+    }
+
+    fn aggregate_exact(&self) -> bool {
+        self.inner.aggregate_exact()
+    }
+
+    fn decode_window_affine(&self) -> bool {
+        self.inner.decode_window_affine()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.inner.cache_stats()
+    }
+}
+
 /// The pre-registry closed cost-model selector, kept for API
 /// compatibility. [`ComputeSpec`] replaces it in configs; it converts
 /// losslessly (`ComputeSpec::from(kind)`).

@@ -26,6 +26,16 @@ pub struct ExpOpts {
     /// Compute model for the TokenSim side of comparisons (any
     /// registered name — see [`crate::compute::registry`]).
     pub compute: ComputeSpec,
+    /// Skip sweep cells the static analyzer proves infeasible
+    /// ([`crate::lint::analyze::prune`]). On by default; set
+    /// `TOKENSIM_PRUNE=0` to disable. Pruned cells are always reported,
+    /// never silently dropped, and pruning only fires on
+    /// qps-independent certainties, so the frontier is unchanged.
+    pub prune: bool,
+}
+
+fn prune_default() -> bool {
+    std::env::var("TOKENSIM_PRUNE").map(|v| v != "0").unwrap_or(true)
 }
 
 impl ExpOpts {
@@ -34,6 +44,7 @@ impl ExpOpts {
             quick: false,
             out_dir: None,
             compute: ComputeSpec::new("table"),
+            prune: prune_default(),
         }
     }
 
@@ -44,6 +55,7 @@ impl ExpOpts {
             // quick paths avoid artifact loading so unit tests run
             // without `make artifacts`
             compute: ComputeSpec::new("analytic"),
+            prune: prune_default(),
         }
     }
 
@@ -148,6 +160,52 @@ where
                 .map(|_| flat.next().expect("sweep returns one result per cell"))
                 .collect(),
         );
+    }
+    out
+}
+
+/// Partition sweep jobs by the static analyzer's verdict: jobs whose
+/// config is *provably* infeasible (see [`crate::lint::analyze::prune`])
+/// are moved to the pruned list as `(label, reason)` instead of being
+/// simulated. With `enabled == false` every job is kept — the unpruned
+/// baseline the frontier-preservation test compares against. The check
+/// itself is deterministic and sequential, so pruned output never
+/// depends on sweep thread scheduling.
+pub fn prune_jobs<J>(
+    enabled: bool,
+    jobs: Vec<J>,
+    cfg_of: impl Fn(&J) -> SimulationConfig,
+    label_of: impl Fn(&J) -> String,
+) -> (Vec<J>, Vec<(String, String)>) {
+    if !enabled {
+        return (jobs, Vec::new());
+    }
+    let mut kept = Vec::with_capacity(jobs.len());
+    let mut pruned = Vec::new();
+    for job in jobs {
+        match crate::lint::analyze::prune(&cfg_of(&job)) {
+            Some(reason) => pruned.push((label_of(&job), reason)),
+            None => kept.push(job),
+        }
+    }
+    (kept, pruned)
+}
+
+/// The report section every pruning sweep appends: which cells were
+/// skipped and why — pruning is logged, never silent.
+pub fn pruning_section(enabled: bool, pruned: &[(String, String)], total: usize) -> String {
+    if !enabled {
+        return "\nstatic pruning: disabled (TOKENSIM_PRUNE=0)\n".to_string();
+    }
+    let mut out = format!(
+        "\nstatic pruning: skipped {} of {total} cells (analyze bounds; frontier-preserving):\n",
+        pruned.len()
+    );
+    if pruned.is_empty() {
+        out.push_str("  (none — every cell is statically feasible)\n");
+    }
+    for (label, reason) in pruned {
+        out.push_str(&format!("  {label}: {reason}\n"));
     }
     out
 }

@@ -79,12 +79,16 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
     let n_req = opts.size(1500, 100);
     let a100 = HardwareSpec::a100_80g();
 
-    // hardware catalog: the decode-side substitutions of Fig 12
+    // hardware catalog: the decode-side substitutions of Fig 12, plus
+    // a deliberately starved V100 (1/50th memory bandwidth) whose
+    // decode floor sits above the paper-default TBT SLO — the cell the
+    // static analyzer proves infeasible and prunes before simulating
     let catalog: &[(&str, HardwareSpec)] = &[
         ("A", HardwareSpec::a100_80g()),
         ("G", HardwareSpec::gddr6_aim()),
         ("V", HardwareSpec::v100_32g()),
         ("AL", HardwareSpec::a100_quarter_flops()),
+        ("C", HardwareSpec::v100_32g().scale_bandwidth(0.02)),
     ];
     let splits: &[u32] = if opts.quick { &[1] } else { &[1, 2] };
 
@@ -123,6 +127,14 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         v
     };
 
+    let total_cells = jobs.len();
+    let (jobs, pruned) = prune_jobs(
+        opts.prune,
+        jobs,
+        |(compute, _, hw, np, nd, _)| cfg(*np, hw, *nd, n_req, 4.0, compute),
+        |(compute, label, ..)| format!("{} {label}", compute.name),
+    );
+
     let cells: Vec<Result<Cell>> = parallel_sweep(&jobs, |(compute, label, hw, np, nd, price)| {
         let build = |qps: f64| cfg(*np, hw, *nd, n_req, qps, compute);
         let (qps, goodput) = max_slo_throughput(&build, 0.9, 4.0)?;
@@ -142,8 +154,9 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
 
     let mut out = String::from(
         "Hardware exploration — decode-hardware catalog x compute models x PD splits\n\
-         (8 slots; A=A100, G=GDDR6-AiM, V=V100, AL=A100 with 1/4 FLOPS; price in\n\
-         A100 units; attainment measured at the found max-SLO operating point)\n\n",
+         (8 slots; A=A100, G=GDDR6-AiM, V=V100, AL=A100 with 1/4 FLOPS, C=V100 with\n\
+         1/50 bandwidth; price in A100 units; attainment measured at the found\n\
+         max-SLO operating point; statically infeasible cells are pruned + logged)\n\n",
     );
     let mut table = Table::new(&[
         "model",
@@ -168,6 +181,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         ]);
     }
     out.push_str(&table.finish());
+    out.push_str(&pruning_section(opts.prune, &pruned, total_cells));
 
     // the frontier: best price-normalized configuration per model
     out.push_str("\ncost-efficiency frontier (best thr/price per compute model):\n");
@@ -207,6 +221,42 @@ mod tests {
             assert!(out.contains(label), "missing {label} in:\n{out}");
         }
         assert!(out.contains("frontier"), "{out}");
+        // the starved-V100 cell is provably SLO-infeasible: the
+        // analyzer must prune it (logged, not silent) for every
+        // probeable compute model
+        assert!(out.contains("static pruning: skipped"), "{out}");
+        assert!(out.contains("C7 (P1)"), "{out}");
+        assert!(out.contains("E050"), "{out}");
+    }
+
+    #[test]
+    fn pruning_preserves_the_frontier_with_fewer_cells() {
+        let mut on = ExpOpts::quick();
+        on.prune = true;
+        let mut off = on.clone();
+        off.prune = false;
+        let out_on = run(&on).unwrap();
+        let out_off = run(&off).unwrap();
+        let frontier = |s: &str| {
+            s.lines()
+                .skip_while(|l| !l.contains("cost-efficiency frontier"))
+                .take_while(|l| !l.is_empty())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            frontier(&out_on),
+            frontier(&out_off),
+            "pruning must not change the frontier"
+        );
+        let evaluated = |s: &str| s.matches("(P1)").count();
+        assert!(
+            evaluated(&out_off) > 0
+                && out_on.contains("static pruning: skipped")
+                && !out_on.contains("skipped 0 of"),
+            "pruned run must skip at least one cell:\n{out_on}"
+        );
+        assert!(out_off.contains("static pruning: disabled"), "{out_off}");
     }
 
     #[test]

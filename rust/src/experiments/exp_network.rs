@@ -84,6 +84,14 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         v
     };
 
+    let total_cells = jobs.len();
+    let (jobs, pruned) = prune_jobs(
+        opts.prune,
+        jobs,
+        |(_, spec, r, np)| cfg(spec, *r, *np, n_req, 4.0, &opts.compute),
+        |(name, _, r, np)| format!("{name} replicas={r} P{np}D{}", GROUP - np),
+    );
+
     let cells: Vec<Result<Cell>> = parallel_sweep(&jobs, |(name, spec, r, np)| {
         let t0 = std::time::Instant::now();
         let build = |qps: f64| cfg(spec, *r, *np, n_req, qps, &opts.compute);
@@ -124,6 +132,7 @@ pub fn run(opts: &ExpOpts) -> Result<String> {
         ]);
     }
     out.push_str(&table.finish());
+    out.push_str(&pruning_section(opts.prune, &pruned, total_cells));
 
     out.push_str("\nPD-split frontier (best split per topology x replica count):\n");
     for (name, _) in &topos {

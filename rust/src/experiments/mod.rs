@@ -9,6 +9,7 @@
 //! reproduction target recorded in EXPERIMENTS.md.
 
 mod common;
+mod exp_analyze;
 mod exp_hardware;
 mod exp_memory;
 mod exp_network;
@@ -41,10 +42,12 @@ use anyhow::{bail, Result};
 /// for the price-normalized frontier, "scale" benchmarks the event
 /// engine at 10k–1M requests with decode fast-forwarding off/on,
 /// "network" sweeps communication topologies x PD splits x replica
-/// counts for the contention-aware frontier).
+/// counts for the contention-aware frontier, "analyze" checks the
+/// static capacity analyzer's closed-form throughput bound against
+/// simulated throughput across an offered-load grid).
 pub const ALL: &[&str] = &[
     "fig4", "fig5", "table2", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
-    "fig14", "fig15", "policies", "memory", "workloads", "hardware", "scale", "network",
+    "fig14", "fig15", "policies", "memory", "workloads", "hardware", "scale", "network", "analyze",
 ];
 
 /// Run one experiment by id, returning its printed report.
@@ -69,6 +72,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<String> {
         "hardware" => exp_hardware::run(opts),
         "scale" => exp_scale::run(opts),
         "network" => exp_network::run(opts),
+        "analyze" => exp_analyze::run(opts),
         other => bail!("unknown experiment '{other}' (known: {})", ALL.join(", ")),
     }?;
     if let Some(dir) = &opts.out_dir {

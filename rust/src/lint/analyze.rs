@@ -1,0 +1,1121 @@
+//! Static capacity analysis (`tokensim analyze`): closed-form
+//! feasibility bounds over a parsed config, derived from O(1)
+//! cost-model probe calls — never a simulation step.
+//!
+//! Four bound families (see [`BOUND_KINDS`]):
+//!
+//! * **compute saturation** — every iteration of a worker takes at
+//!   least its probed single-token floor and serves at most a
+//!   statically known token cap (policy batch caps, pool-implied
+//!   concurrency, the request count), so `cap / floor` upper-bounds the
+//!   worker's token service rate. Summed over the fleet and divided by
+//!   the mean request length this yields a *sound* throughput upper
+//!   bound: the simulator can never beat it. Offered rate over service
+//!   rate is the utilization ρ.
+//! * **memory feasibility** — Little's law: at the offered QPS, the
+//!   expected concurrently resident KV (`qps × residency time × mean
+//!   KV tokens`) must fit the decode fleet's pool capacity.
+//! * **network saturation** — under strict prefill/decode
+//!   disaggregation every request migrates its prompt KV once; routing
+//!   that byte rate over the topology's links (discovered with probe
+//!   transfers, never priced into a run) and comparing against per-link
+//!   bandwidth flags the bottleneck hop.
+//! * **SLO feasibility** — generalizes the E050 point check to a
+//!   max-feasible-QPS band: zero when the SLO sits below the physical
+//!   iteration floor, else the throughput upper bound.
+//!
+//! Every unprobeable or unbounded quantity degrades to `None` rather
+//! than a guess — a reported bound is always *valid* (an over-, never
+//! an under-estimate of what simulation can achieve), which the
+//! property/integration suites assert against real runs. The same
+//! machinery backs the E070/W071–W073 lint rules and the
+//! [`prune`] hook experiment sweeps use to skip
+//! statically-infeasible cells.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::compute::{BatchDesc, ComputeCtx, ComputeModel, CountingCost};
+use crate::config::yaml::Yaml;
+use crate::config::SimulationConfig;
+use crate::network::{Endpoint, NetCtx};
+use crate::request::Request;
+use crate::util::json::Json;
+use crate::workload::{offered_load, OfferedLoad};
+
+use super::rules::{
+    canonical_local, canonical_memory, chunk_tokens, floor_probeable, policy_token_cap,
+};
+use super::{Diagnostic, LintCtx, LintReport};
+
+/// The analyzer's bound families, for `tokensim list`.
+pub const BOUND_KINDS: &[(&str, &str)] = &[
+    (
+        "compute-saturation",
+        "offered token rate vs probed service-rate cap: per-side utilization rho and a sound throughput upper bound",
+    ),
+    (
+        "memory-feasibility",
+        "Little's-law expected concurrent KV residency vs the decode fleet's pool capacity",
+    ),
+    (
+        "network-saturation",
+        "expected KV-migration byte rate routed over topology links vs per-link bandwidth (bottleneck hop)",
+    ),
+    (
+        "slo-feasibility",
+        "max-feasible-QPS band generalizing the E050 floor check",
+    ),
+];
+
+/// Per-worker-config capacity facts (one entry per `workers:` item;
+/// `quantity` scales its rates).
+#[derive(Debug, Clone)]
+pub struct WorkerBound {
+    /// Index into `cluster.workers`.
+    pub worker: usize,
+    pub hardware: String,
+    pub quantity: u32,
+    pub run_prefill: bool,
+    pub run_decode: bool,
+    /// Whether the worker's compute model could be probed statically
+    /// (hlo/analytic/roofline; trained and co-simulated models opt out).
+    pub probeable: bool,
+    /// Probed single-token iteration floor, seconds — no iteration of
+    /// this worker can be faster.
+    pub t_floor: Option<f64>,
+    /// Probed decode floor at the smallest context, seconds.
+    pub decode_floor: Option<f64>,
+    /// Probed zero-queue prefill time of the smallest prompt, seconds.
+    pub prefill_floor: Option<f64>,
+    /// Max decode tokens one iteration can serve (policy batch cap,
+    /// pool-implied concurrency, request count).
+    pub decode_cap: Option<u64>,
+    /// Max prefill tokens one iteration can admit (`max_batched_tokens`
+    /// / `chunk_tokens`); `None` for uncapped policies.
+    pub prefill_cap: Option<u64>,
+    /// KV pool capacity of one instance, tokens.
+    pub pool_tokens: Option<u64>,
+}
+
+/// Expected load on one topology link.
+#[derive(Debug, Clone)]
+pub struct LinkLoad {
+    pub link: String,
+    /// Link bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Expected byte rate routed over this link, bytes/s.
+    pub byte_rate: f64,
+    /// `byte_rate / bandwidth`.
+    pub utilization: f64,
+}
+
+/// The full static-analysis result for one config.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub workers: Vec<WorkerBound>,
+    /// Offered-load summary of the generated request table.
+    pub offered: Option<OfferedLoad>,
+    /// Fleet decode token service-rate bound, tokens/s.
+    pub decode_token_rate: Option<f64>,
+    /// Fleet prefill token service-rate bound, tokens/s.
+    pub prefill_token_rate: Option<f64>,
+    /// Decode-side throughput bound, requests/s.
+    pub decode_bound: Option<f64>,
+    /// Prefill-side throughput bound, requests/s.
+    pub prefill_bound: Option<f64>,
+    /// `min(decode_bound, prefill_bound)` — simulated throughput can
+    /// never exceed this.
+    pub throughput_ub: Option<f64>,
+    /// Offered / service decode token rate.
+    pub rho_decode: Option<f64>,
+    /// Offered / service prefill token rate.
+    pub rho_prefill: Option<f64>,
+    /// Little's-law expected concurrently resident KV, tokens.
+    pub kv_residency_tokens: Option<f64>,
+    /// Total decode-fleet KV pool, tokens.
+    pub kv_pool_tokens: Option<f64>,
+    /// Whether the residency estimate applies (plain paged /
+    /// token_contiguous decode fleet; swap and prefix sharing opt out).
+    pub kv_bound_applicable: bool,
+    /// Expected per-link byte rates (strict-disaggregation migration
+    /// traffic over a contended topology; empty otherwise).
+    pub links: Vec<LinkLoad>,
+    /// Index into [`Self::links`] of the most utilized link.
+    pub bottleneck: Option<usize>,
+    /// SLO sits below the probed physical iteration floor (E050-grade).
+    pub slo_floor_infeasible: bool,
+    /// SLO feasibility band: 0 when the floor is violated, else the
+    /// throughput upper bound.
+    pub max_feasible_qps: Option<f64>,
+    /// Cost-model probe calls issued — the proof the analysis stayed
+    /// static (O(1) per worker config, zero simulation steps).
+    pub probe_calls: usize,
+}
+
+fn empty_analysis() -> Analysis {
+    Analysis {
+        workers: Vec::new(),
+        offered: None,
+        decode_token_rate: None,
+        prefill_token_rate: None,
+        decode_bound: None,
+        prefill_bound: None,
+        throughput_ub: None,
+        rho_decode: None,
+        rho_prefill: None,
+        kv_residency_tokens: None,
+        kv_pool_tokens: None,
+        kv_bound_applicable: false,
+        links: Vec::new(),
+        bottleneck: None,
+        slo_floor_infeasible: false,
+        max_feasible_qps: None,
+        probe_calls: 0,
+    }
+}
+
+/// Can this compute model be probed statically? Only probe-able models
+/// (hlo/analytic/roofline, possibly memoized) yield finite bounds;
+/// trained and co-simulated models degrade every bound to `None`.
+pub fn probeable(spec: &crate::compute::ComputeSpec) -> bool {
+    floor_probeable(spec)
+}
+
+/// Derive every static bound for `cfg` over its generated request
+/// table. Issues at most 3 cost-model probe calls per worker config
+/// and never steps the event engine.
+pub fn analyze(cfg: &SimulationConfig, requests: &[Request]) -> Analysis {
+    let Some(off) = offered_load(requests) else {
+        return empty_analysis();
+    };
+    let calls = Arc::new(AtomicUsize::new(0));
+    let n = off.requests as u64;
+    let mut workers = Vec::with_capacity(cfg.cluster.workers.len());
+
+    for (i, wc) in cfg.cluster.workers.iter().enumerate() {
+        let spec = wc.compute.as_ref().unwrap_or(&cfg.compute);
+        let mut wb = WorkerBound {
+            worker: i,
+            hardware: wc.hardware.name.clone(),
+            quantity: wc.quantity,
+            run_prefill: wc.run_prefill,
+            run_decode: wc.run_decode,
+            probeable: false,
+            t_floor: None,
+            decode_floor: None,
+            prefill_floor: None,
+            decode_cap: None,
+            prefill_cap: None,
+            pool_tokens: None,
+        };
+        if floor_probeable(spec) {
+            if let Ok(inner) = spec.build(&ComputeCtx {
+                model: &cfg.model,
+                hw: &wc.hardware,
+                artifacts_dir: &cfg.artifacts_dir,
+                worker: 0,
+            }) {
+                let mut model = CountingCost::new(inner, Arc::clone(&calls));
+                let mut b = BatchDesc::new();
+                b.push(0, 1);
+                let t = model.iter_time(&b);
+                if t > 0.0 {
+                    wb.probeable = true;
+                    wb.t_floor = Some(t);
+                    if wc.run_decode {
+                        let mut b = BatchDesc::new();
+                        b.push(off.min_prompt, 1);
+                        wb.decode_floor = Some(model.iter_time(&b));
+                    }
+                    if wc.run_prefill {
+                        let mut b = BatchDesc::new();
+                        b.push(0, off.min_prompt.max(1));
+                        wb.prefill_floor = Some(model.iter_time(&b));
+                    }
+                }
+            }
+        }
+
+        // caps are registry facts, no probes needed
+        let mem = wc.memory.build(&cfg.model, wc.hardware.mem_cap).ok();
+        if let Some(mem) = &mem {
+            wb.pool_tokens = Some(mem.total_blocks() * mem.block_size() as u64);
+        }
+        if wc.run_decode {
+            let mut cap = n;
+            match canonical_local(&wc.local_scheduler.name) {
+                Some("continuous") | Some("priority") | Some("chunked_prefill") | Some("sjf") => {
+                    if let Some(c) = wc
+                        .local_scheduler
+                        .params
+                        .get("max_batch_size")
+                        .and_then(Yaml::as_u64)
+                    {
+                        cap = cap.min(c);
+                    }
+                }
+                Some("static") => {
+                    if let Some(c) =
+                        wc.local_scheduler.params.get("batch_size").and_then(Yaml::as_u64)
+                    {
+                        cap = cap.min(c);
+                    }
+                }
+                _ => {}
+            }
+            // exclusive per-request block reservations bound resident
+            // concurrency; prefix sharing breaks exclusivity, so it
+            // opts out of the pool-implied cap
+            if matches!(
+                canonical_memory(&wc.memory.name),
+                Some("paged") | Some("token_contiguous") | Some("swap")
+            ) {
+                if let Some(mem) = &mem {
+                    let per = mem.blocks_for_tokens(off.min_prompt.max(1)).max(1);
+                    cap = cap.min(mem.total_blocks() / per);
+                }
+            }
+            wb.decode_cap = Some(cap);
+        }
+        if wc.run_prefill {
+            wb.prefill_cap = match canonical_local(&wc.local_scheduler.name) {
+                Some("continuous") | Some("priority") | Some("sjf") => {
+                    policy_token_cap(&wc.local_scheduler).map(u64::from)
+                }
+                Some("chunked_prefill") => Some(u64::from(chunk_tokens(&wc.local_scheduler))),
+                _ => None,
+            };
+        }
+        workers.push(wb);
+    }
+
+    // ---- fleet service-rate bounds --------------------------------------
+    let mut decode_token_rate = Some(0.0f64);
+    let mut prefill_token_rate = Some(0.0f64);
+    for wb in &workers {
+        if wb.run_decode {
+            match (wb.t_floor, wb.decode_cap, &mut decode_token_rate) {
+                (Some(t), Some(cap), Some(r)) if t > 0.0 => {
+                    *r += wb.quantity as f64 * cap as f64 / t;
+                }
+                _ => decode_token_rate = None,
+            }
+        }
+        if wb.run_prefill {
+            match (wb.t_floor, wb.prefill_cap, &mut prefill_token_rate) {
+                (Some(t), Some(cap), Some(r)) if t > 0.0 => {
+                    *r += wb.quantity as f64 * cap as f64 / t;
+                }
+                _ => prefill_token_rate = None,
+            }
+        }
+    }
+    // prefill work per request is lower-bounded by the uncached prompt
+    // only when no KV can appear from outside the request itself
+    let prefix_prefill = cfg.cluster.workers.iter().any(|wc| {
+        wc.run_prefill && canonical_memory(&wc.memory.name) == Some("prefix_cache")
+    });
+    if cfg.pool_cache.is_some() || prefix_prefill {
+        prefill_token_rate = None;
+    }
+
+    let decode_bound = match (decode_token_rate, off.mean_output) {
+        (Some(r), m) if m > 0.0 => Some(r / m),
+        _ => None,
+    };
+    let prefill_bound = match (prefill_token_rate, off.mean_prefill) {
+        (Some(r), m) if m > 0.0 => Some(r / m),
+        _ => None,
+    };
+    let throughput_ub = match (decode_bound, prefill_bound) {
+        (Some(d), Some(p)) => Some(d.min(p)),
+        (Some(d), None) => Some(d),
+        (None, Some(p)) => Some(p),
+        (None, None) => None,
+    };
+
+    let rho_decode = match (off.qps, decode_token_rate) {
+        (Some(q), Some(r)) if r > 0.0 => Some(q * off.mean_output / r),
+        _ => None,
+    };
+    let rho_prefill = match (off.qps, prefill_token_rate) {
+        (Some(q), Some(r)) if r > 0.0 => Some(q * off.mean_prefill / r),
+        _ => None,
+    };
+
+    // ---- Little's-law KV residency --------------------------------------
+    let decode_workers: Vec<&WorkerBound> = workers.iter().filter(|w| w.run_decode).collect();
+    let kv_bound_applicable = !decode_workers.is_empty()
+        && decode_workers.iter().all(|w| {
+            matches!(
+                canonical_memory(&cfg.cluster.workers[w.worker].memory.name),
+                Some("paged") | Some("token_contiguous")
+            )
+        });
+    let all_contiguous = kv_bound_applicable
+        && decode_workers.iter().all(|w| {
+            canonical_memory(&cfg.cluster.workers[w.worker].memory.name)
+                == Some("token_contiguous")
+        });
+    let min_decode_floor = decode_workers
+        .iter()
+        .filter_map(|w| w.decode_floor)
+        .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.min(t))));
+    let kv_residency_tokens = match (off.qps, min_decode_floor) {
+        (Some(q), Some(floor)) => {
+            let residency_time = off.mean_output * floor;
+            let mean_kv = if all_contiguous {
+                off.mean_prompt + off.mean_output
+            } else {
+                off.mean_prompt + off.mean_output / 2.0
+            };
+            Some(q * residency_time * mean_kv)
+        }
+        _ => None,
+    };
+    let kv_pool_tokens = decode_workers
+        .iter()
+        .try_fold(0.0f64, |acc, w| {
+            w.pool_tokens.map(|p| acc + w.quantity as f64 * p as f64)
+        });
+
+    // ---- network saturation ---------------------------------------------
+    let (links, bottleneck) = network_load(cfg, &off);
+
+    // ---- SLO feasibility band -------------------------------------------
+    let min_prefill_floor = workers
+        .iter()
+        .filter(|w| w.run_prefill)
+        .filter_map(|w| w.prefill_floor)
+        .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |a| a.min(t))));
+    let mut slo_floor_infeasible = false;
+    if let (Some(slo), Some(floor)) = (cfg.slo.mtpot, min_decode_floor) {
+        slo_floor_infeasible |= slo < floor;
+    }
+    if let (Some(slo), Some(floor)) = (cfg.slo.ttft, min_prefill_floor) {
+        slo_floor_infeasible |= slo < floor;
+    }
+    let max_feasible_qps = if slo_floor_infeasible {
+        Some(0.0)
+    } else {
+        throughput_ub
+    };
+
+    Analysis {
+        workers,
+        offered: Some(off),
+        decode_token_rate,
+        prefill_token_rate,
+        decode_bound,
+        prefill_bound,
+        throughput_ub,
+        rho_decode,
+        rho_prefill,
+        kv_residency_tokens,
+        kv_pool_tokens,
+        kv_bound_applicable,
+        links,
+        bottleneck,
+        slo_floor_infeasible,
+        max_feasible_qps,
+        probe_calls: calls.load(Ordering::Relaxed),
+    }
+}
+
+/// Route the strict-disaggregation KV-migration byte rate over the
+/// topology's links. Applies only when every worker config runs exactly
+/// one role over a contended (non-flat) topology — then every request
+/// provably migrates its prompt KV from a prefill to a decode instance.
+fn network_load(cfg: &SimulationConfig, off: &OfferedLoad) -> (Vec<LinkLoad>, Option<usize>) {
+    let Some(qps) = off.qps else {
+        return (Vec::new(), None);
+    };
+    if cfg.network.is_flat() {
+        return (Vec::new(), None);
+    }
+    let strict = cfg
+        .cluster
+        .workers
+        .iter()
+        .all(|wc| wc.run_prefill != wc.run_decode);
+    if !strict {
+        return (Vec::new(), None);
+    }
+    let mut prefill_idx = Vec::new();
+    let mut decode_idx = Vec::new();
+    let mut idx = 0usize;
+    for wc in &cfg.cluster.workers {
+        for _ in 0..wc.quantity {
+            if wc.run_prefill {
+                prefill_idx.push(idx);
+            } else {
+                decode_idx.push(idx);
+            }
+            idx += 1;
+        }
+    }
+    if prefill_idx.is_empty() || decode_idx.is_empty() {
+        return (Vec::new(), None);
+    }
+    let Ok(ctx) = NetCtx::for_config(cfg) else {
+        return (Vec::new(), None);
+    };
+    let Ok(mut net) = cfg.network.build(&ctx) else {
+        return (Vec::new(), None);
+    };
+    let specs = net.links();
+    if specs.is_empty() {
+        return (Vec::new(), None); // topology opts out of link reporting
+    }
+    // total migration byte rate, split uniformly over the (p, d) pairs
+    // the global scheduler can choose from
+    let bytes_per_req = off.mean_prompt * cfg.model.kv_bytes_per_token() as f64;
+    let pairs = (prefill_idx.len() * decode_idx.len()) as f64;
+    let per_pair_rate = qps * bytes_per_req / pairs;
+    let mut by_link: HashMap<String, f64> = HashMap::new();
+    for &p in &prefill_idx {
+        for &d in &decode_idx {
+            // a 1-block probe transfer discovers the path; occupancy on
+            // this throwaway model is irrelevant
+            let t = net.transfer(Endpoint::Worker(p), Endpoint::Worker(d), 1, 1, 0.0);
+            for link in t.path {
+                *by_link.entry(link).or_default() += per_pair_rate;
+            }
+        }
+    }
+    let links: Vec<LinkLoad> = specs
+        .iter()
+        .map(|s| {
+            let rate = by_link.get(&s.name).copied().unwrap_or(0.0);
+            LinkLoad {
+                link: s.name.clone(),
+                bandwidth: s.bandwidth,
+                byte_rate: rate,
+                utilization: if s.bandwidth > 0.0 { rate / s.bandwidth } else { 0.0 },
+            }
+        })
+        .collect();
+    let bottleneck = links
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.utilization.total_cmp(&b.utilization))
+        .map(|(i, _)| i);
+    (links, bottleneck)
+}
+
+impl Analysis {
+    /// The E070/W071/W072/W073 findings this analysis supports. I074
+    /// (the bound summary) is appended only on the `tokensim analyze`
+    /// command path, not by plain `lint`.
+    pub fn lint_diagnostics(&self, cfg: &SimulationConfig) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        let Some(off) = &self.offered else {
+            return out;
+        };
+
+        // E070/W071: provable decode backlog vs the SLO window. Latency
+        // of the k-th finisher is at least (sum of the k smallest
+        // outputs)/R minus the arrival span; compare against the most
+        // permissive per-request SLO allowance.
+        let slack = match (cfg.slo.ttft, cfg.slo.mtpot) {
+            (Some(ttft), Some(mtpot)) => Some(ttft + off.max_output as f64 * mtpot),
+            _ => None,
+        };
+        if let (Some(r), Some(slack)) = (self.decode_token_rate, slack) {
+            if r > 0.0 && !off.sorted_outputs.is_empty() {
+                let n = off.sorted_outputs.len();
+                // n - floor(n/10) >= ceil(0.9 n): if even the smallest
+                // k90 outputs overrun the window, >= 10% of requests
+                // provably violate their SLO
+                let k90 = n - n / 10;
+                let s90: f64 = off.sorted_outputs[..k90].iter().map(|&o| o as f64).sum();
+                let sn: f64 = off.sorted_outputs.iter().map(|&o| o as f64).sum();
+                if s90 / r - off.span > slack {
+                    out.push(
+                        Diagnostic::error(
+                            "E070",
+                            format!(
+                                "infeasible by construction: serving even the smallest 90% of \
+                                 the decode work ({s90:.0} tokens) takes at least {:.1}s against \
+                                 the fleet's {r:.0} tok/s service-rate bound, so at least 10% of \
+                                 requests provably exceed the SLO window ({slack:.1}s after the \
+                                 {:.1}s arrival span)",
+                                s90 / r,
+                                off.span
+                            ),
+                        )
+                        .with_fix(
+                            "lower the workload qps / request count, add decode capacity, or \
+                             relax the ttft/mtpot SLOs",
+                        ),
+                    );
+                } else {
+                    let rho = match (self.rho_decode, self.rho_prefill) {
+                        (Some(a), Some(b)) => Some(a.max(b)),
+                        (a, b) => a.or(b),
+                    };
+                    if let Some(rho) = rho {
+                        if rho > 0.9 && sn / r - off.span > slack {
+                            out.push(
+                                Diagnostic::warn(
+                                    "W071",
+                                    format!(
+                                        "compute saturation: utilization rho = {rho:.2} and the \
+                                         total decode backlog ({sn:.0} tokens) provably pushes \
+                                         the last request {:.1}s past the SLO window",
+                                        sn / r - off.span - slack
+                                    ),
+                                )
+                                .with_fix(
+                                    "lower the offered load or add capacity; rho above 0.9 \
+                                     leaves no headroom for burstiness",
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // W072: a link asked to carry more than 90% of its bandwidth
+        if let Some(b) = self.bottleneck {
+            let l = &self.links[b];
+            if l.utilization > 0.9 {
+                out.push(
+                    Diagnostic::warn(
+                        "W072",
+                        format!(
+                            "network saturation: link '{}' is asked to carry {:.1} GB/s of \
+                             expected KV-migration traffic, {:.0}% of its {:.1} GB/s bandwidth \
+                             — transfers will queue without bound",
+                            l.link,
+                            l.byte_rate / 1e9,
+                            l.utilization * 100.0,
+                            l.bandwidth / 1e9
+                        ),
+                    )
+                    .with_fix(
+                        "pick a faster link preset / topology, co-locate prefill and decode, \
+                         or lower the offered load",
+                    ),
+                );
+            }
+        }
+
+        // W073: expected resident KV exceeds the decode fleet's pool
+        if self.kv_bound_applicable {
+            if let (Some(l), Some(pool)) = (self.kv_residency_tokens, self.kv_pool_tokens) {
+                if l > pool {
+                    out.push(
+                        Diagnostic::warn(
+                            "W073",
+                            format!(
+                                "memory infeasibility: Little's-law expected concurrent KV \
+                                 residency ({l:.0} tokens) exceeds the decode fleet's pool \
+                                 capacity ({pool:.0} tokens) — sustained queueing or \
+                                 preemption churn is guaranteed",
+                            ),
+                        )
+                        .with_fix(
+                            "lower qps, shorten contexts, raise mem_cap/gpu_utilization, or \
+                             switch to a swap-capable manager",
+                        ),
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    /// One-line bound summary, attached as I074 by the analyze command.
+    pub fn summary(&self) -> String {
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(v) => format!("{v:.2}"),
+            None => "n/a".to_string(),
+        };
+        let bottleneck = self
+            .bottleneck
+            .and_then(|i| self.links.get(i))
+            .map(|l| format!("{} at {:.0}%", l.link, l.utilization * 100.0))
+            .unwrap_or_else(|| "n/a".to_string());
+        format!(
+            "static bounds: throughput <= {} req/s (decode {} tok/s, prefill {} tok/s), \
+             rho decode {} / prefill {}, KV residency {} of {} pool tokens, bottleneck \
+             link {}, max feasible qps {}, {} probe calls",
+            fmt_opt(self.throughput_ub),
+            fmt_opt(self.decode_token_rate),
+            fmt_opt(self.prefill_token_rate),
+            fmt_opt(self.rho_decode),
+            fmt_opt(self.rho_prefill),
+            fmt_opt(self.kv_residency_tokens),
+            fmt_opt(self.kv_pool_tokens),
+            bottleneck,
+            fmt_opt(self.max_feasible_qps),
+            self.probe_calls
+        )
+    }
+
+    /// Machine-readable form (`tokensim analyze --json`).
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map_or(Json::Null, Json::num);
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("worker", Json::num(w.worker as f64)),
+                    ("hardware", Json::str(w.hardware.clone())),
+                    ("quantity", Json::num(w.quantity as f64)),
+                    ("run_prefill", Json::num(f64::from(u8::from(w.run_prefill)))),
+                    ("run_decode", Json::num(f64::from(u8::from(w.run_decode)))),
+                    ("probeable", Json::num(f64::from(u8::from(w.probeable)))),
+                    ("t_floor", opt(w.t_floor)),
+                    ("decode_floor", opt(w.decode_floor)),
+                    ("prefill_floor", opt(w.prefill_floor)),
+                    ("decode_cap", opt(w.decode_cap.map(|c| c as f64))),
+                    ("prefill_cap", opt(w.prefill_cap.map(|c| c as f64))),
+                    ("pool_tokens", opt(w.pool_tokens.map(|c| c as f64))),
+                ])
+            })
+            .collect();
+        let links = self
+            .links
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("link", Json::str(l.link.clone())),
+                    ("bandwidth", Json::num(l.bandwidth)),
+                    ("byte_rate", Json::num(l.byte_rate)),
+                    ("utilization", Json::num(l.utilization)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("throughput_ub", opt(self.throughput_ub)),
+            ("decode_token_rate", opt(self.decode_token_rate)),
+            ("prefill_token_rate", opt(self.prefill_token_rate)),
+            ("decode_bound", opt(self.decode_bound)),
+            ("prefill_bound", opt(self.prefill_bound)),
+            ("rho_decode", opt(self.rho_decode)),
+            ("rho_prefill", opt(self.rho_prefill)),
+            ("kv_residency_tokens", opt(self.kv_residency_tokens)),
+            ("kv_pool_tokens", opt(self.kv_pool_tokens)),
+            (
+                "kv_bound_applicable",
+                Json::num(f64::from(u8::from(self.kv_bound_applicable))),
+            ),
+            ("offered_qps", opt(self.offered.as_ref().and_then(|o| o.qps))),
+            (
+                "slo_floor_infeasible",
+                Json::num(f64::from(u8::from(self.slo_floor_infeasible))),
+            ),
+            ("max_feasible_qps", opt(self.max_feasible_qps)),
+            ("probe_calls", Json::num(self.probe_calls as f64)),
+            ("workers", Json::Arr(workers)),
+            ("links", Json::Arr(links)),
+            (
+                "bottleneck",
+                self.bottleneck
+                    .and_then(|i| self.links.get(i))
+                    .map_or(Json::Null, |l| Json::str(l.link.clone())),
+            ),
+        ])
+    }
+
+    /// Human-readable bound report (the analyze command's per-file body).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let fmt = |v: Option<f64>| match v {
+            Some(v) if v.abs() >= 1000.0 => format!("{v:.0}"),
+            Some(v) => format!("{v:.3}"),
+            None => "n/a".to_string(),
+        };
+        if let Some(off) = &self.offered {
+            out.push_str(&format!(
+                "  offered: {} requests, qps {}, mean prompt {:.0} / output {:.0} tokens\n",
+                off.requests,
+                fmt(off.qps),
+                off.mean_prompt,
+                off.mean_output
+            ));
+        }
+        out.push_str(&format!(
+            "  compute: throughput <= {} req/s (decode {} tok/s, prefill {} tok/s), \
+             rho decode {} / prefill {}\n",
+            fmt(self.throughput_ub),
+            fmt(self.decode_token_rate),
+            fmt(self.prefill_token_rate),
+            fmt(self.rho_decode),
+            fmt(self.rho_prefill)
+        ));
+        out.push_str(&format!(
+            "  memory:  expected KV residency {} tokens vs {} pool tokens{}\n",
+            fmt(self.kv_residency_tokens),
+            fmt(self.kv_pool_tokens),
+            if self.kv_bound_applicable { "" } else { " (bound not applicable)" }
+        ));
+        match self.bottleneck.and_then(|i| self.links.get(i)) {
+            Some(l) => out.push_str(&format!(
+                "  network: bottleneck link '{}' at {:.0}% ({:.2} GB/s of {:.2} GB/s)\n",
+                l.link,
+                l.utilization * 100.0,
+                l.byte_rate / 1e9,
+                l.bandwidth / 1e9
+            )),
+            None => out.push_str("  network: no migration traffic bound (flat topology or co-located roles)\n"),
+        }
+        out.push_str(&format!(
+            "  slo:     max feasible qps {}{}\n",
+            fmt(self.max_feasible_qps),
+            if self.slo_floor_infeasible {
+                " (SLO below the physical iteration floor)"
+            } else {
+                ""
+            }
+        ));
+        out.push_str(&format!("  probes:  {} cost-model calls, 0 simulation steps\n", self.probe_calls));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lint-rule integration (E070/W071/W072/W073 inside `tokensim lint`)
+// ---------------------------------------------------------------------------
+
+/// The capacity-bounds lint rule: run the analyzer and append its
+/// findings. Called from the semantic rule pass.
+pub(crate) fn capacity_bounds(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+    let analysis = analyze(ctx.cfg, ctx.requests);
+    out.extend(analysis.lint_diagnostics(ctx.cfg));
+}
+
+// ---------------------------------------------------------------------------
+// Command path (`tokensim analyze`)
+// ---------------------------------------------------------------------------
+
+/// Analyze config text: the full lint report (including the E07x/W07x
+/// capacity rules) plus the bound analysis, with an I074 summary
+/// diagnostic appended when the config parses.
+pub fn analyze_text(label: &str, text: &str) -> (LintReport, Option<Analysis>) {
+    let mut report = super::lint_text(label, text);
+    let analysis = SimulationConfig::from_yaml_str(text).ok().map(|cfg| {
+        let requests = cfg.workload.generate().unwrap_or_default();
+        analyze(&cfg, &requests)
+    });
+    if let Some(a) = &analysis {
+        report.diagnostics.push(Diagnostic::info("I074", a.summary()));
+    }
+    (report, analysis)
+}
+
+/// [`analyze_text`] over a file; IO errors surface as E001 diagnostics.
+pub fn analyze_file(path: &str) -> (LintReport, Option<Analysis>) {
+    match std::fs::read_to_string(path) {
+        Ok(text) => analyze_text(path, &text),
+        Err(e) => (
+            LintReport {
+                path: path.to_string(),
+                diagnostics: vec![Diagnostic::error("E001", format!("cannot read file: {e}"))],
+            },
+            None,
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep pruning
+// ---------------------------------------------------------------------------
+
+/// Should an experiment sweep skip this cell without simulating it?
+/// Returns the reason when the config is *certainly* infeasible by a
+/// qps-independent bound (E030 pool deadlock, E031 token-budget
+/// deadlock, E050 SLO below the physical floor) — conditions no
+/// scheduling outcome can escape, so the pruned frontier is provably
+/// identical to the unpruned one. Load-dependent findings (E070, the
+/// W07x saturation warnings) never prune: they flag doom, not
+/// impossibility of producing a report.
+pub fn prune(cfg: &SimulationConfig) -> Option<String> {
+    let requests = cfg.workload.generate().ok()?;
+    let yaml = Yaml::Map(Default::default());
+    let ctx = LintCtx {
+        yaml: &yaml,
+        cfg,
+        requests: &requests,
+    };
+    let mut diagnostics = Vec::new();
+    super::rules::pool_capacity(&ctx, &mut diagnostics);
+    super::rules::token_budget(&ctx, &mut diagnostics);
+    super::rules::slo_floor(&ctx, &mut diagnostics);
+    diagnostics
+        .iter()
+        .find(|d| matches!(d.code.as_str(), "E030" | "E031" | "E050"))
+        .map(|d| format!("[{}] {}", d.code, d.message))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimulationConfig;
+
+    fn analyzed(text: &str) -> (SimulationConfig, Analysis) {
+        let cfg = SimulationConfig::from_yaml_str(text).unwrap();
+        let requests = cfg.workload.generate().unwrap();
+        let a = analyze(&cfg, &requests);
+        (cfg, a)
+    }
+
+    const BASE: &str = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+workload:
+  num_requests: 50
+  qps: 5.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 16
+  seed: 1
+"#;
+
+    #[test]
+    fn probe_budget_is_o1_per_worker_config() {
+        let (cfg, a) = analyzed(BASE);
+        assert!(a.probe_calls <= 3 * cfg.cluster.workers.len(), "{}", a.probe_calls);
+        assert!(a.probe_calls >= 1);
+    }
+
+    #[test]
+    fn healthy_config_has_finite_bounds_and_no_findings() {
+        let (cfg, a) = analyzed(BASE);
+        let t = a.throughput_ub.expect("bound should be derivable");
+        assert!(t > 0.0 && t.is_finite());
+        assert!(a.rho_decode.unwrap() < 0.9, "{:?}", a.rho_decode);
+        assert!(a.lint_diagnostics(&cfg).is_empty());
+        assert!(!a.slo_floor_infeasible);
+        assert_eq!(a.max_feasible_qps, a.throughput_ub);
+    }
+
+    #[test]
+    fn unprobeable_model_degrades_to_none_not_a_guess() {
+        let text = BASE.replace("cost_model: analytic", "cost_model: oracle");
+        let (cfg, a) = analyzed(&text);
+        assert!(a.throughput_ub.is_none());
+        assert!(!a.workers[0].probeable);
+        assert_eq!(a.probe_calls, 0);
+        assert!(a.lint_diagnostics(&cfg).is_empty());
+    }
+
+    #[test]
+    fn overload_with_tight_slo_is_e070_suppressing_w071() {
+        let text = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: continuous
+        max_batch_size: 4
+workload:
+  num_requests: 4000
+  qps: 4000.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 4
+  seed: 1
+slo:
+  ttft: 0.3
+  mtpot: 0.05
+"#;
+        let (cfg, a) = analyzed(text);
+        assert!(a.rho_decode.unwrap() > 1.0, "{:?}", a.rho_decode);
+        let codes: Vec<String> = a
+            .lint_diagnostics(&cfg)
+            .iter()
+            .map(|d| d.code.clone())
+            .collect();
+        assert!(codes.contains(&"E070".to_string()), "{codes:?}");
+        assert!(!codes.contains(&"W071".to_string()), "{codes:?}");
+    }
+
+    #[test]
+    fn marginal_overload_is_w071_not_e070() {
+        // rho just over 1: the 90%-backlog bound stays inside the SLO
+        // window but the full backlog provably overruns it
+        let text = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      local_scheduler:
+        policy: continuous
+        max_batch_size: 8
+workload:
+  num_requests: 600
+  qps: 120.0
+  prompt_len:
+    fixed: 64
+  output_len:
+    fixed: 16
+  seed: 1
+slo:
+  ttft: 1.0
+  mtpot: 0.05
+"#;
+        let (cfg, a) = analyzed(text);
+        let codes: Vec<String> = a
+            .lint_diagnostics(&cfg)
+            .iter()
+            .map(|d| d.code.clone())
+            .collect();
+        assert!(
+            codes.contains(&"W071".to_string()) || codes.contains(&"E070".to_string()),
+            "{codes:?} rho={:?}",
+            a.rho_decode
+        );
+    }
+
+    #[test]
+    fn kv_residency_overflow_is_w073() {
+        let text = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware:
+        name: tight
+        peak_flops: 312e12
+        mem_bw: 2.0e12
+        mem_cap: 16e9
+workload:
+  num_requests: 100
+  qps: 50.0
+  prompt_len:
+    fixed: 256
+  output_len:
+    fixed: 64
+  seed: 1
+"#;
+        let (cfg, a) = analyzed(text);
+        assert!(a.kv_bound_applicable);
+        let codes: Vec<String> = a
+            .lint_diagnostics(&cfg)
+            .iter()
+            .map(|d| d.code.clone())
+            .collect();
+        assert!(codes.contains(&"W073".to_string()), "{codes:?} {a:?}");
+    }
+
+    #[test]
+    fn swap_manager_opts_out_of_w073() {
+        let text = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware:
+        name: tight
+        peak_flops: 312e12
+        mem_bw: 2.0e12
+        mem_cap: 16e9
+      memory:
+        manager: swap
+        swap_blocks: 4000
+workload:
+  num_requests: 100
+  qps: 50.0
+  prompt_len:
+    fixed: 256
+  output_len:
+    fixed: 64
+  seed: 1
+"#;
+        let (cfg, a) = analyzed(text);
+        assert!(!a.kv_bound_applicable);
+        assert!(a.lint_diagnostics(&cfg).iter().all(|d| d.code != "W073"));
+    }
+
+    #[test]
+    fn saturated_shared_segment_is_w072_on_the_bottleneck() {
+        let text = r#"
+model: llama2-7b
+cost_model: analytic
+cluster:
+  workers:
+    - hardware: A100
+      run_decode: false
+    - hardware: A100
+      run_prefill: false
+workload:
+  num_requests: 40
+  qps: 16.0
+  prompt_len:
+    fixed: 2048
+  output_len:
+    fixed: 8
+  seed: 1
+network:
+  topology: ethernet
+"#;
+        let (cfg, a) = analyzed(text);
+        let b = a.bottleneck.expect("bottleneck link");
+        assert_eq!(a.links[b].link, "segment");
+        assert!(a.links[b].utilization > 0.9, "{:?}", a.links[b]);
+        let diags = a.lint_diagnostics(&cfg);
+        assert_eq!(diags.iter().filter(|d| d.code == "W072").count(), 1);
+    }
+
+    #[test]
+    fn flat_topology_reports_no_link_loads() {
+        let text = BASE.to_string();
+        let (_, a) = analyzed(&text);
+        assert!(a.links.is_empty());
+        assert!(a.bottleneck.is_none());
+    }
+
+    #[test]
+    fn slo_below_floor_zeroes_max_feasible_qps() {
+        let text = format!("{BASE}slo:\n  mtpot: 0.0000001\n");
+        let (_, a) = analyzed(&text);
+        assert!(a.slo_floor_infeasible);
+        assert_eq!(a.max_feasible_qps, Some(0.0));
+    }
+
+    #[test]
+    fn prune_fires_only_on_certain_infeasibility() {
+        let healthy = SimulationConfig::from_yaml_str(BASE).unwrap();
+        assert_eq!(prune(&healthy), None);
+        let doomed = SimulationConfig::from_yaml_str(&format!(
+            "{BASE}slo:\n  mtpot: 0.0000001\n"
+        ))
+        .unwrap();
+        let reason = prune(&doomed).expect("E050-certain cell must prune");
+        assert!(reason.contains("E050"), "{reason}");
+    }
+
+    #[test]
+    fn analyze_text_appends_i074_summary() {
+        let (report, analysis) = analyze_text("t", BASE);
+        assert!(analysis.is_some());
+        assert!(report.diagnostics.iter().any(|d| d.code == "I074"));
+        assert!(report.passes(true), "{:?}", report.diagnostics);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let (_, a) = analyzed(BASE);
+        let parsed = Json::parse(&a.to_json().to_string()).unwrap();
+        assert!(parsed.get("throughput_ub").and_then(Json::as_f64).unwrap() > 0.0);
+        assert_eq!(
+            parsed.get("probe_calls").and_then(Json::as_f64),
+            Some(a.probe_calls as f64)
+        );
+    }
+}

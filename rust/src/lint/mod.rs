@@ -21,6 +21,7 @@
 //! [`register_lint_rule`], mirroring the registries' `register_*`
 //! hooks.
 
+pub mod analyze;
 mod rules;
 
 use std::fmt;
@@ -242,6 +243,31 @@ pub const RULES: &[RuleInfo] = &[
         code: "W062",
         severity: Severity::Warn,
         summary: "network topology shape vs worker count: inter-group link never exercised",
+    },
+    RuleInfo {
+        code: "E070",
+        severity: Severity::Error,
+        summary: "infeasible by construction: >=10% of requests provably exceed the SLO window",
+    },
+    RuleInfo {
+        code: "W071",
+        severity: Severity::Warn,
+        summary: "compute saturation: utilization above 0.9 with a provable SLO overrun",
+    },
+    RuleInfo {
+        code: "W072",
+        severity: Severity::Warn,
+        summary: "network saturation: a topology link asked to carry over 90% of its bandwidth",
+    },
+    RuleInfo {
+        code: "W073",
+        severity: Severity::Warn,
+        summary: "memory infeasibility: expected concurrent KV residency exceeds the pool",
+    },
+    RuleInfo {
+        code: "I074",
+        severity: Severity::Info,
+        summary: "static bound summary from tokensim analyze (command path only)",
     },
 ];
 

@@ -26,11 +26,12 @@ pub(crate) fn run(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     sketch_metrics(ctx, out); // I042
     slo_floor(ctx, out); // E050
     network_shape(ctx, out); // W062
+    super::analyze::capacity_bounds(ctx, out); // E070, W071, W072, W073
 }
 
 /// Canonical registry name for a possibly-aliased selection, `None`
 /// for runtime-registered entries the static tables do not know.
-fn canonical_local(name: &str) -> Option<&'static str> {
+pub(crate) fn canonical_local(name: &str) -> Option<&'static str> {
     crate::scheduler::LOCAL_POLICIES
         .iter()
         .find(|e| {
@@ -40,7 +41,7 @@ fn canonical_local(name: &str) -> Option<&'static str> {
         .map(|e| e.name)
 }
 
-fn canonical_memory(name: &str) -> Option<&'static str> {
+pub(crate) fn canonical_memory(name: &str) -> Option<&'static str> {
     crate::memory::MEMORY_MANAGERS
         .iter()
         .find(|e| {
@@ -50,7 +51,7 @@ fn canonical_memory(name: &str) -> Option<&'static str> {
         .map(|e| e.name)
 }
 
-fn canonical_compute(name: &str) -> Option<&'static str> {
+pub(crate) fn canonical_compute(name: &str) -> Option<&'static str> {
     crate::compute::COMPUTE_MODELS
         .iter()
         .find(|e| {
@@ -62,7 +63,7 @@ fn canonical_compute(name: &str) -> Option<&'static str> {
 
 /// The compute spec worker `wc` actually runs (per-worker override
 /// beats the cluster-wide selection).
-fn compute_of<'a>(ctx: &'a LintCtx, wc: &'a WorkerConfig) -> &'a ComputeSpec {
+pub(crate) fn compute_of<'a>(ctx: &'a LintCtx, wc: &'a WorkerConfig) -> &'a ComputeSpec {
     wc.compute.as_ref().unwrap_or(&ctx.cfg.compute)
 }
 
@@ -75,7 +76,7 @@ fn compute_of<'a>(ctx: &'a LintCtx, wc: &'a WorkerConfig) -> &'a ComputeSpec {
 /// whole pool. When that holds on every decode-capable worker the run
 /// is a guaranteed drain-deadlock; catching it here saves the full
 /// sweep the deadlock would otherwise burn.
-fn pool_capacity(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+pub(crate) fn pool_capacity(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     let Some(worst) = ctx.requests.iter().map(|r| r.final_kv_tokens()).max() else {
         return;
     };
@@ -121,7 +122,7 @@ fn pool_capacity(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
 /// `None` when the policy can serve arbitrarily long prompts (chunked
 /// prefill splits them; static batching has no token cap; unknown =
 /// runtime-registered policies are given the benefit of the doubt).
-fn policy_token_cap(spec: &PolicySpec) -> Option<u32> {
+pub(crate) fn policy_token_cap(spec: &PolicySpec) -> Option<u32> {
     match canonical_local(&spec.name)? {
         "continuous" | "priority" | "sjf" => Some(spec.params.opt_u32("max_batched_tokens", 8192)),
         _ => None,
@@ -135,7 +136,7 @@ fn policy_token_cap(spec: &PolicySpec) -> Option<u32> {
 ///
 /// The companion W032 flags the opposite mismatch: a chunked-prefill
 /// chunk at least as large as every prompt never actually chunks.
-fn token_budget(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+pub(crate) fn token_budget(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     let Some(worst_prompt) = ctx.requests.iter().map(|r| r.prompt_len).max() else {
         return;
     };
@@ -189,7 +190,7 @@ fn token_budget(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     }
 }
 
-fn chunk_tokens(spec: &PolicySpec) -> u32 {
+pub(crate) fn chunk_tokens(spec: &PolicySpec) -> u32 {
     spec.params
         .get("chunk_tokens")
         .or_else(|| spec.params.get("chunk_size"))
@@ -355,7 +356,7 @@ fn sketch_metrics(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
 /// to the analytic mirror when artifacts are absent, so it stays cheap
 /// either way; the trained/co-simulated models are skipped — building
 /// them costs minutes, which a linter must never do.
-fn floor_probeable(spec: &ComputeSpec) -> bool {
+pub(crate) fn floor_probeable(spec: &ComputeSpec) -> bool {
     matches!(
         canonical_compute(&spec.name),
         Some("hlo") | Some("analytic") | Some("roofline")
@@ -367,7 +368,7 @@ fn floor_probeable(spec: &ComputeSpec) -> bool {
 /// single-prompt prefill time bounds TTFT (both at zero queueing).
 /// `slo_attainment` would simply report 0% after the sweep burned its
 /// budget — fail at lint time instead.
-fn slo_floor(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
+pub(crate) fn slo_floor(ctx: &LintCtx, out: &mut Vec<Diagnostic>) {
     let (Some(min_prompt), true) = (
         ctx.requests.iter().map(|r| r.prompt_len).min(),
         ctx.cfg.slo.ttft.is_some() || ctx.cfg.slo.mtpot.is_some(),

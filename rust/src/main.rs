@@ -24,15 +24,20 @@ fn usage() -> &'static str {
      \n\
      USAGE:\n\
        tokensim run --config <file.yaml> [--save-trace <out.jsonl>] [--json <out.json>] [--cdf] [--fast-forward <on|off>] [--window-cost <replay|affine>] [--metrics <exact|sketch>] [--audit]\n\
-       tokensim lint <file.yaml>... [--json] [--deny-warnings]\n\
-       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|network|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
-       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, network topologies, lint rules, engine knobs, presets\n\
+       tokensim lint <file.yaml|dir>... [--json] [--deny-warnings]\n\
+       tokensim analyze <file.yaml|dir>... [--json] [--deny-warnings]\n\
+       tokensim exp <fig4|fig5|table2|fig6|...|fig15|policies|memory|workloads|hardware|scale|network|analyze|all> [--quick] [--out-dir <dir>] [--cost-model <name>]\n\
+       tokensim list                 list experiments, policies, memory managers, workload generators, compute models, network topologies, lint rules, analyzer bounds, engine knobs, presets\n\
        tokensim validate-artifacts   load + cross-check the HLO artifacts\n\
        tokensim help\n\
      \n\
      `lint` statically cross-validates configs against the registries\n\
      (capacity, token budgets, swap links, SLO floors) without running;\n\
-     `run --audit` re-checks engine conservation laws at every event.\n"
+     `analyze` additionally derives closed-form capacity bounds (compute,\n\
+     memory, network, SLO) from O(1) cost-model probes — still without\n\
+     a single simulation step; `run --audit` re-checks engine\n\
+     conservation laws at every event. A directory argument lints every\n\
+     *.yaml directly inside it (fixtures/ subdirectories are skipped).\n"
 }
 
 fn main() -> ExitCode {
@@ -67,6 +72,7 @@ const RUN_FLAGS: FlagSpec = &[
     ("--audit", false),
 ];
 const LINT_FLAGS: FlagSpec = &[("--json", false), ("--deny-warnings", false)];
+const ANALYZE_FLAGS: FlagSpec = &[("--json", false), ("--deny-warnings", false)];
 const EXP_FLAGS: FlagSpec = &[("--quick", false), ("--out-dir", true), ("--cost-model", true)];
 
 /// Strict argument validation: every `--flag` must be known to `cmd`,
@@ -105,6 +111,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
         Some("lint") => cmd_lint(args),
+        Some("analyze") => cmd_analyze(args),
         Some("exp") => cmd_exp(args),
         Some("list") => cmd_list(args),
         Some("validate-artifacts") => cmd_validate_artifacts(args),
@@ -115,7 +122,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some(other) => {
             let hint = tokensim::lint::did_you_mean(
                 other,
-                ["run", "lint", "exp", "list", "validate-artifacts", "help"],
+                ["run", "lint", "analyze", "exp", "list", "validate-artifacts", "help"],
             )
             .map(|c| format!(" (did you mean '{c}'?)"))
             .unwrap_or_default();
@@ -216,20 +223,43 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Expand the positional arguments of `lint`/`analyze`: files pass
+/// through; a directory expands to every `*.yaml` directly inside it,
+/// sorted (subdirectories like `fixtures/` are deliberately not
+/// recursed into — CI's all-configs gate is one invocation on the
+/// configs dir without tripping over intentionally-broken fixtures).
+fn expand_config_args(cmd: &str, args: &[String]) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for a in args.iter().filter(|a| !a.starts_with("--")) {
+        let path = std::path::Path::new(a.as_str());
+        if path.is_dir() {
+            let mut found = Vec::new();
+            for entry in std::fs::read_dir(path).with_context(|| format!("reading {a}"))? {
+                let p = entry?.path();
+                if p.is_file() && p.extension().is_some_and(|e| e == "yaml") {
+                    found.push(p.to_string_lossy().into_owned());
+                }
+            }
+            anyhow::ensure!(!found.is_empty(), "{cmd}: no *.yaml files in directory '{a}'");
+            found.sort();
+            out.extend(found);
+        } else {
+            out.push(a.clone());
+        }
+    }
+    anyhow::ensure!(
+        !out.is_empty(),
+        "{cmd} requires at least one <config.yaml> or directory \
+         (usage: tokensim {cmd} <file|dir>... [--json] [--deny-warnings])"
+    );
+    Ok(out)
+}
+
 fn cmd_lint(args: &[String]) -> Result<()> {
     check_flags("lint", &args[1..], LINT_FLAGS, true)?;
     let json = args.iter().any(|a| a == "--json");
     let deny = args.iter().any(|a| a == "--deny-warnings");
-    let files: Vec<&str> = args[1..]
-        .iter()
-        .filter(|a| !a.starts_with("--"))
-        .map(|a| a.as_str())
-        .collect();
-    anyhow::ensure!(
-        !files.is_empty(),
-        "lint requires at least one <config.yaml> \
-         (usage: tokensim lint <file>... [--json] [--deny-warnings])"
-    );
+    let files = expand_config_args("lint", &args[1..])?;
     let reports: Vec<_> = files.iter().map(|p| tokensim::lint::lint_file(p)).collect();
     let failed = reports.iter().filter(|r| !r.passes(deny)).count();
     if json {
@@ -248,6 +278,51 @@ fn cmd_lint(args: &[String]) -> Result<()> {
     }
     if failed > 0 {
         bail!("{failed} of {} config(s) failed lint", reports.len());
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    check_flags("analyze", &args[1..], ANALYZE_FLAGS, true)?;
+    let json = args.iter().any(|a| a == "--json");
+    let deny = args.iter().any(|a| a == "--deny-warnings");
+    let files = expand_config_args("analyze", &args[1..])?;
+    let results: Vec<_> = files
+        .iter()
+        .map(|p| tokensim::lint::analyze::analyze_file(p))
+        .collect();
+    let failed = results.iter().filter(|(r, _)| !r.passes(deny)).count();
+    if json {
+        let arr = tokensim::util::json::Json::Arr(
+            results
+                .iter()
+                .map(|(r, a)| {
+                    tokensim::util::json::Json::obj(vec![
+                        ("report", r.to_json()),
+                        (
+                            "analysis",
+                            a.as_ref().map_or(tokensim::util::json::Json::Null, |a| a.to_json()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        println!("{}", arr.to_string());
+    } else {
+        for (r, a) in &results {
+            print!("{}", r.render());
+            if let Some(a) = a {
+                print!("{}", a.render());
+            }
+        }
+        println!(
+            "{} config(s) analyzed, {failed} failing{}",
+            results.len(),
+            if deny { " (warnings denied)" } else { "" }
+        );
+    }
+    if failed > 0 {
+        bail!("{failed} of {} config(s) failed analysis", results.len());
     }
     Ok(())
 }
@@ -318,6 +393,10 @@ fn cmd_list(args: &[String]) -> Result<()> {
     for (code, severity, summary) in tokensim::lint::lint_rules() {
         let sev = severity.to_string();
         println!("  {code:<6} {sev:<5} {summary}");
+    }
+    println!("\nstatic analyzer bound kinds (`tokensim analyze <config.yaml>`):");
+    for (name, summary) in tokensim::lint::analyze::BOUND_KINDS {
+        println!("  {name:<20} {summary}");
     }
     println!("\nengine audit checks (`engine: audit: true` / `run --audit`):");
     for c in tokensim::lint::AUDIT_CHECKS {

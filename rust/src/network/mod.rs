@@ -130,6 +130,15 @@ pub trait NetworkModel: Send {
     fn group_of(&self, _worker: usize) -> usize {
         0
     }
+
+    /// Static-analysis hook: every link this topology can route traffic
+    /// over, so `tokensim analyze` can compare expected byte rates
+    /// against per-link bandwidth without pricing a single transfer.
+    /// The default (no links) makes out-of-tree topologies opt out of
+    /// network-saturation bounds rather than report wrong ones.
+    fn links(&self) -> Vec<LinkSpec> {
+        Vec::new()
+    }
 }
 
 /// Transfer schedule selection.

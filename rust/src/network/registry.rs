@@ -48,6 +48,35 @@ impl NetCtx {
             swap_links: vec![None; n_workers],
         }
     }
+
+    /// The fleet a [`SimulationConfig`] describes — the same
+    /// quantity-expanded workers, interconnect, pool link and per-worker
+    /// swap links the cluster driver builds its topology against, but
+    /// without constructing a cluster. This is what static analysis
+    /// (`tokensim analyze`) routes expected traffic over.
+    ///
+    /// [`SimulationConfig`]: crate::config::SimulationConfig
+    pub fn for_config(cfg: &crate::config::SimulationConfig) -> Result<Self> {
+        use crate::memory::MemoryManager as _;
+        let mut swap_links = Vec::new();
+        for wc in &cfg.cluster.workers {
+            let mem = wc.memory.build(&cfg.model, wc.hardware.mem_cap)?;
+            let link = mem.swap_link().cloned();
+            for _ in 0..wc.quantity {
+                swap_links.push(link.clone());
+            }
+        }
+        Ok(Self {
+            n_workers: swap_links.len(),
+            interconnect: cfg.cluster.scheduler.interconnect.clone(),
+            pool_link: cfg
+                .pool_cache
+                .as_ref()
+                .map(|pc| pc.link.clone())
+                .unwrap_or_else(LinkSpec::pool_fabric),
+            swap_links,
+        })
+    }
 }
 
 /// A declarative, cloneable network-topology selection: a registry

@@ -259,6 +259,12 @@ impl NetworkModel for FlatNetwork {
             path: vec![link.name.clone()],
         }
     }
+
+    fn links(&self) -> Vec<LinkSpec> {
+        let mut out = vec![self.interconnect.clone(), self.pool_link.clone()];
+        out.extend(self.swap_links.iter().flatten().cloned());
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -364,6 +370,10 @@ impl NetworkModel for NvlinkIslandNetwork {
 
     fn audit_ledger(&self, now: f64) -> Result<(), String> {
         self.fabric.ledger.audit(now)
+    }
+
+    fn links(&self) -> Vec<LinkSpec> {
+        self.fabric.specs.clone()
     }
 
     fn replica_groups(&self) -> usize {
@@ -493,6 +503,10 @@ impl NetworkModel for FatTreeNetwork {
         self.fabric.ledger.audit(now)
     }
 
+    fn links(&self) -> Vec<LinkSpec> {
+        self.fabric.specs.clone()
+    }
+
     fn replica_groups(&self) -> usize {
         self.leaves
     }
@@ -572,6 +586,10 @@ impl NetworkModel for EthernetNetwork {
 
     fn audit_ledger(&self, now: f64) -> Result<(), String> {
         self.fabric.ledger.audit(now)
+    }
+
+    fn links(&self) -> Vec<LinkSpec> {
+        self.fabric.specs.clone()
     }
 }
 

@@ -139,6 +139,85 @@ impl WorkloadSpec {
     }
 }
 
+/// Aggregate offered load of a materialized request table — the
+/// closed-form workload summary `tokensim analyze` derives its bounds
+/// from. Works for *any* generator (synthetic, bursty, multi-tenant,
+/// trace replay): rates are measured from the generated arrivals, not
+/// re-derived per generator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OfferedLoad {
+    /// Number of requests in the table.
+    pub requests: usize,
+    /// Empirical arrival rate `(n-1) / span`, `None` when fewer than
+    /// two requests arrive or they all arrive at once (a burst has no
+    /// meaningful sustained rate).
+    pub qps: Option<f64>,
+    /// Arrival span `max(arrival) - min(arrival)`, seconds.
+    pub span: f64,
+    /// Mean prompt length, tokens.
+    pub mean_prompt: f64,
+    /// Mean *uncached* prompt length (`prompt_len - cached_prefix`) —
+    /// the tokens prefill actually computes.
+    pub mean_prefill: f64,
+    /// Mean output length, tokens.
+    pub mean_output: f64,
+    pub min_prompt: u32,
+    pub max_prompt: u32,
+    pub max_output: u32,
+    /// Per-request output lengths, ascending — lets the analyzer form
+    /// partial-sum backlog bounds (e.g. "the smallest 90% of the work
+    /// alone exceeds the service capacity").
+    pub sorted_outputs: Vec<u32>,
+}
+
+/// Summarize a request table into its [`OfferedLoad`]. Returns `None`
+/// for an empty table (nothing to bound).
+pub fn offered_load(requests: &[Request]) -> Option<OfferedLoad> {
+    if requests.is_empty() {
+        return None;
+    }
+    let n = requests.len();
+    let mut first = f64::INFINITY;
+    let mut last = f64::NEG_INFINITY;
+    let mut prompt_sum = 0u64;
+    let mut prefill_sum = 0u64;
+    let mut output_sum = 0u64;
+    let mut min_prompt = u32::MAX;
+    let mut max_prompt = 0u32;
+    let mut max_output = 0u32;
+    let mut sorted_outputs = Vec::with_capacity(n);
+    for r in requests {
+        first = first.min(r.arrival);
+        last = last.max(r.arrival);
+        prompt_sum += r.prompt_len as u64;
+        prefill_sum += r.prompt_len.saturating_sub(r.cached_prefix) as u64;
+        output_sum += r.output_len as u64;
+        min_prompt = min_prompt.min(r.prompt_len);
+        max_prompt = max_prompt.max(r.prompt_len);
+        max_output = max_output.max(r.output_len);
+        sorted_outputs.push(r.output_len);
+    }
+    sorted_outputs.sort_unstable();
+    let span = last - first;
+    let qps = if n >= 2 && span > 0.0 {
+        Some((n - 1) as f64 / span)
+    } else {
+        None
+    };
+    Some(OfferedLoad {
+        requests: n,
+        qps,
+        span,
+        mean_prompt: prompt_sum as f64 / n as f64,
+        mean_prefill: prefill_sum as f64 / n as f64,
+        mean_output: output_sum as f64 / n as f64,
+        min_prompt,
+        max_prompt,
+        max_output,
+        sorted_outputs,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

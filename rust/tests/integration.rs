@@ -1087,6 +1087,9 @@ fn list_enumerates_lint_rules_and_engine_knobs() {
         "E050",
         "E060",
         "W062",
+        "E070",
+        "W072",
+        "I074",
         "A001",
         "A006",
         "A007",
@@ -1098,9 +1101,118 @@ fn list_enumerates_lint_rules_and_engine_knobs() {
         "nvlink_island",
         "fat_tree",
         "link presets",
+        "static analyzer bound kinds",
+        "compute-saturation",
+        "memory-feasibility",
     ] {
         assert!(stdout.contains(needle), "list output missing {needle}:\n{stdout}");
     }
+}
+
+/// The static analyzer's headline contract, checked against every
+/// committed example config: the closed-form throughput bound is a true
+/// upper bound on the simulated throughput, and deriving it costs at
+/// most 3 cost-model probes per worker config — zero simulation steps.
+#[test]
+fn static_bound_holds_on_every_committed_config() {
+    use tokensim::lint::analyze;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../configs");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    let mut seen = 0;
+    let mut bounded = 0;
+    for path in entries {
+        if path.extension().and_then(|e| e.to_str()) != Some("yaml") {
+            continue;
+        }
+        let mut cfg = SimulationConfig::from_yaml_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        cfg.engine.fast_forward = true;
+        let requests = cfg
+            .workload
+            .generate()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let a = analyze::analyze(&cfg, &requests);
+        assert!(
+            a.probe_calls <= 3 * cfg.cluster.workers.len(),
+            "{}: {} probes for {} worker configs",
+            path.display(),
+            a.probe_calls,
+            cfg.cluster.workers.len()
+        );
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        let achieved = report.records.len() as f64 / report.makespan.max(1e-12);
+        if let Some(bound) = a.throughput_ub {
+            bounded += 1;
+            assert!(
+                achieved <= bound * (1.0 + 1e-9),
+                "{}: simulated {achieved} req/s beats the static bound {bound}",
+                path.display()
+            );
+        }
+        seen += 1;
+    }
+    assert!(seen >= 17, "expected all committed configs, saw {seen}");
+    // most committed configs use probe-able cost models; the bound must
+    // actually exist somewhere or this test is vacuous
+    assert!(bounded >= 12, "expected finite bounds on most configs, got {bounded}");
+}
+
+/// `lint` and `analyze` accept directory arguments: non-recursive, so
+/// `configs/fixtures/` stays excluded and the committed suite passes
+/// even with warnings denied.
+#[test]
+fn lint_accepts_directory_arguments_excluding_fixtures() {
+    let out = tokensim_cmd(&["lint", "../configs", "--deny-warnings"]);
+    assert!(
+        out.status.success(),
+        "directory lint must pass (fixtures excluded):\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let out = tokensim_cmd(&["analyze", "../configs", "--deny-warnings"]);
+    assert!(
+        out.status.success(),
+        "directory analyze must pass (fixtures excluded):\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // a directory with no yaml files is a hard error, not a silent no-op
+    let empty = tokensim::util::TempDir::new().unwrap();
+    let out = tokensim_cmd(&["lint", empty.path().to_str().unwrap()]);
+    assert!(!out.status.success(), "empty directory must be rejected");
+}
+
+/// `analyze --json` emits one {report, analysis} object per config with
+/// the bound fields and the I074 summary diagnostic.
+#[test]
+fn analyze_json_reports_bounds_and_summary() {
+    let out = tokensim_cmd(&["analyze", "../configs/continuous.yaml", "--json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for needle in [
+        "\"report\":",
+        "\"analysis\":",
+        "\"code\":\"I074\"",
+        "\"throughput_ub\":",
+        "\"rho_decode\":",
+        "\"kv_pool_tokens\":",
+        "\"max_feasible_qps\":",
+        "\"probe_calls\":",
+        "\"workers\":",
+        "\"links\":",
+    ] {
+        assert!(stdout.contains(needle), "analyze --json missing {needle}:\n{stdout}");
+    }
+    // human mode renders the bound report and the closing tally line
+    let out = tokensim_cmd(&["analyze", "../configs/continuous.yaml"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("1 config(s) analyzed, 0 failing"), "{stdout}");
 }
 
 /// `--audit` re-checks every engine invariant but must not perturb the

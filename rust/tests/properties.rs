@@ -548,6 +548,49 @@ fn prop_higher_load_never_reduces_makespan() {
     }
 }
 
+// ---- static-capacity-analyzer invariants --------------------------------
+
+#[test]
+fn prop_static_throughput_bound_is_a_true_upper_bound() {
+    // the analyzer's contract: its closed-form throughput bound is an
+    // over-estimate of what simulation can achieve, never an under-
+    // estimate — across random workloads x memory managers x scheduler
+    // policies x network topologies, with fast-forward on. It must also
+    // keep its O(1) probe budget (<= 3 cost-model calls per worker
+    // config) and issue zero simulation steps.
+    use tokensim::lint::analyze;
+    use tokensim::network::NetworkSpec;
+
+    for seed in SEEDS {
+        let mut cfg = random_cfg(seed);
+        cfg.engine.fast_forward = true;
+        // overlay a topology: migrations get priced and queued by the
+        // network, which can only slow the run — the bound stays sound
+        cfg.network = match seed % 4 {
+            0 => NetworkSpec::new("flat"),
+            1 => NetworkSpec::new("nvlink_island").with("island_size", 2u64),
+            2 => NetworkSpec::new("fat_tree").with("arity", 2u64),
+            _ => NetworkSpec::new("ethernet"),
+        };
+        let requests = cfg.workload.generate().unwrap();
+        let a = analyze::analyze(&cfg, &requests);
+        assert!(
+            a.probe_calls <= 3 * cfg.cluster.workers.len(),
+            "seed {seed}: {} probes for {} worker configs",
+            a.probe_calls,
+            cfg.cluster.workers.len()
+        );
+        let report = Simulation::from_config(&cfg).unwrap().run().unwrap();
+        let achieved = report.records.len() as f64 / report.makespan.max(1e-12);
+        if let Some(bound) = a.throughput_ub {
+            assert!(
+                achieved <= bound * (1.0 + 1e-9),
+                "seed {seed}: simulated {achieved} req/s beats the static bound {bound}"
+            );
+        }
+    }
+}
+
 // ---- cross-model compute-registry invariants ----------------------------
 
 /// Build one instance of every registered compute model against
